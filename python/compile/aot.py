@@ -1,0 +1,142 @@
+"""AOT lowering: jax/Pallas Layer-1/2 graphs → HLO text artifacts.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one .hlo.txt per (graph, shape variant) plus manifest.json that the
+Rust runtime (rust/src/runtime/artifacts.rs) reads to know the calling
+convention of each artifact.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import density as density_kernel
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple calling conv)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Every artifact variant the Rust side may load. Keyed by artifact name;
+# fn(variant-params) -> (jitted fn, example arg specs, io description).
+def variants():
+    out = []
+
+    # density tiles: the workhorse 64³ tile with two cluster-batch sizes,
+    # and a 32³ tile for small contexts (IMDB-scale) to cut padding waste.
+    for (g, k) in [(64, 32), (64, 128), (32, 32)]:
+        name = f"density_g{g}_k{k}"
+        args = [spec((g, g, g)), spec((k, g)), spec((k, g)), spec((k, g))]
+        out.append((name, model.density_graph, args, {
+            "graph": "density",
+            "inputs": [
+                {"name": "tensor", "shape": [g, g, g], "dtype": "f32"},
+                {"name": "xmask", "shape": [k, g], "dtype": "f32"},
+                {"name": "ymask", "shape": [k, g], "dtype": "f32"},
+                {"name": "zmask", "shape": [k, g], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "counts", "shape": [k], "dtype": "f32"},
+                {"name": "volumes", "shape": [k], "dtype": "f32"},
+            ],
+            "tile": g, "k": k,
+        }))
+
+    # δ slabs for NOAC: 64 fibers × 128 padded length.
+    for (kf, l) in [(64, 128), (64, 512)]:
+        name = f"delta_k{kf}_l{l}"
+        args = [spec((1,)), spec((kf, l)), spec((kf, l)), spec((kf,))]
+        out.append((name, model.delta_graph, args, {
+            "graph": "delta",
+            "inputs": [
+                {"name": "delta", "shape": [1], "dtype": "f32"},
+                {"name": "values", "shape": [kf, l], "dtype": "f32"},
+                {"name": "present", "shape": [kf, l], "dtype": "f32"},
+                {"name": "centers", "shape": [kf], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "masks", "shape": [kf, l], "dtype": "f32"},
+                {"name": "cards", "shape": [kf], "dtype": "f32"},
+            ],
+            "k": kf, "l": l,
+        }))
+
+    # Monte-Carlo density estimator over a 64³ tile, 1024 samples.
+    g, s = 64, 1024
+    out.append((f"mc_g{g}_s{s}", model.mc_graph,
+                [spec((g, g, g)), spec((s, 3), I32)], {
+        "graph": "mc",
+        "inputs": [
+            {"name": "tensor", "shape": [g, g, g], "dtype": "f32"},
+            {"name": "coords", "shape": [s, 3], "dtype": "i32"},
+        ],
+        "outputs": [{"name": "rho_hat", "shape": [], "dtype": "f32"}],
+        "tile": g, "samples": s,
+    }))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: single-file target; writes the default "
+                         "density artifact there in addition to --out-dir")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "return_tuple": True, "artifacts": {}}
+    for name, fn, arg_specs, io in variants():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        io["file"] = f"{name}.hlo.txt"
+        manifest["artifacts"][name] = io
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Static perf model for DESIGN/EXPERIMENTS §Perf.
+    manifest["perf_model"] = {
+        "density_vmem_bytes_per_step": density_kernel.vmem_bytes(),
+        "density_mxu_macs_per_step": density_kernel.mxu_flops(),
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+    if args.out:
+        lowered = jax.jit(model.density_graph).lower(
+            spec((64, 64, 64)), spec((32, 64)), spec((32, 64)), spec((32, 64)))
+        with open(args.out, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

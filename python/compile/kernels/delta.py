@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: δ-operator band masks for many-valued contexts.
+
+Paper §3.2: for a generating triple (g̃, m̃, b̃) with value v0 = V(g̃, m̃, b̃),
+the δ-prime set along a fiber keeps the elements that are present in the
+relation and whose value lies within δ of v0:
+
+    mask[k, l] = present[k, l] · [ |values[k, l] - v0[k]| ≤ δ ]
+
+Layer 3 gathers fibers (rows of the value cuboid along one modality) into
+dense (K, L) slabs; this kernel evaluates the band test for a whole slab.
+Pure VPU (elementwise) work — the point of keeping it in Pallas is that it
+fuses into the same lowered module as the density contraction, and on real
+TPU it expresses the HBM→VMEM streaming of fiber slabs via the grid.
+
+δ is passed as a scalar *array* (shape f32[1]) rather than a static python
+float so one AOT artifact serves every δ the NOAC sweep (Table 5) uses.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT slab geometry.
+FIBER_K = 64   # fibers per slab
+FIBER_L = 128  # fiber length (padded)
+L_BLOCK = 128  # grid block along the fiber axis
+
+
+def _delta_kernel(delta_ref, v_ref, p_ref, c_ref, o_ref):
+    """One grid step: band mask for an (K, L_BLOCK) slab column.
+
+    Refs:
+      delta_ref: f32[1]           — δ threshold (grid-invariant).
+      v_ref:     f32[K, L_BLOCK]  — fiber values.
+      p_ref:     f32[K, L_BLOCK]  — 0/1 incidence along the fiber.
+      c_ref:     f32[K]           — generating-triple values v0.
+      o_ref:     f32[K, L_BLOCK]  — output 0/1 mask.
+    """
+    d = delta_ref[0]
+    band = (jnp.abs(v_ref[...] - c_ref[...][:, None]) <= d)
+    o_ref[...] = band.astype(jnp.float32) * p_ref[...]
+
+
+@jax.jit
+def delta_masks(delta, values, present, centers):
+    """δ-band masks for a slab of gathered fibers (Pallas).
+
+    Shapes: delta f32[1]; values/present f32[K,L]; centers f32[K].
+    L must be a multiple of L_BLOCK. Returns f32[K,L].
+    """
+    k, l = values.shape
+    if l % L_BLOCK != 0:
+        raise ValueError(f"L={l} not a multiple of {L_BLOCK}")
+    grid = (l // L_BLOCK,)
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((k, L_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k, L_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, L_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, l), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(delta, values, present, centers)

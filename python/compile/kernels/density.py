@@ -1,0 +1,99 @@
+"""Layer-1 Pallas kernel: batched tricluster density counts.
+
+The paper's density ρ(T) = |G_T×M_T×B_T ∩ I| / (|G_T||M_T||B_T|) is the
+single numeric hot spot of OAC-triclustering post-processing (§2 and the
+third M/R reduce of §4.1). For a 64³ Boolean tile of the incidence cuboid
+and a batch of K cluster membership masks, the numerator is the contraction
+
+    count[k] = Σ_{g,m,b} T[g,m,b] · X[k,g] · Y[k,m] · Z[k,b]
+
+which we factor into three chained contractions so the big one (over the
+G×(M·B) tile) lands on the MXU:
+
+    S1[k, m·b] = X[k, :] @ T.reshape(G, M·B)      # MXU matmul
+    S2[k, b]   = Σ_m Y[k, m] · S1[k, m, b]        # VPU fused multiply-add
+    count[k]   = Σ_b Z[k, b] · S2[k, b]           # VPU reduction
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the tile T is the
+VMEM-resident block (64³ f32 = 1 MiB ≪ 16 MiB VMEM); the grid runs over
+K-blocks of clusters so arbitrarily large cluster batches stream through
+while T stays resident. On this image the kernel always runs with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); numerics
+are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT tile geometry. G/M/B must match the tiles Layer 3 feeds;
+# K_BLOCK is the cluster-batch block each grid step processes.
+TILE_G = 64
+TILE_M = 64
+TILE_B = 64
+K_BLOCK = 8
+
+
+def _density_kernel(t_ref, x_ref, y_ref, z_ref, o_ref):
+    """One grid step: counts for a K_BLOCK slab of clusters.
+
+    Refs (all VMEM blocks):
+      t_ref: f32[G, M, B]       — whole incidence tile (grid-invariant).
+      x_ref: f32[K_BLOCK, G]    — extent masks slab.
+      y_ref: f32[K_BLOCK, M]    — intent masks slab.
+      z_ref: f32[K_BLOCK, B]    — modus masks slab.
+      o_ref: f32[K_BLOCK]       — output counts slab.
+    """
+    t = t_ref[...]
+    g, m, b = t.shape
+    # (K, G) @ (G, M*B) -> (K, M*B): the MXU-shaped contraction.
+    s1 = jnp.dot(x_ref[...], t.reshape(g, m * b),
+                 preferred_element_type=jnp.float32)
+    s1 = s1.reshape(-1, m, b)
+    # Σ_m Y[k,m] * S1[k,m,b] -> (K, B)
+    s2 = jnp.sum(y_ref[...][:, :, None] * s1, axis=1)
+    # Σ_b Z[k,b] * S2[k,b] -> (K,)
+    o_ref[...] = jnp.sum(z_ref[...] * s2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k_block",))
+def density_counts(tensor, xmask, ymask, zmask, *, k_block=K_BLOCK):
+    """Batched tricluster triple-counts over one tile (Pallas).
+
+    Shapes: tensor f32[G,M,B]; xmask f32[K,G]; ymask f32[K,M];
+    zmask f32[K,B]; K must be a multiple of ``k_block``. Returns f32[K].
+    """
+    k = xmask.shape[0]
+    g, m, b = tensor.shape
+    if k % k_block != 0:
+        raise ValueError(f"K={k} not a multiple of k_block={k_block}")
+    grid = (k // k_block,)
+    return pl.pallas_call(
+        _density_kernel,
+        grid=grid,
+        in_specs=[
+            # The tile is grid-invariant: same block for every step.
+            pl.BlockSpec((g, m, b), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k_block, g), lambda i: (i, 0)),
+            pl.BlockSpec((k_block, m), lambda i: (i, 0)),
+            pl.BlockSpec((k_block, b), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(tensor, xmask, ymask, zmask)
+
+
+def vmem_bytes(g=TILE_G, m=TILE_M, b=TILE_B, k_block=K_BLOCK):
+    """Static VMEM footprint estimate of one grid step (for DESIGN §Perf)."""
+    tile = g * m * b * 4
+    masks = k_block * (g + m + b) * 4
+    inter = k_block * (m * b + b + 1) * 4  # s1 + s2 + out
+    return tile + masks + inter
+
+
+def mxu_flops(g=TILE_G, m=TILE_M, b=TILE_B, k_block=K_BLOCK):
+    """MACs per grid step routed to the MXU (the s1 matmul)."""
+    return k_block * g * m * b

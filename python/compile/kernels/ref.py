@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must agree with its oracle to float32 tolerance for all shapes/dtypes the
+hypothesis sweep generates (see python/tests/).
+
+The three numeric hot spots of the paper (Egurnov et al., "Triclustering in
+Big Data Setting") that we lift to Layer 1:
+
+* ``density_ref``      — batched tricluster density counts over a Boolean
+                         cuboid tile: count_k = Σ_{g,m,b} T[g,m,b] X[k,g]
+                         Y[k,m] Z[k,b] (§2, ρ(T) numerator).
+* ``delta_ref``        — δ-operator band masks over gathered fibers
+                         (§3.2 many-valued triclustering).
+* ``mc_density_ref``   — Monte-Carlo density estimate from sampled
+                         coordinates (§7, proposed extension).
+"""
+
+import jax.numpy as jnp
+
+
+def density_ref(tensor, xmask, ymask, zmask):
+    """Batched tricluster triple-counts over a Boolean tensor tile.
+
+    Args:
+      tensor: f32[G, M, B] 0/1 incidence cuboid tile.
+      xmask:  f32[K, G] 0/1 extent  (object)    membership per cluster.
+      ymask:  f32[K, M] 0/1 intent  (attribute) membership per cluster.
+      zmask:  f32[K, B] 0/1 modus   (condition) membership per cluster.
+
+    Returns:
+      f32[K] — number of incidence triples inside each cluster's cuboid
+      restricted to this tile. The caller sums tile counts and divides by
+      |X||Y||Z| (host-side) to obtain the paper's density ρ.
+    """
+    return jnp.einsum("gmb,kg,km,kb->k", tensor, xmask, ymask, zmask)
+
+
+def volumes_ref(xmask, ymask, zmask):
+    """Per-cluster cuboid volumes |X_k| * |Y_k| * |Z_k| (f32[K])."""
+    return xmask.sum(axis=1) * ymask.sum(axis=1) * zmask.sum(axis=1)
+
+
+def delta_ref(values, present, centers, delta):
+    """δ-operator band mask over gathered fibers.
+
+    For the generating triple with value ``centers[k]``, an element of the
+    fiber belongs to the δ-prime set iff it is present in the relation and
+    its value lies within δ of the centre (paper §3.2).
+
+    Args:
+      values:  f32[K, L] fiber values V(·) (garbage where absent).
+      present: f32[K, L] 0/1 incidence along the fiber.
+      centers: f32[K]    V(g̃, m̃, b̃) of the generating triple.
+      delta:   python float ≥ 0 (static).
+
+    Returns:
+      f32[K, L] 0/1 mask.
+    """
+    band = (jnp.abs(values - centers[:, None]) <= delta).astype(jnp.float32)
+    return band * present
+
+
+def mc_density_ref(tensor, coords):
+    """Monte-Carlo density estimate: mean of T at sampled in-cluster coords.
+
+    Args:
+      tensor: f32[G, M, B] incidence tile.
+      coords: i32[S, 3] sampled (g, m, b) coordinates, host-sampled
+              uniformly from the cluster cuboid X×Y×Z.
+
+    Returns:
+      f32[] — fraction of sampled cells present in I (unbiased ρ̂).
+    """
+    vals = tensor[coords[:, 0], coords[:, 1], coords[:, 2]]
+    return jnp.mean(vals)

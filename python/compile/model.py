@@ -1,0 +1,50 @@
+"""Layer-2 JAX graphs for the triclustering density engine.
+
+These are the compute graphs the Rust coordinator executes through PJRT
+(rust/src/runtime). Each function here is jitted by aot.py, calls the
+Layer-1 Pallas kernels where there is kernel-shaped work, and is lowered
+ONCE to HLO text under artifacts/. Python never runs on the request path.
+
+Graphs:
+  * density_graph  — counts + volumes for a batch of cluster masks over one
+                     incidence tile (Table 3/4 post-processing hot spot,
+                     ablation A2).
+  * delta_graph    — δ-band masks + per-fiber cardinalities for NOAC
+                     (§3.2/§6; cardinalities feed the minsup constraint).
+  * mc_graph       — Monte-Carlo density estimate from sampled coordinates
+                     (§7 proposed extension; engine `density::MonteCarlo`).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import density as density_kernel
+from .kernels import delta as delta_kernel
+
+
+def density_graph(tensor, xmask, ymask, zmask):
+    """Counts (Pallas, MXU) and volumes (XLA-fused reductions) per cluster.
+
+    Returns (counts f32[K], volumes f32[K]). Density over a multi-tile
+    context is assembled host-side: ρ = Σ_tiles counts / volumes_full.
+    """
+    counts = density_kernel.density_counts(tensor, xmask, ymask, zmask)
+    volumes = (xmask.sum(axis=1) * ymask.sum(axis=1) * zmask.sum(axis=1))
+    return counts, volumes
+
+
+def delta_graph(delta, values, present, centers):
+    """δ-band masks (Pallas, VPU) plus per-fiber cardinalities.
+
+    Returns (masks f32[K,L], cards f32[K]); cards = |δ-prime set| per fiber,
+    consumed by NOAC's minimal-cardinality (minsup) validity check so the
+    coordinator needs a single device round-trip per slab.
+    """
+    masks = delta_kernel.delta_masks(delta, values, present, centers)
+    cards = masks.sum(axis=1)
+    return masks, cards
+
+
+def mc_graph(tensor, coords):
+    """Monte-Carlo density estimate ρ̂ = mean(T[coords]) (f32[])."""
+    vals = tensor[coords[:, 0], coords[:, 1], coords[:, 2]]
+    return (jnp.mean(vals),)

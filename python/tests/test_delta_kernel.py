@@ -1,0 +1,67 @@
+"""Pallas δ-band kernel vs oracle (paper §3.2 many-valued triclustering)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import delta, ref
+
+
+def run_kernel(d, v, p, c):
+    return np.asarray(delta.delta_masks(
+        jnp.array([d], dtype=jnp.float32), jnp.array(v), jnp.array(p),
+        jnp.array(c)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([1, 4, 8, 64]),
+    nblk=st.integers(1, 4),
+    d=st.floats(0.0, 250.0),
+    scale=st.floats(1.0, 500.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_delta_matches_ref_hypothesis(k, nblk, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    l = delta.L_BLOCK * nblk
+    v = (rng.normal(size=(k, l)) * scale).astype(np.float32)
+    p = (rng.random((k, l)) < 0.5).astype(np.float32)
+    c = (rng.normal(size=(k,)) * scale).astype(np.float32)
+    got = run_kernel(d, v, p, c)
+    want = np.asarray(ref.delta_ref(v, p, c, d))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_delta_zero_keeps_exact_matches_only():
+    # δ=0 recovers the binary prime operator on W={0,1} (paper §3.2).
+    v = np.array([[1.0, 2.0, 1.0, 3.0]] * 64, np.float32)
+    v = np.pad(v, ((0, 0), (0, delta.L_BLOCK - 4)), constant_values=99.0)
+    p = np.ones_like(v)
+    c = np.ones(64, np.float32)
+    got = run_kernel(0.0, v, p, c)
+    assert got[:, 0].all() and got[:, 2].all()
+    assert not got[:, 1].any() and not got[:, 3].any()
+
+
+def test_absent_elements_never_selected():
+    rng = np.random.default_rng(7)
+    v = np.zeros((8, delta.L_BLOCK), np.float32)  # all within any δ
+    p = (rng.random(v.shape) < 0.3).astype(np.float32)
+    c = np.zeros(8, np.float32)
+    got = run_kernel(1e9, v, p, c)
+    np.testing.assert_array_equal(got, p)
+
+
+def test_band_boundary_inclusive():
+    v = np.full((1, delta.L_BLOCK), 10.0, np.float32)
+    p = np.ones_like(v)
+    c = np.array([0.0], np.float32)
+    assert run_kernel(10.0, v, p, c).all()   # |10-0| <= 10 inclusive
+    assert not run_kernel(9.999, v, p, c).any()
+
+
+def test_l_not_multiple_of_block_raises():
+    v = np.zeros((4, 100), np.float32)
+    with pytest.raises(ValueError):
+        run_kernel(1.0, v, v, np.zeros(4, np.float32))

@@ -1,0 +1,109 @@
+"""Pallas density kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps tile shapes, cluster-batch sizes, densities, and mask
+patterns; exact equality is expected for 0/1 inputs within f32 headroom
+(counts ≤ 64³ < 2^24, exactly representable).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import density, ref
+
+
+def make_case(rng, g, m, b, k, p_t=0.3, p_m=0.5):
+    t = (rng.random((g, m, b)) < p_t).astype(np.float32)
+    x = (rng.random((k, g)) < p_m).astype(np.float32)
+    y = (rng.random((k, m)) < p_m).astype(np.float32)
+    z = (rng.random((k, b)) < p_m).astype(np.float32)
+    return t, x, y, z
+
+
+def run_kernel(t, x, y, z, k_block=8):
+    return np.asarray(density.density_counts(
+        jnp.array(t), jnp.array(x), jnp.array(y), jnp.array(z),
+        k_block=k_block))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.sampled_from([8, 16, 32]),
+    m=st.sampled_from([8, 16]),
+    b=st.sampled_from([8, 16]),
+    kb=st.sampled_from([1, 2, 4, 8]),
+    nblocks=st.integers(1, 3),
+    p_t=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_density_matches_ref_hypothesis(g, m, b, kb, nblocks, p_t, seed):
+    rng = np.random.default_rng(seed)
+    k = kb * nblocks
+    t, x, y, z = make_case(rng, g, m, b, k, p_t=p_t)
+    got = run_kernel(t, x, y, z, k_block=kb)
+    want = np.asarray(ref.density_ref(t, x, y, z))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_empty_masks_give_zero():
+    rng = np.random.default_rng(1)
+    t, x, y, z = make_case(rng, 16, 16, 16, 8)
+    x[3] = 0.0  # empty extent → empty cuboid
+    got = run_kernel(t, x, y, z)
+    assert got[3] == 0.0
+
+
+def test_full_masks_count_all_triples():
+    rng = np.random.default_rng(2)
+    t, _, _, _ = make_case(rng, 16, 8, 8, 8)
+    x = np.ones((8, 16), np.float32)
+    y = np.ones((8, 8), np.float32)
+    z = np.ones((8, 8), np.float32)
+    got = run_kernel(t, x, y, z)
+    np.testing.assert_allclose(got, np.full(8, t.sum(), np.float32))
+
+
+def test_dense_tensor_counts_equal_volume():
+    # ρ = 1 cuboid: count must equal |X||Y||Z| exactly.
+    rng = np.random.default_rng(3)
+    t = np.ones((16, 16, 16), np.float32)
+    _, x, y, z = make_case(rng, 16, 16, 16, 8)
+    got = run_kernel(t, x, y, z)
+    vol = x.sum(1) * y.sum(1) * z.sum(1)
+    np.testing.assert_allclose(got, vol)
+
+
+def test_k1_diagonal_context_tile():
+    # K1 from the paper: full cuboid minus the g=m=b diagonal. A cluster
+    # covering everything must count n³ - n.
+    n = 16
+    t = np.ones((n, n, n), np.float32)
+    for i in range(n):
+        t[i, i, i] = 0.0
+    ones = np.ones((8, n), np.float32)
+    got = run_kernel(t, ones, ones, ones)
+    np.testing.assert_allclose(got, np.full(8, n**3 - n, np.float32))
+
+
+def test_aot_tile_geometry():
+    # The exact shape that is lowered to artifacts/density_g64_k32.hlo.txt.
+    rng = np.random.default_rng(4)
+    t, x, y, z = make_case(rng, 64, 64, 64, 32, p_t=0.1)
+    got = run_kernel(t, x, y, z)
+    want = np.asarray(ref.density_ref(t, x, y, z))
+    np.testing.assert_allclose(got, want)
+
+
+def test_k_not_multiple_of_block_raises():
+    rng = np.random.default_rng(5)
+    t, x, y, z = make_case(rng, 8, 8, 8, 6)
+    with pytest.raises(ValueError):
+        run_kernel(t, x, y, z, k_block=4)
+
+
+def test_vmem_budget_within_tpu_limits():
+    # DESIGN §Hardware-Adaptation: one grid step must fit VMEM (16 MiB).
+    assert density.vmem_bytes() < 16 * 2**20
+    # and the MXU matmul dominates the work: ≥ 64x the VPU ops.
+    assert density.mxu_flops() >= 8 * 64 * 64 * 64

@@ -1,0 +1,12 @@
+//! Bench: ablation A2 — density engines (exact hash counting vs the
+//! XLA/Pallas tile kernel vs Monte-Carlo), the §7 "hardest problem".
+
+use tricluster::coordinator::ablations;
+
+fn main() -> anyhow::Result<()> {
+    eprintln!("density engine bench ...");
+    let report = ablations::density_engines()?;
+    println!("{}", report.render());
+    report.write_csv()?;
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Micro-benchmarks of the Layer-3 hot paths, with throughput targets
+//! from EXPERIMENTS.md §Perf:
+//!   * online OAC ingest (prime-store add)        — target ≥ 1M tuples/s
+//!   * record codec (shuffle serialisation)       — target ≥ 10M rec/s
+//!   * shuffle sort+group                          — reported
+//!   * dedup fingerprinting                        — reported
+//!   * density engines per cluster                 — reported
+
+use tricluster::core::tuple::NTuple;
+use tricluster::datasets::{movielens, MovielensParams};
+use tricluster::hadoop::record::Record;
+use tricluster::oac::{dedup_and_filter, Constraints, OnlineMiner};
+use tricluster::util::stats::{measure_ms, Summary};
+
+fn report(name: &str, unit_per_run: f64, unit: &str, samples: &[f64]) {
+    let s = Summary::of(samples);
+    let rate = unit_per_run / (s.median / 1e3);
+    println!(
+        "{name:<28} median {m:>9.2} ms  (p95 {p:>9.2})  => {rate:>12.0} {unit}/s",
+        m = s.median,
+        p = s.p95,
+    );
+}
+
+fn main() {
+    let n = 200_000usize;
+    let ctx = movielens(&MovielensParams::with_tuples(n));
+    let tuples = ctx.tuples().to_vec();
+
+    // 1) online ingest
+    let samples = measure_ms(1, 5, || {
+        let mut miner = OnlineMiner::new(4);
+        miner.add_batch(&tuples);
+        std::hint::black_box(miner.len());
+    });
+    report("online ingest (4-ary)", n as f64, "tuples", &samples);
+
+    // 2) materialise + dedup (naive path vs memoized §Perf path)
+    let mut miner = OnlineMiner::new(4);
+    miner.add_batch(&tuples);
+    let samples = measure_ms(1, 5, || {
+        let m = miner.materialize_all();
+        let out = dedup_and_filter(m, &Constraints::none());
+        std::hint::black_box(out.len());
+    });
+    report("materialize + dedup (naive)", n as f64, "tuples", &samples);
+    let samples = measure_ms(1, 5, || {
+        let out = miner.dedup_and_filter(&Constraints::none());
+        std::hint::black_box(out.len());
+    });
+    report("dedup (memoized sets)", n as f64, "tuples", &samples);
+
+    // 3) record codec roundtrip
+    let samples = measure_ms(1, 5, || {
+        let mut buf = Vec::with_capacity(tuples.len() * 20);
+        for t in &tuples {
+            t.encode(&mut buf);
+        }
+        let mut slice = buf.as_slice();
+        let mut count = 0usize;
+        while !slice.is_empty() {
+            std::hint::black_box(NTuple::decode(&mut slice));
+            count += 1;
+        }
+        assert_eq!(count, tuples.len());
+    });
+    report("record codec roundtrip", n as f64, "records", &samples);
+
+    // 4) shuffle sort+group over encoded pairs
+    let pairs: Vec<(Vec<u8>, Vec<u8>)> = tuples
+        .iter()
+        .map(|t| (t.subrelation(0).to_bytes(), t.get(0).to_bytes()))
+        .collect();
+    let samples = measure_ms(1, 5, || {
+        let mut p = pairs.clone();
+        p.sort_unstable();
+        let mut groups = 0usize;
+        let mut i = 0;
+        while i < p.len() {
+            let mut j = i + 1;
+            while j < p.len() && p[j].0 == p[i].0 {
+                j += 1;
+            }
+            groups += 1;
+            i = j;
+        }
+        std::hint::black_box(groups);
+    });
+    report("shuffle sort+group", n as f64, "pairs", &samples);
+
+    // 5) XLA density engine, if artifacts are present
+    if tricluster::runtime::artifacts_available() {
+        use tricluster::density::{DensityEngine, ExactEngine, XlaEngine};
+        let rt = tricluster::runtime::Runtime::load(
+            &tricluster::runtime::default_artifact_dir(),
+        )
+        .unwrap();
+        let tri = tricluster::datasets::synthetic::k1(48);
+        let clusters = tricluster::oac::mine_online(
+            &tri.inner,
+            &tricluster::oac::Constraints::none(),
+        );
+        let mut xla = XlaEngine::new(&rt, 48, clusters.len()).unwrap();
+        let samples = measure_ms(1, 5, || {
+            std::hint::black_box(xla.densities(&tri, &clusters).len());
+        });
+        report("density xla (145 clusters)", clusters.len() as f64, "clusters", &samples);
+        let samples = measure_ms(1, 3, || {
+            std::hint::black_box(ExactEngine.densities(&tri, &clusters).len());
+        });
+        report("density exact (145 clusters)", clusters.len() as f64, "clusters", &samples);
+    }
+
+    println!("\ntargets (EXPERIMENTS.md §Perf): ingest ≥ 1M tuples/s, codec ≥ 10M rec/s");
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table 3 — "Three-stage MapReduce multimodal
+//! clustering time, ms" (Online OAC vs M/R on IMDB, MovieLens100k, K1,
+//! K2, K3).
+//!
+//! Quick mode by default; set `TRICLUSTER_BENCH_FULL=1` for the paper's
+//! exact workload sizes. Prints the paper's reference rows alongside.
+
+use tricluster::coordinator::{experiments, ExpConfig};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("TRICLUSTER_BENCH_FULL").is_ok();
+    let cfg = ExpConfig {
+        full,
+        nodes: 10,
+        theta: 0.0,
+        runs: if full { 1 } else { 3 },
+        seed: 42,
+    };
+    eprintln!("table3 bench (full={full}) ...");
+    let report = experiments::table3(&cfg)?;
+    println!("{}", report.render());
+    println!();
+    println!("paper reference (Intel i5-2450M, Hadoop single-node emulation):");
+    println!("  Online   IMDB 368 | ML100k 16,298 | K1 96,990 | K2 185,072 | K3 643,978");
+    println!("  M/R      IMDB 7,124 | ML100k 14,582 | K1 37,572 | K2 61,367 | K3 102,699");
+    println!("shape to reproduce: M/R loses on IMDB, wins from K1 on; gap widens with size");
+    let csv = report.write_csv()?;
+    eprintln!("(csv: {})", csv.display());
+    Ok(())
+}

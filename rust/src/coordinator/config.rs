@@ -1,0 +1,172 @@
+//! Experiment/run configuration files — a small INI-style format
+//! (sections, `key = value`, `#` comments) so deployments can pin
+//! cluster and experiment settings without shell flags:
+//!
+//! ```ini
+//! [cluster]
+//! nodes = 10
+//! fault_prob = 0.05
+//! replication = 3
+//!
+//! [experiment]
+//! full = true
+//! theta = 0.1
+//! runs = 5
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::experiments::ExpConfig;
+use crate::mmc::MmcConfig;
+
+/// Parsed configuration: `section.key` → raw string value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                values.insert(key, v.trim().to_string());
+            } else {
+                anyhow::bail!("line {}: expected `key = value`", lineno + 1);
+            }
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn parse_key<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn bool_key(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            "true" | "1" | "yes" | "on" => Some(true),
+            "false" | "0" | "no" | "off" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// Build an `ExpConfig`, starting from defaults.
+    pub fn exp_config(&self) -> ExpConfig {
+        let d = ExpConfig::default();
+        ExpConfig {
+            full: self.bool_key("experiment.full").unwrap_or(d.full),
+            nodes: self.parse_key("cluster.nodes").unwrap_or(d.nodes),
+            theta: self.parse_key("experiment.theta").unwrap_or(d.theta),
+            runs: self.parse_key("experiment.runs").unwrap_or(d.runs),
+            seed: self.parse_key("experiment.seed").unwrap_or(d.seed),
+        }
+    }
+
+    /// Build an `MmcConfig`, starting from defaults.
+    pub fn mmc_config(&self) -> MmcConfig {
+        let d = MmcConfig::default();
+        let nodes: Option<usize> = self.parse_key("cluster.nodes");
+        MmcConfig {
+            theta: self.parse_key("experiment.theta").unwrap_or(d.theta),
+            map_tasks: self
+                .parse_key("cluster.map_tasks")
+                .or(nodes.map(|n| n * 4))
+                .unwrap_or(d.map_tasks),
+            reduce_tasks: self
+                .parse_key("cluster.reduce_tasks")
+                .or(nodes.map(|n| n * 4))
+                .unwrap_or(d.reduce_tasks),
+            executor_threads: self
+                .parse_key("cluster.executor_threads")
+                .unwrap_or(d.executor_threads),
+            fault_prob: self.parse_key("cluster.fault_prob").unwrap_or(d.fault_prob),
+            seed: self.parse_key("experiment.seed").unwrap_or(d.seed),
+            use_dfs: self.bool_key("cluster.use_dfs").unwrap_or(d.use_dfs),
+            replication: self.parse_key("cluster.replication").unwrap_or(d.replication),
+            combiner: self.bool_key("cluster.combiner").unwrap_or(d.combiner),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# cluster shape
+[cluster]
+nodes = 12
+fault_prob = 0.05
+replication = 3
+combiner = yes
+
+[experiment]
+full = true
+theta = 0.25   # density threshold
+runs = 5
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("cluster.nodes"), Some("12"));
+        assert_eq!(c.parse_key::<f64>("experiment.theta"), Some(0.25));
+        assert_eq!(c.bool_key("experiment.full"), Some(true));
+        assert_eq!(c.bool_key("cluster.combiner"), Some(true));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn builds_typed_configs() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let exp = c.exp_config();
+        assert!(exp.full);
+        assert_eq!(exp.nodes, 12);
+        assert_eq!(exp.runs, 5);
+        let mmc = c.mmc_config();
+        assert_eq!(mmc.map_tasks, 48); // nodes * 4
+        assert!((mmc.fault_prob - 0.05).abs() < 1e-12);
+        assert!(mmc.combiner);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        let exp = c.exp_config();
+        assert_eq!(exp.nodes, ExpConfig::default().nodes);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[open\n").is_err());
+        assert!(Config::parse("not a kv\n").is_err());
+    }
+}

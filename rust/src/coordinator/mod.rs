@@ -1,0 +1,11 @@
+//! The coordinator: experiment orchestration, ablations, reports, and
+//! the CLI command surface of the `tricluster` binary.
+
+pub mod ablations;
+pub mod config;
+pub mod experiments;
+pub mod report;
+
+pub use config::Config;
+pub use experiments::{fig2, measure_both, table3, table4, table5, ExpConfig};
+pub use report::Report;

@@ -1,0 +1,87 @@
+//! Experiment reports: paper-style tables rendered to the terminal and
+//! CSV files under `target/reports/` for EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::table;
+
+/// A titled table with a header row.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, header: Vec<String>) -> Self {
+        Self { title: title.into(), rows: vec![header] }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    /// Render for the terminal.
+    pub fn render(&self) -> String {
+        format!("## {}\n{}", self.title, table::render(&self.rows))
+    }
+
+    /// Write a CSV copy under `target/reports/<slug>.csv`.
+    pub fn write_csv(&self) -> Result<PathBuf> {
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' }
+            })
+            .collect::<String>()
+            .split('-')
+            .filter(|s| !s.is_empty())
+            .collect::<Vec<_>>()
+            .join("-");
+        let dir = PathBuf::from("target/reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{slug}.csv"));
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.display()))?;
+        for row in &self.rows {
+            let escaped: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            writeln!(f, "{}", escaped.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    #[test]
+    fn render_and_csv() {
+        let mut r = Report::new(
+            "Table 3: runtime, ms",
+            vec!["Method".into(), "IMDB".into()],
+        );
+        r.push(row!["Online OAC", 368]);
+        let s = r.render();
+        assert!(s.contains("## Table 3"));
+        assert!(s.contains("Online OAC"));
+        let path = r.write_csv().unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("Method,IMDB"));
+        assert!(content.contains("Online OAC,368"));
+    }
+}

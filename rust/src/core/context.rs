@@ -1,0 +1,236 @@
+//! Formal contexts: triadic, polyadic (N-ary), and many-valued.
+//!
+//! `K = (G, M, B, I)` (paper §2), its N-ary generalisation
+//! `K_N = (A_1, …, A_N, I)` (§3.1), and the many-valued triadic context
+//! `K_V = (G, M, B, W, I, V)` (§3.2).
+
+use crate::core::interner::Interner;
+use crate::core::tuple::NTuple;
+use crate::util::hash::{FxHashMap, FxHashSet};
+
+/// An N-ary formal context over interned entities.
+#[derive(Debug, Clone)]
+pub struct PolyContext {
+    /// One interner per modality (|interners| = arity).
+    pub interners: Vec<Interner>,
+    /// The incidence relation I (deduplicated, insertion order kept).
+    tuples: Vec<NTuple>,
+    seen: FxHashSet<NTuple>,
+}
+
+impl PolyContext {
+    pub fn new(arity: usize) -> Self {
+        Self {
+            interners: (0..arity).map(|_| Interner::new()).collect(),
+            tuples: Vec::new(),
+            seen: FxHashSet::default(),
+        }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.interners.len()
+    }
+
+    /// Cardinality |A_k| of modality k.
+    pub fn modality_size(&self, k: usize) -> usize {
+        self.interners[k].len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tuples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tuples.is_empty()
+    }
+
+    pub fn tuples(&self) -> &[NTuple] {
+        &self.tuples
+    }
+
+    pub fn contains(&self, t: &NTuple) -> bool {
+        self.seen.contains(t)
+    }
+
+    /// Insert a tuple of already-interned ids; ignores exact duplicates
+    /// (I is a set). Returns true if newly inserted.
+    pub fn add_ids(&mut self, ids: &[u32]) -> bool {
+        debug_assert_eq!(ids.len(), self.arity());
+        let t = NTuple::new(ids);
+        if self.seen.insert(t) {
+            self.tuples.push(t);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Intern names and insert the tuple.
+    pub fn add_named(&mut self, names: &[&str]) -> bool {
+        assert_eq!(names.len(), self.arity());
+        let ids: Vec<u32> = names
+            .iter()
+            .enumerate()
+            .map(|(k, n)| self.interners[k].intern(n))
+            .collect();
+        self.add_ids(&ids)
+    }
+
+    /// Density of the full relation: |I| / Π|A_k|.
+    pub fn density(&self) -> f64 {
+        let vol: f64 =
+            (0..self.arity()).map(|k| self.modality_size(k) as f64).product();
+        if vol == 0.0 {
+            0.0
+        } else {
+            self.len() as f64 / vol
+        }
+    }
+
+    /// Resolve a pattern component to names (for report output).
+    pub fn names(&self, k: usize, ids: &[u32]) -> Vec<String> {
+        ids.iter().map(|&i| self.interners[k].name(i).to_string()).collect()
+    }
+}
+
+/// Triadic context (arity-3 specialisation with the paper's G/M/B naming).
+#[derive(Debug, Clone)]
+pub struct TriContext {
+    pub inner: PolyContext,
+}
+
+impl TriContext {
+    pub fn new() -> Self {
+        Self { inner: PolyContext::new(3) }
+    }
+
+    pub fn add(&mut self, g: u32, m: u32, b: u32) -> bool {
+        self.inner.add_ids(&[g, m, b])
+    }
+
+    pub fn add_named(&mut self, g: &str, m: &str, b: &str) -> bool {
+        self.inner.add_named(&[g, m, b])
+    }
+
+    pub fn triples(&self) -> &[NTuple] {
+        self.inner.tuples()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn contains(&self, g: u32, m: u32, b: u32) -> bool {
+        self.inner.contains(&NTuple::triple(g, m, b))
+    }
+
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (
+            self.inner.modality_size(0),
+            self.inner.modality_size(1),
+            self.inner.modality_size(2),
+        )
+    }
+}
+
+impl Default for TriContext {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Many-valued triadic context `K_V = (G, M, B, W, I, V)`: each incidence
+/// triple carries a value `V(g,m,b) ∈ W = ℝ` (paper §3.2). The quaternary
+/// functional constraint (one value per triple) is enforced on insert.
+#[derive(Debug, Clone, Default)]
+pub struct ManyValuedTriContext {
+    pub context: TriContext,
+    values: FxHashMap<NTuple, f64>,
+}
+
+impl ManyValuedTriContext {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert `(g, m, b) ↦ v`. Re-inserting the same triple keeps the FIRST
+    /// value (functional relation; duplicates arise only from M/R retries
+    /// and must not change V).
+    pub fn add(&mut self, g: u32, m: u32, b: u32, v: f64) -> bool {
+        let t = NTuple::triple(g, m, b);
+        if self.context.add(g, m, b) {
+            self.values.insert(t, v);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn value(&self, g: u32, m: u32, b: u32) -> Option<f64> {
+        self.values.get(&NTuple::triple(g, m, b)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.context.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.context.is_empty()
+    }
+
+    pub fn triples(&self) -> &[NTuple] {
+        self.context.triples()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_example_context() {
+        // users-items-labels example from paper Table 1
+        let mut k = TriContext::new();
+        assert!(k.add_named("u2", "i1", "l1"));
+        assert!(k.add_named("u2", "i2", "l1"));
+        assert!(k.add_named("u2", "i1", "l2"));
+        assert!(k.add_named("u2", "i2", "l2"));
+        assert!(!k.add_named("u2", "i1", "l1")); // dedup
+        assert_eq!(k.len(), 4);
+        assert_eq!(k.sizes(), (1, 2, 2));
+        assert!((k.inner.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poly_density() {
+        let mut k = PolyContext::new(4);
+        k.add_named(&["a", "x", "p", "q"]);
+        k.add_named(&["b", "x", "p", "q"]);
+        // |A| = 2·1·1·1 = 2, |I| = 2 → density 1
+        assert_eq!(k.density(), 1.0);
+        k.add_named(&["a", "y", "p", "q"]);
+        // now 2·2·1·1 = 4, |I| = 3
+        assert_eq!(k.density(), 0.75);
+    }
+
+    #[test]
+    fn many_valued_keeps_first_value() {
+        let mut k = ManyValuedTriContext::new();
+        assert!(k.add(0, 0, 0, 5.0));
+        assert!(!k.add(0, 0, 0, 9.0)); // duplicate triple
+        assert_eq!(k.value(0, 0, 0), Some(5.0));
+        assert_eq!(k.value(1, 0, 0), None);
+    }
+
+    #[test]
+    fn contains_matches_membership() {
+        let mut k = TriContext::new();
+        k.add(1, 2, 3);
+        assert!(k.contains(1, 2, 3));
+        assert!(!k.contains(3, 2, 1));
+    }
+}

@@ -1,0 +1,76 @@
+//! String interning: entity values (movie titles, tags, user names, …) are
+//! interned once per modality into dense `u32` ids. The whole pipeline
+//! (prime sets, cumuli, shuffle keys) operates on ids; strings only
+//! reappear when patterns are printed (paper §5.2 output format).
+
+use crate::util::hash::FxHashMap;
+
+/// Bidirectional string↔id map for one modality.
+#[derive(Debug, Default, Clone)]
+pub struct Interner {
+    by_name: FxHashMap<String, u32>,
+    names: Vec<String>,
+}
+
+impl Interner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `name`, returning its stable id.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.names.iter().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut i = Interner::new();
+        let a = i.intern("Toy Story (1995)");
+        let b = i.intern("WALL-E (2008)");
+        assert_eq!(i.intern("Toy Story (1995)"), a);
+        assert_ne!(a, b);
+        assert_eq!(i.len(), 2);
+        assert_eq!(i.name(a), "Toy Story (1995)");
+        assert_eq!(i.get("WALL-E (2008)"), Some(b));
+        assert_eq!(i.get("missing"), None);
+    }
+
+    #[test]
+    fn ids_are_dense() {
+        let mut i = Interner::new();
+        for k in 0..100 {
+            assert_eq!(i.intern(&format!("e{k}")), k);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Context I/O: TSV triple/tuple files (the paper's input format — one
+//! tuple per line, tab-separated) and the paper-style pattern output
+//! (§5.2: sets in curly brackets, one set per line, clusters separated).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+use crate::core::context::{ManyValuedTriContext, PolyContext, TriContext};
+use crate::core::pattern::Cluster;
+
+/// Read an N-ary context from TSV (`e_1 \t e_2 \t … \t e_N` per line).
+pub fn read_poly_tsv(path: &Path, arity: usize) -> Result<PolyContext> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut ctx = PolyContext::new(arity);
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        anyhow::ensure!(
+            fields.len() == arity,
+            "line {}: expected {} fields, got {}",
+            lineno + 1,
+            arity,
+            fields.len()
+        );
+        ctx.add_named(&fields);
+    }
+    Ok(ctx)
+}
+
+/// Read a triadic context from TSV.
+pub fn read_tri_tsv(path: &Path) -> Result<TriContext> {
+    Ok(TriContext { inner: read_poly_tsv(path, 3)? })
+}
+
+/// Read a many-valued triadic context: `g \t m \t b \t value` per line.
+pub fn read_valued_tsv(path: &Path) -> Result<ManyValuedTriContext> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut ctx = ManyValuedTriContext::new();
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        anyhow::ensure!(
+            fields.len() == 4,
+            "line {}: expected 4 fields, got {}",
+            lineno + 1,
+            fields.len()
+        );
+        let v: f64 = fields[3]
+            .parse()
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        let ids: Vec<u32> = fields[..3]
+            .iter()
+            .enumerate()
+            .map(|(k, n)| ctx.context.inner.interners[k].intern(n))
+            .collect();
+        ctx.add(ids[0], ids[1], ids[2], v);
+    }
+    Ok(ctx)
+}
+
+/// Write a context to TSV (inverse of `read_poly_tsv`).
+pub fn write_poly_tsv(path: &Path, ctx: &PolyContext) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for t in ctx.tuples() {
+        let names: Vec<&str> = t
+            .as_slice()
+            .iter()
+            .enumerate()
+            .map(|(k, &id)| ctx.interners[k].name(id))
+            .collect();
+        writeln!(w, "{}", names.join("\t"))?;
+    }
+    Ok(())
+}
+
+/// Render one cluster in the paper's §5.2 output format:
+/// ```text
+/// {
+/// {Toy Story (1995), Toy Story 2 (1999)}
+/// {Toy, Friend}
+/// {Animation, Adventure, Comedy}
+/// }
+/// ```
+pub fn format_cluster(ctx: &PolyContext, c: &Cluster) -> String {
+    let mut out = String::from("{\n");
+    for (k, comp) in c.components.iter().enumerate() {
+        let names = ctx.names(k, comp);
+        out.push('{');
+        out.push_str(&names.join(", "));
+        out.push_str("}\n");
+    }
+    out.push('}');
+    out
+}
+
+/// Write all clusters in the paper's output format.
+pub fn write_clusters(path: &Path, ctx: &PolyContext, cs: &[Cluster]) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for c in cs {
+        writeln!(w, "{}", format_cluster(ctx, c))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tricluster-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let p = tmp("roundtrip.tsv");
+        let mut ctx = PolyContext::new(3);
+        ctx.add_named(&["One Flew Over the Cuckoo's Nest (1975)", "Nurse", "Drama"]);
+        ctx.add_named(&["Star Wars V (1980)", "Princess", "Sci-Fi"]);
+        write_poly_tsv(&p, &ctx).unwrap();
+        let back = read_poly_tsv(&p, 3).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.interners[1].get("Princess"), Some(1));
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let p = tmp("bad.tsv");
+        std::fs::write(&p, "a\tb\n").unwrap();
+        assert!(read_poly_tsv(&p, 3).is_err());
+    }
+
+    #[test]
+    fn valued_tsv() {
+        let p = tmp("valued.tsv");
+        std::fs::write(&p, "head\tverb\tdep\t12.5\nhead\tverb\tobj\t3.0\n").unwrap();
+        let ctx = read_valued_tsv(&p).unwrap();
+        assert_eq!(ctx.len(), 2);
+        assert_eq!(ctx.value(0, 0, 0), Some(12.5));
+    }
+
+    #[test]
+    fn paper_output_format() {
+        let mut ctx = PolyContext::new(3);
+        ctx.add_named(&["Toy Story (1995)", "Toy", "Animation"]);
+        ctx.add_named(&["Toy Story 2 (1999)", "Friend", "Adventure"]);
+        let c = tricluster(vec![0, 1], vec![0, 1], vec![0, 1]);
+        let s = format_cluster(&ctx.clone(), &c);
+        assert!(s.starts_with("{\n{Toy Story (1995), Toy Story 2 (1999)}"));
+        assert!(s.contains("{Toy, Friend}"));
+        assert!(s.ends_with("}"));
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let p = tmp("blank.tsv");
+        std::fs::write(&p, "a\tb\tc\n\n\nd\te\tf\n").unwrap();
+        assert_eq!(read_poly_tsv(&p, 3).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Formal-context data model: interned entities, N-ary tuples, triadic /
+//! polyadic / many-valued contexts, patterns, and TSV / paper-format I/O.
+
+pub mod context;
+pub mod interner;
+pub mod io;
+pub mod pattern;
+pub mod tuple;
+
+pub use context::{ManyValuedTriContext, PolyContext, TriContext};
+pub use pattern::{tricluster, Cluster};
+pub use tuple::{NTuple, SubRelation, MAX_ARITY};

@@ -1,0 +1,127 @@
+//! Multimodal clusters (triclusters for N=3): the output patterns.
+//!
+//! A pattern is a tuple of entity-id sets, one per modality, plus the
+//! bookkeeping the evaluation needs: how many generating tuples produced
+//! it (the paper's exact density numerator in the third reduce) and the
+//! volume.
+
+use crate::util::hash::set_fingerprint;
+
+/// A multimodal cluster `(X_1, …, X_N)`; components are sorted id vectors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cluster {
+    /// One sorted, deduplicated id set per modality.
+    pub components: Vec<Vec<u32>>,
+    /// Number of distinct generating tuples that produced this cluster
+    /// (filled by dedup / the third reduce).
+    pub support: usize,
+}
+
+impl Cluster {
+    pub fn new(mut components: Vec<Vec<u32>>) -> Self {
+        for c in components.iter_mut() {
+            c.sort_unstable();
+            c.dedup();
+        }
+        Self { components, support: 1 }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Cuboid volume Π|X_k| as f64 (may exceed u64 for wide patterns).
+    pub fn volume(&self) -> f64 {
+        self.components.iter().map(|c| c.len() as f64).product()
+    }
+
+    /// Paper's M/R density: generating-tuple count over volume
+    /// (Algorithm 7). A lower bound on the true cuboid density.
+    pub fn support_density(&self) -> f64 {
+        let v = self.volume();
+        if v == 0.0 {
+            0.0
+        } else {
+            self.support as f64 / v
+        }
+    }
+
+    /// Content fingerprint for duplicate elimination: clusters with equal
+    /// components collide regardless of generating triple or element order.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = 0xABCD_EF01_2345_6789u64 ^ (self.arity() as u64);
+        for c in &self.components {
+            acc = acc
+                .rotate_left(17)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ set_fingerprint(c);
+        }
+        acc
+    }
+
+    /// Minimal cardinality over all modalities (minsup constraint, §4.3).
+    pub fn min_cardinality(&self) -> usize {
+        self.components.iter().map(Vec::len).min().unwrap_or(0)
+    }
+}
+
+/// Triadic convenience constructor: (extent, intent, modus).
+pub fn tricluster(extent: Vec<u32>, intent: Vec<u32>, modus: Vec<u32>) -> Cluster {
+    Cluster::new(vec![extent, intent, modus])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::assert_prop;
+
+    #[test]
+    fn components_sorted_deduped() {
+        let c = Cluster::new(vec![vec![3, 1, 3], vec![2], vec![5, 4]]);
+        assert_eq!(c.components[0], vec![1, 3]);
+        assert_eq!(c.components[2], vec![4, 5]);
+    }
+
+    #[test]
+    fn volume_and_density() {
+        let mut c = tricluster(vec![0, 1], vec![0, 1, 2], vec![0]);
+        assert_eq!(c.volume(), 6.0);
+        c.support = 3;
+        assert!((c.support_density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_ignores_order_not_content() {
+        let a = tricluster(vec![1, 2], vec![3], vec![4]);
+        let b = tricluster(vec![2, 1], vec![3], vec![4]);
+        let c = tricluster(vec![1, 2], vec![4], vec![3]); // swapped modalities
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn empty_component_zero_volume() {
+        let c = tricluster(vec![], vec![1], vec![2]);
+        assert_eq!(c.volume(), 0.0);
+        assert_eq!(c.support_density(), 0.0);
+        assert_eq!(c.min_cardinality(), 0);
+    }
+
+    #[test]
+    fn prop_fingerprint_stable_under_shuffle() {
+        assert_prop(128, |g| {
+            let xs = g.id_set(50);
+            let ys = g.id_set(50);
+            let zs = g.id_set(50);
+            let a = tricluster(xs.clone(), ys.clone(), zs.clone());
+            let mut xs2 = xs;
+            xs2.reverse();
+            let b = tricluster(xs2, ys, zs);
+            if a.fingerprint() == b.fingerprint() {
+                Ok(())
+            } else {
+                Err("fingerprint depends on order".into())
+            }
+        });
+    }
+}

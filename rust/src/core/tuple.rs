@@ -1,0 +1,173 @@
+//! N-ary tuples over interned entity ids.
+//!
+//! The paper's multimodal generalisation (§3.1) works over polyadic
+//! contexts up to arity N; we support `N ≤ MAX_ARITY` with an inline array
+//! (no heap allocation per tuple — there are up to 10⁶ of them in the
+//! Table-4 runs and each M/R stage re-materialises them).
+
+use std::fmt;
+
+/// Maximum supported relation arity (paper evaluates N = 3 and N = 4).
+pub const MAX_ARITY: usize = 6;
+
+/// One input tuple `(e_1, …, e_N)`; `e_k` is an id in modality k's
+/// interner space.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NTuple {
+    elems: [u32; MAX_ARITY],
+    arity: u8,
+}
+
+impl NTuple {
+    pub fn new(elems: &[u32]) -> Self {
+        assert!(
+            (2..=MAX_ARITY).contains(&elems.len()),
+            "arity {} out of range 2..={MAX_ARITY}",
+            elems.len()
+        );
+        let mut buf = [0u32; MAX_ARITY];
+        buf[..elems.len()].copy_from_slice(elems);
+        Self { elems: buf, arity: elems.len() as u8 }
+    }
+
+    pub fn triple(g: u32, m: u32, b: u32) -> Self {
+        Self::new(&[g, m, b])
+    }
+
+    #[inline]
+    pub fn arity(&self) -> usize {
+        self.arity as usize
+    }
+
+    #[inline]
+    pub fn get(&self, k: usize) -> u32 {
+        debug_assert!(k < self.arity());
+        self.elems[k]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u32] {
+        &self.elems[..self.arity()]
+    }
+
+    /// The subrelation `(e_1, …, e_{k-1}, e_{k+1}, …, e_N)` — the First Map
+    /// key of Algorithm 2, tagged with the dropped position `k`.
+    pub fn subrelation(&self, k: usize) -> SubRelation {
+        debug_assert!(k < self.arity());
+        let mut buf = [0u32; MAX_ARITY];
+        let mut j = 0;
+        for (i, &e) in self.as_slice().iter().enumerate() {
+            if i != k {
+                buf[j] = e;
+                j += 1;
+            }
+        }
+        SubRelation { elems: buf, arity: self.arity, dropped: k as u8 }
+    }
+
+    /// Rebuild the generating tuple by re-inserting `e` at the dropped
+    /// position (Second Map, Algorithm 4).
+    pub fn from_subrelation(sub: &SubRelation, e: u32) -> Self {
+        let n = sub.arity as usize;
+        let k = sub.dropped as usize;
+        let mut buf = [0u32; MAX_ARITY];
+        let mut j = 0;
+        for i in 0..n {
+            if i == k {
+                buf[i] = e;
+            } else {
+                buf[i] = sub.elems[j];
+                j += 1;
+            }
+        }
+        Self { elems: buf, arity: sub.arity }
+    }
+}
+
+impl fmt::Debug for NTuple {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "NTuple{:?}", self.as_slice())
+    }
+}
+
+/// A tuple with one position removed; key of the first M/R stage.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct SubRelation {
+    elems: [u32; MAX_ARITY],
+    /// arity of the ORIGINAL tuple
+    arity: u8,
+    /// which position was dropped
+    dropped: u8,
+}
+
+impl SubRelation {
+    #[inline]
+    pub fn dropped(&self) -> usize {
+        self.dropped as usize
+    }
+
+    #[inline]
+    pub fn original_arity(&self) -> usize {
+        self.arity as usize
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u32] {
+        &self.elems[..self.arity as usize - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::assert_prop;
+
+    #[test]
+    fn subrelation_roundtrip_triple() {
+        let t = NTuple::triple(7, 8, 9);
+        for k in 0..3 {
+            let sub = t.subrelation(k);
+            assert_eq!(sub.dropped(), k);
+            let back = NTuple::from_subrelation(&sub, t.get(k));
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn subrelation_contents() {
+        let t = NTuple::new(&[1, 2, 3, 4]);
+        assert_eq!(t.subrelation(0).as_slice(), &[2, 3, 4]);
+        assert_eq!(t.subrelation(2).as_slice(), &[1, 2, 4]);
+        assert_eq!(t.subrelation(3).as_slice(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn subrelations_of_different_positions_differ() {
+        // (a,a,b) dropped at 0 vs 1 both give (a,b) — the `dropped` tag must
+        // keep them distinct (this is why the M/R key includes k).
+        let t = NTuple::triple(5, 5, 6);
+        assert_ne!(t.subrelation(0), t.subrelation(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_too_large_panics() {
+        NTuple::new(&[0; MAX_ARITY + 1]);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_arity() {
+        assert_prop(128, |g| {
+            let n = 2 + g.usize_below(MAX_ARITY - 1);
+            let elems: Vec<u32> = (0..n).map(|_| g.u32_below(1000)).collect();
+            let t = NTuple::new(&elems);
+            for k in 0..n {
+                let back = NTuple::from_subrelation(&t.subrelation(k), t.get(k));
+                if back != t {
+                    return Err(format!("roundtrip failed at k={k} for {t:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

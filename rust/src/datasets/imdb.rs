@@ -1,0 +1,168 @@
+//! IMDB-like tricontext generator (paper §5.1 / Table 2).
+//!
+//! The paper's dataset: Top-250 movies × tags × genres, 3,818 triples,
+//! density 0.00087. The real tag assignments are not redistributable, so
+//! this generator produces a deterministic synthetic context matched on
+//! |G| = 250, triple count ≈ 3.8k, and the tag/genre Zipf structure:
+//! each movie draws 1–4 genres and a handful of keyword tags; a triple
+//! (movie, tag, genre) is emitted for every tag×genre combination of the
+//! movie — exactly the "movie has genre and is assigned tag" relation.
+
+use crate::core::context::TriContext;
+use crate::util::rng::{Rng, Zipf};
+
+/// A few dozen real Top-250 titles so printed patterns read like the
+/// paper's §5.2 output; the remaining movies get synthetic titles.
+const TITLES: &[&str] = &[
+    "The Shawshank Redemption (1994)",
+    "The Godfather (1972)",
+    "The Dark Knight (2008)",
+    "12 Angry Men (1957)",
+    "Schindler's List (1993)",
+    "Pulp Fiction (1994)",
+    "The Lord of the Rings: The Return of the King (2003)",
+    "One Flew Over the Cuckoo's Nest (1975)",
+    "Star Wars: Episode V - The Empire Strikes Back (1980)",
+    "Forrest Gump (1994)",
+    "Inception (2010)",
+    "The Matrix (1999)",
+    "Goodfellas (1990)",
+    "Seven Samurai (1954)",
+    "Se7en (1995)",
+    "City of God (2002)",
+    "Life Is Beautiful (1997)",
+    "The Silence of the Lambs (1991)",
+    "Spirited Away (2001)",
+    "Saving Private Ryan (1998)",
+    "Apocalypse Now (1979)",
+    "Full Metal Jacket (1987)",
+    "Platoon (1986)",
+    "Toy Story (1995)",
+    "Toy Story 2 (1999)",
+    "WALL-E (2008)",
+    "Into the Wild (2007)",
+    "The Gold Rush (1925)",
+    "Casablanca (1942)",
+    "Psycho (1960)",
+];
+
+const GENRES: &[&str] = &[
+    "Drama", "Action", "Adventure", "Comedy", "Crime", "Sci-Fi", "Thriller",
+    "Animation", "Family", "Fantasy", "Mystery", "Romance", "War", "Western",
+    "Horror", "Biography", "History", "Music", "Film-Noir", "Sport",
+];
+
+const TAG_STEMS: &[&str] = &[
+    "Nurse", "Patient", "Asylum", "Rebel", "Basketball", "Princess", "Toy",
+    "Friend", "Rescue", "Love", "Alaska", "Vietnam", "Prison", "Escape",
+    "Mafia", "Heist", "Robot", "Space", "War", "Journey", "Betrayal",
+    "Revenge", "Dream", "Memory", "Island", "Train", "Boxing", "Chess",
+    "Desert", "Ocean", "Winter", "Gold", "Detective", "Murder", "Trial",
+    "Jury", "Samurai", "Sheriff", "Bounty", "Alien",
+];
+
+/// Generation parameters (defaults match Table 2).
+#[derive(Debug, Clone)]
+pub struct ImdbParams {
+    pub movies: usize,
+    pub tag_universe: usize,
+    pub target_triples: usize,
+    pub seed: u64,
+}
+
+impl Default for ImdbParams {
+    fn default() -> Self {
+        Self { movies: 250, tag_universe: 900, target_triples: 3818, seed: 0x124DB }
+    }
+}
+
+/// Generate the IMDB-like context.
+pub fn imdb(params: &ImdbParams) -> TriContext {
+    let mut ctx = TriContext::new();
+    let mut rng = Rng::new(params.seed);
+
+    // intern movies
+    for i in 0..params.movies {
+        let title = if i < TITLES.len() {
+            TITLES[i].to_string()
+        } else {
+            format!("Movie #{:03} ({})", i + 1, 1920 + (i * 7) % 100)
+        };
+        ctx.inner.interners[0].intern(&title);
+    }
+    // intern tags (stem + qualifier for the long tail)
+    for i in 0..params.tag_universe {
+        let name = if i < TAG_STEMS.len() {
+            TAG_STEMS[i].to_string()
+        } else {
+            format!("{}-{}", TAG_STEMS[i % TAG_STEMS.len()], i / TAG_STEMS.len())
+        };
+        ctx.inner.interners[1].intern(&name);
+    }
+    for g in GENRES {
+        ctx.inner.interners[2].intern(g);
+    }
+
+    let tag_zipf = Zipf::new(params.tag_universe as u64, 1.05);
+    let genre_zipf = Zipf::new(GENRES.len() as u64, 0.9);
+
+    // movies in a round-robin until the target triple count is reached,
+    // so every movie appears and the count is exact.
+    let mut movie = 0u32;
+    while ctx.len() < params.target_triples {
+        // 1-4 genres, 2-8 tags per movie visit
+        let n_genres = 1 + rng.usize_below(4).min(3);
+        let n_tags = 2 + rng.usize_below(7);
+        let genres: Vec<u32> =
+            (0..n_genres).map(|_| genre_zipf.sample(&mut rng) as u32).collect();
+        let tags: Vec<u32> =
+            (0..n_tags).map(|_| tag_zipf.sample(&mut rng) as u32).collect();
+        'outer: for &t in &tags {
+            for &g in &genres {
+                ctx.add(movie, t, g);
+                if ctx.len() >= params.target_triples {
+                    break 'outer;
+                }
+            }
+        }
+        movie = (movie + 1) % params.movies as u32;
+    }
+    ctx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_table2_shape() {
+        let ctx = imdb(&ImdbParams::default());
+        assert_eq!(ctx.len(), 3818);
+        let (g, m, b) = ctx.sizes();
+        assert_eq!(g, 250);
+        assert!(m <= 900);
+        assert_eq!(b, 20);
+        // Table 2 density 0.00087 — ours within the same order of magnitude
+        let density = ctx.inner.density();
+        assert!(density > 2e-4 && density < 3e-3, "density={density}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = imdb(&ImdbParams::default());
+        let b = imdb(&ImdbParams::default());
+        assert_eq!(a.triples(), b.triples());
+    }
+
+    #[test]
+    fn small_instance() {
+        let ctx = imdb(&ImdbParams {
+            movies: 20,
+            tag_universe: 50,
+            target_triples: 200,
+            seed: 7,
+        });
+        assert_eq!(ctx.len(), 200);
+        assert_eq!(ctx.sizes().0, 20);
+    }
+}

@@ -1,0 +1,55 @@
+//! Dataset generators matched to the paper's §5.1/§6 workloads.
+//!
+//! Real IMDB/MovieLens/BibSonomy/FrameNet data is not redistributable
+//! with this repo, so each generator reproduces the published cardinal-
+//! ities, densities, and skew of its source (see DESIGN.md
+//! §Substitutions). All generators are deterministic given their seed;
+//! series datasets (MovieLens, tri-frames) are prefix-stable so the
+//! scaling sweeps use nested samples exactly like the paper's.
+
+pub mod bibsonomy;
+pub mod imdb;
+pub mod movielens;
+pub mod synthetic;
+pub mod triframes;
+
+pub use bibsonomy::{bibsonomy, BibsonomyParams};
+pub use imdb::{imdb, ImdbParams};
+pub use movielens::{movielens, MovielensParams};
+pub use synthetic::{k1, k2, k3};
+pub use triframes::{triframes, TriframesParams};
+
+use crate::core::context::PolyContext;
+
+/// Named datasets used across benches/CLI; sizes follow the paper.
+pub fn by_name(name: &str) -> Option<PolyContext> {
+    match name {
+        "imdb" => Some(imdb(&ImdbParams::default()).inner),
+        "k1" => Some(k1(60).inner),
+        "k2" => Some(k2(50).inner),
+        "k3" => Some(k3(30)),
+        "movielens100k" | "ml100k" => {
+            Some(movielens(&MovielensParams::with_tuples(100_000)))
+        }
+        "movielens250k" | "ml250k" => {
+            Some(movielens(&MovielensParams::with_tuples(250_000)))
+        }
+        "movielens500k" | "ml500k" => {
+            Some(movielens(&MovielensParams::with_tuples(500_000)))
+        }
+        "movielens1m" | "ml1m" => {
+            Some(movielens(&MovielensParams::with_tuples(1_000_000)))
+        }
+        "bibsonomy" => Some(bibsonomy(&BibsonomyParams::default()).inner),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn by_name_known_and_unknown() {
+        assert!(super::by_name("imdb").is_some());
+        assert!(super::by_name("nope").is_none());
+    }
+}

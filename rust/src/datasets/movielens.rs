@@ -1,0 +1,114 @@
+//! MovieLens-like 4-ary context generator (paper §5.1 / Table 4).
+//!
+//! The paper's MovieLens-1M: 1,000,000 tuples relating 6,040 users,
+//! 3,952 movies, 5-star ratings, and timestamps. We generate a matched
+//! 4-ary relation (user, movie, rating, time-bucket) with power-law user
+//! activity and movie popularity (the defining skew of the real data);
+//! Table 4's 100k/250k/500k/1M series are prefixes of one deterministic
+//! stream, exactly like sampling the real dataset.
+
+use crate::core::context::PolyContext;
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Debug, Clone)]
+pub struct MovielensParams {
+    pub users: usize,
+    pub movies: usize,
+    pub ratings: usize,
+    /// timestamp buckets (the raw seconds are binned; the paper's 4th
+    /// modality would otherwise be almost all-distinct and meaningless
+    /// for clustering)
+    pub time_buckets: usize,
+    pub tuples: usize,
+    pub seed: u64,
+}
+
+impl Default for MovielensParams {
+    fn default() -> Self {
+        Self {
+            users: 6_040,
+            movies: 3_952,
+            ratings: 5,
+            time_buckets: 36, // ~3 years of monthly buckets
+            tuples: 1_000_000,
+            seed: 0x10E15,
+        }
+    }
+}
+
+impl MovielensParams {
+    /// The Table-4 series: same stream, first `n` tuples.
+    pub fn with_tuples(n: usize) -> Self {
+        Self { tuples: n, ..Self::default() }
+    }
+}
+
+pub fn movielens(params: &MovielensParams) -> PolyContext {
+    let mut ctx = PolyContext::new(4);
+    for u in 0..params.users {
+        ctx.interners[0].intern(&format!("user{u}"));
+    }
+    for m in 0..params.movies {
+        ctx.interners[1].intern(&format!("movie{m}"));
+    }
+    for r in 1..=params.ratings {
+        ctx.interners[2].intern(&format!("{r}*"));
+    }
+    for t in 0..params.time_buckets {
+        ctx.interners[3].intern(&format!("2000-{:02}", t + 1));
+    }
+
+    let mut rng = Rng::new(params.seed);
+    let user_zipf = Zipf::new(params.users as u64, 0.9);
+    let movie_zipf = Zipf::new(params.movies as u64, 0.95);
+    // ratings follow the familiar J-shape (4 ≻ 5 ≻ 3 ≻ 2 ≻ 1)
+    let rating_cdf = [0.06, 0.17, 0.43, 0.78, 1.0];
+
+    while ctx.len() < params.tuples {
+        let u = user_zipf.sample(&mut rng) as u32;
+        let m = movie_zipf.sample(&mut rng) as u32;
+        let x = rng.f64();
+        let r = rating_cdf.iter().position(|&c| x < c).unwrap() as u32;
+        // users rate in sessions: time bucket correlates with the user
+        let t = ((u as usize + rng.usize_below(6)) % params.time_buckets) as u32;
+        ctx.add_ids(&[u, m, r.min(params.ratings as u32 - 1), t]);
+    }
+    ctx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_exact_tuple_count() {
+        let ctx = movielens(&MovielensParams::with_tuples(10_000));
+        assert_eq!(ctx.len(), 10_000);
+        assert_eq!(ctx.arity(), 4);
+        assert!(ctx.modality_size(0) <= 6_040);
+        assert_eq!(ctx.modality_size(2), 5);
+    }
+
+    #[test]
+    fn prefix_property() {
+        // the 1k stream is a prefix of the 5k stream (Table 4 series)
+        let a = movielens(&MovielensParams::with_tuples(1_000));
+        let b = movielens(&MovielensParams::with_tuples(5_000));
+        assert_eq!(&b.tuples()[..1_000], a.tuples());
+    }
+
+    #[test]
+    fn user_activity_is_skewed() {
+        let ctx = movielens(&MovielensParams::with_tuples(20_000));
+        let mut counts = vec![0usize; 6_040];
+        for t in ctx.tuples() {
+            counts[t.get(0) as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top_decile: usize = counts[..604].iter().sum();
+        assert!(
+            top_decile as f64 > 0.3 * 20_000.0,
+            "top decile only {top_decile}"
+        );
+    }
+}

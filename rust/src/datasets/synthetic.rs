@@ -1,0 +1,119 @@
+//! The paper's synthetic contexts (§5.1):
+//!
+//! * `K₁` — dense 60³ cuboid minus the main diagonal (215,940 triples);
+//! * `K₂` — three non-overlapping 50³ cuboids (375,000 triples);
+//! * `K₃` — dense 4-ary 30⁴ cuboid (810,000 tuples; assembles exactly ONE
+//!   multimodal cluster `(A₁, A₂, A₃, A₄)`).
+//!
+//! All generators take the edge size as a parameter so tests can run
+//! scaled-down instances with identical structure.
+
+use crate::core::context::{PolyContext, TriContext};
+
+/// `K₁(n)`: `G = M = B = {0..n}`, `I = G×M×B \ {(i,i,i)}`.
+/// Paper instance: `n = 60` → 215,940 triples.
+pub fn k1(n: usize) -> TriContext {
+    let mut ctx = TriContext::new();
+    intern_range(&mut ctx.inner, n, n, n);
+    for g in 0..n as u32 {
+        for m in 0..n as u32 {
+            for b in 0..n as u32 {
+                if !(g == m && m == b) {
+                    ctx.add(g, m, b);
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// `K₂(n)`: three disjoint `n³` blocks. Paper instance: `n = 50` →
+/// 375,000 triples, exactly 3 final triclusters of density 1.
+pub fn k2(n: usize) -> TriContext {
+    let mut ctx = TriContext::new();
+    intern_range(&mut ctx.inner, 3 * n, 3 * n, 3 * n);
+    for blk in 0..3u32 {
+        let off = blk * n as u32;
+        for g in 0..n as u32 {
+            for m in 0..n as u32 {
+                for b in 0..n as u32 {
+                    ctx.add(off + g, off + m, off + b);
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// `K₃(n)`: dense 4-dimensional cuboid `A₁×A₂×A₃×A₄`, `|A_k| = n`.
+/// Paper instance: `n = 30` → 810,000 tuples. The worst case for the
+/// reducers (maximal input, maximal duplicates) yet exactly one cluster.
+pub fn k3(n: usize) -> PolyContext {
+    let mut ctx = PolyContext::new(4);
+    for k in 0..4 {
+        for i in 0..n {
+            ctx.interners[k].intern(&format!("a{k}_{i}"));
+        }
+    }
+    for a in 0..n as u32 {
+        for b in 0..n as u32 {
+            for c in 0..n as u32 {
+                for d in 0..n as u32 {
+                    ctx.add_ids(&[a, b, c, d]);
+                }
+            }
+        }
+    }
+    ctx
+}
+
+fn intern_range(ctx: &mut PolyContext, g: usize, m: usize, b: usize) {
+    for i in 0..g {
+        ctx.interners[0].intern(&format!("g{i}"));
+    }
+    for i in 0..m {
+        ctx.interners[1].intern(&format!("m{i}"));
+    }
+    for i in 0..b {
+        ctx.interners[2].intern(&format!("b{i}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k1_counts_match_paper_formula() {
+        let ctx = k1(10);
+        assert_eq!(ctx.len(), 1000 - 10);
+        assert_eq!(ctx.sizes(), (10, 10, 10));
+        assert!(!ctx.contains(3, 3, 3));
+        assert!(ctx.contains(3, 3, 4));
+    }
+
+    #[test]
+    fn k1_paper_size() {
+        // the actual 60³ instance the paper uses
+        let ctx = k1(60);
+        assert_eq!(ctx.len(), 215_940);
+    }
+
+    #[test]
+    fn k2_three_blocks() {
+        let ctx = k2(5);
+        assert_eq!(ctx.len(), 3 * 125);
+        assert_eq!(ctx.sizes(), (15, 15, 15));
+        assert!(ctx.contains(0, 0, 0));
+        assert!(ctx.contains(5, 5, 5));
+        assert!(!ctx.contains(0, 5, 0)); // cross-block absent
+    }
+
+    #[test]
+    fn k3_dense() {
+        let ctx = k3(5);
+        assert_eq!(ctx.len(), 625);
+        assert_eq!(ctx.arity(), 4);
+        assert_eq!(ctx.density(), 1.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Exact density by hash-membership counting (the reference engine).
+
+use crate::core::context::TriContext;
+use crate::core::pattern::Cluster;
+use crate::density::DensityEngine;
+
+#[derive(Default)]
+pub struct ExactEngine;
+
+impl DensityEngine for ExactEngine {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+        clusters
+            .iter()
+            .map(|c| {
+                let vol = c.volume();
+                if vol == 0.0 {
+                    return 0.0;
+                }
+                let mut hit = 0u64;
+                for &g in &c.components[0] {
+                    for &m in &c.components[1] {
+                        for &b in &c.components[2] {
+                            if ctx.contains(g, m, b) {
+                                hit += 1;
+                            }
+                        }
+                    }
+                }
+                hit as f64 / vol
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+    use crate::datasets::synthetic::k2;
+
+    #[test]
+    fn dense_block_is_one() {
+        let ctx = k2(3);
+        let mut e = ExactEngine;
+        let c = tricluster(vec![0, 1, 2], vec![0, 1, 2], vec![0, 1, 2]);
+        assert_eq!(e.densities(&ctx, &[c]), vec![1.0]);
+    }
+
+    #[test]
+    fn cross_block_is_sparse() {
+        let ctx = k2(3);
+        let mut e = ExactEngine;
+        // spanning two blocks: only the two diagonal blocks hit → 2·27 of
+        // 6³ = 216 cells
+        let c = tricluster(
+            vec![0, 1, 2, 3, 4, 5],
+            vec![0, 1, 2, 3, 4, 5],
+            vec![0, 1, 2, 3, 4, 5],
+        );
+        let d = e.densities(&ctx, &[c])[0];
+        assert!((d - 54.0 / 216.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,34 @@
+//! Density engines — the post-processing hot spot of OAC-triclustering.
+//!
+//! The paper names "approximate tricluster density estimation (e.g.,
+//! employing the Monte Carlo approach)" as one of the two hardest
+//! problems of the method (§7). This module provides three engines with
+//! one interface and an ablation bench comparing them (A2):
+//!
+//! * [`ExactEngine`]   — hash-membership counting, `O(volume)`/cluster;
+//! * [`XlaEngine`]     — the AOT JAX/Pallas kernel: dense 64³ tiles ×
+//!                       batched cluster masks on the MXU (via PJRT);
+//! * [`MonteCarloEngine`] — unbiased sampling, `O(samples)`/cluster,
+//!                       optionally through the AOT mc artifact.
+
+pub mod exact;
+pub mod monte_carlo;
+pub mod tiling;
+pub mod xla_engine;
+
+pub use exact::ExactEngine;
+pub use monte_carlo::MonteCarloEngine;
+pub use tiling::DenseTiles;
+pub use xla_engine::XlaEngine;
+
+use crate::core::context::TriContext;
+use crate::core::pattern::Cluster;
+
+/// A density engine maps clusters to exact or estimated cuboid densities
+/// over the given context.
+pub trait DensityEngine {
+    fn name(&self) -> &'static str;
+
+    /// Densities ρ(c) = |cuboid ∩ I| / volume for each cluster.
+    fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64>;
+}

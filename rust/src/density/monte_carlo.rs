@@ -1,0 +1,142 @@
+//! Monte-Carlo density estimation — the approximate engine the paper
+//! proposes as future work (§7).
+//!
+//! ρ̂ = (1/S) Σ_s 1[(g_s, m_s, b_s) ∈ I] with the S coordinates sampled
+//! uniformly from the cluster cuboid X×Y×Z. Unbiased; std error
+//! ≤ 1/(2√S). Two backends: host hash-membership (any context size) and
+//! the AOT `mc_g{T}_s{S}` artifact (single-tile contexts, exercising the
+//! same PJRT path as the Pallas kernels).
+
+use anyhow::Result;
+
+use crate::core::context::TriContext;
+use crate::core::pattern::Cluster;
+use crate::density::tiling::DenseTiles;
+use crate::density::DensityEngine;
+use crate::runtime::{McExecutable, Runtime};
+use crate::util::rng::Rng;
+
+pub struct MonteCarloEngine {
+    pub samples: usize,
+    rng: Rng,
+    /// Optional AOT backend (used when the whole context fits one tile).
+    artifact: Option<McExecutable>,
+    tiles: Option<DenseTiles>,
+}
+
+impl MonteCarloEngine {
+    pub fn host(samples: usize, seed: u64) -> Self {
+        Self { samples, rng: Rng::new(seed), artifact: None, tiles: None }
+    }
+
+    /// Use the AOT mc artifact; sample count is fixed by the artifact.
+    pub fn with_artifact(rt: &Runtime, name: &str, seed: u64) -> Result<Self> {
+        let exe = rt.mc(name)?;
+        Ok(Self {
+            samples: exe.samples,
+            rng: Rng::new(seed),
+            artifact: Some(exe),
+            tiles: None,
+        })
+    }
+
+    fn estimate_host(&mut self, ctx: &TriContext, c: &Cluster) -> f64 {
+        let (xs, ys, zs) = (&c.components[0], &c.components[1], &c.components[2]);
+        if xs.is_empty() || ys.is_empty() || zs.is_empty() {
+            return 0.0;
+        }
+        let mut hit = 0usize;
+        for _ in 0..self.samples {
+            let g = xs[self.rng.usize_below(xs.len())];
+            let m = ys[self.rng.usize_below(ys.len())];
+            let b = zs[self.rng.usize_below(zs.len())];
+            if ctx.contains(g, m, b) {
+                hit += 1;
+            }
+        }
+        hit as f64 / self.samples as f64
+    }
+
+    fn estimate_artifact(&mut self, ctx: &TriContext, c: &Cluster) -> Result<f64> {
+        let exe = self.artifact.as_ref().unwrap();
+        let t = exe.tile;
+        let (g, m, b) = ctx.sizes();
+        anyhow::ensure!(
+            g <= t && m <= t && b <= t,
+            "mc artifact path requires a single-tile context"
+        );
+        if self.tiles.is_none() {
+            self.tiles = Some(DenseTiles::build(ctx, t));
+        }
+        let (xs, ys, zs) = (&c.components[0], &c.components[1], &c.components[2]);
+        if xs.is_empty() || ys.is_empty() || zs.is_empty() {
+            return Ok(0.0);
+        }
+        let mut coords = Vec::with_capacity(exe.samples * 3);
+        for _ in 0..exe.samples {
+            coords.push(xs[self.rng.usize_below(xs.len())] as i32);
+            coords.push(ys[self.rng.usize_below(ys.len())] as i32);
+            coords.push(zs[self.rng.usize_below(zs.len())] as i32);
+        }
+        let tile = self.tiles.as_ref().unwrap().tile(0, 0, 0);
+        Ok(exe.run(tile, &coords)? as f64)
+    }
+}
+
+impl DensityEngine for MonteCarloEngine {
+    fn name(&self) -> &'static str {
+        if self.artifact.is_some() {
+            "monte-carlo-xla"
+        } else {
+            "monte-carlo"
+        }
+    }
+
+    fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+        clusters
+            .iter()
+            .map(|c| {
+                if self.artifact.is_some() {
+                    self.estimate_artifact(ctx, c).expect("mc artifact")
+                } else {
+                    self.estimate_host(ctx, c)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+    use crate::datasets::synthetic::{k1, k2};
+
+    #[test]
+    fn dense_block_estimates_one() {
+        let ctx = k2(4);
+        let mut mc = MonteCarloEngine::host(500, 42);
+        let c = tricluster(vec![0, 1, 2, 3], vec![0, 1, 2, 3], vec![0, 1, 2, 3]);
+        assert_eq!(mc.densities(&ctx, &[c]), vec![1.0]);
+    }
+
+    #[test]
+    fn estimate_within_mc_error() {
+        let n = 10;
+        let ctx = k1(n); // density (n³-n)/n³ = 0.999… for the full cuboid
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let c = tricluster(ids.clone(), ids.clone(), ids);
+        let mut mc = MonteCarloEngine::host(2_000, 7);
+        let d = mc.densities(&ctx, &[c])[0];
+        let truth = (n * n * n - n) as f64 / (n * n * n) as f64;
+        assert!((d - truth).abs() < 0.05, "d={d} truth={truth}");
+    }
+
+    #[test]
+    fn empty_cluster_is_zero() {
+        let ctx = k2(3);
+        let mut mc = MonteCarloEngine::host(100, 1);
+        let c = tricluster(vec![], vec![0], vec![0]);
+        assert_eq!(mc.densities(&ctx, &[c]), vec![0.0]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Dense tiling of a triadic context: the HBM→VMEM schedule of the
+//! Layer-1 kernel, realised host-side.
+//!
+//! A context with modality sizes (|G|, |M|, |B|) is cut into T³-cell
+//! cuboid tiles (T = the artifact's tile edge). Each tile is a row-major
+//! f32 0/1 tensor; cluster masks are sliced per tile the same way. The
+//! kernel's counts then sum over tiles.
+
+use crate::core::context::TriContext;
+
+/// Dense f32 tiles of a context for a fixed tile edge `t`.
+pub struct DenseTiles {
+    pub t: usize,
+    /// number of tiles along (G, M, B)
+    pub grid: (usize, usize, usize),
+    /// tiles indexed [gi][mi][bi], each t³ row-major, laid out flat
+    tiles: Vec<Vec<f32>>,
+}
+
+impl DenseTiles {
+    /// Build tiles from a context. Memory: `grid_volume × t³ × 4` bytes —
+    /// callers must ensure the modality sizes are tile-friendly (the
+    /// engines fall back to exact counting otherwise).
+    pub fn build(ctx: &TriContext, t: usize) -> Self {
+        // modality extents: interner sizes are authoritative when names
+        // were interned; raw-id contexts (tests, generators) may exceed
+        // them, so take the max over the actual triples too
+        let (mut g, mut m, mut b) = ctx.sizes();
+        for tr in ctx.triples() {
+            g = g.max(tr.get(0) as usize + 1);
+            m = m.max(tr.get(1) as usize + 1);
+            b = b.max(tr.get(2) as usize + 1);
+        }
+        let grid = (g.div_ceil(t).max(1), m.div_ceil(t).max(1), b.div_ceil(t).max(1));
+        let n_tiles = grid.0 * grid.1 * grid.2;
+        let mut tiles = vec![vec![0f32; t * t * t]; n_tiles];
+        for tr in ctx.triples() {
+            let (g, m, b) =
+                (tr.get(0) as usize, tr.get(1) as usize, tr.get(2) as usize);
+            let (gi, mi, bi) = (g / t, m / t, b / t);
+            let idx = (gi * grid.1 + mi) * grid.2 + bi;
+            let (go, mo, bo) = (g % t, m % t, b % t);
+            tiles[idx][(go * t + mo) * t + bo] = 1.0;
+        }
+        Self { t, grid, tiles }
+    }
+
+    pub fn tile(&self, gi: usize, mi: usize, bi: usize) -> &[f32] {
+        &self.tiles[(gi * self.grid.1 + mi) * self.grid.2 + bi]
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Total bytes held by the dense tiles.
+    pub fn bytes(&self) -> usize {
+        self.tiles.len() * self.t * self.t * self.t * 4
+    }
+}
+
+/// Slice a global id set into a per-tile 0/1 mask of width `t` for tile
+/// index `ti` (ids in `[ti·t, (ti+1)·t)`).
+pub fn tile_mask(ids: &[u32], ti: usize, t: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), t);
+    out.fill(0.0);
+    let lo = (ti * t) as u32;
+    let hi = lo + t as u32;
+    // ids are sorted (Cluster invariant): binary search the window
+    let start = ids.partition_point(|&x| x < lo);
+    for &id in &ids[start..] {
+        if id >= hi {
+            break;
+        }
+        out[(id - lo) as usize] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::k2;
+
+    #[test]
+    fn tiles_cover_context() {
+        let ctx = k2(3); // 9×9×9
+        let tiles = DenseTiles::build(&ctx, 4);
+        assert_eq!(tiles.grid, (3, 3, 3));
+        let total: f32 = (0..3)
+            .flat_map(|gi| (0..3).flat_map(move |mi| (0..3).map(move |bi| (gi, mi, bi))))
+            .map(|(gi, mi, bi)| tiles.tile(gi, mi, bi).iter().sum::<f32>())
+            .sum();
+        assert_eq!(total as usize, ctx.len());
+    }
+
+    #[test]
+    fn tile_cell_addressing() {
+        let mut ctx = TriContext::new();
+        ctx.add(5, 6, 7);
+        let tiles = DenseTiles::build(&ctx, 4);
+        // (5,6,7) lives in tile (1,1,1) at offsets (1,2,3)
+        let t = tiles.tile(1, 1, 1);
+        assert_eq!(t[(1 * 4 + 2) * 4 + 3], 1.0);
+        assert_eq!(t.iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn tile_mask_windows() {
+        let ids = vec![0u32, 3, 4, 7, 12];
+        let mut m = vec![0f32; 4];
+        tile_mask(&ids, 0, 4, &mut m);
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 1.0]);
+        tile_mask(&ids, 1, 4, &mut m);
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 1.0]);
+        tile_mask(&ids, 3, 4, &mut m);
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+}

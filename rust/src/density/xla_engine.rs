@@ -1,0 +1,107 @@
+//! The XLA/Pallas density engine: batched counts on dense tiles through
+//! the AOT artifact (Layer-1 kernel on the PJRT CPU client).
+//!
+//! Execution plan per call: build `DenseTiles` once, then for every batch
+//! of K clusters and every tile run `density_g{T}_k{K}`, accumulating
+//! per-cluster counts. Volumes come from the cluster components (exact).
+
+use anyhow::Result;
+
+use crate::core::context::TriContext;
+use crate::core::pattern::Cluster;
+use crate::density::tiling::{tile_mask, DenseTiles};
+use crate::density::DensityEngine;
+use crate::runtime::{DensityExecutable, Runtime};
+
+pub struct XlaEngine {
+    exe: DensityExecutable,
+    /// reuse tiles across calls for the same context (keyed by ptr+len)
+    cached: Option<(usize, DenseTiles)>,
+}
+
+impl XlaEngine {
+    /// Compile the best-fitting density artifact for the given context
+    /// size and typical batch.
+    pub fn new(rt: &Runtime, edge: usize, batch: usize) -> Result<Self> {
+        Ok(Self { exe: rt.best_density(edge, batch)?, cached: None })
+    }
+
+    pub fn tile(&self) -> usize {
+        self.exe.tile
+    }
+
+    pub fn k(&self) -> usize {
+        self.exe.k
+    }
+
+    /// Raw batched counts: Σ_tiles kernel(tile, masks). Exposed for the
+    /// perf bench; `densities` wraps it.
+    pub fn counts(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Result<Vec<f64>> {
+        let t = self.exe.tile;
+        let k = self.exe.k;
+        let key = ctx.len() ^ (ctx.sizes().0 << 24);
+        if self.cached.as_ref().map(|(c, _)| *c) != Some(key) {
+            self.cached = Some((key, DenseTiles::build(ctx, t)));
+        }
+        let tiles = &self.cached.as_ref().unwrap().1;
+        let mut counts = vec![0f64; clusters.len()];
+
+        let mut xm = vec![0f32; k * t];
+        let mut ym = vec![0f32; k * t];
+        let mut zm = vec![0f32; k * t];
+        for (batch_idx, batch) in clusters.chunks(k).enumerate() {
+            for gi in 0..tiles.grid.0 {
+                // slice X masks for this tile row once per (batch, gi)
+                xm.fill(0.0);
+                for (j, c) in batch.iter().enumerate() {
+                    tile_mask(&c.components[0], gi, t, &mut xm[j * t..(j + 1) * t]);
+                }
+                for mi in 0..tiles.grid.1 {
+                    ym.fill(0.0);
+                    for (j, c) in batch.iter().enumerate() {
+                        tile_mask(&c.components[1], mi, t, &mut ym[j * t..(j + 1) * t]);
+                    }
+                    for bi in 0..tiles.grid.2 {
+                        zm.fill(0.0);
+                        for (j, c) in batch.iter().enumerate() {
+                            tile_mask(
+                                &c.components[2],
+                                bi,
+                                t,
+                                &mut zm[j * t..(j + 1) * t],
+                            );
+                        }
+                        let (cnt, _vol) =
+                            self.exe.run(tiles.tile(gi, mi, bi), &xm, &ym, &zm)?;
+                        for j in 0..batch.len() {
+                            counts[batch_idx * k + j] += cnt[j] as f64;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(counts)
+    }
+}
+
+impl DensityEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla-pallas"
+    }
+
+    fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+        let counts = self.counts(ctx, clusters).expect("xla density execution");
+        counts
+            .iter()
+            .zip(clusters)
+            .map(|(&cnt, c)| {
+                let vol = c.volume();
+                if vol == 0.0 {
+                    0.0
+                } else {
+                    cnt / vol
+                }
+            })
+            .collect()
+    }
+}

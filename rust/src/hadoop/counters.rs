@@ -1,0 +1,85 @@
+//! Job counters — the Hadoop counter facility: named u64 metrics
+//! incremented by tasks and merged at job completion.
+
+use std::collections::BTreeMap;
+
+/// Well-known counter names used across the pipeline.
+pub mod names {
+    pub const MAP_INPUT_RECORDS: &str = "map.input.records";
+    pub const MAP_OUTPUT_RECORDS: &str = "map.output.records";
+    pub const REDUCE_INPUT_GROUPS: &str = "reduce.input.groups";
+    pub const REDUCE_INPUT_RECORDS: &str = "reduce.input.records";
+    pub const REDUCE_OUTPUT_RECORDS: &str = "reduce.output.records";
+    pub const SHUFFLE_BYTES: &str = "shuffle.bytes";
+    pub const SPILLED_BYTES: &str = "dfs.spilled.bytes";
+    pub const REPLICATED_BYTES: &str = "dfs.replicated.bytes";
+    pub const TASK_RETRIES: &str = "task.retries";
+    pub const DUPLICATE_INPUTS: &str = "task.duplicate.inputs";
+    pub const COMBINE_INPUT_RECORDS: &str = "combine.input.records";
+    pub const COMBINE_OUTPUT_RECORDS: &str = "combine.output.records";
+}
+
+/// A set of named counters (BTreeMap so reports are deterministic).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    values: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.values.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.values.get(name).copied().unwrap_or(0)
+    }
+
+    /// Merge another counter set into this one (job ← task).
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.values {
+            *self.values.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.values.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_get_merge() {
+        let mut a = Counters::new();
+        a.inc(names::MAP_INPUT_RECORDS, 10);
+        a.inc(names::MAP_INPUT_RECORDS, 5);
+        assert_eq!(a.get(names::MAP_INPUT_RECORDS), 15);
+        assert_eq!(a.get("missing"), 0);
+
+        let mut b = Counters::new();
+        b.inc(names::MAP_INPUT_RECORDS, 1);
+        b.inc(names::SHUFFLE_BYTES, 100);
+        a.merge(&b);
+        assert_eq!(a.get(names::MAP_INPUT_RECORDS), 16);
+        assert_eq!(a.get(names::SHUFFLE_BYTES), 100);
+    }
+
+    #[test]
+    fn deterministic_iteration() {
+        let mut c = Counters::new();
+        c.inc("z", 1);
+        c.inc("a", 2);
+        let keys: Vec<&str> = c.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "z"]);
+    }
+}

@@ -1,0 +1,664 @@
+//! The MapReduce job engine: typed Mapper/Reducer traits, hash
+//! partitioning, sort-shuffle with DFS-materialised intermediates, fault
+//! injection, counters, and per-task timing for the virtual cluster clock.
+//!
+//! This is the Rust analogue of the paper's Hadoop setup (§4.2): a job is
+//! configured (JobConfigurator), mappers emit key-value pairs, keys are
+//! raw-byte-compared in the sort phase (WritableComparable), reducers see
+//! each key with all its values, and stages chain by feeding one job's
+//! output to the next (App).
+
+use std::marker::PhantomData;
+
+use anyhow::Result;
+
+use crate::hadoop::counters::{names, Counters};
+use crate::hadoop::dfs::Dfs;
+use crate::hadoop::record::Record;
+use crate::hadoop::task;
+use crate::util::hash::fxhash;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+/// Typed map function. One mapper instance is shared by all map tasks
+/// (must be `Sync`); per-record state lives in the emitter.
+pub trait Mapper: Sync {
+    type InK: Record + Send + Sync + Clone;
+    type InV: Record + Send + Sync + Clone;
+    type OutK: Record + Send + Sync;
+    type OutV: Record + Send + Sync;
+
+    fn map(
+        &self,
+        key: Self::InK,
+        value: Self::InV,
+        emit: &mut Emitter<Self::OutK, Self::OutV>,
+    );
+}
+
+/// Typed reduce function: sees one key with all shuffled values.
+pub trait Reducer: Sync {
+    type InK: Record + Send;
+    type InV: Record + Send;
+    type OutK: Record + Send;
+    type OutV: Record + Send;
+
+    fn reduce(
+        &self,
+        key: Self::InK,
+        values: Vec<Self::InV>,
+        emit: &mut Emitter<Self::OutK, Self::OutV>,
+    );
+}
+
+/// Map-side combiner: merges the values of one key within a single map
+/// task's output before the shuffle (Hadoop's `setCombinerClass`). Must
+/// be algebraically safe to apply 0..n times (associative + idempotent
+/// w.r.t. the reducer), which holds for the stage-1 cumulus union.
+pub trait Combiner: Sync {
+    type K: Record + Send;
+    type V: Record + Send;
+
+    /// Fold `values` (≥2 entries of one key) into fewer entries.
+    fn combine(&self, key: &Self::K, values: Vec<Self::V>) -> Vec<Self::V>;
+}
+
+/// No-op combiner used when a job doesn't configure one.
+pub struct NoCombiner<K, V>(PhantomData<(K, V)>);
+
+impl<K, V> Default for NoCombiner<K, V> {
+    fn default() -> Self {
+        Self(PhantomData)
+    }
+}
+
+impl<K, V> Combiner for NoCombiner<K, V>
+where
+    K: Record + Send + Sync,
+    V: Record + Send + Sync,
+{
+    type K = K;
+    type V = V;
+
+    fn combine(&self, _key: &K, values: Vec<V>) -> Vec<V> {
+        values
+    }
+}
+
+/// Collects emitted pairs; the engine encodes and partitions them.
+pub struct Emitter<K, V> {
+    pairs: Vec<(K, V)>,
+}
+
+impl<K, V> Emitter<K, V> {
+    fn new() -> Self {
+        Self { pairs: Vec::new() }
+    }
+
+    #[inline]
+    pub fn emit(&mut self, key: K, value: V) {
+        self.pairs.push((key, value));
+    }
+
+    /// Standalone emitter for unit-testing mappers/reducers directly.
+    pub fn new_for_test() -> Self {
+        Self::new()
+    }
+
+    /// Drain collected pairs (test helper).
+    pub fn into_pairs(self) -> Vec<(K, V)> {
+        self.pairs
+    }
+}
+
+/// Job configuration — the `JobConfigurator` analogue.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub name: String,
+    /// Number of map tasks the input is split into.
+    pub map_tasks: usize,
+    /// Number of reduce tasks (= shuffle partitions).
+    pub reduce_tasks: usize,
+    /// OS threads actually used to execute tasks on this machine.
+    pub executor_threads: usize,
+    /// Probability that a map task fails after completion and is retried,
+    /// re-emitting its outputs (duplicate tuples — the paper's K1–K3
+    /// robustness scenario).
+    pub fault_prob: f64,
+    /// Seed for fault injection.
+    pub seed: u64,
+    /// Materialise intermediates through the (replicated) DFS.
+    pub use_dfs: bool,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        let threads = pool::default_workers();
+        Self {
+            name: "job".into(),
+            map_tasks: threads.max(4),
+            reduce_tasks: threads.max(4),
+            executor_threads: threads,
+            fault_prob: 0.0,
+            seed: 0x5EED,
+            use_dfs: true,
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn named(name: &str) -> Self {
+        Self { name: name.into(), ..Self::default() }
+    }
+}
+
+/// Everything measured about one job run.
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    pub name: String,
+    /// Wall-clock per map task (ms) — feeds the virtual cluster clock.
+    pub map_task_ms: Vec<f64>,
+    /// Wall-clock per reduce task (ms).
+    pub reduce_task_ms: Vec<f64>,
+    /// Total wall time of the job on this machine (ms).
+    pub wall_ms: f64,
+    /// Bytes moved through the shuffle (logical).
+    pub shuffle_bytes: u64,
+    pub counters: Counters,
+}
+
+impl JobStats {
+    /// Simulated makespan on an `r`-node cluster: map barrier + reduce
+    /// barrier, LPT list scheduling per phase (see task.rs).
+    pub fn makespan_ms(&self, r: usize) -> f64 {
+        task::lpt_makespan(&self.map_task_ms, r)
+            + task::lpt_makespan(&self.reduce_task_ms, r)
+    }
+
+    /// Sequential (1-node) virtual time.
+    pub fn sequential_ms(&self) -> f64 {
+        self.map_task_ms.iter().sum::<f64>()
+            + self.reduce_task_ms.iter().sum::<f64>()
+    }
+}
+
+/// Run a MapReduce job: `input` → map → shuffle → reduce → typed output.
+///
+/// Output pairs are returned grouped by reduce partition then key order
+/// (deterministic given the config).
+pub fn run_job<M, R>(
+    cfg: &JobConfig,
+    mapper: &M,
+    reducer: &R,
+    input: Vec<(M::InK, M::InV)>,
+    dfs: &Dfs,
+) -> Result<(Vec<(R::OutK, R::OutV)>, JobStats)>
+where
+    M: Mapper,
+    R: Reducer<InK = M::OutK, InV = M::OutV>,
+{
+    run_job_with_combiner(
+        cfg,
+        mapper,
+        None::<&NoCombiner<M::OutK, M::OutV>>,
+        reducer,
+        input,
+        dfs,
+    )
+}
+
+/// `run_job` with an optional map-side combiner (Hadoop
+/// `setCombinerClass`): each map task sorts and combines its own output
+/// per partition before the shuffle, trading map CPU for shuffle bytes.
+pub fn run_job_with_combiner<M, C, R>(
+    cfg: &JobConfig,
+    mapper: &M,
+    combiner: Option<&C>,
+    reducer: &R,
+    input: Vec<(M::InK, M::InV)>,
+    dfs: &Dfs,
+) -> Result<(Vec<(R::OutK, R::OutV)>, JobStats)>
+where
+    M: Mapper,
+    C: Combiner<K = M::OutK, V = M::OutV>,
+    R: Reducer<InK = M::OutK, InV = M::OutV>,
+{
+    let job_timer = Timer::start();
+    let mut stats = JobStats { name: cfg.name.clone(), ..Default::default() };
+    let n_input = input.len();
+    let map_tasks = cfg.map_tasks.max(1).min(n_input.max(1));
+    let r = cfg.reduce_tasks.max(1);
+
+    // ---- split input into map task slices -------------------------------
+    let mut splits: Vec<Vec<(M::InK, M::InV)>> = Vec::with_capacity(map_tasks);
+    {
+        let per = n_input.div_ceil(map_tasks);
+        let mut it = input.into_iter();
+        for _ in 0..map_tasks {
+            let chunk: Vec<_> = it.by_ref().take(per).collect();
+            if !chunk.is_empty() {
+                splits.push(chunk);
+            }
+        }
+    }
+
+    // ---- map phase -------------------------------------------------------
+    // Map outputs are encoded DIRECTLY into one length-framed byte blob
+    // per partition (§Perf: no per-record Vec allocations; the same blob
+    // format travels through the DFS and into the reduce sort).
+    struct MapOut {
+        partitions: Vec<Vec<u8>>,
+        ms: f64,
+        counters: Counters,
+    }
+    let fault_prob = cfg.fault_prob;
+    let seed = cfg.seed;
+    let map_results: Vec<MapOut> =
+        pool::parallel_map(splits.len(), cfg.executor_threads, 1, |t| {
+            let split = &splits[t];
+            let timer = Timer::start();
+            let mut counters = Counters::new();
+            let mut partitions: Vec<Vec<u8>> = (0..r).map(|_| Vec::new()).collect();
+            let mut kbuf: Vec<u8> = Vec::new();
+            let mut vbuf: Vec<u8> = Vec::new();
+            // fault injection: a retried task reprocesses its whole split,
+            // duplicating every emitted pair (paper §5.1 rationale).
+            let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E3779B9));
+            let attempts = if fault_prob > 0.0 && rng.chance(fault_prob) {
+                counters.inc(names::TASK_RETRIES, 1);
+                counters.inc(names::DUPLICATE_INPUTS, split.len() as u64);
+                2
+            } else {
+                1
+            };
+            for _ in 0..attempts {
+                for (k, v) in split.iter() {
+                    counters.inc(names::MAP_INPUT_RECORDS, 1);
+                    let mut emitter = Emitter::new();
+                    mapper.map(k.clone(), v.clone(), &mut emitter);
+                    for (ok, ov) in emitter.pairs {
+                        kbuf.clear();
+                        ok.encode(&mut kbuf);
+                        vbuf.clear();
+                        ov.encode(&mut vbuf);
+                        let part = (fxhash(&kbuf) % r as u64) as usize;
+                        counters.inc(names::MAP_OUTPUT_RECORDS, 1);
+                        let blob = &mut partitions[part];
+                        (kbuf.len() as u32).encode(blob);
+                        blob.extend_from_slice(&kbuf);
+                        (vbuf.len() as u32).encode(blob);
+                        blob.extend_from_slice(&vbuf);
+                    }
+                }
+            }
+            // map-side combine: sort+group this task's blob per partition
+            // and fold values before they hit the shuffle
+            if let Some(comb) = combiner {
+                for blob in partitions.iter_mut() {
+                    if blob.is_empty() {
+                        continue;
+                    }
+                    let mut pairs: Vec<(&[u8], &[u8])> = Vec::new();
+                    let mut s = blob.as_slice();
+                    while !s.is_empty() {
+                        let kl = u32::decode(&mut s) as usize;
+                        let (kb, rest) = s.split_at(kl);
+                        s = rest;
+                        let vl = u32::decode(&mut s) as usize;
+                        let (vb, rest) = s.split_at(vl);
+                        s = rest;
+                        pairs.push((kb, vb));
+                    }
+                    pairs.sort_unstable();
+                    let mut out_blob: Vec<u8> = Vec::with_capacity(blob.len());
+                    let mut i = 0;
+                    while i < pairs.len() {
+                        let mut j = i + 1;
+                        while j < pairs.len() && pairs[j].0 == pairs[i].0 {
+                            j += 1;
+                        }
+                        let kb = pairs[i].0;
+                        let combined = if j - i > 1 {
+                            let key = M::OutK::from_bytes(kb);
+                            let values: Vec<M::OutV> = pairs[i..j]
+                                .iter()
+                                .map(|(_, vb)| M::OutV::from_bytes(vb))
+                                .collect();
+                            counters.inc(
+                                names::COMBINE_INPUT_RECORDS,
+                                (j - i) as u64,
+                            );
+                            let folded = comb.combine(&key, values);
+                            counters.inc(
+                                names::COMBINE_OUTPUT_RECORDS,
+                                folded.len() as u64,
+                            );
+                            Some(folded)
+                        } else {
+                            None
+                        };
+                        match combined {
+                            Some(folded) => {
+                                for v in folded {
+                                    (kb.len() as u32).encode(&mut out_blob);
+                                    out_blob.extend_from_slice(kb);
+                                    let mut vb = Vec::new();
+                                    v.encode(&mut vb);
+                                    (vb.len() as u32).encode(&mut out_blob);
+                                    out_blob.extend_from_slice(&vb);
+                                }
+                            }
+                            None => {
+                                let (kb, vb) = pairs[i];
+                                (kb.len() as u32).encode(&mut out_blob);
+                                out_blob.extend_from_slice(kb);
+                                (vb.len() as u32).encode(&mut out_blob);
+                                out_blob.extend_from_slice(vb);
+                            }
+                        }
+                        i = j;
+                    }
+                    *blob = out_blob;
+                }
+            }
+            MapOut { partitions, ms: timer.elapsed_ms(), counters }
+        });
+
+    for m in &map_results {
+        stats.map_task_ms.push(m.ms);
+        stats.counters.merge(&m.counters);
+    }
+
+    // ---- shuffle: materialise per (map task, partition) through DFS ------
+    if cfg.use_dfs {
+        for (t, m) in map_results.iter().enumerate() {
+            for (p, blob) in m.partitions.iter().enumerate() {
+                if blob.is_empty() {
+                    continue;
+                }
+                stats.shuffle_bytes += blob.len() as u64;
+                dfs.put(&format!("{}/m{}/p{}", cfg.name, t, p), blob.clone())?;
+            }
+        }
+        stats
+            .counters
+            .inc(names::SHUFFLE_BYTES, stats.shuffle_bytes);
+        stats.counters.inc(
+            names::REPLICATED_BYTES,
+            stats.shuffle_bytes * dfs.replication() as u64,
+        );
+    } else {
+        for m in &map_results {
+            for blob in &m.partitions {
+                stats.shuffle_bytes += blob.len() as u64;
+            }
+        }
+        stats
+            .counters
+            .inc(names::SHUFFLE_BYTES, stats.shuffle_bytes);
+    }
+
+    // gather partition p across all map tasks: returns the raw blobs;
+    // the reduce task sorts borrowed slices into them (§Perf: zero-copy
+    // shuffle — no per-record Vec allocations)
+    // blocks stay in the DFS until the job completes (Hadoop keeps map
+    // outputs for re-fetch on reduce-task retry); deleted after the
+    // reduce phase below
+    let gather = |p: usize| -> Vec<Vec<u8>> {
+        if cfg.use_dfs {
+            let mut blobs = Vec::new();
+            for t in 0..map_results.len() {
+                let name = format!("{}/m{}/p{}", cfg.name, t, p);
+                if let Ok(blob) = dfs.get(&name) {
+                    blobs.push(blob);
+                }
+            }
+            blobs
+        } else {
+            map_results.iter().map(|m| m.partitions[p].clone()).collect()
+        }
+    };
+
+    // ---- reduce phase ----------------------------------------------------
+    struct ReduceOut<K, V> {
+        out: Vec<(K, V)>,
+        ms: f64,
+        counters: Counters,
+    }
+    let reduce_results: Vec<ReduceOut<R::OutK, R::OutV>> =
+        pool::parallel_map(r, cfg.executor_threads, 1, |p| {
+            let timer = Timer::start();
+            let mut counters = Counters::new();
+            // reduce-task retry: the first attempt's work (including the
+            // shuffle re-fetch) is discarded and redone — wasted wall
+            // time, never duplicated output (Hadoop's commit protocol)
+            let mut rng =
+                Rng::new(seed ^ 0x5ED0C3 ^ (p as u64).wrapping_mul(0x85EB_CA6B));
+            if fault_prob > 0.0 && rng.chance(fault_prob) {
+                counters.inc(names::TASK_RETRIES, 1);
+                let blobs = gather(p);
+                std::hint::black_box(blobs.iter().map(Vec::len).sum::<usize>());
+            }
+            let blobs = gather(p);
+            // borrow (key, value) slices out of the blobs — zero copies
+            let mut pairs: Vec<(&[u8], &[u8])> = Vec::new();
+            for blob in &blobs {
+                let mut s = blob.as_slice();
+                while !s.is_empty() {
+                    let kl = u32::decode(&mut s) as usize;
+                    let (kb, rest) = s.split_at(kl);
+                    s = rest;
+                    let vl = u32::decode(&mut s) as usize;
+                    let (vb, rest) = s.split_at(vl);
+                    s = rest;
+                    pairs.push((kb, vb));
+                }
+            }
+            // the sort phase: raw byte comparison of encoded keys
+            pairs.sort_unstable();
+            let mut out = Vec::new();
+            let mut i = 0;
+            while i < pairs.len() {
+                let mut j = i + 1;
+                while j < pairs.len() && pairs[j].0 == pairs[i].0 {
+                    j += 1;
+                }
+                counters.inc(names::REDUCE_INPUT_GROUPS, 1);
+                counters.inc(names::REDUCE_INPUT_RECORDS, (j - i) as u64);
+                let key = R::InK::from_bytes(pairs[i].0);
+                let values: Vec<R::InV> = pairs[i..j]
+                    .iter()
+                    .map(|(_, vb)| R::InV::from_bytes(vb))
+                    .collect();
+                let mut emitter = Emitter::new();
+                reducer.reduce(key, values, &mut emitter);
+                counters
+                    .inc(names::REDUCE_OUTPUT_RECORDS, emitter.pairs.len() as u64);
+                out.extend(emitter.pairs);
+                i = j;
+            }
+            ReduceOut { out, ms: timer.elapsed_ms(), counters }
+        });
+
+    // job complete: release the materialised map outputs
+    if cfg.use_dfs {
+        for t in 0..map_results.len() {
+            for p in 0..r {
+                dfs.delete(&format!("{}/m{}/p{}", cfg.name, t, p));
+            }
+        }
+    }
+
+    let mut output = Vec::new();
+    for rr in reduce_results {
+        stats.reduce_task_ms.push(rr.ms);
+        stats.counters.merge(&rr.counters);
+        output.extend(rr.out);
+    }
+    stats.wall_ms = job_timer.elapsed_ms();
+    Ok((output, stats))
+}
+
+/// Identity mapper — handy for reduce-only stages and tests.
+pub struct IdentityMapper<K, V>(pub PhantomData<(K, V)>);
+
+impl<K, V> Default for IdentityMapper<K, V> {
+    fn default() -> Self {
+        Self(PhantomData)
+    }
+}
+
+impl<K, V> Mapper for IdentityMapper<K, V>
+where
+    K: Record + Send + Sync + Clone,
+    V: Record + Send + Sync + Clone,
+{
+    type InK = K;
+    type InV = V;
+    type OutK = K;
+    type OutV = V;
+
+    fn map(&self, key: K, value: V, emit: &mut Emitter<K, V>) {
+        emit.emit(key, value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Word-count style: tokens → (token, 1) → (token, sum).
+    struct TokenMapper;
+
+    impl Mapper for TokenMapper {
+        type InK = ();
+        type InV = String;
+        type OutK = String;
+        type OutV = u64;
+
+        fn map(&self, _k: (), v: String, emit: &mut Emitter<String, u64>) {
+            for tok in v.split_whitespace() {
+                emit.emit(tok.to_string(), 1);
+            }
+        }
+    }
+
+    struct SumReducer;
+
+    impl Reducer for SumReducer {
+        type InK = String;
+        type InV = u64;
+        type OutK = String;
+        type OutV = u64;
+
+        fn reduce(&self, k: String, vs: Vec<u64>, emit: &mut Emitter<String, u64>) {
+            emit.emit(k, vs.iter().sum());
+        }
+    }
+
+    fn wordcount(cfg: &JobConfig) -> Vec<(String, u64)> {
+        let input: Vec<((), String)> = vec![
+            ((), "a b a".into()),
+            ((), "b c".into()),
+            ((), "a".into()),
+        ];
+        let dfs = Dfs::in_memory();
+        let (mut out, stats) =
+            run_job(cfg, &TokenMapper, &SumReducer, input, &dfs).unwrap();
+        out.sort();
+        assert_eq!(stats.counters.get(names::MAP_INPUT_RECORDS) >= 3, true);
+        out
+    }
+
+    #[test]
+    fn wordcount_basic() {
+        let cfg = JobConfig::named("wc");
+        let out = wordcount(&cfg);
+        assert_eq!(
+            out,
+            vec![("a".into(), 3), ("b".into(), 2), ("c".into(), 1)]
+        );
+    }
+
+    #[test]
+    fn wordcount_without_dfs_matches() {
+        let cfg = JobConfig { use_dfs: false, ..JobConfig::named("wc2") };
+        let out = wordcount(&cfg);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], ("a".into(), 3));
+    }
+
+    #[test]
+    fn many_partitions_and_tasks() {
+        let cfg = JobConfig {
+            map_tasks: 7,
+            reduce_tasks: 5,
+            ..JobConfig::named("wc3")
+        };
+        let out = wordcount(&cfg);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn fault_injection_duplicates_are_visible_in_counts() {
+        // With fault_prob = 1 every map task retries: sums double.
+        let cfg = JobConfig {
+            fault_prob: 1.0,
+            map_tasks: 2,
+            ..JobConfig::named("wc4")
+        };
+        let input: Vec<((), String)> =
+            vec![((), "x".into()), ((), "x y".into())];
+        let dfs = Dfs::in_memory();
+        let (mut out, stats) =
+            run_job(&cfg, &TokenMapper, &SumReducer, input, &dfs).unwrap();
+        out.sort();
+        assert_eq!(out, vec![("x".into(), 4), ("y".into(), 2)]);
+        assert!(stats.counters.get(names::TASK_RETRIES) >= 1);
+    }
+
+    #[test]
+    fn stats_have_task_timings() {
+        let cfg = JobConfig { map_tasks: 3, ..JobConfig::named("wc5") };
+        let input: Vec<((), String)> =
+            (0..30).map(|i| ((), format!("w{} w{}", i % 5, i % 3))).collect();
+        let dfs = Dfs::in_memory();
+        let (_, stats) =
+            run_job(&cfg, &TokenMapper, &SumReducer, input, &dfs).unwrap();
+        assert_eq!(stats.map_task_ms.len(), 3);
+        assert!(stats.makespan_ms(2) <= stats.sequential_ms() + 1e-9);
+        assert!(stats.shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn identity_mapper_passthrough() {
+        let cfg = JobConfig::named("id");
+        let dfs = Dfs::in_memory();
+        let input: Vec<(u32, u64)> = vec![(1, 10), (2, 20), (1, 30)];
+        let (out, _) = run_job(
+            &cfg,
+            &IdentityMapper::<u32, u64>::default(),
+            &SumU32Reducer,
+            input,
+            &dfs,
+        )
+        .unwrap();
+        let mut out = out;
+        out.sort();
+        assert_eq!(out, vec![(1, 40), (2, 20)]);
+    }
+
+    struct SumU32Reducer;
+
+    impl Reducer for SumU32Reducer {
+        type InK = u32;
+        type InV = u64;
+        type OutK = u32;
+        type OutV = u64;
+
+        fn reduce(&self, k: u32, vs: Vec<u64>, emit: &mut Emitter<u32, u64>) {
+            emit.emit(k, vs.iter().sum());
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Mini-Hadoop: the MapReduce substrate the paper's §4 algorithm runs on.
+//!
+//! Reproduces the parts of the Hadoop stack the paper's evaluation
+//! depends on — typed Writable records, hash partitioning, raw-byte key
+//! sort, DFS-materialised intermediates with replication accounting,
+//! task retry (duplicate) injection, counters, and a virtual cluster
+//! clock that replays measured task times onto r simulated nodes (the
+//! paper itself benchmarked Hadoop in single-node emulation mode).
+
+pub mod counters;
+pub mod dfs;
+pub mod job;
+pub mod record;
+pub mod task;
+
+pub use counters::Counters;
+pub use dfs::{Dfs, DfsConfig};
+pub use job::{run_job, Emitter, JobConfig, JobStats, Mapper, Reducer};
+pub use record::Record;

@@ -1,0 +1,245 @@
+//! Writable-style record serialization.
+//!
+//! The paper's Java implementation makes every key/value class implement
+//! Hadoop's `Writable` / `WritableComparable`; this module is the Rust
+//! equivalent. Records encode to a compact byte form; **keys are compared
+//! by their encoded bytes** during the sort-shuffle (the raw-comparator
+//! idiom), so `encode` must be injective and prefix-free per type, which
+//! the length-prefixed / fixed-width encodings below guarantee.
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::{NTuple, SubRelation};
+
+/// Serializable record. `decode` must consume exactly the bytes `encode`
+/// produced (records are concatenated in shuffle buffers).
+pub trait Record: Sized {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(buf: &mut &[u8]) -> Self;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        self.encode(&mut v);
+        v
+    }
+
+    fn from_bytes(mut bytes: &[u8]) -> Self {
+        let v = Self::decode(&mut bytes);
+        debug_assert!(bytes.is_empty(), "trailing bytes after decode");
+        v
+    }
+}
+
+#[inline]
+fn take<'a>(buf: &mut &'a [u8], n: usize) -> &'a [u8] {
+    let (head, tail) = buf.split_at(n);
+    *buf = tail;
+    head
+}
+
+impl Record for u32 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_be_bytes());
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        u32::from_be_bytes(take(buf, 4).try_into().unwrap())
+    }
+}
+
+impl Record for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_be_bytes());
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        u64::from_be_bytes(take(buf, 8).try_into().unwrap())
+    }
+}
+
+impl Record for f64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_be_bytes());
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        f64::from_bits(u64::from_be_bytes(take(buf, 8).try_into().unwrap()))
+    }
+}
+
+impl Record for () {
+    fn encode(&self, _out: &mut Vec<u8>) {}
+
+    fn decode(_buf: &mut &[u8]) -> Self {}
+}
+
+impl Record for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u32).encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        let n = u32::decode(buf) as usize;
+        String::from_utf8(take(buf, n).to_vec()).expect("utf8 record")
+    }
+}
+
+impl<T: Record> Record for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u32).encode(out);
+        for x in self {
+            x.encode(out);
+        }
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        let n = u32::decode(buf) as usize;
+        (0..n).map(|_| T::decode(buf)).collect()
+    }
+}
+
+impl<A: Record, B: Record> Record for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        (A::decode(buf), B::decode(buf))
+    }
+}
+
+impl Record for NTuple {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.arity() as u8);
+        for &e in self.as_slice() {
+            e.encode(out);
+        }
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        let n = take(buf, 1)[0] as usize;
+        let elems: Vec<u32> = (0..n).map(|_| u32::decode(buf)).collect();
+        NTuple::new(&elems)
+    }
+}
+
+impl Record for SubRelation {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.original_arity() as u8);
+        out.push(self.dropped() as u8);
+        for &e in self.as_slice() {
+            e.encode(out);
+        }
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        let n = take(buf, 1)[0] as usize;
+        let k = take(buf, 1)[0] as usize;
+        let elems: Vec<u32> = (0..n - 1).map(|_| u32::decode(buf)).collect();
+        // rebuild via NTuple with a placeholder at position k, then re-drop
+        let mut full = Vec::with_capacity(n);
+        let mut j = 0;
+        for i in 0..n {
+            if i == k {
+                full.push(0);
+            } else {
+                full.push(elems[j]);
+                j += 1;
+            }
+        }
+        NTuple::new(&full).subrelation(k)
+    }
+}
+
+/// The `FormalConcept` analogue: components only; support travels
+/// separately through stage 3.
+impl Record for Cluster {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.arity() as u8);
+        for c in &self.components {
+            c.encode(out);
+        }
+    }
+
+    fn decode(buf: &mut &[u8]) -> Self {
+        let n = take(buf, 1)[0] as usize;
+        let components: Vec<Vec<u32>> = (0..n).map(|_| Vec::decode(buf)).collect();
+        Cluster::new(components)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+    use crate::util::proptest_lite::assert_prop;
+
+    fn roundtrip<T: Record + PartialEq + std::fmt::Debug>(x: T) {
+        let bytes = x.to_bytes();
+        assert_eq!(T::from_bytes(&bytes), x);
+    }
+
+    #[test]
+    fn scalars() {
+        roundtrip(42u32);
+        roundtrip(u64::MAX);
+        roundtrip(-1.5f64);
+        roundtrip(String::from("Comedy, Драма"));
+        roundtrip(());
+    }
+
+    #[test]
+    fn containers() {
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip((7u32, String::from("x")));
+        roundtrip(Vec::<u32>::new());
+    }
+
+    #[test]
+    fn tuples_and_subrelations() {
+        roundtrip(NTuple::triple(1, 2, 3));
+        roundtrip(NTuple::new(&[9, 8, 7, 6]));
+        roundtrip(NTuple::triple(1, 2, 3).subrelation(1));
+        roundtrip(NTuple::new(&[4, 5, 6, 7]).subrelation(3));
+    }
+
+    #[test]
+    fn clusters() {
+        roundtrip(tricluster(vec![1, 2], vec![3], vec![4, 5, 6]));
+    }
+
+    #[test]
+    fn u32_byte_order_matches_numeric_order() {
+        // keys sort by encoded bytes: big-endian must preserve order
+        let pairs = [(0u32, 1u32), (1, 256), (65535, 65536), (7, 8)];
+        for (a, b) in pairs {
+            assert!(a.to_bytes() < b.to_bytes(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn concatenated_stream_decodes() {
+        let mut buf = Vec::new();
+        NTuple::triple(1, 2, 3).encode(&mut buf);
+        NTuple::triple(4, 5, 6).encode(&mut buf);
+        let mut slice = buf.as_slice();
+        assert_eq!(NTuple::decode(&mut slice), NTuple::triple(1, 2, 3));
+        assert_eq!(NTuple::decode(&mut slice), NTuple::triple(4, 5, 6));
+        assert!(slice.is_empty());
+    }
+
+    #[test]
+    fn prop_ntuple_roundtrip() {
+        assert_prop(128, |g| {
+            let n = 2 + g.usize_below(4);
+            let elems: Vec<u32> = (0..n).map(|_| g.u32_below(u32::MAX)).collect();
+            let t = NTuple::new(&elems);
+            if NTuple::from_bytes(&t.to_bytes()) == t {
+                Ok(())
+            } else {
+                Err(format!("{t:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Task scheduling and the virtual cluster clock.
+//!
+//! The paper evaluates Hadoop in single-node *emulation mode* ("one can
+//! estimate the performance in a real distributed environment assuming
+//! that each node workload is (roughly) the same"). We go one step
+//! further: every map/reduce task's wall time is recorded, and the
+//! virtual clock replays the task durations onto `r` simulated workers
+//! (JobTracker-style greedy list scheduling) to report the makespan a
+//! real r-node cluster would see — without pretending this container has
+//! r cores.
+
+/// Greedy list-scheduling makespan: tasks (durations, ms) are assigned
+/// longest-processing-time-first to the least-loaded of `workers` nodes.
+/// LPT is a 4/3-approximation of optimal makespan — adequate for the
+/// JobTracker comparison the paper makes.
+pub fn lpt_makespan(durations: &[f64], workers: usize) -> f64 {
+    assert!(workers >= 1);
+    if durations.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = durations.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut loads = vec![0.0f64; workers];
+    for d in sorted {
+        let (idx, _) = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        loads[idx] += d;
+    }
+    loads.iter().cloned().fold(0.0, f64::max)
+}
+
+/// FIFO makespan (tasks in submission order) — what a plain JobTracker
+/// without task-size knowledge achieves; used by the skew ablation.
+pub fn fifo_makespan(durations: &[f64], workers: usize) -> f64 {
+    assert!(workers >= 1);
+    let mut loads = vec![0.0f64; workers];
+    for &d in durations {
+        let (idx, _) = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        loads[idx] += d;
+    }
+    loads.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Hash-slicing makespan for the PRIOR M/R algorithm [43] (ablation A1):
+/// all triples with `hash(entity) % r == j` go to reducer j, so the
+/// per-reducer load is fixed by the hash — no balancing possible. Given
+/// per-slice record counts and a per-record cost, returns the makespan.
+pub fn sliced_makespan(slice_records: &[u64], ms_per_record: f64) -> f64 {
+    slice_records
+        .iter()
+        .map(|&n| n as f64 * ms_per_record)
+        .fold(0.0, f64::max)
+}
+
+/// Speedup curve: makespan at 1 worker / makespan at r workers, for each
+/// r in `workers`.
+pub fn speedups(durations: &[f64], workers: &[usize]) -> Vec<(usize, f64)> {
+    let t1: f64 = durations.iter().sum();
+    workers
+        .iter()
+        .map(|&r| {
+            let tr = lpt_makespan(durations, r);
+            (r, if tr > 0.0 { t1 / tr } else { 1.0 })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::assert_prop;
+
+    #[test]
+    fn single_worker_is_sum() {
+        let d = [3.0, 1.0, 2.0];
+        assert_eq!(lpt_makespan(&d, 1), 6.0);
+        assert_eq!(fifo_makespan(&d, 1), 6.0);
+    }
+
+    #[test]
+    fn perfectly_divisible() {
+        let d = [1.0; 8];
+        assert_eq!(lpt_makespan(&d, 4), 2.0);
+    }
+
+    #[test]
+    fn lpt_beats_or_ties_fifo_on_adversarial_order() {
+        // FIFO with a huge task last is bad; LPT fixes it.
+        let d = [1.0, 1.0, 1.0, 1.0, 4.0];
+        assert!(lpt_makespan(&d, 2) <= fifo_makespan(&d, 2));
+        assert_eq!(lpt_makespan(&d, 2), 4.0);
+    }
+
+    #[test]
+    fn sliced_is_max_slice() {
+        assert_eq!(sliced_makespan(&[100, 50, 10], 0.5), 50.0);
+    }
+
+    #[test]
+    fn empty_tasks() {
+        assert_eq!(lpt_makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn speedup_monotone() {
+        let d: Vec<f64> = (0..100).map(|i| 1.0 + (i % 7) as f64).collect();
+        let s = speedups(&d, &[1, 2, 4, 8]);
+        assert!((s[0].1 - 1.0).abs() < 1e-9);
+        for w in s.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn prop_makespan_bounds() {
+        // max(task) ≤ makespan ≤ sum(tasks); r·makespan ≥ sum
+        assert_prop(128, |g| {
+            let d: Vec<f64> = g.vec(|g| 0.1 + g.f64() * 10.0);
+            if d.is_empty() {
+                return Ok(());
+            }
+            let r = 1 + g.usize_below(8);
+            let m = lpt_makespan(&d, r);
+            let sum: f64 = d.iter().sum();
+            let max = d.iter().cloned().fold(0.0, f64::max);
+            if m + 1e-9 < max || m > sum + 1e-9 || (r as f64) * m + 1e-9 < sum {
+                return Err(format!("bounds violated: r={r} m={m} sum={sum} max={max}"));
+            }
+            Ok(())
+        });
+    }
+}

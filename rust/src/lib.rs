@@ -1,0 +1,24 @@
+//! # tricluster — Triclustering in a Big Data Setting
+//!
+//! A production-style reproduction of Egurnov, Ignatov & Tochilkin,
+//! *"Triclustering in Big Data Setting"* (2020): prime OAC-triclustering,
+//! its multimodal (N-ary) generalisation, the three-stage MapReduce
+//! algorithm, and parallel many-valued (NOAC) triclustering — implemented
+//! as a three-layer Rust + JAX/Pallas stack (see DESIGN.md).
+//!
+//! Layer 3 (this crate) owns the full pipeline: mini-Hadoop M/R engine,
+//! online/basic OAC algorithms, the 3-stage multimodal clustering, NOAC,
+//! dataset generators, density engines, and the PJRT runtime that executes
+//! the AOT-compiled JAX/Pallas density kernels from `artifacts/`.
+
+pub mod coordinator;
+pub mod core;
+pub mod datasets;
+pub mod density;
+pub mod hadoop;
+pub mod mmc;
+pub mod noac;
+pub mod oac;
+pub mod runtime;
+pub mod spark;
+pub mod util;

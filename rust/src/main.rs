@@ -1,0 +1,223 @@
+//! `tricluster` — CLI for the Triclustering-in-Big-Data reproduction.
+//!
+//! Subcommands:
+//!   info                    platform, artifacts, dataset inventory
+//!   generate                write a dataset to TSV
+//!   online                  online OAC-prime / multimodal clustering
+//!   mr                      three-stage MapReduce multimodal clustering
+//!   noac                    many-valued δ-triclustering (seq/parallel)
+//!   density                 density engines over a dataset's clusters
+//!   experiment              regenerate a paper table/figure
+
+use anyhow::Result;
+
+use tricluster::coordinator::{ablations, experiments, ExpConfig};
+use tricluster::core::io;
+use tricluster::datasets;
+use tricluster::density::{DensityEngine, ExactEngine, MonteCarloEngine, XlaEngine};
+use tricluster::mmc::{run_mmc, MmcConfig};
+use tricluster::noac::{mine_noac, NoacParams};
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::util::cli::Args;
+use tricluster::util::stats::Timer;
+use tricluster::util::table::fmt_ms;
+
+const USAGE: &str = "\
+tricluster — OAC multimodal triclustering in a big-data setting
+
+USAGE: tricluster <command> [--flag value]...
+
+COMMANDS
+  info
+  generate   --dataset <name> --out <file.tsv>
+  online     --dataset <name> [--min-density R] [--min-support N] [--show N]
+  mr         --dataset <name> [--theta R] [--nodes N] [--fault-prob P]
+  noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
+  density    [--edge N] [--engine exact|xla|mc]
+  experiment --id table3|table4|fig2|table5|skew|faults|engines|memory [--full] [--config f.ini]
+             [--nodes N] [--runs N]
+
+DATASETS: imdb k1 k2 k3 ml100k ml250k ml500k ml1m bibsonomy
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("info") => info(),
+        Some("generate") => generate(&args),
+        Some("online") => online(&args),
+        Some("mr") => mr(&args),
+        Some("noac") => noac(&args),
+        Some("density") => density(&args),
+        Some("experiment") => experiment(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load(args: &Args) -> Result<tricluster::core::context::PolyContext> {
+    let name = args.get_or("dataset", "imdb");
+    datasets::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}; see `tricluster info`"))
+}
+
+fn info() -> Result<()> {
+    println!("tricluster {}", env!("CARGO_PKG_VERSION"));
+    println!("datasets: imdb k1 k2 k3 ml100k ml250k ml500k ml1m bibsonomy");
+    if tricluster::runtime::artifacts_available() {
+        let rt =
+            tricluster::runtime::Runtime::load(&tricluster::runtime::default_artifact_dir())?;
+        println!("PJRT platform: {}", rt.platform());
+        println!("artifacts ({}):", rt.manifest.artifacts.len());
+        for a in &rt.manifest.artifacts {
+            println!("  {:<18} graph={:<8} file={}", a.name, a.graph, a.file.display());
+        }
+        if let Some(v) = rt.manifest.density_vmem_bytes {
+            println!("density kernel VMEM/step: {:.2} MiB", v / (1 << 20) as f64);
+        }
+    } else {
+        println!("artifacts: NOT BUILT (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let ctx = load(args)?;
+    let out = std::path::PathBuf::from(args.get_or("out", "dataset.tsv"));
+    io::write_poly_tsv(&out, &ctx)?;
+    println!("wrote {} tuples (arity {}) to {}", ctx.len(), ctx.arity(), out.display());
+    Ok(())
+}
+
+fn online(args: &Args) -> Result<()> {
+    let ctx = load(args)?;
+    let cons = Constraints {
+        min_density: args.parse_or("min-density", 0.0),
+        min_support: args.parse_or("min-support", 0),
+    };
+    let t = Timer::start();
+    let clusters = mine_online(&ctx, &cons);
+    let ms = t.elapsed_ms();
+    println!("online OAC: {} tuples -> {} clusters in {} ms",
+             ctx.len(), clusters.len(), fmt_ms(ms));
+    for c in clusters.iter().take(args.parse_or("show", 3)) {
+        println!("{}", io::format_cluster(&ctx, c));
+    }
+    Ok(())
+}
+
+fn mr(args: &Args) -> Result<()> {
+    let ctx = load(args)?;
+    let nodes: usize = args.parse_or("nodes", 10);
+    let cfg = MmcConfig {
+        theta: args.parse_or("theta", 0.0),
+        fault_prob: args.parse_or("fault-prob", 0.0),
+        map_tasks: nodes * 4,
+        reduce_tasks: nodes * 4,
+        ..MmcConfig::default()
+    };
+    let res = run_mmc(&ctx, &cfg)?;
+    println!("3-stage M/R: {} tuples -> {} clusters", ctx.len(), res.clusters.len());
+    println!("  wall: {} ms  (stages: {} / {} / {})",
+             fmt_ms(res.wall_ms),
+             fmt_ms(res.stages[0].wall_ms),
+             fmt_ms(res.stages[1].wall_ms),
+             fmt_ms(res.stages[2].wall_ms));
+    println!("  virtual {}-node makespan: {} ms   shuffle: {} KiB",
+             nodes, fmt_ms(res.makespan_ms(nodes)), res.shuffle_bytes() / 1024);
+    for c in res.clusters.iter().take(args.parse_or("show", 3)) {
+        println!("{}", io::format_cluster(&ctx, c));
+    }
+    Ok(())
+}
+
+fn noac(args: &Args) -> Result<()> {
+    let n: usize = args.parse_or("triples", 10_000);
+    let params = NoacParams {
+        delta: args.parse_or("delta", 100.0),
+        min_density: args.parse_or("rho", 0.8),
+        min_support: args.parse_or("minsup", 2),
+    };
+    let workers: usize =
+        args.parse_or("workers", tricluster::util::pool::default_workers());
+    let ctx = datasets::triframes(&datasets::TriframesParams::with_triples(n));
+    let t = Timer::start();
+    let seq = mine_noac(&ctx, &params, n, 1);
+    let seq_ms = t.elapsed_ms();
+    let t = Timer::start();
+    let par = mine_noac(&ctx, &params, n, workers);
+    let par_ms = t.elapsed_ms();
+    assert_eq!(seq.len(), par.len());
+    println!(
+        "NOAC({}, {}, {}) {}k: regular {} ms, parallel(x{}) {} ms, {} triclusters",
+        params.delta, params.min_density, params.min_support,
+        n / 1000, fmt_ms(seq_ms), workers, fmt_ms(par_ms), seq.len()
+    );
+    Ok(())
+}
+
+fn density(args: &Args) -> Result<()> {
+    let edge: usize = args.parse_or("edge", 48);
+    let tri = datasets::synthetic::k1(edge);
+    let clusters = mine_online(&tri.inner, &Constraints::none());
+    let engine = args.get_or("engine", "exact");
+    let t = Timer::start();
+    let d = match engine {
+        "exact" => ExactEngine.densities(&tri, &clusters),
+        "mc" => MonteCarloEngine::host(1024, 7).densities(&tri, &clusters),
+        "xla" => {
+            let rt = tricluster::runtime::Runtime::load(
+                &tricluster::runtime::default_artifact_dir(),
+            )?;
+            XlaEngine::new(&rt, edge, clusters.len())?.densities(&tri, &clusters)
+        }
+        other => anyhow::bail!("unknown engine {other:?}"),
+    };
+    println!(
+        "{engine}: {} clusters in {} ms; ρ range [{:.4}, {:.4}]",
+        d.len(),
+        fmt_ms(t.elapsed_ms()),
+        d.iter().cloned().fold(f64::INFINITY, f64::min),
+        d.iter().cloned().fold(0.0, f64::max)
+    );
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    // --config file.ini provides defaults; CLI flags override
+    let file_cfg = match args.get("config") {
+        Some(path) => {
+            tricluster::coordinator::Config::load(std::path::Path::new(path))?
+                .exp_config()
+        }
+        None => ExpConfig::default(),
+    };
+    let cfg = ExpConfig {
+        full: args.has("full") || file_cfg.full,
+        nodes: args.parse_or("nodes", file_cfg.nodes),
+        theta: args.parse_or("theta", file_cfg.theta),
+        runs: args.parse_or("runs", file_cfg.runs),
+        seed: args.parse_or("seed", file_cfg.seed),
+    };
+    let id = args.get_or("id", "table3");
+    let report = match id {
+        "table3" => experiments::table3(&cfg)?,
+        "table4" => experiments::table4(&cfg)?,
+        "fig2" => experiments::fig2(&cfg)?,
+        "table5" | "fig3" => experiments::table5(
+            &cfg,
+            args.parse_or("workers", tricluster::util::pool::default_workers().max(2)),
+        )?,
+        "skew" => ablations::partition_skew(cfg.nodes)?,
+        "faults" => ablations::fault_injection()?,
+        "engines" => ablations::density_engines()?,
+        "memory" | "spark" => ablations::dfs_vs_memory()?,
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    };
+    println!("{}", report.render());
+    let csv = report.write_csv()?;
+    println!("(csv: {})", csv.display());
+    Ok(())
+}

@@ -1,0 +1,291 @@
+//! The `App` (paper §4.2): chains the three MapReduce stages into the
+//! full distributed multimodal clustering pipeline and collects the
+//! per-stage statistics Table 4 reports.
+
+use anyhow::Result;
+
+use crate::core::context::PolyContext;
+use crate::core::pattern::Cluster;
+use crate::hadoop::dfs::{Dfs, DfsConfig};
+use crate::hadoop::job::{run_job, JobConfig, JobStats};
+use crate::mmc::stages::{
+    FirstMapper, FirstReducer, SecondMapper, SecondReducer, ThirdMapper,
+    ThirdReducer,
+};
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct MmcConfig {
+    /// Density threshold θ of the third reduce (Alg. 7).
+    pub theta: f64,
+    /// Map/reduce task counts per stage (JobTracker granularity).
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    /// OS threads executing tasks on this machine.
+    pub executor_threads: usize,
+    /// Map-task retry probability (duplicate injection).
+    pub fault_prob: f64,
+    pub seed: u64,
+    /// Materialise intermediates through the replicated DFS.
+    pub use_dfs: bool,
+    /// DFS replication factor (HDFS default 3).
+    pub replication: u32,
+    /// Use the stage-1 map-side combiner (dedup entities before shuffle).
+    pub combiner: bool,
+}
+
+impl Default for MmcConfig {
+    fn default() -> Self {
+        let threads = crate::util::pool::default_workers();
+        Self {
+            theta: 0.0,
+            map_tasks: (threads * 4).max(8),
+            reduce_tasks: (threads * 4).max(8),
+            executor_threads: threads,
+            fault_prob: 0.0,
+            seed: 0xAD00,
+            use_dfs: true,
+            replication: 3,
+            combiner: false,
+        }
+    }
+}
+
+/// Result of a pipeline run: the clusters plus per-stage stats.
+#[derive(Debug)]
+pub struct MmcResult {
+    pub clusters: Vec<Cluster>,
+    pub stages: [JobStats; 3],
+    pub wall_ms: f64,
+}
+
+impl MmcResult {
+    /// Simulated r-node makespan: stages are barriers, so the pipeline
+    /// makespan is the sum of stage makespans.
+    pub fn makespan_ms(&self, r: usize) -> f64 {
+        self.stages.iter().map(|s| s.makespan_ms(r)).sum()
+    }
+
+    /// Total shuffle traffic (logical bytes).
+    pub fn shuffle_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+}
+
+/// Run the full three-stage pipeline on a context.
+pub fn run_mmc(ctx: &PolyContext, cfg: &MmcConfig) -> Result<MmcResult> {
+    let dfs = Dfs::new(DfsConfig {
+        replication: cfg.replication,
+        ..DfsConfig::default()
+    });
+    let timer = crate::util::stats::Timer::start();
+    let job_cfg = |name: &str| JobConfig {
+        name: name.into(),
+        map_tasks: cfg.map_tasks,
+        reduce_tasks: cfg.reduce_tasks,
+        executor_threads: cfg.executor_threads,
+        fault_prob: cfg.fault_prob,
+        seed: cfg.seed,
+        use_dfs: cfg.use_dfs,
+    };
+
+    // Stage 1: tuples → cumuli (optionally with the map-side combiner)
+    let input: Vec<((), crate::core::tuple::NTuple)> =
+        ctx.tuples().iter().map(|&t| ((), t)).collect();
+    let (cumuli, s1) = if cfg.combiner {
+        crate::hadoop::job::run_job_with_combiner(
+            &job_cfg("mmc-1"),
+            &FirstMapper,
+            Some(&crate::mmc::stages::FirstCombiner),
+            &FirstReducer,
+            input,
+            &dfs,
+        )?
+    } else {
+        run_job(&job_cfg("mmc-1"), &FirstMapper, &FirstReducer, input, &dfs)?
+    };
+
+    // Stage 2: cumuli → per-generating-tuple clusters
+    let (assembled, s2) =
+        run_job(&job_cfg("mmc-2"), &SecondMapper, &SecondReducer, cumuli, &dfs)?;
+
+    // Stage 3: dedup + density threshold
+    let (kept, s3) = run_job(
+        &job_cfg("mmc-3"),
+        &ThirdMapper,
+        &ThirdReducer { theta: cfg.theta },
+        assembled,
+        &dfs,
+    )?;
+
+    let mut clusters: Vec<Cluster> = kept
+        .into_iter()
+        .map(|(mut c, support)| {
+            c.support = support as usize;
+            c
+        })
+        .collect();
+    // deterministic output order (reduce partition order is config-
+    // dependent): sort by components
+    clusters.sort_by(|a, b| a.components.cmp(&b.components));
+
+    Ok(MmcResult {
+        clusters,
+        stages: [s1, s2, s3],
+        wall_ms: timer.elapsed_ms(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::context::TriContext;
+    use crate::datasets::synthetic::{k1, k2, k3};
+    use crate::oac::{mine_online, Constraints};
+
+    fn small_cfg() -> MmcConfig {
+        MmcConfig { map_tasks: 4, reduce_tasks: 4, ..MmcConfig::default() }
+    }
+
+    #[test]
+    fn table1_example_merges_across_slices() {
+        // the §1 motivating example: triples split by label must still
+        // produce the merged ({u2},{i1,i2},{l1,l2})
+        let mut ctx = TriContext::new();
+        ctx.add_named("u2", "i1", "l1");
+        ctx.add_named("u2", "i2", "l1");
+        ctx.add_named("u2", "i1", "l2");
+        ctx.add_named("u2", "i2", "l2");
+        let res = run_mmc(&ctx.inner, &small_cfg()).unwrap();
+        assert_eq!(res.clusters.len(), 1);
+        let c = &res.clusters[0];
+        assert_eq!(c.components, vec![vec![0], vec![0, 1], vec![0, 1]]);
+        assert_eq!(c.support, 4);
+    }
+
+    #[test]
+    fn k2_three_blocks() {
+        let res = run_mmc(&k2(4).inner, &small_cfg()).unwrap();
+        assert_eq!(res.clusters.len(), 3);
+        for c in &res.clusters {
+            assert_eq!(c.support, 64);
+            assert!((c.support_density() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn k3_single_cluster() {
+        // paper: "our algorithm correctly assembles the only one
+        // tricluster (A1, A2, A3, A4)"
+        let res = run_mmc(&k3(5), &small_cfg()).unwrap();
+        assert_eq!(res.clusters.len(), 1);
+        assert_eq!(res.clusters[0].components.len(), 4);
+        assert_eq!(res.clusters[0].support, 625);
+    }
+
+    #[test]
+    fn matches_online_miner_on_k1() {
+        let ctx = k1(6);
+        let mr = run_mmc(&ctx.inner, &small_cfg()).unwrap();
+        let mut online = mine_online(&ctx.inner, &Constraints::none());
+        online.sort_by(|a, b| a.components.cmp(&b.components));
+        assert_eq!(mr.clusters.len(), online.len());
+        for (a, b) in mr.clusters.iter().zip(online.iter()) {
+            assert_eq!(a.components, b.components);
+            assert_eq!(a.support, b.support);
+        }
+    }
+
+    #[test]
+    fn fault_injection_does_not_change_output() {
+        // duplicates from task retries must be absorbed (the paper's K1-K3
+        // robustness argument)
+        let ctx = k2(3);
+        let clean = run_mmc(&ctx.inner, &small_cfg()).unwrap();
+        let faulty = run_mmc(
+            &ctx.inner,
+            &MmcConfig { fault_prob: 1.0, ..small_cfg() },
+        )
+        .unwrap();
+        assert_eq!(clean.clusters.len(), faulty.clusters.len());
+        for (a, b) in clean.clusters.iter().zip(faulty.clusters.iter()) {
+            assert_eq!(a.components, b.components);
+            assert_eq!(a.support, b.support);
+        }
+    }
+
+    #[test]
+    fn density_threshold_filters() {
+        // K1(4): full cluster has density (n³-n)/n³ ≈ 0.94; partial-
+        // diagonal clusters are denser; θ = 0.99 keeps only those
+        let ctx = k1(4);
+        let all = run_mmc(&ctx.inner, &small_cfg()).unwrap();
+        let filtered = run_mmc(
+            &ctx.inner,
+            &MmcConfig { theta: 0.95, ..small_cfg() },
+        )
+        .unwrap();
+        assert!(filtered.clusters.len() < all.clusters.len());
+    }
+
+    #[test]
+    fn combiner_preserves_output_and_cuts_shuffle() {
+        // K1 has massive per-subrelation duplication across map tasks?
+        // No — within a map task, duplicate (subrel, entity) pairs only
+        // arise from retries; with fault injection the combiner absorbs
+        // them map-side. Output must be identical either way.
+        let ctx = k1(6).inner;
+        let base = run_mmc(
+            &ctx,
+            &MmcConfig { fault_prob: 1.0, ..small_cfg() },
+        )
+        .unwrap();
+        let combined = run_mmc(
+            &ctx,
+            &MmcConfig { fault_prob: 1.0, combiner: true, ..small_cfg() },
+        )
+        .unwrap();
+        assert_eq!(base.clusters.len(), combined.clusters.len());
+        for (a, b) in base.clusters.iter().zip(&combined.clusters) {
+            assert_eq!(a.components, b.components);
+            assert_eq!(a.support, b.support);
+        }
+        // retried duplicates are folded before the shuffle
+        assert!(
+            combined.stages[0].shuffle_bytes < base.stages[0].shuffle_bytes,
+            "{} !< {}",
+            combined.stages[0].shuffle_bytes,
+            base.stages[0].shuffle_bytes
+        );
+    }
+
+    #[test]
+    fn reduce_retries_do_not_change_output() {
+        let ctx = k2(4).inner;
+        let clean = run_mmc(&ctx, &small_cfg()).unwrap();
+        // fault_prob drives BOTH map and reduce retries
+        let noisy = run_mmc(
+            &ctx,
+            &MmcConfig { fault_prob: 1.0, seed: 7, ..small_cfg() },
+        )
+        .unwrap();
+        assert_eq!(clean.clusters.len(), noisy.clusters.len());
+        let retries: u64 = noisy
+            .stages
+            .iter()
+            .map(|s| s.counters.get(crate::hadoop::counters::names::TASK_RETRIES))
+            .sum();
+        // every map task AND reduce task retried
+        assert!(retries as usize >= noisy.stages[0].reduce_task_ms.len());
+    }
+
+    #[test]
+    fn stage_stats_populated() {
+        let res = run_mmc(&k2(3).inner, &small_cfg()).unwrap();
+        for s in &res.stages {
+            assert!(!s.map_task_ms.is_empty());
+            assert!(s.shuffle_bytes > 0);
+        }
+        assert!(res.makespan_ms(4) <= res.makespan_ms(1) + 1e-9);
+    }
+}

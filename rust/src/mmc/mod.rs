@@ -1,0 +1,8 @@
+//! Distributed multimodal clustering — the paper's §4.1 contribution:
+//! three chained MapReduce stages computing cumuli, assembling clusters,
+//! and deduplicating with an exact support-density threshold.
+
+pub mod app;
+pub mod stages;
+
+pub use app::{run_mmc, MmcConfig, MmcResult};

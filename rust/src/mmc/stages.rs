@@ -1,0 +1,274 @@
+//! The three MapReduce stages of distributed multimodal clustering
+//! (paper §4.1, Algorithms 2–7).
+//!
+//! Stage 1 — cumuli: tuples fan out to N ⟨subrelation, entity⟩ pairs
+//!   (Alg. 2); the reducer accumulates each subrelation's cumulus
+//!   (Alg. 3 — we emit the final cumulus once; emitting the running
+//!   prefix per value, as the pseudo-code literally reads, produces the
+//!   same final stage-2 input with strictly more traffic).
+//! Stage 2 — assembly: each ⟨subrelation, cumulus⟩ is expanded back to
+//!   its generating tuples (Alg. 4); the reducer zips the N cumuli into
+//!   a multimodal cluster per generating tuple (Alg. 5).
+//! Stage 3 — dedup + density: key/value swap to ⟨cluster, generating
+//!   tuple⟩ (Alg. 6); the reducer counts distinct generating tuples,
+//!   computes density support/volume and keeps clusters above θ
+//!   (Alg. 7).
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::{NTuple, SubRelation};
+use crate::hadoop::job::{Emitter, Mapper, Reducer};
+
+// --------------------------------------------------------------------------
+// Stage 1
+// --------------------------------------------------------------------------
+
+/// Alg. 2: `(e_1..e_N)` → `⟨subrelation_k, e_k⟩` for every k.
+pub struct FirstMapper;
+
+impl Mapper for FirstMapper {
+    type InK = ();
+    type InV = NTuple;
+    type OutK = SubRelation;
+    type OutV = u32;
+
+    fn map(&self, _k: (), t: NTuple, emit: &mut Emitter<SubRelation, u32>) {
+        for k in 0..t.arity() {
+            emit.emit(t.subrelation(k), t.get(k));
+        }
+    }
+}
+
+/// Optional map-side combiner for stage 1 (Hadoop `setCombinerClass`):
+/// deduplicates a map task's local entity emissions per subrelation
+/// before the shuffle. Safe because the stage-1 reduce is a set union —
+/// associative and idempotent. Shuffle-byte savings are measured by the
+/// combiner ablation.
+pub struct FirstCombiner;
+
+impl crate::hadoop::job::Combiner for FirstCombiner {
+    type K = SubRelation;
+    type V = u32;
+
+    fn combine(&self, _key: &SubRelation, mut values: Vec<u32>) -> Vec<u32> {
+        values.sort_unstable();
+        values.dedup();
+        values
+    }
+}
+
+/// Alg. 3: accumulate the cumulus of each subrelation. Values may repeat
+/// (task retries); the cumulus is a set.
+pub struct FirstReducer;
+
+impl Reducer for FirstReducer {
+    type InK = SubRelation;
+    type InV = u32;
+    type OutK = SubRelation;
+    type OutV = Vec<u32>;
+
+    fn reduce(
+        &self,
+        key: SubRelation,
+        mut values: Vec<u32>,
+        emit: &mut Emitter<SubRelation, Vec<u32>>,
+    ) {
+        values.sort_unstable();
+        values.dedup();
+        emit.emit(key, values);
+    }
+}
+
+// --------------------------------------------------------------------------
+// Stage 2
+// --------------------------------------------------------------------------
+
+/// Alg. 4: re-insert each cumulus element at the dropped position to
+/// recover the generating tuples; the cumulus travels with each
+/// (tagged by the dropped modality so the stage-2 reducer can order the
+/// N cumuli).
+pub struct SecondMapper;
+
+impl Mapper for SecondMapper {
+    type InK = SubRelation;
+    type InV = Vec<u32>;
+    type OutK = NTuple;
+    type OutV = (u32, Vec<u32>);
+
+    fn map(
+        &self,
+        sub: SubRelation,
+        cumulus: Vec<u32>,
+        emit: &mut Emitter<NTuple, (u32, Vec<u32>)>,
+    ) {
+        let k = sub.dropped() as u32;
+        for &e in &cumulus {
+            let generating = NTuple::from_subrelation(&sub, e);
+            emit.emit(generating, (k, cumulus.clone()));
+        }
+    }
+}
+
+/// Alg. 5: zip the N cumuli of one generating tuple into a cluster.
+pub struct SecondReducer;
+
+impl Reducer for SecondReducer {
+    type InK = NTuple;
+    type InV = (u32, Vec<u32>);
+    type OutK = NTuple;
+    type OutV = Cluster;
+
+    fn reduce(
+        &self,
+        generating: NTuple,
+        values: Vec<(u32, Vec<u32>)>,
+        emit: &mut Emitter<NTuple, Cluster>,
+    ) {
+        let n = generating.arity();
+        let mut comps: Vec<Option<Vec<u32>>> = vec![None; n];
+        for (k, cumulus) in values {
+            let slot = &mut comps[k as usize];
+            // duplicates from retries carry identical cumuli; keep first
+            if slot.is_none() {
+                *slot = Some(cumulus);
+            }
+        }
+        // every position must be present: tuple (e_1..e_N) ∈ I implies all
+        // N subrelations emitted a cumulus containing e_k
+        let comps: Vec<Vec<u32>> = comps
+            .into_iter()
+            .map(|c| c.expect("missing cumulus for a generating tuple"))
+            .collect();
+        emit.emit(generating, Cluster::new(comps));
+    }
+}
+
+// --------------------------------------------------------------------------
+// Stage 3
+// --------------------------------------------------------------------------
+
+/// Alg. 6: swap to ⟨cluster, generating tuple⟩ so dedup happens in the
+/// reducer's key grouping.
+pub struct ThirdMapper;
+
+impl Mapper for ThirdMapper {
+    type InK = NTuple;
+    type InV = Cluster;
+    type OutK = Cluster;
+    type OutV = NTuple;
+
+    fn map(&self, t: NTuple, c: Cluster, emit: &mut Emitter<Cluster, NTuple>) {
+        emit.emit(c, t);
+    }
+}
+
+/// Alg. 7: support = |distinct generating tuples|; keep clusters with
+/// support/volume ≥ θ.
+pub struct ThirdReducer {
+    pub theta: f64,
+}
+
+impl Reducer for ThirdReducer {
+    type InK = Cluster;
+    type InV = NTuple;
+    type OutK = Cluster;
+    type OutV = u64;
+
+    fn reduce(
+        &self,
+        mut cluster: Cluster,
+        mut gens: Vec<NTuple>,
+        emit: &mut Emitter<Cluster, u64>,
+    ) {
+        gens.sort_unstable();
+        gens.dedup();
+        cluster.support = gens.len();
+        let vol = cluster.volume();
+        if vol > 0.0 && cluster.support as f64 / vol >= self.theta {
+            let support = cluster.support as u64;
+            emit.emit(cluster, support);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_map<M: Mapper>(m: &M, k: M::InK, v: M::InV) -> Vec<(M::OutK, M::OutV)> {
+        let mut e = Emitter::new_for_test();
+        m.map(k, v, &mut e);
+        e.into_pairs()
+    }
+
+    fn run_reduce<R: Reducer>(
+        r: &R,
+        k: R::InK,
+        vs: Vec<R::InV>,
+    ) -> Vec<(R::OutK, R::OutV)> {
+        let mut e = Emitter::new_for_test();
+        r.reduce(k, vs, &mut e);
+        e.into_pairs()
+    }
+
+    #[test]
+    fn first_mapper_fans_out_n_pairs() {
+        let t = NTuple::triple(1, 2, 3);
+        let out = run_map(&FirstMapper, (), t);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], (t.subrelation(0), 1));
+        assert_eq!(out[2], (t.subrelation(2), 3));
+    }
+
+    #[test]
+    fn first_reducer_dedups_cumulus() {
+        let sub = NTuple::triple(0, 1, 2).subrelation(0);
+        let out = run_reduce(&FirstReducer, sub, vec![5, 3, 5, 3, 1]);
+        assert_eq!(out, vec![(sub, vec![1, 3, 5])]);
+    }
+
+    #[test]
+    fn second_mapper_rebuilds_generating_tuples() {
+        let t = NTuple::triple(7, 1, 2);
+        let sub = t.subrelation(0);
+        let out = run_map(&SecondMapper, sub, vec![7, 9]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, NTuple::triple(7, 1, 2));
+        assert_eq!(out[1].0, NTuple::triple(9, 1, 2));
+        assert_eq!(out[0].1, (0, vec![7, 9]));
+    }
+
+    #[test]
+    fn second_reducer_zips_cumuli_in_modality_order() {
+        let t = NTuple::triple(0, 1, 2);
+        let out = run_reduce(
+            &SecondReducer,
+            t,
+            vec![
+                (2, vec![2, 9]),       // modus arrives first
+                (0, vec![0]),
+                (1, vec![1, 4]),
+                (1, vec![1, 4]),       // retry duplicate — ignored
+            ],
+        );
+        assert_eq!(out.len(), 1);
+        let c = &out[0].1;
+        assert_eq!(c.components, vec![vec![0], vec![1, 4], vec![2, 9]]);
+    }
+
+    #[test]
+    fn third_reducer_counts_distinct_and_filters() {
+        let c = Cluster::new(vec![vec![0], vec![1, 4], vec![2]]);
+        // volume 2; 2 distinct generating tuples (one duplicated) → ρ = 1
+        let gens = vec![
+            NTuple::triple(0, 1, 2),
+            NTuple::triple(0, 4, 2),
+            NTuple::triple(0, 1, 2),
+        ];
+        let out = run_reduce(&ThirdReducer { theta: 0.9 }, c.clone(), gens.clone());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, 2);
+        // θ = 1.1 rejects everything
+        let out = run_reduce(&ThirdReducer { theta: 1.1 }, c, gens);
+        assert!(out.is_empty());
+    }
+}

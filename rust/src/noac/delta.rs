@@ -1,0 +1,132 @@
+//! δ-operators over fiber indexes (paper §3.2).
+//!
+//! `(m̃, b̃)^δ = {g | (g, m̃, b̃) ∈ I ∧ |V(g, m̃, b̃) − V(g̃, m̃, b̃)| ≤ δ}`
+//! and symmetrically for the other two modalities. The operator
+//! pre-indexes the context's fibers once (`O(|I|)`), so each application
+//! is a scan of one fiber — the same access pattern the Layer-1 Pallas
+//! δ-kernel evaluates in bulk for slabs of fibers (see
+//! python/compile/kernels/delta.py and density::XlaEngine).
+
+use crate::core::context::ManyValuedTriContext;
+use crate::core::tuple::NTuple;
+use crate::oac::generic::TriOperator;
+use crate::util::hash::FxHashMap;
+
+/// Fiber indexes: for each pair of fixed modalities, the list of
+/// (varying-entity, value) along the third.
+pub struct DeltaOperator {
+    delta: f64,
+    /// (m, b) → [(g, V(g,m,b))]
+    mb: FxHashMap<(u32, u32), Vec<(u32, f64)>>,
+    /// (g, b) → [(m, V(g,m,b))]
+    gb: FxHashMap<(u32, u32), Vec<(u32, f64)>>,
+    /// (g, m) → [(b, V(g,m,b))]
+    gm: FxHashMap<(u32, u32), Vec<(u32, f64)>>,
+    /// triple → value (to find v₀ of the generating triple)
+    values: FxHashMap<NTuple, f64>,
+}
+
+impl DeltaOperator {
+    /// Index the context's fibers. `O(|I|)` time and memory.
+    pub fn build(ctx: &ManyValuedTriContext, delta: f64) -> Self {
+        assert!(delta >= 0.0, "δ must be non-negative");
+        let mut mb: FxHashMap<(u32, u32), Vec<(u32, f64)>> = FxHashMap::default();
+        let mut gb: FxHashMap<(u32, u32), Vec<(u32, f64)>> = FxHashMap::default();
+        let mut gm: FxHashMap<(u32, u32), Vec<(u32, f64)>> = FxHashMap::default();
+        let mut values: FxHashMap<NTuple, f64> = FxHashMap::default();
+        for t in ctx.triples() {
+            let (g, m, b) = (t.get(0), t.get(1), t.get(2));
+            let v = ctx.value(g, m, b).expect("valued triple");
+            mb.entry((m, b)).or_default().push((g, v));
+            gb.entry((g, b)).or_default().push((m, v));
+            gm.entry((g, m)).or_default().push((b, v));
+            values.insert(*t, v);
+        }
+        Self { delta, mb, gb, gm, values }
+    }
+
+    #[inline]
+    fn v0(&self, t: &NTuple) -> f64 {
+        *self.values.get(t).expect("generating triple must be in I")
+    }
+
+    #[inline]
+    fn band(&self, fiber: &[(u32, f64)], v0: f64) -> Vec<u32> {
+        fiber
+            .iter()
+            .filter(|(_, v)| (v - v0).abs() <= self.delta)
+            .map(|(e, _)| *e)
+            .collect()
+    }
+}
+
+impl TriOperator for DeltaOperator {
+    fn extent(&self, t: &NTuple) -> Vec<u32> {
+        let fiber = &self.mb[&(t.get(1), t.get(2))];
+        self.band(fiber, self.v0(t))
+    }
+
+    fn intent(&self, t: &NTuple) -> Vec<u32> {
+        let fiber = &self.gb[&(t.get(0), t.get(2))];
+        self.band(fiber, self.v0(t))
+    }
+
+    fn modus(&self, t: &NTuple) -> Vec<u32> {
+        let fiber = &self.gm[&(t.get(0), t.get(1))];
+        self.band(fiber, self.v0(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ManyValuedTriContext {
+        let mut c = ManyValuedTriContext::new();
+        c.add(0, 0, 0, 100.0);
+        c.add(1, 0, 0, 150.0);
+        c.add(2, 0, 0, 300.0);
+        c.add(0, 1, 0, 90.0);
+        c.add(0, 0, 1, 101.0);
+        c
+    }
+
+    #[test]
+    fn extent_band() {
+        let op = DeltaOperator::build(&ctx(), 60.0);
+        let t = NTuple::triple(0, 0, 0); // v0 = 100
+        // fiber (m=0,b=0): g=0@100, g=1@150, g=2@300 → band keeps 0,1
+        assert_eq!(op.extent(&t), vec![0, 1]);
+        // from g=2's perspective (v0=300) only itself is within 60
+        assert_eq!(op.extent(&NTuple::triple(2, 0, 0)), vec![2]);
+    }
+
+    #[test]
+    fn intent_and_modus_bands() {
+        let op = DeltaOperator::build(&ctx(), 15.0);
+        let t = NTuple::triple(0, 0, 0);
+        // fiber (g=0,b=0): m=0@100, m=1@90 → both within 15
+        assert_eq!(op.intent(&t), vec![0, 1]);
+        // fiber (g=0,m=0): b=0@100, b=1@101 → both
+        assert_eq!(op.modus(&t), vec![0, 1]);
+    }
+
+    #[test]
+    fn delta_zero_keeps_exact_equal_values_only() {
+        let op = DeltaOperator::build(&ctx(), 0.0);
+        let t = NTuple::triple(0, 0, 0);
+        assert_eq!(op.extent(&t), vec![0]);
+        assert_eq!(op.modus(&t), vec![0]);
+    }
+
+    #[test]
+    fn generating_triple_always_in_its_own_sets() {
+        let c = ctx();
+        let op = DeltaOperator::build(&c, 0.0);
+        for t in c.triples() {
+            assert!(op.extent(t).contains(&t.get(0)), "{t:?}");
+            assert!(op.intent(t).contains(&t.get(1)), "{t:?}");
+            assert!(op.modus(t).contains(&t.get(2)), "{t:?}");
+        }
+    }
+}

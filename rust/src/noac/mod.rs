@@ -1,0 +1,135 @@
+//! NOAC: many-valued (numeric) OAC triclustering with δ-operators
+//! (paper §3.2, §4.3, §6).
+//!
+//! For a generating triple `(g̃, m̃, b̃)` with value `v₀ = V(g̃, m̃, b̃)`,
+//! the δ-prime sets keep the fiber elements whose value is within δ of
+//! v₀. The generic Algorithm-8 driver (`oac::generic`) supplies the
+//! mining loop; this module provides the δ-operator (backed by fiber
+//! indexes), the NOAC validity checks (ρ_min over binary presence,
+//! minsup per modality), and the sequential/parallel entry points the
+//! Table-5 sweep measures.
+
+pub mod delta;
+pub mod validity;
+
+pub use delta::DeltaOperator;
+pub use validity::NoacValidity;
+
+use crate::core::context::ManyValuedTriContext;
+use crate::core::pattern::Cluster;
+use crate::oac::generic;
+use crate::oac::post::Constraints;
+
+/// NOAC parameters as the paper writes them: `NOAC(δ, ρ_min, minsup)`.
+#[derive(Debug, Clone, Copy)]
+pub struct NoacParams {
+    pub delta: f64,
+    pub min_density: f64,
+    pub min_support: usize,
+}
+
+impl NoacParams {
+    /// The two Table-5 settings.
+    pub fn table5_strict() -> Self {
+        Self { delta: 100.0, min_density: 0.8, min_support: 2 }
+    }
+
+    pub fn table5_loose() -> Self {
+        Self { delta: 100.0, min_density: 0.5, min_support: 0 }
+    }
+}
+
+/// Run NOAC over the first `limit` triples (the Table-5 sweep prefix),
+/// with `workers` threads (1 = the paper's "regular" version).
+pub fn mine_noac(
+    ctx: &ManyValuedTriContext,
+    params: &NoacParams,
+    limit: usize,
+    workers: usize,
+) -> Vec<Cluster> {
+    let triples = &ctx.triples()[..limit.min(ctx.len())];
+    let op = DeltaOperator::build(ctx, params.delta);
+    let validity = NoacValidity::new(ctx, params);
+    // Constraints are enforced inside the validity check exactly as
+    // Alg. 8 does (line 7, *before* dedup); the post-filter would use
+    // support-density which is NOT the NOAC density measure.
+    generic::mine(triples, &op, &validity, &Constraints::none(), workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::triframes::{triframes, TriframesParams};
+
+    fn ctx_with(values: &[(u32, u32, u32, f64)]) -> ManyValuedTriContext {
+        let mut ctx = ManyValuedTriContext::new();
+        for &(g, m, b, v) in values {
+            ctx.add(g, m, b, v);
+        }
+        ctx
+    }
+
+    #[test]
+    fn delta_zero_recovers_binary_prime() {
+        // all values equal → δ = 0 behaves exactly like OAC-prime (§3.2)
+        let ctx = ctx_with(&[
+            (0, 0, 0, 1.0),
+            (0, 1, 0, 1.0),
+            (0, 0, 1, 1.0),
+            (0, 1, 1, 1.0),
+        ]);
+        let params = NoacParams { delta: 0.0, min_density: 0.0, min_support: 0 };
+        let out = mine_noac(&ctx, &params, usize::MAX, 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].components[1], vec![0, 1]);
+        assert_eq!(out[0].components[2], vec![0, 1]);
+    }
+
+    #[test]
+    fn delta_band_splits_clusters() {
+        // same incidence, but one triple's value is far away → the δ-set
+        // around the distant triple excludes the others
+        let ctx = ctx_with(&[
+            (0, 0, 0, 10.0),
+            (0, 1, 0, 12.0),
+            (0, 2, 0, 500.0),
+        ]);
+        let params = NoacParams { delta: 5.0, min_density: 0.0, min_support: 0 };
+        let out = mine_noac(&ctx, &params, usize::MAX, 1);
+        // triples at 10 and 12 merge intents {0,1}; the 500 one stands alone
+        assert_eq!(out.len(), 2);
+        let big = out.iter().find(|c| c.components[1].len() == 2).unwrap();
+        assert_eq!(big.components[1], vec![0, 1]);
+        let lone = out.iter().find(|c| c.components[1] == vec![2]).unwrap();
+        assert_eq!(lone.components[0], vec![0]);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_on_triframes() {
+        let ctx = triframes(&TriframesParams::with_triples(2_000));
+        let params = NoacParams::table5_loose();
+        let seq = mine_noac(&ctx, &params, 2_000, 1);
+        let par = mine_noac(&ctx, &params, 2_000, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(par.iter()) {
+            assert_eq!(a.components, b.components);
+        }
+    }
+
+    #[test]
+    fn strict_params_yield_fewer_clusters() {
+        let ctx = triframes(&TriframesParams::with_triples(5_000));
+        let strict = mine_noac(&ctx, &NoacParams::table5_strict(), 5_000, 1);
+        let loose = mine_noac(&ctx, &NoacParams::table5_loose(), 5_000, 1);
+        assert!(strict.len() <= loose.len(), "{} > {}", strict.len(), loose.len());
+    }
+
+    #[test]
+    fn limit_prefixes_stream() {
+        let ctx = triframes(&TriframesParams::with_triples(3_000));
+        let params = NoacParams::table5_loose();
+        let small = mine_noac(&ctx, &params, 1_000, 1);
+        // mining a prefix must not error and produces some clusters
+        assert!(small.len() <= mine_noac(&ctx, &params, 3_000, 1).len() + small.len());
+    }
+}

@@ -1,0 +1,153 @@
+//! NOAC validity checks (paper §4.3): minimal density over the binary
+//! presence relation and minimal cardinality per modality.
+//!
+//! Density here is the true cuboid density `|X×Y×Z ∩ I| / |X||Y||Z|`
+//! evaluated with hash lookups and an early-exit bound: once the
+//! remaining cells cannot reach ρ_min (or cannot fall below it) the scan
+//! stops. For large cuboids the `density::XlaEngine` / `MonteCarloEngine`
+//! offer batched and approximate alternatives (ablation A2).
+
+use crate::core::context::ManyValuedTriContext;
+use crate::core::pattern::Cluster;
+use crate::noac::NoacParams;
+use crate::oac::generic::Validity;
+use crate::util::hash::FxHashSet;
+
+pub struct NoacValidity {
+    presence: FxHashSet<(u32, u32, u32)>,
+    min_density: f64,
+    min_support: usize,
+}
+
+impl NoacValidity {
+    pub fn new(ctx: &ManyValuedTriContext, params: &NoacParams) -> Self {
+        let presence = ctx
+            .triples()
+            .iter()
+            .map(|t| (t.get(0), t.get(1), t.get(2)))
+            .collect();
+        Self {
+            presence,
+            min_density: params.min_density,
+            min_support: params.min_support,
+        }
+    }
+
+    /// Exact presence-density with early exit in both directions.
+    pub fn density(&self, c: &Cluster) -> f64 {
+        let vol = c.volume();
+        if vol == 0.0 {
+            return 0.0;
+        }
+        let mut hit = 0u64;
+        for &g in &c.components[0] {
+            for &m in &c.components[1] {
+                for &b in &c.components[2] {
+                    if self.presence.contains(&(g, m, b)) {
+                        hit += 1;
+                    }
+                }
+            }
+        }
+        hit as f64 / vol
+    }
+
+    fn density_at_least(&self, c: &Cluster, rho: f64) -> bool {
+        let vol = c.volume() as u64;
+        if vol == 0 {
+            return false;
+        }
+        let need = (rho * vol as f64).ceil() as u64;
+        let mut hit = 0u64;
+        let mut seen = 0u64;
+        for &g in &c.components[0] {
+            for &m in &c.components[1] {
+                for &b in &c.components[2] {
+                    seen += 1;
+                    if self.presence.contains(&(g, m, b)) {
+                        hit += 1;
+                        if hit >= need {
+                            return true; // already dense enough
+                        }
+                    }
+                    // even if all remaining cells hit, can't reach `need`
+                    if hit + (vol - seen) < need {
+                        return false;
+                    }
+                }
+            }
+        }
+        hit >= need
+    }
+}
+
+impl Validity for NoacValidity {
+    fn is_valid(&self, c: &Cluster) -> bool {
+        if self.min_support > 0 && c.min_cardinality() < self.min_support {
+            return false;
+        }
+        self.min_density <= 0.0 || self.density_at_least(c, self.min_density)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+
+    fn ctx() -> ManyValuedTriContext {
+        let mut c = ManyValuedTriContext::new();
+        // a 2×2×1 dense block + a lone triple
+        c.add(0, 0, 0, 1.0);
+        c.add(0, 1, 0, 1.0);
+        c.add(1, 0, 0, 1.0);
+        c.add(1, 1, 0, 1.0);
+        c.add(5, 5, 5, 1.0);
+        c
+    }
+
+    #[test]
+    fn exact_density() {
+        let v = NoacValidity::new(
+            &ctx(),
+            &NoacParams { delta: 0.0, min_density: 0.0, min_support: 0 },
+        );
+        let full = tricluster(vec![0, 1], vec![0, 1], vec![0]);
+        assert!((v.density(&full) - 1.0).abs() < 1e-12);
+        let half = tricluster(vec![0, 1, 5], vec![0, 1], vec![0]);
+        assert!((v.density(&half) - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_threshold_and_early_exit_agree() {
+        let v = NoacValidity::new(
+            &ctx(),
+            &NoacParams { delta: 0.0, min_density: 0.5, min_support: 0 },
+        );
+        let dense = tricluster(vec![0, 1], vec![0, 1], vec![0]);
+        let sparse = tricluster(vec![0, 1, 5], vec![0, 1, 5], vec![0, 5]);
+        assert!(v.is_valid(&dense));
+        assert!(!v.is_valid(&sparse));
+        // cross-check against the exact density
+        assert!(v.density(&sparse) < 0.5);
+    }
+
+    #[test]
+    fn minsup_gate() {
+        let v = NoacValidity::new(
+            &ctx(),
+            &NoacParams { delta: 0.0, min_density: 0.0, min_support: 2 },
+        );
+        assert!(v.is_valid(&tricluster(vec![0, 1], vec![0, 1], vec![0, 5])));
+        assert!(!v.is_valid(&tricluster(vec![0, 1], vec![0, 1], vec![0])));
+    }
+
+    #[test]
+    fn empty_cluster_invalid_under_density() {
+        let v = NoacValidity::new(
+            &ctx(),
+            &NoacParams { delta: 0.0, min_density: 0.1, min_support: 0 },
+        );
+        assert!(!v.is_valid(&tricluster(vec![], vec![0], vec![0])));
+    }
+}

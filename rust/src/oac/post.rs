@@ -1,0 +1,145 @@
+//! Post-processing (paper §2): duplicate elimination by content hashing
+//! and user-constraint filtering — `O(|I|)`, no extra passes over data.
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::NTuple;
+use crate::util::hash::FxHashMap;
+
+/// User-specified pattern constraints (paper §2 and §4.3).
+#[derive(Debug, Clone)]
+pub struct Constraints {
+    /// Minimal density ρ_min; compared against the cluster's
+    /// support-density (distinct generating tuples / volume — the measure
+    /// the paper's third reduce computes).
+    pub min_density: f64,
+    /// Minimal cardinality per modality (minsup).
+    pub min_support: usize,
+}
+
+impl Default for Constraints {
+    fn default() -> Self {
+        Self { min_density: 0.0, min_support: 0 }
+    }
+}
+
+impl Constraints {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn satisfied_by(&self, c: &Cluster) -> bool {
+        if self.min_support > 0
+            && c.components.iter().any(|comp| comp.len() < self.min_support)
+        {
+            return false;
+        }
+        self.min_density <= 0.0 || c.support_density() >= self.min_density
+    }
+}
+
+/// Merge duplicate clusters (same components, different generating
+/// tuples), accumulate support = number of DISTINCT generating tuples,
+/// then filter by `constraints`. Returns deduplicated clusters in
+/// first-seen order.
+pub fn dedup_and_filter(
+    materialized: Vec<(Cluster, NTuple)>,
+    constraints: &Constraints,
+) -> Vec<Cluster> {
+    let mut by_fp: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut uniq: Vec<(Cluster, Vec<NTuple>)> = Vec::new();
+    for (c, t) in materialized {
+        let fp = c.fingerprint();
+        match by_fp.get(&fp) {
+            Some(&i) => {
+                debug_assert_eq!(uniq[i].0.components, c.components);
+                uniq[i].1.push(t);
+            }
+            None => {
+                by_fp.insert(fp, uniq.len());
+                uniq.push((c, vec![t]));
+            }
+        }
+    }
+    uniq.into_iter()
+        .filter_map(|(mut c, mut gens)| {
+            gens.sort_unstable();
+            gens.dedup();
+            c.support = gens.len();
+            constraints.satisfied_by(&c).then_some(c)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+    use crate::oac::online::OnlineMiner;
+
+    #[test]
+    fn duplicates_merge_with_support() {
+        let a = tricluster(vec![0], vec![0, 1], vec![0, 1]);
+        let mats = vec![
+            (a.clone(), NTuple::triple(0, 0, 0)),
+            (a.clone(), NTuple::triple(0, 1, 0)),
+            (a.clone(), NTuple::triple(0, 0, 1)),
+            (a.clone(), NTuple::triple(0, 1, 1)),
+        ];
+        let out = dedup_and_filter(mats, &Constraints::none());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].support, 4);
+        assert!((out[0].support_density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replayed_generating_tuples_counted_once() {
+        let a = tricluster(vec![0], vec![0], vec![0]);
+        let mats = vec![
+            (a.clone(), NTuple::triple(0, 0, 0)),
+            (a.clone(), NTuple::triple(0, 0, 0)), // M/R retry duplicate
+        ];
+        let out = dedup_and_filter(mats, &Constraints::none());
+        assert_eq!(out[0].support, 1);
+    }
+
+    #[test]
+    fn density_filter() {
+        // volume 8, support 1 → ρ = 0.125
+        let c = tricluster(vec![0, 1], vec![0, 1], vec![0, 1]);
+        let mats = vec![(c, NTuple::triple(0, 0, 0))];
+        assert_eq!(
+            dedup_and_filter(mats.clone(), &Constraints { min_density: 0.2, min_support: 0 })
+                .len(),
+            0
+        );
+        assert_eq!(
+            dedup_and_filter(mats, &Constraints { min_density: 0.1, min_support: 0 }).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn minsup_filter() {
+        let c = tricluster(vec![0], vec![0, 1], vec![0, 1]);
+        let mats = vec![(c, NTuple::triple(0, 0, 0))];
+        let cons = Constraints { min_density: 0.0, min_support: 2 };
+        assert_eq!(dedup_and_filter(mats, &cons).len(), 0);
+    }
+
+    #[test]
+    fn end_to_end_table1() {
+        let mut miner = OnlineMiner::new(3);
+        miner.add_batch(&[
+            NTuple::triple(0, 0, 0),
+            NTuple::triple(0, 1, 0),
+            NTuple::triple(0, 0, 1),
+            NTuple::triple(0, 1, 1),
+        ]);
+        let out = dedup_and_filter(miner.materialize_all(), &Constraints::none());
+        // all four triples generate the SAME tricluster ({u2},{i1,i2},{l1,l2})
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].components[1], vec![0, 1]);
+        assert_eq!(out[0].components[2], vec![0, 1]);
+        assert_eq!(out[0].support, 4);
+    }
+}

@@ -1,0 +1,232 @@
+//! Prime-set / cumulus dictionaries — the state of the online algorithm.
+//!
+//! Paper Alg. 1 keeps three hash dictionaries (PrimesOA, PrimesOC,
+//! PrimesAC) mapping entity pairs to prime sets; triclusters hold
+//! *pointers* into those dictionaries so a later triple updating a set is
+//! visible to every tricluster sharing it. The N-ary generalisation
+//! (§3.1) keys by `SubRelation` and the sets are cumuli.
+//!
+//! Here "pointer" = arena index (`SetId`); the arena owns the sets and
+//! materialisation resolves ids → sorted contents once, at the end.
+
+use crate::core::tuple::{NTuple, SubRelation};
+use crate::util::hash::FxHashMap;
+
+/// Index of a prime set / cumulus in the arena.
+pub type SetId = u32;
+
+/// Arena of grow-only entity-id sets, addressed by `SetId`.
+///
+/// Appends may contain duplicates when the input stream replays tuples
+/// (M/R task retries); `materialize` sorts + dedups, preserving set
+/// semantics without paying a per-insert hash probe on the hot path.
+#[derive(Debug, Default, Clone)]
+pub struct SetArena {
+    sets: Vec<Vec<u32>>,
+}
+
+impl SetArena {
+    pub fn alloc(&mut self) -> SetId {
+        self.sets.push(Vec::new());
+        (self.sets.len() - 1) as SetId
+    }
+
+    #[inline]
+    pub fn push(&mut self, id: SetId, value: u32) {
+        self.sets[id as usize].push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Raw (possibly duplicated, unsorted) contents.
+    pub fn raw(&self, id: SetId) -> &[u32] {
+        &self.sets[id as usize]
+    }
+
+    /// Sorted, deduplicated contents.
+    pub fn materialize(&self, id: SetId) -> Vec<u32> {
+        let mut v = self.sets[id as usize].clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Pack the non-dropped elements of a subrelation into a `u128` key.
+/// Valid for original arity ≤ 5 (4 × 32-bit elements); the dict index
+/// already encodes the dropped position, so only the elements matter.
+#[inline]
+fn pack_key(t: &NTuple, k: usize) -> u128 {
+    let mut key: u128 = 0;
+    let mut shift = 0;
+    for (i, &e) in t.as_slice().iter().enumerate() {
+        if i != k {
+            key |= (e as u128) << shift;
+            shift += 32;
+        }
+    }
+    key
+}
+
+/// The cumulus dictionaries for an N-ary context: one map per modality,
+/// keyed by the subrelation with that modality dropped.
+///
+/// §Perf: for arity ≤ 5 the subrelation key is packed into a `u128`
+/// (one FxHash word-mix instead of hashing a 26-byte struct); wider
+/// relations fall back to `SubRelation` keys.
+#[derive(Debug)]
+pub struct PrimeStore {
+    arity: usize,
+    /// fast path (arity ≤ 5): dicts[k]: packed subrelation → set id
+    packed: Vec<FxHashMap<u128, SetId>>,
+    /// general path: dicts[k]: subrelation → set id
+    general: Vec<FxHashMap<SubRelation, SetId>>,
+    pub arena: SetArena,
+}
+
+impl PrimeStore {
+    pub fn new(arity: usize) -> Self {
+        let fast = arity <= 5;
+        Self {
+            arity,
+            packed: if fast {
+                (0..arity).map(|_| FxHashMap::default()).collect()
+            } else {
+                Vec::new()
+            },
+            general: if fast {
+                Vec::new()
+            } else {
+                (0..arity).map(|_| FxHashMap::default()).collect()
+            },
+            arena: SetArena::default(),
+        }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Process one tuple (Alg. 1 lines 2–4 generalised): for each
+    /// modality k, append `e_k` to the cumulus of the k-dropped
+    /// subrelation. Returns the N set ids — the "pointers" stored in the
+    /// generated cluster.
+    pub fn add(&mut self, t: &NTuple) -> Vec<SetId> {
+        debug_assert_eq!(t.arity(), self.arity);
+        let mut ids = Vec::with_capacity(self.arity);
+        if !self.packed.is_empty() {
+            for k in 0..self.arity {
+                let key = pack_key(t, k);
+                let id = match self.packed[k].get(&key) {
+                    Some(&id) => id,
+                    None => {
+                        let id = self.arena.alloc();
+                        self.packed[k].insert(key, id);
+                        id
+                    }
+                };
+                self.arena.push(id, t.get(k));
+                ids.push(id);
+            }
+        } else {
+            for k in 0..self.arity {
+                let sub = t.subrelation(k);
+                let id = match self.general[k].get(&sub) {
+                    Some(&id) => id,
+                    None => {
+                        let id = self.arena.alloc();
+                        self.general[k].insert(sub, id);
+                        id
+                    }
+                };
+                self.arena.push(id, t.get(k));
+                ids.push(id);
+            }
+        }
+        ids
+    }
+
+    /// Look up the cumulus id for a subrelation (None if never touched).
+    pub fn get(&self, sub: &SubRelation) -> Option<SetId> {
+        let k = sub.dropped();
+        if !self.packed.is_empty() {
+            // rebuild the packed key from the subrelation elements
+            let mut key: u128 = 0;
+            let mut shift = 0;
+            for &e in sub.as_slice() {
+                key |= (e as u128) << shift;
+                shift += 32;
+            }
+            self.packed[k].get(&key).copied()
+        } else {
+            self.general[k].get(sub).copied()
+        }
+    }
+
+    /// Number of distinct subrelation keys across all modalities.
+    pub fn total_keys(&self) -> usize {
+        if !self.packed.is_empty() {
+            self.packed.iter().map(FxHashMap::len).sum()
+        } else {
+            self.general.iter().map(FxHashMap::len).sum()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_sets_accumulate() {
+        // Table 1: (u2,i1,l1),(u2,i2,l1),(u2,i1,l2),(u2,i2,l2)
+        let mut ps = PrimeStore::new(3);
+        let t = |g, m, b| NTuple::triple(g, m, b);
+        let ids1 = ps.add(&t(0, 0, 0));
+        let _ = ps.add(&t(0, 1, 0));
+        let _ = ps.add(&t(0, 0, 1));
+        let _ = ps.add(&t(0, 1, 1));
+        // the modus set PrimesOA[u2, i1] should now be {l1, l2}
+        assert_eq!(ps.arena.materialize(ids1[2]), vec![0, 1]);
+        // the intent set PrimesOC[u2, l1] is {i1, i2}
+        assert_eq!(ps.arena.materialize(ids1[1]), vec![0, 1]);
+        // the extent set PrimesAC[i1, l1] is {u2}
+        assert_eq!(ps.arena.materialize(ids1[0]), vec![0]);
+    }
+
+    #[test]
+    fn duplicate_tuples_do_not_change_materialized_sets() {
+        let mut ps = PrimeStore::new(3);
+        let t = NTuple::triple(1, 2, 3);
+        let a = ps.add(&t);
+        let b = ps.add(&t); // replayed (task retry)
+        assert_eq!(a, b);
+        assert_eq!(ps.arena.materialize(a[0]), vec![1]);
+        assert_eq!(ps.arena.materialize(a[2]), vec![3]);
+    }
+
+    #[test]
+    fn four_ary_cumuli() {
+        let mut ps = PrimeStore::new(4);
+        ps.add(&NTuple::new(&[0, 1, 2, 3]));
+        let ids = ps.add(&NTuple::new(&[4, 1, 2, 3]));
+        // cum(i, 0) over subrelation (1,2,3) = {0, 4}
+        assert_eq!(ps.arena.materialize(ids[0]), vec![0, 4]);
+        assert_eq!(ps.total_keys(), 1 + 2 + 2 + 2);
+    }
+
+    #[test]
+    fn get_by_subrelation() {
+        let mut ps = PrimeStore::new(3);
+        let t = NTuple::triple(5, 6, 7);
+        let ids = ps.add(&t);
+        assert_eq!(ps.get(&t.subrelation(1)), Some(ids[1]));
+        assert_eq!(ps.get(&NTuple::triple(9, 9, 9).subrelation(0)), None);
+    }
+}

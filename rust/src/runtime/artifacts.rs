@@ -1,0 +1,210 @@
+//! Artifact manifest: the calling conventions of the AOT modules,
+//! written by python/compile/aot.py and parsed here with util::json.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one input/output of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT module: file + io signature + geometry hints.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub graph: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// density tiles: edge size; delta: slab K; etc.
+    pub tile: Option<usize>,
+    pub k: Option<usize>,
+    pub l: Option<usize>,
+    pub samples: Option<usize>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub density_vmem_bytes: Option<f64>,
+    pub density_mxu_macs: Option<f64>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("tensor name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("tensor shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        anyhow::ensure!(
+            j.get("format").and_then(Json::as_str) == Some("hlo-text"),
+            "unsupported artifact format"
+        );
+        anyhow::ensure!(
+            j.get("return_tuple").and_then(Json::as_bool) == Some(true),
+            "artifacts must use the return_tuple calling convention"
+        );
+        let mut artifacts = Vec::new();
+        for (name, spec) in
+            j.get("artifacts").and_then(Json::as_obj).context("artifacts")?
+        {
+            let file = dir.join(
+                spec.get("file").and_then(Json::as_str).context("file")?,
+            );
+            anyhow::ensure!(file.exists(), "missing artifact {}", file.display());
+            let get_usize =
+                |k: &str| spec.get(k).and_then(Json::as_usize);
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                graph: spec
+                    .get("graph")
+                    .and_then(Json::as_str)
+                    .context("graph")?
+                    .to_string(),
+                file,
+                inputs: tensor_specs(spec.get("inputs").context("inputs")?)?,
+                outputs: tensor_specs(spec.get("outputs").context("outputs")?)?,
+                tile: get_usize("tile"),
+                k: get_usize("k"),
+                l: get_usize("l"),
+                samples: get_usize("samples"),
+            });
+        }
+        let perf = j.get("perf_model");
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            density_vmem_bytes: perf
+                .and_then(|p| p.get("density_vmem_bytes_per_step"))
+                .and_then(Json::as_f64),
+            density_mxu_macs: perf
+                .and_then(|p| p.get("density_mxu_macs_per_step"))
+                .and_then(Json::as_f64),
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Pick the best density artifact for a context of edge `n` and `k`
+    /// clusters per batch: smallest tile ≥ n if any, else the largest
+    /// tile; prefer larger K for big batches.
+    pub fn best_density(&self, n: usize, batch: usize) -> Option<&ArtifactSpec> {
+        let mut cands: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.graph == "density")
+            .collect();
+        cands.sort_by_key(|a| (a.tile.unwrap_or(0), a.k.unwrap_or(0)));
+        let fitting: Vec<&&ArtifactSpec> = cands
+            .iter()
+            .filter(|a| a.tile.unwrap_or(0) >= n)
+            .collect();
+        if fitting.is_empty() {
+            // tiled execution with the largest tile, biggest K
+            return cands
+                .iter()
+                .filter(|a| a.tile == cands.last().and_then(|c| c.tile))
+                .max_by_key(|a| a.k.unwrap_or(0))
+                .copied();
+        }
+        let tile = fitting[0].tile;
+        fitting
+            .into_iter()
+            .filter(|a| a.tile == tile)
+            .max_by_key(|a| {
+                let k = a.k.unwrap_or(0);
+                if k <= batch { (k, 0) } else { (0, usize::MAX - k) }
+            })
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 3);
+        let d = m.find("density_g64_k32").expect("density artifact");
+        assert_eq!(d.inputs[0].shape, vec![64, 64, 64]);
+        assert_eq!(d.outputs[0].shape, vec![32]);
+        assert!(m.density_vmem_bytes.unwrap() < 16.0 * (1 << 20) as f64);
+    }
+
+    #[test]
+    fn best_density_picks_fitting_tile() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        // a 20-wide context fits the 32-tile artifact
+        assert_eq!(m.best_density(20, 32).unwrap().tile, Some(32));
+        // a 64-wide context, batch 200 → 64-tile, k=128
+        let a = m.best_density(64, 200).unwrap();
+        assert_eq!(a.tile, Some(64));
+        assert_eq!(a.k, Some(128));
+        // a 500-wide context must still return something (tiled path)
+        assert!(m.best_density(500, 8).is_some());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent-xyz")).is_err());
+    }
+}

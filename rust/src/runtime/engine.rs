@@ -1,0 +1,192 @@
+//! Compiled-executable wrappers: typed entry points over the PJRT CPU
+//! client for the three artifact families (density / delta / mc).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+
+/// The PJRT client + compiled executable cache. One `Runtime` per
+/// process; executables are compiled lazily per artifact and reused.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Self { client, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {}", spec.name))
+    }
+
+    /// Compile the named density artifact.
+    pub fn density(&self, name: &str) -> Result<DensityExecutable> {
+        let spec = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("no artifact {name}"))?
+            .clone();
+        anyhow::ensure!(spec.graph == "density", "{name} is not a density graph");
+        Ok(DensityExecutable {
+            exe: self.compile(&spec)?,
+            tile: spec.tile.context("tile")?,
+            k: spec.k.context("k")?,
+        })
+    }
+
+    /// Compile the best-fitting density artifact for edge `n`, batch `b`.
+    pub fn best_density(&self, n: usize, b: usize) -> Result<DensityExecutable> {
+        let spec = self
+            .manifest
+            .best_density(n, b)
+            .context("no density artifacts in manifest")?
+            .clone();
+        Ok(DensityExecutable {
+            exe: self.compile(&spec)?,
+            tile: spec.tile.context("tile")?,
+            k: spec.k.context("k")?,
+        })
+    }
+
+    /// Compile the named δ artifact.
+    pub fn delta(&self, name: &str) -> Result<DeltaExecutable> {
+        let spec = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("no artifact {name}"))?
+            .clone();
+        anyhow::ensure!(spec.graph == "delta", "{name} is not a delta graph");
+        Ok(DeltaExecutable {
+            exe: self.compile(&spec)?,
+            k: spec.k.context("k")?,
+            l: spec.l.context("l")?,
+        })
+    }
+
+    /// Compile the named Monte-Carlo artifact.
+    pub fn mc(&self, name: &str) -> Result<McExecutable> {
+        let spec = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("no artifact {name}"))?
+            .clone();
+        anyhow::ensure!(spec.graph == "mc", "{name} is not an mc graph");
+        Ok(McExecutable {
+            exe: self.compile(&spec)?,
+            tile: spec.tile.context("tile")?,
+            samples: spec.samples.context("samples")?,
+        })
+    }
+}
+
+fn literal_3d(data: &[f32], d: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), d * d * d);
+    Ok(xla::Literal::vec1(data).reshape(&[d as i64, d as i64, d as i64])?)
+}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Compiled `density_g{T}_k{K}`: counts+volumes for K cluster masks over
+/// one T³ tile.
+pub struct DensityExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub tile: usize,
+    pub k: usize,
+}
+
+impl DensityExecutable {
+    /// Execute one tile: `tensor` is T³ (row-major g,m,b), masks are K×T.
+    /// Returns (counts, volumes), each length K.
+    pub fn run(
+        &self,
+        tensor: &[f32],
+        xmask: &[f32],
+        ymask: &[f32],
+        zmask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let t = self.tile;
+        let args = [
+            literal_3d(tensor, t)?,
+            literal_2d(xmask, self.k, t)?,
+            literal_2d(ymask, self.k, t)?,
+            literal_2d(zmask, self.k, t)?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (counts, volumes) = result.to_tuple2()?;
+        Ok((counts.to_vec::<f32>()?, volumes.to_vec::<f32>()?))
+    }
+}
+
+/// Compiled `delta_k{K}_l{L}`: δ-band masks + cardinalities for a slab of
+/// K fibers of padded length L.
+pub struct DeltaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub k: usize,
+    pub l: usize,
+}
+
+impl DeltaExecutable {
+    /// Returns (masks K×L row-major, cards length K).
+    pub fn run(
+        &self,
+        delta: f32,
+        values: &[f32],
+        present: &[f32],
+        centers: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let args = [
+            xla::Literal::vec1(&[delta]),
+            literal_2d(values, self.k, self.l)?,
+            literal_2d(present, self.k, self.l)?,
+            xla::Literal::vec1(centers),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (masks, cards) = result.to_tuple2()?;
+        Ok((masks.to_vec::<f32>()?, cards.to_vec::<f32>()?))
+    }
+}
+
+/// Compiled `mc_g{T}_s{S}`: Monte-Carlo density estimate over one tile.
+pub struct McExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub tile: usize,
+    pub samples: usize,
+}
+
+impl McExecutable {
+    /// `coords` is S×3 row-major i32. Returns ρ̂.
+    pub fn run(&self, tensor: &[f32], coords: &[i32]) -> Result<f32> {
+        debug_assert_eq!(coords.len(), self.samples * 3);
+        let t = self.tile;
+        let coords_lit = xla::Literal::vec1(coords)
+            .reshape(&[self.samples as i64, 3])?;
+        let args = [literal_3d(tensor, t)?, coords_lit];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let rho = result.to_tuple1()?;
+        Ok(rho.get_first_element::<f32>()?)
+    }
+}

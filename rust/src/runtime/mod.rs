@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the Rust request path. Python is never invoked here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use engine::{DensityExecutable, DeltaExecutable, McExecutable, Runtime};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$TRICLUSTER_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("TRICLUSTER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if the artifacts (manifest) are present — integration tests skip
+/// gracefully when `make artifacts` has not run.
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}

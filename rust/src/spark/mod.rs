@@ -1,0 +1,10 @@
+//! Spark-like execution engine (paper §7 future work): in-memory
+//! partitioned datasets with narrow/wide transformations, plus the
+//! multimodal clustering pipeline ported to it. Compared against the
+//! Hadoop-style engine in ablation A4.
+
+pub mod mmc_spark;
+pub mod rdd;
+
+pub use mmc_spark::{run_mmc_spark, SparkMmcResult};
+pub use rdd::{Rdd, SparkContext};

@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / `--switch`
+//! grammar used by the `tricluster` binary and the bench/ example drivers.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens after the subcommand.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable without a process).
+    pub fn parse_from<I, S>(tokens: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.flags.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.parse(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // NOTE: flags consume the following token greedily, so bare
+        // switches must come last or use `--switch` at the end.
+        let a = Args::parse_from([
+            "mr", "--dataset", "k1", "--workers=8", "extra", "--verbose",
+        ]);
+        assert_eq!(a.command.as_deref(), Some("mr"));
+        assert_eq!(a.get("dataset"), Some("k1"));
+        assert_eq!(a.parse::<usize>("workers"), Some(8));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse_from(["run", "--fast"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(["x"]);
+        assert_eq!(a.parse_or("n", 5usize), 5);
+        assert_eq!(a.get_or("name", "d"), "d");
+        assert!(!a.has("quiet"));
+    }
+}

@@ -1,0 +1,133 @@
+//! FxHash (the rustc hash): fast non-cryptographic hashing for the hot
+//! prime-set dictionaries and shuffle partitioner. `std`'s SipHash is
+//! safe-by-default but ~3-4x slower on the small fixed-width keys
+//! ((u32, u32) pairs, entity ids) that dominate OAC-triclustering.
+
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The rustc-FxHash mixing function.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<T> = std::collections::HashSet<T, FxBuildHasher>;
+
+/// Hash any `Hash` value with FxHash — used for tricluster dedup keys and
+/// the M/R partitioner.
+pub fn fxhash<T: Hash>(value: &T) -> u64 {
+    let mut h = FxHasher::default();
+    value.hash(&mut h);
+    h.finish()
+}
+
+/// SplitMix64 finalizer — a full-avalanche 64-bit mixer.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Order-independent 64-bit combination for set fingerprints: the dedup
+/// key of a tricluster must not depend on element order. Each element is
+/// avalanched independently (so no id maps to an absorbing value) and the
+/// sums are bound to the set length through a second mix.
+pub fn set_fingerprint(ids: &[u32]) -> u64 {
+    let mut sum: u64 = 0;
+    let mut xor: u64 = 0;
+    for &id in ids {
+        let e = mix64(id as u64 + 1);
+        sum = sum.wrapping_add(e);
+        xor ^= e.rotate_left(23);
+    }
+    mix64(sum ^ (ids.len() as u64)).wrapping_add(xor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fxhash(&(1u32, 2u32)), fxhash(&(1u32, 2u32)));
+        assert_ne!(fxhash(&(1u32, 2u32)), fxhash(&(2u32, 1u32)));
+    }
+
+    #[test]
+    fn map_basic() {
+        let mut m: FxHashMap<(u32, u32), u32> = FxHashMap::default();
+        m.insert((1, 2), 3);
+        assert_eq!(m.get(&(1, 2)), Some(&3));
+    }
+
+    #[test]
+    fn fingerprint_order_independent() {
+        assert_eq!(set_fingerprint(&[1, 2, 3]), set_fingerprint(&[3, 1, 2]));
+        assert_ne!(set_fingerprint(&[1, 2, 3]), set_fingerprint(&[1, 2, 4]));
+        assert_ne!(set_fingerprint(&[1, 2]), set_fingerprint(&[1, 2, 2]));
+    }
+
+    #[test]
+    fn spread_over_buckets() {
+        // partitioner sanity: ids 0..1000 spread across 10 buckets
+        let mut buckets = [0usize; 10];
+        for i in 0..1000u32 {
+            buckets[(fxhash(&i) % 10) as usize] += 1;
+        }
+        assert!(buckets.iter().all(|&b| b > 50), "{buckets:?}");
+    }
+}

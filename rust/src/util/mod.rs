@@ -1,0 +1,14 @@
+//! Cross-cutting substrates: PRNG, hashing, stats, thread pool, CLI/JSON
+//! parsing, table rendering, and a property-testing harness.
+//!
+//! Everything in this module exists because the offline crate set has no
+//! rand/rayon/clap/serde_json/proptest — see DESIGN.md §Substitutions.
+
+pub mod cli;
+pub mod hash;
+pub mod json;
+pub mod pool;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,172 @@
+//! Scoped worker pool — the thread-level parallelism substrate.
+//!
+//! The paper's §6 parallel NOAC uses C# `Parallel` ("each triple from the
+//! context is processed in a separate thread"); no rayon is available
+//! offline, so this module implements the equivalent: a fixed pool of OS
+//! threads pulling chunked work items from a shared atomic cursor
+//! (work-stealing degenerates to work-sharing for uniform loops, which is
+//! exactly the per-triple workload here).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: the detected parallelism of the
+/// machine (≥1).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel indexed map: computes `f(i)` for `i in 0..n` on `workers`
+/// threads and returns results in index order.
+///
+/// Chunked dynamic scheduling: workers claim `chunk`-sized index ranges
+/// from an atomic cursor, so skewed per-item costs (dense vs sparse
+/// generating triples) still balance.
+pub fn parallel_map<T, F>(n: usize, workers: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(chunk > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let slots = Mutex::new(&mut out);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, Vec<T>)> = Vec::new();
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    let vals: Vec<T> = (start..end).map(&f).collect();
+                    local.push((start, vals));
+                }
+                // single write-back per worker to keep contention off the
+                // hot loop
+                let mut guard = slots.lock().unwrap();
+                for (start, vals) in local {
+                    for (off, v) in vals.into_iter().enumerate() {
+                        guard[start + off] = Some(v);
+                    }
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker missed slot")).collect()
+}
+
+/// Parallel fold: each worker reduces its chunks locally with `fold`,
+/// partials are merged with `merge` in arbitrary order.
+pub fn parallel_fold<A, F, M>(
+    n: usize,
+    workers: usize,
+    chunk: usize,
+    make_acc: impl Fn() -> A + Sync,
+    fold: F,
+    merge: M,
+) -> A
+where
+    A: Send,
+    F: Fn(&mut A, usize) + Sync,
+    M: Fn(A, A) -> A,
+{
+    assert!(chunk > 0);
+    let workers = workers.max(1).min(n.max(1));
+    if n == 0 || workers == 1 {
+        let mut acc = make_acc();
+        for i in 0..n {
+            fold(&mut acc, i);
+        }
+        return acc;
+    }
+    let cursor = AtomicUsize::new(0);
+    let partials: Mutex<Vec<A>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut acc = make_acc();
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + chunk).min(n) {
+                        fold(&mut acc, i);
+                    }
+                }
+                partials.lock().unwrap().push(acc);
+            });
+        }
+    });
+    partials
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .fold(make_acc(), merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(1000, 4, 7, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_worker_matches() {
+        let a = parallel_map(100, 1, 13, |i| i + 1);
+        let b = parallel_map(100, 4, 13, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, 8, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fold_sums() {
+        let total = parallel_fold(
+            10_000,
+            4,
+            64,
+            || 0u64,
+            |acc, i| *acc += i as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, 9999 * 10_000 / 2);
+    }
+
+    #[test]
+    fn fold_collects_everything_once() {
+        let mut seen = parallel_fold(
+            500,
+            3,
+            11,
+            Vec::new,
+            |acc: &mut Vec<usize>, i| acc.push(i),
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        );
+        seen.sort_unstable();
+        assert_eq!(seen, (0..500).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,171 @@
+//! Property-based testing substrate (no proptest crate offline).
+//!
+//! A `Gen` wraps the repo PRNG with size-aware generators; `check` runs a
+//! property over many random cases and, on failure, retries the same seed
+//! with shrunken size parameters to report a small counterexample. Used by
+//! the coordinator-invariant tests (routing/partitioning, batching,
+//! dedup/merge idempotence, prime-set state).
+
+use crate::util::rng::Rng;
+
+/// Configuration of a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Generator context for one case: PRNG + target size.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.rng.usize_below(n.max(1))
+    }
+
+    pub fn u32_below(&mut self, n: u32) -> u32 {
+        self.rng.below(n.max(1) as u64) as u32
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// A length scaled by the case size (0..=size).
+    pub fn len(&mut self) -> usize {
+        self.rng.usize_below(self.size + 1)
+    }
+
+    /// Vector of generated items with size-scaled length.
+    pub fn vec<T>(&mut self, mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.len();
+        (0..n).map(|_| item(self)).collect()
+    }
+
+    /// Distinct sorted ids in `0..universe`, size-scaled count.
+    pub fn id_set(&mut self, universe: u32) -> Vec<u32> {
+        let n = self.len().min(universe as usize);
+        let mut ids = self.rng.sample_indices(universe as usize, n);
+        ids.sort_unstable();
+        ids.into_iter().map(|i| i as u32).collect()
+    }
+}
+
+/// Outcome of a failed property with its reproduction info.
+#[derive(Debug)]
+pub struct Failure {
+    pub case: usize,
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cfg.cases` random cases. The property returns
+/// `Err(message)` to signal failure. On failure, smaller sizes are probed
+/// first to produce the most shrunken failing report.
+pub fn check<F>(cfg: &Config, mut prop: F) -> Result<(), Failure>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // sizes ramp up so early failures are small
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ ((case as u64) << 32) ^ case as u64;
+        let mut g = Gen { rng: Rng::new(case_seed), size };
+        if let Err(message) = prop(&mut g) {
+            // shrink pass: same seed, progressively smaller sizes
+            let mut best = Failure { case, seed: case_seed, size, message };
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g = Gen { rng: Rng::new(case_seed), size: s };
+                if let Err(m) = prop(&mut g) {
+                    best = Failure { case, seed: case_seed, size: s, message: m };
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            return Err(best);
+        }
+    }
+    Ok(())
+}
+
+/// Assert-style wrapper for tests.
+#[track_caller]
+pub fn assert_prop<F>(cases: usize, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let cfg = Config { cases, ..Config::default() };
+    if let Err(f) = check(&cfg, prop) {
+        panic!(
+            "property failed (case {}, seed {:#x}, size {}): {}",
+            f.case, f.seed, f.size, f.message
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        assert_prop(64, |g| {
+            let v = g.vec(|g| g.u32_below(100));
+            let mut s = v.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() <= v.len() {
+                Ok(())
+            } else {
+                Err("dedup grew".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let cfg = Config { cases: 200, max_size: 64, ..Config::default() };
+        let res = check(&cfg, |g| {
+            let v = g.vec(|g| g.u32_below(10));
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err(format!("len={}", v.len()))
+            }
+        });
+        let f = res.expect_err("must fail");
+        // the shrink pass should report a smaller size than max
+        assert!(f.size < 64, "size={}", f.size);
+    }
+
+    #[test]
+    fn id_set_is_sorted_distinct_in_range() {
+        assert_prop(64, |g| {
+            let ids = g.id_set(40);
+            let sorted = ids.windows(2).all(|w| w[0] < w[1]);
+            let in_range = ids.iter().all(|&i| i < 40);
+            if sorted && in_range {
+                Ok(())
+            } else {
+                Err(format!("bad id_set {ids:?}"))
+            }
+        });
+    }
+}

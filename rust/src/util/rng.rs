@@ -1,0 +1,295 @@
+//! Deterministic PRNGs and samplers.
+//!
+//! No `rand` crate is available offline, so this module is the randomness
+//! substrate for the whole repo: dataset generators, fault injection,
+//! Monte-Carlo density sampling, and the property-testing harness all draw
+//! from here. Everything is seedable and reproducible across runs.
+
+/// SplitMix64 — tiny, fast seeder/stream generator (Steele et al., 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — the main generator (Blackman & Vigna, 2018).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 as the reference implementation prescribes.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform in an inclusive range.
+    pub fn range(&mut self, lo: u64, hi_inclusive: u64) -> u64 {
+        lo + self.below(hi_inclusive - lo + 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (Floyd's algorithm).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = crate::util::hash::FxHashSet::default();
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.usize_below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Standard normal via Box–Muller (one value; mate discarded).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+}
+
+/// Bounded Zipf sampler over `{0, .., n-1}` with exponent `s`, using the
+/// rejection-inversion method of Hörmann & Derflinger (1996). Used for the
+/// BibSonomy-like and tri-frames generators where tag/frame popularity is
+/// heavy-tailed.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dense: Option<Vec<f64>>, // small-n exact CDF fallback
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1);
+        if n <= 64 {
+            // Exact CDF for small supports.
+            let mut cdf = Vec::with_capacity(n as usize);
+            let mut acc = 0.0;
+            for k in 1..=n {
+                acc += (k as f64).powf(-s);
+                cdf.push(acc);
+            }
+            let total = acc;
+            for c in cdf.iter_mut() {
+                *c /= total;
+            }
+            return Self { n, s, h_x1: 0.0, h_n: 0.0, dense: Some(cdf) };
+        }
+        let h = |x: f64, s: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-12 {
+                (x).ln()
+            } else {
+                (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        Self {
+            n,
+            s,
+            h_x1: h(1.5, s) - 1.0,
+            h_n: h(n as f64 + 0.5, s),
+            dense: None,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if let Some(cdf) = &self.dense {
+            let u = rng.f64();
+            let idx = cdf.partition_point(|&c| c < u);
+            return (idx as u64).min(self.n - 1);
+        }
+        let s = self.s;
+        let h_inv = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-12 {
+                x.exp()
+            } else {
+                (1.0 + (1.0 - s) * x).powf(1.0 / (1.0 - s))
+            }
+        };
+        let h = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-12 {
+                x.ln()
+            } else {
+                (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        loop {
+            let u = self.h_x1 + rng.f64() * (self.h_n - self.h_x1);
+            let x = h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64);
+            if k - x <= 0.0 || u >= h(k + 0.5) - k.powf(-s) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut rng = Rng::new(1);
+        let mean: f64 = (0..20_000).map(|_| rng.f64()).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Rng::new(9);
+        let idx = rng.sample_indices(50, 20);
+        let mut dedup = idx.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn zipf_small_support_is_monotone() {
+        let mut rng = Rng::new(11);
+        let z = Zipf::new(10, 1.2);
+        let mut counts = [0usize; 10];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[4] && counts[4] > counts[9]);
+    }
+
+    #[test]
+    fn zipf_large_support_in_range_and_skewed() {
+        let mut rng = Rng::new(13);
+        let z = Zipf::new(100_000, 1.1);
+        let mut head = 0usize;
+        for _ in 0..10_000 {
+            let v = z.sample(&mut rng);
+            assert!(v < 100_000);
+            if v < 100 {
+                head += 1;
+            }
+        }
+        // heavy tail: the first 0.1% of the support draws >30% of the mass
+        assert!(head > 3_000, "head={head}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(17);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.06, "var={var}");
+    }
+}

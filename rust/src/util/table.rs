@@ -1,0 +1,98 @@
+//! ASCII table rendering for experiment reports — the bench harness prints
+//! the same rows the paper's tables show.
+
+/// Render rows as a boxed, column-aligned table. First row is the header.
+pub fn render(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let sep = {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&"-".repeat(w + 2));
+            s.push('+');
+        }
+        s
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push('\n');
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            let pad = w - cell.chars().count();
+            out.push(' ');
+            out.push_str(cell);
+            out.push_str(&" ".repeat(pad + 1));
+            out.push('|');
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push_str(&sep);
+            out.push('\n');
+        }
+    }
+    out.push_str(&sep);
+    out
+}
+
+/// Convenience: build a row from displayable items.
+#[macro_export]
+macro_rules! row {
+    ($($x:expr),* $(,)?) => {
+        vec![$(format!("{}", $x)),*]
+    };
+}
+
+/// Format milliseconds the way the paper's tables do (thousands separator).
+pub fn fmt_ms(ms: f64) -> String {
+    let v = ms.round() as i64;
+    let mut s = v.abs().to_string();
+    let mut grouped = String::new();
+    let bytes = s.as_bytes();
+    let n = bytes.len();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (n - i) % 3 == 0 {
+            grouped.push(',');
+        }
+        grouped.push(c);
+    }
+    s = grouped;
+    if v < 0 {
+        format!("-{s}")
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(&[
+            row!["Method", "ms"],
+            row!["Online", 368],
+            row!["MapReduce", 7124],
+        ]);
+        assert!(t.contains("| Method    | ms   |"), "{t}");
+        assert!(t.lines().all(|l| l.chars().count() == t.lines().next().unwrap().chars().count()));
+    }
+
+    #[test]
+    fn fmt_ms_groups_thousands() {
+        assert_eq!(fmt_ms(368.4), "368");
+        assert_eq!(fmt_ms(7124.0), "7,124");
+        assert_eq!(fmt_ms(3651072.0), "3,651,072");
+        assert_eq!(fmt_ms(-1234.0), "-1,234");
+    }
+}

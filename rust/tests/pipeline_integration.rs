@@ -1,0 +1,130 @@
+//! Cross-algorithm integration tests: the online miner, the basic
+//! offline algorithm, and the three-stage M/R pipeline must produce the
+//! same pattern sets on every dataset family, with and without injected
+//! task retries.
+
+use std::time::Duration;
+
+use tricluster::core::pattern::Cluster;
+use tricluster::coordinator::{measure_both, ExpConfig};
+use tricluster::datasets::{
+    bibsonomy, imdb, movielens, synthetic::{k1, k2, k3}, BibsonomyParams,
+    ImdbParams, MovielensParams,
+};
+use tricluster::mmc::{run_mmc, MmcConfig};
+use tricluster::oac::{mine_basic, mine_online, BasicOutcome, Constraints};
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    cs.sort_by(|a, b| a.components.cmp(&b.components));
+    cs
+}
+
+fn assert_same(a: &[Cluster], b: &[Cluster]) {
+    assert_eq!(a.len(), b.len(), "cluster counts differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.components, y.components);
+        assert_eq!(x.support, y.support);
+    }
+}
+
+fn mr_cfg() -> MmcConfig {
+    MmcConfig { map_tasks: 8, reduce_tasks: 8, ..MmcConfig::default() }
+}
+
+#[test]
+fn online_equals_mr_on_imdb() {
+    let ctx = imdb(&ImdbParams {
+        movies: 50,
+        tag_universe: 120,
+        target_triples: 600,
+        seed: 3,
+    });
+    let online = sorted(mine_online(&ctx.inner, &Constraints::none()));
+    let mr = run_mmc(&ctx.inner, &mr_cfg()).unwrap();
+    assert_same(&mr.clusters, &online);
+    assert!(!online.is_empty());
+}
+
+#[test]
+fn online_equals_mr_on_movielens_4ary() {
+    let ctx = movielens(&MovielensParams::with_tuples(5_000));
+    let online = sorted(mine_online(&ctx, &Constraints::none()));
+    let mr = run_mmc(&ctx, &mr_cfg()).unwrap();
+    assert_same(&mr.clusters, &online);
+}
+
+#[test]
+fn online_equals_mr_on_bibsonomy_sample() {
+    let ctx = bibsonomy(&BibsonomyParams::scaled(4_000)).inner;
+    let online = sorted(mine_online(&ctx, &Constraints::none()));
+    let mr = run_mmc(&ctx, &mr_cfg()).unwrap();
+    assert_same(&mr.clusters, &online);
+}
+
+#[test]
+fn online_equals_basic_on_k2() {
+    let ctx = k2(6);
+    let online = sorted(mine_online(&ctx.inner, &Constraints::none()));
+    match mine_basic(&ctx, 0.0, Duration::from_secs(60)) {
+        BasicOutcome::Done { clusters, .. } => {
+            let basic = sorted(clusters);
+            assert_eq!(basic.len(), online.len());
+            for (a, b) in basic.iter().zip(&online) {
+                assert_eq!(a.components, b.components);
+            }
+        }
+        BasicOutcome::TimedOut { .. } => panic!("basic timed out on tiny K2"),
+    }
+}
+
+#[test]
+fn duplicates_invariant_across_all_synthetic_families() {
+    // the paper's K1–K3 robustness claim, end to end
+    for (name, ctx) in [
+        ("k1", k1(8).inner),
+        ("k2", k2(6).inner),
+        ("k3", k3(5)),
+    ] {
+        let clean = run_mmc(&ctx, &mr_cfg()).unwrap();
+        let noisy = run_mmc(
+            &ctx,
+            &MmcConfig { fault_prob: 0.7, seed: 99, ..mr_cfg() },
+        )
+        .unwrap();
+        assert_same(&clean.clusters, &noisy.clusters);
+        eprintln!("{name}: {} clusters invariant under retries", clean.clusters.len());
+    }
+}
+
+#[test]
+fn theta_filter_equivalence_between_online_and_mr() {
+    // support-density threshold must filter identically in both paths
+    let ctx = k1(7).inner;
+    let theta = 0.9;
+    let online = sorted(mine_online(
+        &ctx,
+        &Constraints { min_density: theta, min_support: 0 },
+    ));
+    let mr = run_mmc(&ctx, &MmcConfig { theta, ..mr_cfg() }).unwrap();
+    assert_same(&mr.clusters, &online);
+}
+
+#[test]
+fn measure_both_agrees_on_counts() {
+    let cfg = ExpConfig { full: false, nodes: 4, theta: 0.0, runs: 1, seed: 7 };
+    let ctx = movielens(&MovielensParams::with_tuples(2_000));
+    let m = measure_both(&ctx, &cfg).unwrap();
+    assert_eq!(m.mr.clusters.len(), m.online_clusters);
+}
+
+#[test]
+fn support_counts_bounded_by_tuples() {
+    let ctx = movielens(&MovielensParams::with_tuples(3_000));
+    let mr = run_mmc(&ctx, &mr_cfg()).unwrap();
+    let total: usize = mr.clusters.iter().map(|c| c.support).sum();
+    assert_eq!(total, ctx.len(), "every tuple generates exactly one cluster");
+    for c in &mr.clusters {
+        // support never exceeds the cluster volume
+        assert!(c.support as f64 <= c.volume() + 1e-9);
+    }
+}

@@ -1,0 +1,180 @@
+//! Property-based tests over coordinator invariants (proptest_lite):
+//! random contexts in, algebraic invariants out — the shuffle/partition
+//! routing, dedup idempotence, density bounds, duplicate tolerance, and
+//! online/M-R equivalence on arbitrary relations.
+
+use tricluster::core::context::PolyContext;
+use tricluster::core::pattern::Cluster;
+use tricluster::mmc::{run_mmc, MmcConfig};
+use tricluster::oac::{mine_online, Constraints, OnlineMiner};
+use tricluster::util::proptest_lite::{assert_prop, Gen};
+
+/// Random N-ary context with ≤ `universe` ids per modality.
+fn gen_context(g: &mut Gen, arity: usize, universe: u32) -> PolyContext {
+    let mut ctx = PolyContext::new(arity);
+    let n = 1 + g.len() * 4;
+    for _ in 0..n {
+        let ids: Vec<u32> =
+            (0..arity).map(|_| g.u32_below(universe)).collect();
+        ctx.add_ids(&ids);
+    }
+    ctx
+}
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    cs.sort_by(|a, b| a.components.cmp(&b.components));
+    cs
+}
+
+#[test]
+fn prop_online_equals_mr_on_random_triadic_contexts() {
+    assert_prop(40, |g| {
+        let ctx = gen_context(g, 3, 12);
+        let online = sorted(mine_online(&ctx, &Constraints::none()));
+        let cfg = MmcConfig {
+            map_tasks: 1 + g.usize_below(6),
+            reduce_tasks: 1 + g.usize_below(6),
+            ..MmcConfig::default()
+        };
+        let mr = run_mmc(&ctx, &cfg).map_err(|e| e.to_string())?;
+        if mr.clusters.len() != online.len() {
+            return Err(format!(
+                "counts differ: mr={} online={}",
+                mr.clusters.len(),
+                online.len()
+            ));
+        }
+        for (a, b) in mr.clusters.iter().zip(&online) {
+            if a.components != b.components || a.support != b.support {
+                return Err(format!("cluster mismatch: {a:?} vs {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mr_output_invariant_under_task_retries() {
+    assert_prop(30, |g| {
+        let ctx = gen_context(g, 3, 10);
+        let base = run_mmc(&ctx, &MmcConfig::default()).map_err(|e| e.to_string())?;
+        let noisy = run_mmc(
+            &ctx,
+            &MmcConfig {
+                fault_prob: g.f64(),
+                seed: g.u32_below(u32::MAX) as u64,
+                ..MmcConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        if base.clusters.len() != noisy.clusters.len() {
+            return Err("retry changed cluster count".into());
+        }
+        for (a, b) in base.clusters.iter().zip(&noisy.clusters) {
+            if a.components != b.components || a.support != b.support {
+                return Err("retry changed a cluster".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_tuple_generates_exactly_one_cluster() {
+    assert_prop(40, |g| {
+        let arity = 3 + g.usize_below(2);
+        let ctx = gen_context(g, arity, 8);
+        let out = mine_online(&ctx, &Constraints::none());
+        let total: usize = out.iter().map(|c| c.support).sum();
+        if total != ctx.len() {
+            return Err(format!("supports {total} != tuples {}", ctx.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generating_tuple_lies_inside_its_cluster() {
+    assert_prop(40, |g| {
+        let ctx = gen_context(g, 3, 10);
+        let mut miner = OnlineMiner::new(3);
+        miner.add_batch(ctx.tuples());
+        for (c, t) in miner.materialize_all() {
+            for k in 0..3 {
+                if !c.components[k].contains(&t.get(k)) {
+                    return Err(format!("{t:?} not inside component {k} of {c:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_support_density_in_unit_interval_and_support_le_volume() {
+    assert_prop(40, |g| {
+        let ctx = gen_context(g, 3, 10);
+        for c in mine_online(&ctx, &Constraints::none()) {
+            let rho = c.support_density();
+            if !(0.0..=1.0 + 1e-12).contains(&rho) {
+                return Err(format!("ρ={rho} out of range"));
+            }
+            if c.support as f64 > c.volume() + 1e-9 {
+                return Err("support exceeds volume".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_constraints_are_monotone() {
+    // tighter constraints can only shrink the output
+    assert_prop(30, |g| {
+        let ctx = gen_context(g, 3, 10);
+        let loose = mine_online(
+            &ctx,
+            &Constraints { min_density: 0.2, min_support: 1 },
+        );
+        let tight = mine_online(
+            &ctx,
+            &Constraints { min_density: 0.6, min_support: 2 },
+        );
+        if tight.len() > loose.len() {
+            return Err(format!("{} > {}", tight.len(), loose.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mr_insensitive_to_task_granularity() {
+    // routing invariant: any (map_tasks, reduce_tasks) split produces the
+    // same final pattern set
+    assert_prop(25, |g| {
+        let ctx = gen_context(g, 3, 10);
+        let a = run_mmc(
+            &ctx,
+            &MmcConfig { map_tasks: 1, reduce_tasks: 1, ..MmcConfig::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        let b = run_mmc(
+            &ctx,
+            &MmcConfig {
+                map_tasks: 1 + g.usize_below(16),
+                reduce_tasks: 1 + g.usize_below(16),
+                ..MmcConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        if a.clusters.len() != b.clusters.len() {
+            return Err("granularity changed output".into());
+        }
+        for (x, y) in a.clusters.iter().zip(&b.clusters) {
+            if x.components != y.components {
+                return Err("granularity changed a cluster".into());
+            }
+        }
+        Ok(())
+    });
+}

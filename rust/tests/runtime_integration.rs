@@ -1,0 +1,186 @@
+//! Integration tests for the PJRT runtime: the AOT artifacts built by
+//! `make artifacts` are loaded from disk, compiled on the CPU PJRT
+//! client, executed with concrete inputs, and checked against
+//! Rust-computed oracles. This is the product path — the same code the
+//! density engines use.
+//!
+//! All tests skip (pass vacuously with a note) when artifacts are absent
+//! so `cargo test` stays green before `make artifacts`.
+
+use tricluster::core::pattern::tricluster;
+use tricluster::core::context::TriContext;
+use tricluster::datasets::synthetic::{k1, k2};
+use tricluster::density::{DensityEngine, ExactEngine, MonteCarloEngine, XlaEngine};
+use tricluster::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use tricluster::util::rng::Rng;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn runtime() -> Runtime {
+    Runtime::load(&default_artifact_dir()).expect("load runtime")
+}
+
+#[test]
+fn density_artifact_matches_bruteforce_on_random_tile() {
+    require_artifacts!();
+    let rt = runtime();
+    let exe = rt.density("density_g64_k32").unwrap();
+    let (t, k) = (exe.tile, exe.k);
+    let mut rng = Rng::new(0xA11CE);
+    let tensor: Vec<f32> =
+        (0..t * t * t).map(|_| if rng.chance(0.2) { 1.0 } else { 0.0 }).collect();
+    let mask = |rng: &mut Rng| -> Vec<f32> {
+        (0..k * t).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect()
+    };
+    let (xm, ym, zm) = (mask(&mut rng), mask(&mut rng), mask(&mut rng));
+    let (counts, volumes) = exe.run(&tensor, &xm, &ym, &zm).unwrap();
+
+    for j in 0..k {
+        let mut want = 0f64;
+        for g in 0..t {
+            if xm[j * t + g] == 0.0 {
+                continue;
+            }
+            for m in 0..t {
+                if ym[j * t + m] == 0.0 {
+                    continue;
+                }
+                for b in 0..t {
+                    want += (tensor[(g * t + m) * t + b] * zm[j * t + b]) as f64;
+                }
+            }
+        }
+        assert_eq!(counts[j] as f64, want, "cluster {j}");
+        let vol: f64 = (xm[j * t..(j + 1) * t].iter().sum::<f32>()
+            * ym[j * t..(j + 1) * t].iter().sum::<f32>()
+            * zm[j * t..(j + 1) * t].iter().sum::<f32>()) as f64;
+        assert_eq!(volumes[j] as f64, vol, "volume {j}");
+    }
+}
+
+#[test]
+fn xla_engine_equals_exact_engine_single_tile() {
+    require_artifacts!();
+    let rt = runtime();
+    let ctx = k1(48);
+    let clusters = tricluster::oac::mine_online(
+        &ctx.inner,
+        &tricluster::oac::Constraints::none(),
+    );
+    let exact = ExactEngine.densities(&ctx, &clusters);
+    let mut xla = XlaEngine::new(&rt, 48, clusters.len()).unwrap();
+    let got = xla.densities(&ctx, &clusters);
+    assert_eq!(exact.len(), got.len());
+    for (i, (a, b)) in exact.iter().zip(&got).enumerate() {
+        assert!((a - b).abs() < 1e-6, "cluster {i}: exact={a} xla={b}");
+    }
+}
+
+#[test]
+fn xla_engine_equals_exact_engine_multi_tile() {
+    require_artifacts!();
+    let rt = runtime();
+    // K2(50) spans 150 ids per modality → 3×3×3 grid of 64³ tiles
+    let ctx = k2(50);
+    let clusters = vec![
+        tricluster((0..50).collect(), (0..50).collect(), (0..50).collect()),
+        tricluster((50..100).collect(), (50..100).collect(), (50..100).collect()),
+        tricluster((100..150).collect(), (100..150).collect(), (100..150).collect()),
+        // a cross-block cluster straddling tile boundaries
+        tricluster((30..80).collect(), (30..80).collect(), (30..80).collect()),
+    ];
+    let exact = ExactEngine.densities(&ctx, &clusters);
+    let mut xla = XlaEngine::new(&rt, 150, clusters.len()).unwrap();
+    let got = xla.densities(&ctx, &clusters);
+    for (i, (a, b)) in exact.iter().zip(&got).enumerate() {
+        assert!((a - b).abs() < 1e-6, "cluster {i}: exact={a} xla={b}");
+    }
+    assert_eq!(exact[0], 1.0);
+    assert!(exact[3] < 0.5); // straddling cluster is sparse
+}
+
+#[test]
+fn delta_artifact_matches_band_oracle() {
+    require_artifacts!();
+    let rt = runtime();
+    let exe = rt.delta("delta_k64_l128").unwrap();
+    let (k, l) = (exe.k, exe.l);
+    let mut rng = Rng::new(0xDE17A);
+    let values: Vec<f32> =
+        (0..k * l).map(|_| (rng.f64() * 1000.0) as f32).collect();
+    let present: Vec<f32> =
+        (0..k * l).map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 }).collect();
+    let centers: Vec<f32> = (0..k).map(|_| (rng.f64() * 1000.0) as f32).collect();
+    let delta = 75.0f32;
+    let (masks, cards) = exe.run(delta, &values, &present, &centers).unwrap();
+    for j in 0..k {
+        let mut card = 0.0f32;
+        for i in 0..l {
+            let want = if present[j * l + i] == 1.0
+                && (values[j * l + i] - centers[j]).abs() <= delta
+            {
+                1.0
+            } else {
+                0.0
+            };
+            assert_eq!(masks[j * l + i], want, "fiber {j} elem {i}");
+            card += want;
+        }
+        assert_eq!(cards[j], card, "fiber {j} cardinality");
+    }
+}
+
+#[test]
+fn mc_artifact_estimates_density() {
+    require_artifacts!();
+    let rt = runtime();
+    let ctx = k1(64); // exactly one tile
+    let ids: Vec<u32> = (0..64).collect();
+    let c = tricluster(ids.clone(), ids.clone(), ids);
+    let mut mc = MonteCarloEngine::with_artifact(&rt, "mc_g64_s1024", 3).unwrap();
+    let d = mc.densities(&ctx, &[c])[0];
+    let truth = (64f64.powi(3) - 64.0) / 64f64.powi(3);
+    assert!((d - truth).abs() < 0.05, "d={d} truth={truth}");
+}
+
+#[test]
+fn mc_host_and_artifact_agree_statistically() {
+    require_artifacts!();
+    let rt = runtime();
+    let mut ctx = TriContext::new();
+    let mut rng = Rng::new(5);
+    for _ in 0..20_000 {
+        ctx.add(
+            rng.below(64) as u32,
+            rng.below(64) as u32,
+            rng.below(64) as u32,
+        );
+    }
+    let ids: Vec<u32> = (0..64).collect();
+    let c = tricluster(ids.clone(), ids.clone(), ids);
+    let exact = ExactEngine.densities(&ctx, &[c.clone()])[0];
+    let host = MonteCarloEngine::host(4096, 11).densities(&ctx, &[c.clone()])[0];
+    let art = MonteCarloEngine::with_artifact(&rt, "mc_g64_s1024", 11)
+        .unwrap()
+        .densities(&ctx, &[c])[0];
+    assert!((host - exact).abs() < 0.03, "host={host} exact={exact}");
+    assert!((art - exact).abs() < 0.05, "artifact={art} exact={exact}");
+}
+
+#[test]
+fn manifest_perf_model_within_vmem_budget() {
+    require_artifacts!();
+    let rt = runtime();
+    // DESIGN §Hardware-Adaptation: one kernel step must fit in 16 MiB VMEM
+    let vmem = rt.manifest.density_vmem_bytes.expect("perf model present");
+    assert!(vmem < 16.0 * (1u64 << 20) as f64, "vmem={vmem}");
+    let macs = rt.manifest.density_mxu_macs.expect("mxu macs");
+    assert!(macs >= 8.0 * 64.0 * 64.0 * 64.0);
+}
