@@ -1,0 +1,77 @@
+//! Walkthrough of the serving layer: stream a MovieLens-like rating feed
+//! into a sharded `TriclusterService`, compact mid-stream, answer
+//! queries, and survive a restart via snapshot/restore.
+//!
+//! Run: `cargo run --release --example streaming_service`
+
+use tricluster::core::io::format_cluster;
+use tricluster::datasets::{movielens, MovielensParams};
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::serve::{ServeConfig, TriclusterService};
+
+fn main() -> anyhow::Result<()> {
+    // A 20k-tuple prefix of the deterministic MovieLens stream:
+    // (user, movie, rating, month) with power-law user/movie skew.
+    let ctx = movielens(&MovielensParams::with_tuples(20_000));
+    println!(
+        "stream: {} tuples, arity {} (users x movies x ratings x months)\n",
+        ctx.len(),
+        ctx.arity()
+    );
+
+    // --- ingest: batches hash-route to 4 shards, drains are automatic ---
+    let mut svc = TriclusterService::new(ServeConfig::new(ctx.arity(), 4));
+    for (i, chunk) in ctx.tuples().chunks(2_048).enumerate() {
+        svc.ingest(chunk);
+        // compact every 4 batches: the service stays queryable WHILE the
+        // stream keeps arriving
+        if (i + 1) % 4 == 0 {
+            svc.compact();
+            let s = svc.stats();
+            println!(
+                "after batch {:>2}: {:>6} tuples merged, {:>6} cumulus keys, epochs {:?}",
+                i + 1,
+                s.merged,
+                s.distinct_keys,
+                s.epochs
+            );
+        }
+    }
+    svc.compact();
+
+    // --- query: top-k by density + membership lookup -------------------
+    let q = svc.query();
+    println!("\nindex holds {} clusters; densest 3:", q.len());
+    for c in q.top_k_by_density(3) {
+        println!(
+            "  {}  (support {}, rho {:.3})",
+            format_cluster(&ctx, c),
+            c.support,
+            c.support_density()
+        );
+    }
+    let hot_user = 0; // zipf makes user0 the most active
+    let hits = q.containing(0, hot_user);
+    println!(
+        "\nuser {:?} appears in {} clusters",
+        ctx.interners[0].name(hot_user),
+        hits.len()
+    );
+
+    // --- the invariant the whole layer rests on ------------------------
+    let reference = mine_online(&ctx, &Constraints::none());
+    assert_eq!(svc.clusters().len(), reference.len());
+    println!(
+        "\nsharded index == sequential mine_online: {} clusters both ways",
+        reference.len()
+    );
+
+    // --- restart recovery ----------------------------------------------
+    let path = std::env::temp_dir().join("streaming_service_snapshot.json");
+    svc.snapshot_to(&path)?;
+    let mut restored = TriclusterService::restore_from(&path)?;
+    assert_eq!(restored.clusters().len(), reference.len());
+    println!("snapshot -> restore verified at {}", path.display());
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

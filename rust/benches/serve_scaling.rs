@@ -1,0 +1,157 @@
+//! Bench: serve-layer scaling — ingest throughput, per-batch latency,
+//! compaction and query cost as the shard count grows, on the MovieLens
+//! stream. Emits `BENCH_serve.json` (repo root) so the perf trajectory
+//! is machine-readable across PRs.
+//!
+//! Quick mode by default; `TRICLUSTER_BENCH_FULL=1` for the 1M-tuple
+//! stream. Acceptance target: ≥ 2× ingest throughput at 4 shards vs 1.
+
+use std::collections::BTreeMap;
+
+use tricluster::core::tuple::NTuple;
+use tricluster::datasets::{movielens, MovielensParams};
+use tricluster::serve::{ServeConfig, TriclusterService};
+use tricluster::util::json::Json;
+use tricluster::util::stats::{percentile_sorted, Timer};
+
+const BATCH: usize = 8_192;
+
+struct Run {
+    shards: usize,
+    ingest_ms: f64,
+    compact_ms: f64,
+    query_ms: f64,
+    clusters: usize,
+    batch_p50_ms: f64,
+    batch_p95_ms: f64,
+}
+
+fn drive(tuples: &[NTuple], arity: usize, shards: usize, runs: usize) -> Run {
+    let mut best_ingest = f64::INFINITY;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut compact_ms = 0.0;
+    let mut query_ms = 0.0;
+    let mut clusters = 0;
+    for _ in 0..runs {
+        let mut svc = TriclusterService::new(ServeConfig::new(arity, shards));
+        let mut batch_ms = Vec::with_capacity(tuples.len() / BATCH + 1);
+        let t = Timer::start();
+        for chunk in tuples.chunks(BATCH) {
+            let tb = Timer::start();
+            svc.ingest(chunk);
+            batch_ms.push(tb.elapsed_ms());
+        }
+        svc.flush();
+        let ingest_ms = t.elapsed_ms();
+        let t = Timer::start();
+        svc.compact();
+        let c_ms = t.elapsed_ms();
+        let t = Timer::start();
+        let q = svc.query();
+        let top = q.top_k_by_density(10);
+        std::hint::black_box(top.len());
+        let q_ms = t.elapsed_ms();
+        if ingest_ms < best_ingest {
+            best_ingest = ingest_ms;
+            latencies = batch_ms;
+            compact_ms = c_ms;
+            query_ms = q_ms;
+            clusters = q.len();
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Run {
+        shards,
+        ingest_ms: best_ingest,
+        compact_ms,
+        query_ms,
+        clusters,
+        batch_p50_ms: percentile_sorted(&latencies, 50.0),
+        batch_p95_ms: percentile_sorted(&latencies, 95.0),
+    }
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn main() {
+    let full = std::env::var("TRICLUSTER_BENCH_FULL").is_ok();
+    let n = if full { 1_000_000 } else { 200_000 };
+    let runs = if full { 1 } else { 3 };
+    eprintln!("serve_scaling bench (full={full}, {n} tuples) ...");
+    let ctx = movielens(&MovielensParams::with_tuples(n));
+    let tuples = ctx.tuples().to_vec();
+
+    let mut series: Vec<Run> = Vec::new();
+    for &shards in &[1usize, 2, 4, 8] {
+        let run = drive(&tuples, ctx.arity(), shards, runs);
+        eprintln!(
+            "  {shards} shard(s): ingest {:.0} ms ({:.0} tuples/s) | compact {:.0} ms | \
+             query {:.2} ms | {} clusters | batch p50 {:.2} / p95 {:.2} ms",
+            run.ingest_ms,
+            n as f64 / (run.ingest_ms / 1e3),
+            run.compact_ms,
+            run.query_ms,
+            run.clusters,
+            run.batch_p50_ms,
+            run.batch_p95_ms
+        );
+        series.push(run);
+    }
+
+    let base = series[0].ingest_ms;
+    let speedup_at_4 = series
+        .iter()
+        .find(|r| r.shards == 4)
+        .map(|r| base / r.ingest_ms)
+        .unwrap_or(0.0);
+    println!(
+        "speedup vs 1 shard: {}",
+        series
+            .iter()
+            .map(|r| format!("{}x@{}", (base / r.ingest_ms * 100.0).round() / 100.0, r.shards))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    println!("acceptance: ingest speedup at 4 shards = {speedup_at_4:.2} (target ≥ 2.0)");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("serve_scaling".into()));
+    doc.insert("dataset".to_string(), Json::Str("movielens".into()));
+    doc.insert("tuples".to_string(), num(n as f64));
+    doc.insert("batch".to_string(), num(BATCH as f64));
+    doc.insert("runs".to_string(), num(runs as f64));
+    doc.insert(
+        "cores".to_string(),
+        num(tricluster::util::pool::default_workers() as f64),
+    );
+    doc.insert("speedup_at_4_shards".to_string(), num(speedup_at_4));
+    doc.insert(
+        "series".to_string(),
+        Json::Arr(
+            series
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("shards".to_string(), num(r.shards as f64));
+                    o.insert("ingest_ms".to_string(), num(r.ingest_ms));
+                    o.insert(
+                        "tuples_per_s".to_string(),
+                        num(n as f64 / (r.ingest_ms / 1e3)),
+                    );
+                    o.insert("speedup_vs_1".to_string(), num(base / r.ingest_ms));
+                    o.insert("compact_ms".to_string(), num(r.compact_ms));
+                    o.insert("query_ms".to_string(), num(r.query_ms));
+                    o.insert("clusters".to_string(), num(r.clusters as f64));
+                    o.insert("batch_p50_ms".to_string(), num(r.batch_p50_ms));
+                    o.insert("batch_p95_ms".to_string(), num(r.batch_p95_ms));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let json = Json::Obj(doc);
+    std::fs::write("BENCH_serve.json", json.to_string()).expect("write BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json");
+}

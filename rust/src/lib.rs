@@ -10,6 +10,13 @@
 //! online/basic OAC algorithms, the 3-stage multimodal clustering, NOAC,
 //! dataset generators, density engines, and the PJRT runtime that executes
 //! the AOT-compiled JAX/Pallas density kernels from `artifacts/`.
+//!
+//! On top of the batch pipeline sits the [`serve`] layer — a sharded,
+//! incrementally-updatable triclustering SERVICE (ingest → shard → merge
+//! → query, see docs/ARCHITECTURE.md): hash-routed ingest with
+//! backpressure, per-shard online miners, a compactor that merges
+//! partial cumuli into a globally-correct index, a top-k/membership
+//! query API, and JSON snapshot/restore.
 
 pub mod coordinator;
 pub mod core;
@@ -20,5 +27,6 @@ pub mod mmc;
 pub mod noac;
 pub mod oac;
 pub mod runtime;
+pub mod serve;
 pub mod spark;
 pub mod util;

@@ -7,6 +7,7 @@
 //!   mr                      three-stage MapReduce multimodal clustering
 //!   noac                    many-valued δ-triclustering (seq/parallel)
 //!   density                 density engines over a dataset's clusters
+//!   serve-sim               drive the sharded serving layer over streams
 //!   experiment              regenerate a paper table/figure
 
 use anyhow::Result;
@@ -34,6 +35,8 @@ COMMANDS
   mr         --dataset <name> [--theta R] [--nodes N] [--fault-prob P]
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
   density    [--edge N] [--engine exact|xla|mc]
+  serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
+             [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
   experiment --id table3|table4|fig2|table5|skew|faults|engines|memory [--full] [--config f.ini]
              [--nodes N] [--runs N]
 
@@ -49,6 +52,7 @@ fn main() -> Result<()> {
         Some("mr") => mr(&args),
         Some("noac") => noac(&args),
         Some("density") => density(&args),
+        Some("serve-sim") => serve_sim(&args),
         Some("experiment") => experiment(&args),
         _ => {
             print!("{USAGE}");
@@ -182,6 +186,89 @@ fn density(args: &Args) -> Result<()> {
         d.iter().cloned().fold(f64::INFINITY, f64::min),
         d.iter().cloned().fold(0.0, f64::max)
     );
+    Ok(())
+}
+
+fn serve_sim(args: &Args) -> Result<()> {
+    use tricluster::serve::{ServeConfig, TriclusterService};
+
+    let names = args.get("dataset").unwrap_or_else(|| args.get_or("datasets", "k1,ml100k"));
+    let shards: usize = args.parse_or("shards", 4);
+    let batch: usize = args.parse_or::<usize>("batch", 4096).max(1);
+    let compact_every: usize = args.parse_or("compact-every", 16);
+    let top: usize = args.parse_or("top", 5);
+    let cons = Constraints {
+        min_density: args.parse_or("min-density", 0.0),
+        min_support: args.parse_or("min-support", 0),
+    };
+
+    for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let ctx = datasets::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}; see `tricluster info`"))?;
+        println!(
+            "== serve-sim {name}: {} tuples (arity {}) over {shards} shards, batch {batch} ==",
+            ctx.len(),
+            ctx.arity()
+        );
+        let mut svc = TriclusterService::new(
+            ServeConfig::new(ctx.arity(), shards).with_constraints(cons.clone()),
+        );
+        let t = Timer::start();
+        let mut compactions = 0usize;
+        for (i, chunk) in ctx.tuples().chunks(batch).enumerate() {
+            svc.ingest(chunk);
+            if compact_every > 0 && (i + 1) % compact_every == 0 {
+                svc.compact();
+                compactions += 1;
+            }
+        }
+        svc.compact();
+        compactions += 1;
+        let total_ms = t.elapsed_ms();
+        let stats = svc.stats();
+        println!(
+            "  ingest+compact: {} ms  ({:.0} tuples/s, {} drains, {compactions} compactions)",
+            fmt_ms(total_ms),
+            stats.tuples as f64 / (total_ms / 1e3),
+            stats.drains
+        );
+        println!(
+            "  index: {} clusters, {} merged tuples, {} cumulus keys, epochs {:?}",
+            svc.clusters().len(),
+            stats.merged,
+            stats.distinct_keys,
+            svc.stats().epochs
+        );
+        let t = Timer::start();
+        let q = svc.query();
+        let built_ms = t.elapsed_ms();
+        println!("  top-{top} by density (query engine built in {} ms):", fmt_ms(built_ms));
+        let top_clusters = q.top_k_by_density(top);
+        for &c in &top_clusters {
+            println!("    {}", io::format_cluster(&ctx, c));
+        }
+        if let Some(best) = top_clusters.first() {
+            if let Some(&e) = best.components[0].first() {
+                let hits = q.containing(0, e);
+                println!(
+                    "  membership: entity {:?} (modality 0) appears in {} clusters",
+                    ctx.interners[0].name(e),
+                    hits.len()
+                );
+            }
+        }
+        if let Some(path) = args.get("snapshot") {
+            let path = std::path::PathBuf::from(path);
+            svc.snapshot_to(&path)?;
+            let mut restored = TriclusterService::restore_from(&path)?;
+            anyhow::ensure!(
+                restored.clusters().len() == svc.clusters().len(),
+                "snapshot roundtrip changed the index"
+            );
+            println!("  snapshot: {} (restore verified)", path.display());
+        }
+        println!();
+    }
     Ok(())
 }
 

@@ -9,7 +9,7 @@
 
 use crate::core::pattern::Cluster;
 use crate::core::tuple::NTuple;
-use crate::oac::primes::{PrimeStore, SetId};
+use crate::oac::primes::{PrimeStore, SetArena, SetId};
 
 /// A generated (not yet materialised) cluster: the N set ids plus the
 /// generating tuple.
@@ -85,49 +85,61 @@ impl OnlineMiner {
         &self,
         constraints: &crate::oac::post::Constraints,
     ) -> Vec<Cluster> {
-        use crate::util::hash::{set_fingerprint, FxHashMap};
-        let n_sets = self.primes.arena.len();
-        let mut set_fp: Vec<u64> = vec![0; n_sets];
-        let mut set_done: Vec<bool> = vec![false; n_sets];
-        let mut by_fp: FxHashMap<u64, usize> = FxHashMap::default();
-        // group index → (representative set ids, distinct gen count, last tuple)
-        let mut groups: Vec<(Vec<u32>, Vec<NTuple>)> = Vec::new();
-        for g in &self.generated {
-            let mut acc = 0xABCD_EF01_2345_6789u64 ^ (g.set_ids.len() as u64);
-            for &id in &g.set_ids {
-                let i = id as usize;
-                if !set_done[i] {
-                    set_fp[i] = set_fingerprint(&self.primes.arena.materialize(id));
-                    set_done[i] = true;
-                }
-                acc = acc
-                    .rotate_left(17)
-                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    ^ set_fp[i];
+        dedup_generated(&self.primes.arena, &self.generated, constraints)
+    }
+}
+
+/// Fingerprint-dedup + constraint filtering over an explicit
+/// `(arena, generated)` state — the algorithm behind
+/// [`OnlineMiner::dedup_and_filter`], factored out so the serve layer's
+/// compactor ([`crate::serve::merge`]) runs the IDENTICAL dedup over its
+/// globally-merged cumuli and the sharded-equals-sequential invariant is
+/// structural, not re-implemented.
+pub fn dedup_generated(
+    arena: &SetArena,
+    generated: &[Generated],
+    constraints: &crate::oac::post::Constraints,
+) -> Vec<Cluster> {
+    use crate::util::hash::{set_fingerprint, FxHashMap};
+    let n_sets = arena.len();
+    let mut set_fp: Vec<u64> = vec![0; n_sets];
+    let mut set_done: Vec<bool> = vec![false; n_sets];
+    let mut by_fp: FxHashMap<u64, usize> = FxHashMap::default();
+    // group index → (representative set ids, generating tuples)
+    let mut groups: Vec<(Vec<u32>, Vec<NTuple>)> = Vec::new();
+    for g in generated {
+        let mut acc = 0xABCD_EF01_2345_6789u64 ^ (g.set_ids.len() as u64);
+        for &id in &g.set_ids {
+            let i = id as usize;
+            if !set_done[i] {
+                set_fp[i] = set_fingerprint(&arena.materialize(id));
+                set_done[i] = true;
             }
-            match by_fp.get(&acc) {
-                Some(&gi) => groups[gi].1.push(g.tuple),
-                None => {
-                    by_fp.insert(acc, groups.len());
-                    groups.push((g.set_ids.clone(), vec![g.tuple]));
-                }
+            acc = acc
+                .rotate_left(17)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ set_fp[i];
+        }
+        match by_fp.get(&acc) {
+            Some(&gi) => groups[gi].1.push(g.tuple),
+            None => {
+                by_fp.insert(acc, groups.len());
+                groups.push((g.set_ids.clone(), vec![g.tuple]));
             }
         }
-        groups
-            .into_iter()
-            .filter_map(|(set_ids, mut gens)| {
-                gens.sort_unstable();
-                gens.dedup();
-                let comps: Vec<Vec<u32>> = set_ids
-                    .iter()
-                    .map(|&id| self.primes.arena.materialize(id))
-                    .collect();
-                let mut c = Cluster::new(comps);
-                c.support = gens.len();
-                constraints.satisfied_by(&c).then_some(c)
-            })
-            .collect()
     }
+    groups
+        .into_iter()
+        .filter_map(|(set_ids, mut gens)| {
+            gens.sort_unstable();
+            gens.dedup();
+            let comps: Vec<Vec<u32>> =
+                set_ids.iter().map(|&id| arena.materialize(id)).collect();
+            let mut c = Cluster::new(comps);
+            c.support = gens.len();
+            constraints.satisfied_by(&c).then_some(c)
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -1,0 +1,222 @@
+//! Incremental compaction: merge per-shard partial cumuli into the
+//! globally-correct cluster index.
+//!
+//! A tuple routed to shard s contributes to N cumuli *inside s*; tuples
+//! sharing a subrelation key but routed to different shards leave each
+//! shard with a PARTIAL cumulus for that key. This stage is the
+//! incremental analogue of the §4.1 first reduce: it unions partial
+//! cumuli by `(dropped modality, subrelation)` key into one global
+//! [`SetArena`], and records every generating tuple as N pointers into
+//! that arena — the exact state a single global [`crate::oac::OnlineMiner`]
+//! would have built, so deduplication can reuse
+//! [`crate::oac::online::dedup_generated`] verbatim and sharded output
+//! provably equals `mine_online`.
+//!
+//! Deltas arrive map-side-combined (one `(key, values)` group per
+//! touched key — [`super::shard::Shard::take_delta`]), so applying a
+//! delta probes the global key dictionary once per DISTINCT key, not once
+//! per tuple-position; generating tuples then resolve their N set ids
+//! against a small delta-local view.
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::SubRelation;
+use crate::oac::online::{dedup_generated, Generated};
+use crate::oac::post::Constraints;
+use crate::oac::primes::{SetArena, SetId};
+use crate::util::hash::FxHashMap;
+
+use super::shard::{Shard, ShardDelta};
+
+/// The global, incrementally-maintained cluster index.
+#[derive(Debug)]
+pub struct Compactor {
+    /// Global cumulus dictionary: subrelation key → arena set id. The
+    /// dropped-position tag inside [`SubRelation`] keeps e.g. (a,b) with
+    /// modality 0 dropped distinct from (a,b) with modality 1 dropped.
+    keys: FxHashMap<SubRelation, SetId>,
+    arena: SetArena,
+    /// Every generating tuple seen, as N global set pointers (the same
+    /// shape `OnlineMiner` keeps).
+    generated: Vec<Generated>,
+    /// Last epoch merged from each shard.
+    epochs: Vec<u64>,
+    /// Materialised cluster cache, invalidated by `apply`.
+    cache: Option<Vec<Cluster>>,
+    /// Constraints the cache was built under: (min_density, min_support).
+    cached_for: Option<(f64, usize)>,
+}
+
+impl Compactor {
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            keys: FxHashMap::default(),
+            arena: SetArena::default(),
+            generated: Vec::new(),
+            epochs: vec![0; n_shards.max(1)],
+            cache: None,
+            cached_for: None,
+        }
+    }
+
+    /// Merge one shard delta into the global index.
+    pub fn apply(&mut self, delta: &ShardDelta) {
+        self.epochs[delta.shard] = delta.epoch;
+        if delta.is_empty() {
+            return;
+        }
+        // delta-local key view: the only keys this delta's tuples can
+        // reference are the ones in its own appends
+        let mut local: FxHashMap<SubRelation, SetId> = FxHashMap::default();
+        local.reserve(delta.appends.len());
+        for (sub, values) in &delta.appends {
+            let id = match self.keys.get(sub) {
+                Some(&id) => id,
+                None => {
+                    let id = self.arena.alloc();
+                    self.keys.insert(*sub, id);
+                    id
+                }
+            };
+            for &v in values {
+                self.arena.push(id, v);
+            }
+            local.insert(*sub, id);
+        }
+        for &t in &delta.tuples {
+            let set_ids: Vec<SetId> = (0..t.arity())
+                .map(|k| local[&t.subrelation(k)])
+                .collect();
+            self.generated.push(Generated { set_ids, tuple: t });
+        }
+        self.cache = None;
+    }
+
+    /// Pull + apply the pending delta of every shard.
+    pub fn pull(&mut self, shards: &mut [Shard]) {
+        for shard in shards {
+            let delta = shard.take_delta();
+            self.apply(&delta);
+        }
+    }
+
+    /// The compacted cluster index under `constraints` — rebuilt lazily
+    /// via the same [`dedup_generated`] the online miner uses.
+    pub fn clusters(&mut self, constraints: &Constraints) -> &[Cluster] {
+        let key = (constraints.min_density, constraints.min_support);
+        let fresh = self.cache.is_some() && self.cached_for == Some(key);
+        if !fresh {
+            self.cache =
+                Some(dedup_generated(&self.arena, &self.generated, constraints));
+            self.cached_for = Some(key);
+        }
+        self.cache.as_deref().expect("cache just built")
+    }
+
+    /// Cluster count if the cache is warm (None after un-compacted
+    /// ingests).
+    pub fn cached_len(&self) -> Option<usize> {
+        self.cache.as_ref().map(Vec::len)
+    }
+
+    /// Distinct subrelation keys across all modalities (global cumuli).
+    pub fn distinct_keys(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Generating tuples merged so far.
+    pub fn generated_len(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// Last merged epoch per shard.
+    pub fn epochs(&self) -> &[u64] {
+        &self.epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::tuple::NTuple;
+    use crate::oac::mine_online;
+
+    fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+        cs.sort_by(|a, b| a.components.cmp(&b.components));
+        cs
+    }
+
+    /// Shard the table-1 context two ways and check the compacted index
+    /// equals the single-miner result.
+    #[test]
+    fn cross_shard_cumuli_union() {
+        let data = [
+            NTuple::triple(0, 0, 0),
+            NTuple::triple(0, 1, 0),
+            NTuple::triple(0, 0, 1),
+            NTuple::triple(0, 1, 1),
+        ];
+        // adversarial partition: alternate tuples across two shards, so
+        // every cumulus is split
+        let mut s0 = Shard::new(0, 3);
+        let mut s1 = Shard::new(1, 3);
+        s0.ingest(&[data[0], data[2]]);
+        s1.ingest(&[data[1], data[3]]);
+        let mut comp = Compactor::new(2);
+        comp.pull(&mut [s0, s1]);
+        let out = comp.clusters(&Constraints::none());
+        // all four triples generate the SAME global tricluster
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].components[1], vec![0, 1]);
+        assert_eq!(out[0].components[2], vec![0, 1]);
+        assert_eq!(out[0].support, 4);
+    }
+
+    #[test]
+    fn incremental_pulls_match_one_shot_mining() {
+        let mut ctx = crate::core::context::PolyContext::new(3);
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..400 {
+            let t = [
+                rng.below(9) as u32,
+                rng.below(9) as u32,
+                rng.below(9) as u32,
+            ];
+            ctx.add_ids(&t);
+        }
+        let reference = sorted(mine_online(&ctx, &Constraints::none()));
+
+        let mut shards = vec![Shard::new(0, 3), Shard::new(1, 3), Shard::new(2, 3)];
+        let mut comp = Compactor::new(3);
+        for chunk in ctx.tuples().chunks(37) {
+            for t in chunk {
+                let s = (crate::util::hash::fxhash(t) % 3) as usize;
+                shards[s].ingest(std::slice::from_ref(t));
+            }
+            // compact mid-stream every chunk: must stay correct at every
+            // epoch boundary, not just at the end
+            comp.pull(&mut shards);
+        }
+        let got = sorted(comp.clusters(&Constraints::none()).to_vec());
+        assert_eq!(got.len(), reference.len());
+        for (a, b) in got.iter().zip(&reference) {
+            assert_eq!(a.components, b.components);
+            assert_eq!(a.support, b.support);
+        }
+    }
+
+    #[test]
+    fn constraints_cache_invalidation() {
+        let mut s = Shard::new(0, 3);
+        s.ingest(&[NTuple::triple(0, 0, 0), NTuple::triple(1, 1, 1)]);
+        let mut comp = Compactor::new(1);
+        comp.pull(&mut [s]);
+        let all = comp.clusters(&Constraints::none()).len();
+        assert_eq!(all, 2);
+        // tighter constraints must rebuild, not serve the stale cache
+        let dense = comp
+            .clusters(&Constraints { min_density: 0.0, min_support: 2 })
+            .len();
+        assert_eq!(dense, 0);
+        assert_eq!(comp.cached_len(), Some(0));
+    }
+}

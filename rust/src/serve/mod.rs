@@ -1,0 +1,258 @@
+//! The serving layer: a sharded, incrementally-updatable, queryable
+//! triclustering index — ingest → shard → merge → query.
+//!
+//! The paper's central observation is that OAC tuples are processed
+//! independently: Alg. 1 is one-pass and embarrassingly partitionable.
+//! This module turns that from a batch property into a SERVICE
+//! architecture (the ROADMAP north star — serve heavy query traffic
+//! while the stream keeps arriving):
+//!
+//! * [`router`] — hash-routes incoming batches to shards with bounded
+//!   in-flight batching/backpressure on [`crate::util::pool`];
+//! * [`shard`] — each shard runs an incremental [`crate::oac::OnlineMiner`]
+//!   over its partition and exposes epoch-tagged deltas;
+//! * [`merge`] — the compactor unions per-shard partial cumuli by
+//!   subrelation key (the §4.1 first reduce, made incremental) into a
+//!   globally-correct index, deduplicated with the exact
+//!   [`crate::oac::online::dedup_generated`] the online miner uses;
+//! * [`query`] — top-k by density, membership lookup, aggregate stats;
+//! * [`snapshot`] — JSON snapshot/restore for restart recovery.
+//!
+//! Correctness invariant (unit- and property-tested): for any shard
+//! count, batch chunking, and compaction schedule, the compacted index
+//! equals single-miner [`crate::oac::mine_online`] output — same
+//! components, supports, and densities.
+
+pub mod merge;
+pub mod query;
+pub mod router;
+pub mod shard;
+pub mod snapshot;
+
+pub use merge::Compactor;
+pub use query::{IndexStats, QueryEngine};
+pub use router::{Router, RouterStats};
+pub use shard::{Shard, ShardDelta};
+
+use std::path::Path;
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::NTuple;
+use crate::oac::post::Constraints;
+use crate::util::pool;
+
+/// Configuration of a [`TriclusterService`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Relation arity (3 for triadic contexts, up to
+    /// [`crate::core::tuple::MAX_ARITY`]).
+    pub arity: usize,
+    pub shards: usize,
+    /// Router high-water mark, in queued tuples: crossing it triggers a
+    /// parallel drain wave (backpressure).
+    pub max_pending: usize,
+    /// Worker threads for drain waves (one task per shard per wave).
+    pub workers: usize,
+    /// Constraints applied when materialising the cluster index.
+    pub constraints: Constraints,
+}
+
+impl ServeConfig {
+    pub fn new(arity: usize, shards: usize) -> Self {
+        Self {
+            arity,
+            shards: shards.max(1),
+            max_pending: 64 * 1024,
+            workers: pool::default_workers(),
+            constraints: Constraints::none(),
+        }
+    }
+
+    pub fn with_constraints(mut self, constraints: Constraints) -> Self {
+        self.constraints = constraints;
+        self
+    }
+}
+
+/// Live service stats (router + compactor counters).
+#[derive(Debug, Clone)]
+pub struct ServiceStats {
+    pub shards: usize,
+    /// Tuples accepted by the router so far.
+    pub tuples: usize,
+    /// Tuples queued but not yet mined.
+    pub pending: usize,
+    /// Backpressure drain waves.
+    pub drains: usize,
+    /// Distinct subrelation keys in the global merged index.
+    pub distinct_keys: usize,
+    /// Generating tuples merged into the global index.
+    pub merged: usize,
+    /// Cluster count of the last compaction (None if never compacted or
+    /// dirty).
+    pub clusters: Option<usize>,
+    /// Last compacted epoch per shard.
+    pub epochs: Vec<u64>,
+    /// Tuples mined by each shard (load-balance view).
+    pub shard_sizes: Vec<usize>,
+}
+
+/// The sharded incremental triclustering service.
+///
+/// Typical loop: `ingest` batches as they arrive (the router drains under
+/// backpressure automatically), `compact` at serving points, then `query`
+/// the compacted index. `snapshot_to`/`restore_from` persist across
+/// restarts.
+#[derive(Debug)]
+pub struct TriclusterService {
+    cfg: ServeConfig,
+    pub(crate) router: Router,
+    compactor: Compactor,
+}
+
+impl TriclusterService {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let router = Router::new(cfg.arity, cfg.shards, cfg.max_pending, cfg.workers);
+        let compactor = Compactor::new(cfg.shards);
+        Self { cfg, router, compactor }
+    }
+
+    pub fn cfg(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Route one batch into the shard queues (drains under backpressure).
+    pub fn ingest(&mut self, batch: &[NTuple]) {
+        self.router.submit(batch);
+    }
+
+    /// Force-drain every shard queue (e.g. end of stream).
+    pub fn flush(&mut self) {
+        self.router.drain();
+    }
+
+    /// Flush, then merge every shard's pending delta into the global
+    /// index. After `compact`, `clusters`/`query` reflect every ingested
+    /// tuple.
+    pub fn compact(&mut self) {
+        self.router.drain();
+        self.compactor.pull(self.router.shards_mut());
+    }
+
+    /// The compacted cluster index under the configured constraints.
+    /// (Tuples ingested after the last `compact` are not reflected.)
+    pub fn clusters(&mut self) -> &[Cluster] {
+        self.compactor.clusters(&self.cfg.constraints)
+    }
+
+    /// A query engine over the compacted index.
+    pub fn query(&mut self) -> QueryEngine<'_> {
+        let constraints = self.cfg.constraints.clone();
+        QueryEngine::new(self.compactor.clusters(&constraints))
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let r = self.router.stats();
+        ServiceStats {
+            shards: self.router.num_shards(),
+            tuples: r.tuples,
+            pending: self.router.pending(),
+            drains: r.drains,
+            distinct_keys: self.compactor.distinct_keys(),
+            merged: self.compactor.generated_len(),
+            clusters: self.compactor.cached_len(),
+            epochs: self.compactor.epochs().to_vec(),
+            shard_sizes: self.router.shards().iter().map(Shard::len).collect(),
+        }
+    }
+
+    /// Write a restart-recovery snapshot (flushes queued tuples first).
+    pub fn snapshot_to(&mut self, path: &Path) -> anyhow::Result<()> {
+        snapshot::save(self, path)
+    }
+
+    /// Rebuild a service from a snapshot written by [`Self::snapshot_to`].
+    pub fn restore_from(path: &Path) -> anyhow::Result<Self> {
+        snapshot::load(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oac::mine_online;
+
+    fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+        cs.sort_by(|a, b| a.components.cmp(&b.components));
+        cs
+    }
+
+    #[test]
+    fn sharded_equals_sequential_on_k1() {
+        let ctx = crate::datasets::synthetic::k1(8).inner;
+        let reference = sorted(mine_online(&ctx, &Constraints::none()));
+        for shards in [1, 2, 4, 7] {
+            let mut svc = TriclusterService::new(ServeConfig::new(3, shards));
+            for chunk in ctx.tuples().chunks(97) {
+                svc.ingest(chunk);
+            }
+            svc.compact();
+            let got = sorted(svc.clusters().to_vec());
+            assert_eq!(got.len(), reference.len(), "shards={shards}");
+            for (a, b) in got.iter().zip(&reference) {
+                assert_eq!(a.components, b.components);
+                assert_eq!(a.support, b.support);
+            }
+        }
+    }
+
+    #[test]
+    fn constraints_applied_at_materialisation() {
+        let ctx = crate::datasets::synthetic::k2(4).inner;
+        let cons = Constraints { min_density: 0.5, min_support: 2 };
+        let reference = sorted(mine_online(&ctx, &cons));
+        let mut svc = TriclusterService::new(
+            ServeConfig::new(3, 3).with_constraints(cons),
+        );
+        svc.ingest(ctx.tuples());
+        svc.compact();
+        let got = sorted(svc.clusters().to_vec());
+        assert_eq!(got.len(), reference.len());
+    }
+
+    #[test]
+    fn query_after_compact_sees_all_tuples() {
+        let ctx = crate::datasets::synthetic::k2(3).inner; // 3 dense blocks
+        let mut svc = TriclusterService::new(ServeConfig::new(3, 4));
+        svc.ingest(ctx.tuples());
+        svc.compact();
+        let q = svc.query();
+        assert_eq!(q.len(), 3);
+        let top = q.top_k_by_density(1);
+        assert!((top[0].support_density() - 1.0).abs() < 1e-12);
+        // block 0 contains entity 0 in every modality
+        assert_eq!(q.containing(0, 0).len(), 1);
+        // entity of block 1 (offset 3) is in the second block's cluster only
+        assert_eq!(q.containing(1, 3).len(), 1);
+        let stats = svc.stats();
+        assert_eq!(stats.tuples, ctx.len());
+        assert_eq!(stats.pending, 0);
+        assert_eq!(stats.clusters, Some(3));
+    }
+
+    #[test]
+    fn stats_track_pending_and_compaction() {
+        let mut svc = TriclusterService::new(ServeConfig::new(3, 2));
+        svc.ingest(&[NTuple::triple(0, 0, 0), NTuple::triple(1, 1, 1)]);
+        let s = svc.stats();
+        assert_eq!(s.tuples, 2);
+        assert_eq!(s.pending, 2, "below watermark: still queued");
+        assert_eq!(s.clusters, None, "never compacted");
+        svc.compact();
+        let s = svc.stats();
+        assert_eq!(s.pending, 0);
+        assert_eq!(s.merged, 2);
+        svc.clusters();
+        assert_eq!(svc.stats().clusters, Some(2));
+    }
+}

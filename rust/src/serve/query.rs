@@ -1,0 +1,184 @@
+//! Query API over a compacted cluster index: top-k by density,
+//! membership lookup, and aggregate stats.
+//!
+//! A [`QueryEngine`] borrows one compacted snapshot (`&[Cluster]`) and
+//! builds a `(modality, entity) → clusters` inverted index once, so the
+//! membership query the north-star cares about ("clusters containing
+//! entity e in modality m" — the recommendation lookup) is a single hash
+//! probe instead of a scan over every cluster's components.
+
+use crate::core::pattern::Cluster;
+use crate::util::hash::FxHashMap;
+
+/// Aggregate statistics of a compacted index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexStats {
+    pub clusters: usize,
+    /// Σ support (= tuples ingested, when no constraints filter).
+    pub total_support: usize,
+    pub mean_density: f64,
+    pub max_density: f64,
+    /// Largest single-modality component cardinality.
+    pub max_component: usize,
+}
+
+/// Read-only query surface over one compacted snapshot.
+#[derive(Debug)]
+pub struct QueryEngine<'a> {
+    clusters: &'a [Cluster],
+    /// (modality, entity id) → indices into `clusters`.
+    member: FxHashMap<(u8, u32), Vec<u32>>,
+}
+
+impl<'a> QueryEngine<'a> {
+    pub fn new(clusters: &'a [Cluster]) -> Self {
+        let mut member: FxHashMap<(u8, u32), Vec<u32>> = FxHashMap::default();
+        for (i, c) in clusters.iter().enumerate() {
+            for (m, comp) in c.components.iter().enumerate() {
+                for &e in comp {
+                    member.entry((m as u8, e)).or_default().push(i as u32);
+                }
+            }
+        }
+        Self { clusters, member }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clusters.is_empty()
+    }
+
+    /// The k densest clusters (support-density, ties broken by support
+    /// then components, so the ranking is total and deterministic).
+    /// Selects the top k in O(n) before sorting only those k.
+    pub fn top_k_by_density(&self, k: usize) -> Vec<&'a Cluster> {
+        let cs = self.clusters;
+        let mut idx: Vec<usize> = (0..cs.len()).collect();
+        let k = k.min(idx.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut rank = |&a: &usize, &b: &usize| {
+            cs[b].support_density()
+                .total_cmp(&cs[a].support_density())
+                .then(cs[b].support.cmp(&cs[a].support))
+                .then(cs[a].components.cmp(&cs[b].components))
+        };
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, &mut rank);
+            idx.truncate(k);
+        }
+        idx.sort_unstable_by(&mut rank);
+        idx.into_iter().map(|i| &cs[i]).collect()
+    }
+
+    /// Every cluster whose modality-`m` component contains `entity`, in
+    /// index order.
+    pub fn containing(&self, modality: usize, entity: u32) -> Vec<&'a Cluster> {
+        let cs = self.clusters;
+        match self.member.get(&(modality as u8, entity)) {
+            Some(ids) => ids.iter().map(|&i| &cs[i as usize]).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Support and density of the clusters containing `(modality,
+    /// entity)` — the per-entity serving stats.
+    pub fn entity_stats(&self, modality: usize, entity: u32) -> Option<IndexStats> {
+        let hits = self.containing(modality, entity);
+        if hits.is_empty() {
+            None
+        } else {
+            Some(stats_of(&hits))
+        }
+    }
+
+    pub fn stats(&self) -> IndexStats {
+        let all: Vec<&Cluster> = self.clusters.iter().collect();
+        stats_of(&all)
+    }
+}
+
+fn stats_of(clusters: &[&Cluster]) -> IndexStats {
+    let n = clusters.len();
+    let total_support: usize = clusters.iter().map(|c| c.support).sum();
+    let mut mean_density = 0.0;
+    let mut max_density = 0.0f64;
+    let mut max_component = 0usize;
+    for c in clusters {
+        let d = c.support_density();
+        mean_density += d;
+        max_density = max_density.max(d);
+        max_component =
+            max_component.max(c.components.iter().map(Vec::len).max().unwrap_or(0));
+    }
+    if n > 0 {
+        mean_density /= n as f64;
+    }
+    IndexStats { clusters: n, total_support, mean_density, max_density, max_component }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+
+    fn fixture() -> Vec<Cluster> {
+        // densities: a = 1.0 (support 4 / volume 4), b = 0.5 (2/4),
+        // c = 1.0 (1/1)
+        let mut a = tricluster(vec![0], vec![0, 1], vec![0, 1]);
+        a.support = 4;
+        let mut b = tricluster(vec![1, 2], vec![0], vec![0, 1]);
+        b.support = 2;
+        let mut c = tricluster(vec![5], vec![5], vec![5]);
+        c.support = 1;
+        vec![a, b, c]
+    }
+
+    #[test]
+    fn top_k_orders_by_density_then_support() {
+        let cs = fixture();
+        let q = QueryEngine::new(&cs);
+        let top = q.top_k_by_density(2);
+        assert_eq!(top.len(), 2);
+        // both density-1.0 clusters lead; support 4 beats support 1
+        assert_eq!(top[0].components[0], vec![0]);
+        assert_eq!(top[1].components[0], vec![5]);
+        // k larger than the index is clamped
+        assert_eq!(q.top_k_by_density(10).len(), 3);
+    }
+
+    #[test]
+    fn membership_lookup() {
+        let cs = fixture();
+        let q = QueryEngine::new(&cs);
+        // entity 0 in modality 1 appears in clusters a and b
+        let hits = q.containing(1, 0);
+        assert_eq!(hits.len(), 2);
+        // entity 2 in modality 0 appears only in b
+        let hits = q.containing(0, 2);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].support, 2);
+        // absent entity
+        assert!(q.containing(2, 99).is_empty());
+        assert!(q.entity_stats(2, 99).is_none());
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let cs = fixture();
+        let q = QueryEngine::new(&cs);
+        let s = q.stats();
+        assert_eq!(s.clusters, 3);
+        assert_eq!(s.total_support, 7);
+        assert_eq!(s.max_density, 1.0);
+        assert!((s.mean_density - (1.0 + 0.5 + 1.0) / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_component, 2);
+        let es = q.entity_stats(0, 5).unwrap();
+        assert_eq!(es.clusters, 1);
+        assert_eq!(es.total_support, 1);
+    }
+}

@@ -1,0 +1,234 @@
+//! Hash routing + bounded in-flight batching for the serving layer.
+//!
+//! `submit` stages incoming [`NTuple`] batches; when the staged volume
+//! crosses the `max_pending` high-water mark the router runs one DRAIN
+//! WAVE on [`crate::util::pool`]: a parallel route-split (chunks of the
+//! staged stream are hashed to per-shard bins concurrently — routing
+//! never sits on the serial path), a cheap per-shard concat, then one
+//! mining task per shard. At most one wave is in flight at a time, and a
+//! submitter is blocked inside `submit` while its wave runs — that is the
+//! backpressure contract: queues cannot grow without bound.
+//!
+//! Routing hashes the whole tuple, so replays of the same tuple always
+//! land on the same shard, preserving the retry-idempotence the M/R
+//! pipeline relies on, and per-shard arrival order equals stream order
+//! (chunk splits are re-concatenated in index order).
+
+use crate::core::tuple::NTuple;
+use crate::util::hash::fxhash;
+use crate::util::pool;
+
+use super::shard::Shard;
+
+/// Tuples hashed per route-split task in a drain wave.
+const SPLIT_CHUNK: usize = 4096;
+
+/// Ingest counters, exposed through `TriclusterService::stats`.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// `submit` calls.
+    pub batches: usize,
+    /// Tuples routed.
+    pub tuples: usize,
+    /// Drain waves (backpressure or explicit flush).
+    pub drains: usize,
+    /// High-water mark of a single shard's per-wave queue, in tuples.
+    pub max_queue: usize,
+}
+
+/// The shard owner: stages, routes, and drains.
+#[derive(Debug)]
+pub struct Router {
+    shards: Vec<Shard>,
+    /// Staged (not yet routed) tuples, in arrival order.
+    staged: Vec<NTuple>,
+    max_pending: usize,
+    workers: usize,
+    stats: RouterStats,
+}
+
+impl Router {
+    pub fn new(arity: usize, n_shards: usize, max_pending: usize, workers: usize) -> Self {
+        let n = n_shards.max(1);
+        Self {
+            shards: (0..n).map(|i| Shard::new(i, arity)).collect(),
+            staged: Vec::new(),
+            max_pending: max_pending.max(1),
+            workers: workers.max(1),
+            stats: RouterStats::default(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn shards_mut(&mut self) -> &mut [Shard] {
+        &mut self.shards
+    }
+
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    /// Tuples staged but not yet mined.
+    pub fn pending(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Deterministic shard assignment for a tuple (the same function the
+    /// drain wave's parallel split applies).
+    #[inline]
+    pub fn route(&self, t: &NTuple) -> usize {
+        (fxhash(t) % self.shards.len() as u64) as usize
+    }
+
+    /// Stage a batch; drains automatically when the high-water mark is
+    /// reached (bounded in-flight ingestion).
+    pub fn submit(&mut self, batch: &[NTuple]) {
+        self.stats.batches += 1;
+        self.stats.tuples += batch.len();
+        self.staged.extend_from_slice(batch);
+        if self.staged.len() >= self.max_pending {
+            self.drain();
+        }
+    }
+
+    /// Synchronously mine every staged tuple: parallel route-split, then
+    /// one mining task per shard (each task owns its shard for the wave).
+    pub fn drain(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        self.stats.drains += 1;
+        let staged = std::mem::take(&mut self.staged);
+        let n = self.shards.len();
+        let workers = self.workers;
+        // route-split off the serial path: each task hashes one chunk of
+        // the staged stream into per-shard bins
+        let n_chunks = staged.len().div_ceil(SPLIT_CHUNK);
+        let split: Vec<Vec<Vec<NTuple>>> =
+            pool::parallel_map(n_chunks, workers, 1, |ci| {
+                let lo = ci * SPLIT_CHUNK;
+                let hi = (lo + SPLIT_CHUNK).min(staged.len());
+                let mut bins: Vec<Vec<NTuple>> = vec![Vec::new(); n];
+                for t in &staged[lo..hi] {
+                    bins[(fxhash(t) % n as u64) as usize].push(*t);
+                }
+                bins
+            });
+        // concat bins in chunk order: per-shard order == stream order
+        let mut queues: Vec<Vec<NTuple>> =
+            (0..n).map(|_| Vec::with_capacity(staged.len() / n + 1)).collect();
+        for bins in split {
+            for (s, bin) in bins.into_iter().enumerate() {
+                queues[s].extend_from_slice(&bin);
+            }
+        }
+        for q in &queues {
+            self.stats.max_queue = self.stats.max_queue.max(q.len());
+        }
+        // one mining task per shard
+        let jobs: Vec<std::sync::Mutex<Option<(&mut Shard, Vec<NTuple>)>>> = self
+            .shards
+            .iter_mut()
+            .zip(queues)
+            .map(|job| std::sync::Mutex::new(Some(job)))
+            .collect();
+        pool::parallel_map(jobs.len(), workers, 1, |i| {
+            let (shard, queue) = jobs[i].lock().unwrap().take().expect("taken once");
+            shard.ingest(&queue);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(n: u32) -> Vec<NTuple> {
+        (0..n).map(|i| NTuple::triple(i % 7, i % 5, i % 3)).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let r = Router::new(3, 4, 1024, 2);
+        for t in batch(100) {
+            let s = r.route(&t);
+            assert!(s < 4);
+            assert_eq!(s, r.route(&t));
+        }
+    }
+
+    #[test]
+    fn submit_below_watermark_stages() {
+        let mut r = Router::new(3, 2, 1_000, 2);
+        r.submit(&batch(50));
+        assert_eq!(r.pending(), 50);
+        assert_eq!(r.stats().drains, 0);
+        assert!(r.shards().iter().all(Shard::is_empty));
+        r.drain();
+        assert_eq!(r.pending(), 0);
+        assert_eq!(r.stats().drains, 1);
+        let mined: usize = r.shards().iter().map(Shard::len).sum();
+        assert_eq!(mined, 50);
+    }
+
+    #[test]
+    fn watermark_triggers_backpressure_drain() {
+        let mut r = Router::new(3, 2, 64, 2);
+        r.submit(&batch(100)); // crosses the high-water mark
+        assert_eq!(r.pending(), 0, "drained inside submit");
+        assert_eq!(r.stats().drains, 1);
+        assert!(r.stats().max_queue <= 100);
+    }
+
+    #[test]
+    fn every_tuple_lands_on_its_routed_shard_in_order() {
+        let mut r = Router::new(3, 3, 1, 2); // drain every submit
+        let data = batch(60); // lcm(7,5,3) = 105 > 60: all distinct
+        let expected: Vec<usize> = data.iter().map(|t| r.route(t)).collect();
+        r.submit(&data);
+        let mut per_shard = vec![0usize; 3];
+        for s in &expected {
+            per_shard[*s] += 1;
+        }
+        for (shard, &want) in r.shards().iter().zip(&per_shard) {
+            assert_eq!(shard.len(), want);
+        }
+        // per-shard arrival order must equal stream order
+        for (i, shard) in r.shards().iter().enumerate() {
+            let got = shard.ingested_tuples();
+            let want: Vec<NTuple> = data
+                .iter()
+                .zip(&expected)
+                .filter(|(_, &s)| s == i)
+                .map(|(t, _)| *t)
+                .collect();
+            assert_eq!(got, want, "shard {i} order");
+        }
+    }
+
+    #[test]
+    fn multi_chunk_split_preserves_order() {
+        // > SPLIT_CHUNK tuples so the parallel split really runs multi-task
+        let data: Vec<NTuple> = (0..(2 * super::SPLIT_CHUNK as u32 + 123))
+            .map(|i| NTuple::triple(i, i / 3, i / 7))
+            .collect();
+        let mut r = Router::new(3, 4, usize::MAX, 4);
+        r.submit(&data);
+        r.drain();
+        let mined: usize = r.shards().iter().map(Shard::len).sum();
+        assert_eq!(mined, data.len());
+        for (i, shard) in r.shards().iter().enumerate() {
+            let got = shard.ingested_tuples();
+            let want: Vec<NTuple> =
+                data.iter().filter(|t| r.route(t) == i).copied().collect();
+            assert_eq!(got, want, "shard {i} stream order across chunks");
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! One shard of the serving layer: an incremental [`OnlineMiner`] over a
+//! hash-partition of the stream, exposing epoch-tagged deltas.
+//!
+//! The paper's Alg. 1 processes OAC tuples independently, so a shard can
+//! mine its partition with no coordination; cross-shard correctness is
+//! restored by the compactor ([`crate::serve::merge`]), which unions
+//! per-shard partial cumuli by subrelation key. A shard therefore plays
+//! the role of one stage-1 map task of the §4.1 MapReduce — but long
+//! lived and incremental: every ingested batch bumps its epoch, and
+//! `take_delta` exports exactly the state added since the previous pull,
+//! already combined map-side (one `(key, values)` group per touched
+//! subrelation, mirroring Hadoop's combiner / Spark's `reduceByKey`).
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::{NTuple, SubRelation};
+use crate::oac::post::Constraints;
+use crate::oac::OnlineMiner;
+use crate::util::hash::FxHashMap;
+
+/// Everything a shard learned between two `take_delta` calls.
+#[derive(Debug, Clone)]
+pub struct ShardDelta {
+    /// Which shard produced this delta.
+    pub shard: usize,
+    /// The shard epoch this delta brings the consumer up to.
+    pub epoch: u64,
+    /// New generating tuples, in ingest order.
+    pub tuples: Vec<NTuple>,
+    /// Map-side-combined cumulus appends: for every subrelation key
+    /// touched since the last pull, the entity values appended to its
+    /// cumulus (with multiplicity — the global arena dedups on
+    /// materialisation, exactly like [`crate::oac::primes::SetArena`]).
+    /// Sorted by key so delta application is deterministic.
+    pub appends: Vec<(SubRelation, Vec<u32>)>,
+}
+
+impl ShardDelta {
+    pub fn is_empty(&self) -> bool {
+        self.tuples.is_empty()
+    }
+}
+
+/// A shard: id + incremental miner + export watermark.
+#[derive(Debug)]
+pub struct Shard {
+    id: usize,
+    miner: OnlineMiner,
+    epoch: u64,
+    /// How many of `miner.generated()` have been exported in deltas.
+    exported: usize,
+}
+
+impl Shard {
+    pub fn new(id: usize, arity: usize) -> Self {
+        Self { id, miner: OnlineMiner::new(arity), epoch: 0, exported: 0 }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Monotone ingest epoch (number of non-empty batches absorbed).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Tuples ingested so far (generated clusters, one per tuple).
+    pub fn len(&self) -> usize {
+        self.miner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.miner.is_empty()
+    }
+
+    pub fn miner(&self) -> &OnlineMiner {
+        &self.miner
+    }
+
+    /// Alg. 1 `Add` on this partition; empty batches do not advance the
+    /// epoch.
+    pub fn ingest(&mut self, batch: &[NTuple]) {
+        if batch.is_empty() {
+            return;
+        }
+        self.miner.add_batch(batch);
+        self.epoch += 1;
+    }
+
+    /// Export the epoch-tagged delta since the last pull and advance the
+    /// watermark. Appends are grouped per subrelation key (map-side
+    /// combine) so the compactor probes its global key dictionary once
+    /// per distinct key instead of N times per tuple.
+    pub fn take_delta(&mut self) -> ShardDelta {
+        let gens = &self.miner.generated()[self.exported..];
+        let mut tuples = Vec::with_capacity(gens.len());
+        let mut combined: FxHashMap<SubRelation, Vec<u32>> = FxHashMap::default();
+        for g in gens {
+            let t = g.tuple;
+            tuples.push(t);
+            for k in 0..t.arity() {
+                combined.entry(t.subrelation(k)).or_default().push(t.get(k));
+            }
+        }
+        self.exported = self.miner.generated().len();
+        let mut appends: Vec<(SubRelation, Vec<u32>)> = combined.into_iter().collect();
+        appends.sort_unstable();
+        ShardDelta { shard: self.id, epoch: self.epoch, tuples, appends }
+    }
+
+    /// Shard-local view: clusters over THIS partition only (partial —
+    /// cumuli here miss contributions routed to sibling shards; the
+    /// compactor's output is the globally-correct index).
+    pub fn local_clusters(&self, constraints: &Constraints) -> Vec<Cluster> {
+        self.miner.dedup_and_filter(constraints)
+    }
+
+    /// The shard's full ingest history, in order (for snapshots: replaying
+    /// it through a fresh shard reproduces the exact miner state — the
+    /// one-pass property of Alg. 1).
+    pub fn ingested_tuples(&self) -> Vec<NTuple> {
+        self.miner.generated().iter().map(|g| g.tuple).collect()
+    }
+
+    /// Restore bookkeeping after a snapshot replay (the replay arrives as
+    /// one batch, but the snapshot remembers the original epoch).
+    pub(crate) fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triples(ts: &[(u32, u32, u32)]) -> Vec<NTuple> {
+        ts.iter().map(|&(g, m, b)| NTuple::triple(g, m, b)).collect()
+    }
+
+    #[test]
+    fn epochs_advance_per_nonempty_batch() {
+        let mut s = Shard::new(0, 3);
+        assert_eq!(s.epoch(), 0);
+        s.ingest(&triples(&[(0, 0, 0), (1, 0, 0)]));
+        s.ingest(&[]);
+        s.ingest(&triples(&[(0, 1, 1)]));
+        assert_eq!(s.epoch(), 2);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn delta_is_incremental_and_combined() {
+        let mut s = Shard::new(0, 3);
+        s.ingest(&triples(&[(0, 0, 0), (1, 0, 0)]));
+        let d1 = s.take_delta();
+        assert_eq!(d1.epoch, 1);
+        assert_eq!(d1.tuples, triples(&[(0, 0, 0), (1, 0, 0)]));
+        // both tuples share the dropped-0 subrelation (0,0): one combined
+        // group with both extents
+        let sub = NTuple::triple(0, 0, 0).subrelation(0);
+        let group = d1.appends.iter().find(|(k, _)| *k == sub).expect("shared key");
+        assert_eq!(group.1, vec![0, 1]);
+        // second pull only sees what came after the first
+        s.ingest(&triples(&[(2, 2, 2)]));
+        let d2 = s.take_delta();
+        assert_eq!(d2.tuples, triples(&[(2, 2, 2)]));
+        assert_eq!(d2.epoch, 2);
+        // nothing new → empty delta
+        assert!(s.take_delta().is_empty());
+    }
+
+    #[test]
+    fn replay_reproduces_state() {
+        let data = triples(&[(0, 0, 0), (1, 0, 0), (0, 1, 1), (1, 1, 0)]);
+        let mut a = Shard::new(0, 3);
+        for chunk in data.chunks(2) {
+            a.ingest(chunk);
+        }
+        let mut b = Shard::new(0, 3);
+        b.ingest(&a.ingested_tuples());
+        let ca = a.local_clusters(&Constraints::none());
+        let cb = b.local_clusters(&Constraints::none());
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!(x.components, y.components);
+            assert_eq!(x.support, y.support);
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! JSON snapshot / restore of the serving layer, for restart recovery.
+//!
+//! The snapshot stores each shard's ingest history (generating tuples in
+//! order) plus its epoch and the service configuration — NOT the derived
+//! cumuli or the cluster index. Replaying the history through a fresh
+//! service reproduces the exact state by the one-pass property of Alg. 1
+//! (any chunking of the same tuple sequence yields the same miner state),
+//! which keeps the format small, human-inspectable via [`crate::util::json`],
+//! and forward-compatible with index-layout changes.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::core::tuple::NTuple;
+use crate::oac::post::Constraints;
+use crate::util::json::Json;
+
+use super::{ServeConfig, TriclusterService};
+
+const VERSION: f64 = 1.0;
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn tuple_json(t: &NTuple) -> Json {
+    Json::Arr(t.as_slice().iter().map(|&e| num(e as f64)).collect())
+}
+
+/// Serialise a (flushed) service to a JSON document.
+pub fn to_json(svc: &TriclusterService) -> Json {
+    let cfg = svc.cfg();
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("version".into(), num(VERSION));
+    obj.insert("arity".into(), num(cfg.arity as f64));
+    obj.insert("shards".into(), num(cfg.shards as f64));
+    obj.insert("max_pending".into(), num(cfg.max_pending as f64));
+    obj.insert("workers".into(), num(cfg.workers as f64));
+    let mut cons = std::collections::BTreeMap::new();
+    cons.insert("min_density".into(), num(cfg.constraints.min_density));
+    cons.insert("min_support".into(), num(cfg.constraints.min_support as f64));
+    obj.insert("constraints".into(), Json::Obj(cons));
+    let shard_state: Vec<Json> = svc
+        .router
+        .shards()
+        .iter()
+        .map(|shard| {
+            let mut s = std::collections::BTreeMap::new();
+            s.insert("epoch".into(), num(shard.epoch() as f64));
+            s.insert(
+                "tuples".into(),
+                Json::Arr(shard.ingested_tuples().iter().map(tuple_json).collect()),
+            );
+            Json::Obj(s)
+        })
+        .collect();
+    obj.insert("shard_state".into(), Json::Arr(shard_state));
+    Json::Obj(obj)
+}
+
+/// Rebuild a service from a snapshot document: replay each shard's
+/// history directly into its shard (bypassing the router hash — the
+/// snapshot already fixed the placement), restore epochs, and compact.
+pub fn from_json(doc: &Json) -> Result<TriclusterService> {
+    let version = doc.get("version").and_then(Json::as_f64).context("version")?;
+    anyhow::ensure!(version == VERSION, "unsupported snapshot version {version}");
+    let arity = doc.get("arity").and_then(Json::as_usize).context("arity")?;
+    anyhow::ensure!(
+        (2..=crate::core::tuple::MAX_ARITY).contains(&arity),
+        "snapshot arity {arity} out of range"
+    );
+    let shards = doc.get("shards").and_then(Json::as_usize).context("shards")?;
+    let max_pending =
+        doc.get("max_pending").and_then(Json::as_usize).context("max_pending")?;
+    let workers = doc.get("workers").and_then(Json::as_usize).context("workers")?;
+    let cons = doc.get("constraints").context("constraints")?;
+    let constraints = Constraints {
+        min_density: cons.get("min_density").and_then(Json::as_f64).context("min_density")?,
+        min_support: cons.get("min_support").and_then(Json::as_usize).context("min_support")?,
+    };
+    let cfg = ServeConfig { arity, shards, max_pending, workers, constraints };
+    let mut svc = TriclusterService::new(cfg);
+
+    let shard_state =
+        doc.get("shard_state").and_then(Json::as_arr).context("shard_state")?;
+    anyhow::ensure!(
+        shard_state.len() == shards,
+        "snapshot has {} shard entries for {} shards",
+        shard_state.len(),
+        shards
+    );
+    for (i, state) in shard_state.iter().enumerate() {
+        let epoch = state.get("epoch").and_then(Json::as_f64).context("epoch")? as u64;
+        let tuples_json =
+            state.get("tuples").and_then(Json::as_arr).context("tuples")?;
+        let mut tuples = Vec::with_capacity(tuples_json.len());
+        for t in tuples_json {
+            let elems = t.as_arr().context("tuple must be an array")?;
+            anyhow::ensure!(
+                elems.len() == arity,
+                "tuple arity {} does not match snapshot arity {arity}",
+                elems.len()
+            );
+            let ids: Vec<u32> = elems
+                .iter()
+                .map(|e| {
+                    e.as_f64()
+                        .filter(|f| f.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(f))
+                        .map(|f| f as u32)
+                        .context("tuple element must be a u32")
+                })
+                .collect::<Result<_>>()?;
+            tuples.push(NTuple::new(&ids));
+        }
+        let shard = &mut svc.router.shards_mut()[i];
+        shard.ingest(&tuples);
+        shard.set_epoch(epoch);
+    }
+    svc.compact();
+    Ok(svc)
+}
+
+/// Flush + write a service snapshot to `path`.
+pub fn save(svc: &mut TriclusterService, path: &Path) -> Result<()> {
+    svc.flush(); // queued tuples must be inside shards to be captured
+    let doc = to_json(svc);
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("write snapshot {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a snapshot written by [`save`] and rebuild the service.
+pub fn load(path: &Path) -> Result<TriclusterService> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read snapshot {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parse snapshot {}: {e}", path.display()))?;
+    from_json(&doc).with_context(|| format!("restore {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{movielens, MovielensParams};
+
+    fn sorted_components(svc: &mut TriclusterService) -> Vec<(Vec<Vec<u32>>, usize)> {
+        let mut out: Vec<(Vec<Vec<u32>>, usize)> = svc
+            .clusters()
+            .iter()
+            .map(|c| (c.components.clone(), c.support))
+            .collect();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn roundtrip_preserves_index_and_epochs() {
+        let ctx = movielens(&MovielensParams::with_tuples(1_500));
+        let mut svc = TriclusterService::new(super::super::ServeConfig::new(4, 3));
+        for chunk in ctx.tuples().chunks(256) {
+            svc.ingest(chunk);
+        }
+        svc.compact();
+        let before = sorted_components(&mut svc);
+        let epochs_before: Vec<u64> =
+            svc.router.shards().iter().map(|s| s.epoch()).collect();
+
+        let doc = to_json(&svc);
+        let mut restored = from_json(&doc).unwrap();
+        let after = sorted_components(&mut restored);
+        assert_eq!(before, after);
+        let epochs_after: Vec<u64> =
+            restored.router.shards().iter().map(|s| s.epoch()).collect();
+        assert_eq!(epochs_before, epochs_after);
+    }
+
+    #[test]
+    fn save_flushes_pending_and_load_restores(){
+        let dir = std::env::temp_dir().join("tricluster_serve_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let ctx = movielens(&MovielensParams::with_tuples(600));
+        let mut svc = TriclusterService::new(super::super::ServeConfig::new(4, 2));
+        svc.ingest(ctx.tuples()); // stays queued below the watermark
+        save(&mut svc, &path).unwrap();
+        svc.compact();
+        let before = sorted_components(&mut svc);
+        let mut restored = load(&path).unwrap();
+        assert_eq!(before, sorted_components(&mut restored));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_version = r#"{"version": 99, "arity": 3}"#;
+        assert!(from_json(&Json::parse(wrong_version).unwrap()).is_err());
+        // a tuple narrower than the declared arity must be rejected, not
+        // silently mined into wrong cumulus keys
+        let mismatched = r#"{"version": 1, "arity": 3, "shards": 1,
+            "max_pending": 10, "workers": 1,
+            "constraints": {"min_density": 0, "min_support": 0},
+            "shard_state": [{"epoch": 1, "tuples": [[1, 2]]}]}"#;
+        assert!(from_json(&Json::parse(mismatched).unwrap()).is_err());
+        // non-integer entity ids too
+        let fractional = r#"{"version": 1, "arity": 3, "shards": 1,
+            "max_pending": 10, "workers": 1,
+            "constraints": {"min_density": 0, "min_support": 0},
+            "shard_state": [{"epoch": 1, "tuples": [[1, 2, 3.5]]}]}"#;
+        assert!(from_json(&Json::parse(fractional).unwrap()).is_err());
+    }
+}

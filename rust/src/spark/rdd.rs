@@ -131,11 +131,94 @@ impl<'a, T: Send> Rdd<'a, T> {
     }
 }
 
+/// Fold a pair list into one `(k, v)` per distinct key under `f` — the
+/// hash-merge both `reduce_by_key` stages (map-side combine and final
+/// reduce) share.
+fn merge_pairs<K, V, F>(pairs: Vec<(K, V)>, f: &F) -> Vec<(K, V)>
+where
+    K: std::hash::Hash + Eq,
+    F: Fn(V, V) -> V,
+{
+    let mut acc: FxHashMap<K, V> = FxHashMap::default();
+    for (k, v) in pairs {
+        match acc.remove(&k) {
+            Some(prev) => {
+                acc.insert(k, f(prev, v));
+            }
+            None => {
+                acc.insert(k, v);
+            }
+        }
+    }
+    acc.into_iter().collect()
+}
+
 impl<'a, K, V> Rdd<'a, (K, V)>
 where
     K: Send + std::hash::Hash + Eq + Clone,
     V: Send,
 {
+    /// Wide transformation with MAP-SIDE COMBINING (Spark's
+    /// `reduceByKey`): values are pre-merged per key inside each source
+    /// partition before the shuffle, so at most one `(k, v)` per distinct
+    /// key per source partition crosses the shuffle instead of every
+    /// pair. `f` must be associative and commutative.
+    ///
+    /// Two stages are logged: `<label>.combine` (one task per source
+    /// partition) and `<label>.reduce` (shuffle + one task per target
+    /// partition), so ablations can attribute the shuffle savings.
+    pub fn reduce_by_key<F>(self, label: &str, f: F) -> Rdd<'a, (K, V)>
+    where
+        F: Fn(V, V) -> V + Sync,
+    {
+        let ctx = self.ctx;
+        let n = ctx.partitions;
+        // map-side combine: one task per SOURCE partition
+        let slots: Vec<std::sync::Mutex<Option<Vec<(K, V)>>>> = self
+            .parts
+            .into_iter()
+            .map(|p| std::sync::Mutex::new(Some(p)))
+            .collect();
+        let combined: Vec<(Vec<(K, V)>, f64)> =
+            pool::parallel_map(slots.len(), ctx.executor_threads, 1, |p| {
+                let timer = Timer::start();
+                let part = slots[p].lock().unwrap().take().expect("taken once");
+                (merge_pairs(part, &f), timer.elapsed_ms())
+            });
+        let mut combine_times = Vec::with_capacity(combined.len());
+        // shuffle write: route each combined pair to its target partition
+        let timer = Timer::start();
+        let mut buckets: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+        for (pairs, ms) in combined {
+            combine_times.push(ms);
+            for (k, v) in pairs {
+                let t = (fxhash(&k) % n as u64) as usize;
+                buckets[t].push((k, v));
+            }
+        }
+        let shuffle_ms = timer.elapsed_ms();
+        ctx.log(&format!("{label}.combine"), combine_times);
+        // shuffle read + final reduce: one task per TARGET partition
+        let slots: Vec<std::sync::Mutex<Option<Vec<(K, V)>>>> = buckets
+            .into_iter()
+            .map(|b| std::sync::Mutex::new(Some(b)))
+            .collect();
+        let reduced: Vec<(Vec<(K, V)>, f64)> =
+            pool::parallel_map(n, ctx.executor_threads, 1, |p| {
+                let timer = Timer::start();
+                let bucket = slots[p].lock().unwrap().take().expect("taken once");
+                (merge_pairs(bucket, &f), timer.elapsed_ms())
+            });
+        let mut times = vec![shuffle_ms / n as f64; n];
+        let mut parts = Vec::with_capacity(n);
+        for (p, (items, ms)) in reduced.into_iter().enumerate() {
+            times[p] += ms;
+            parts.push(items);
+        }
+        ctx.log(&format!("{label}.reduce"), times);
+        Rdd { ctx, parts }
+    }
+
     /// Wide transformation: in-memory shuffle grouping values by key.
     /// One task per target partition (hash(key) % partitions).
     pub fn group_by_key(self, label: &str) -> Rdd<'a, (K, Vec<V>)> {
@@ -226,6 +309,48 @@ mod tests {
             .collect();
         assert!(ctx.makespan_ms(1) >= ctx.makespan_ms(4) - 1e-9);
         assert_eq!(ctx.stage_log.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn reduce_by_key_matches_group_by_key_fold() {
+        let pairs: Vec<(u32, u64)> = (0..600).map(|i| (i % 13, i as u64)).collect();
+        let ctx = SparkContext::new(4, 2);
+        let mut reduced = ctx.parallelize(pairs.clone()).reduce_by_key("r", |a, b| a + b).collect();
+        reduced.sort_unstable();
+        let ctx2 = SparkContext::new(4, 2);
+        let mut grouped: Vec<(u32, u64)> = ctx2
+            .parallelize(pairs)
+            .group_by_key("g")
+            .collect()
+            .into_iter()
+            .map(|(k, vs)| (k, vs.into_iter().sum()))
+            .collect();
+        grouped.sort_unstable();
+        assert_eq!(reduced, grouped);
+    }
+
+    #[test]
+    fn reduce_by_key_single_pair_per_key() {
+        let ctx = SparkContext::new(3, 2);
+        let pairs: Vec<(u32, u32)> = (0..90).map(|i| (i % 4, 1)).collect();
+        let out = ctx.parallelize(pairs).reduce_by_key("count", |a, b| a + b).collect();
+        assert_eq!(out.len(), 4, "exactly one output pair per distinct key");
+        assert!(out.iter().all(|&(k, c)| k < 4 && c > 0));
+        let total: u32 = out.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 90);
+    }
+
+    #[test]
+    fn reduce_by_key_max_and_stage_log() {
+        let ctx = SparkContext::new(4, 2);
+        let pairs = vec![(0u32, 5u32), (1, 2), (0, 9), (1, 1), (0, 3)];
+        let mut out = ctx.parallelize(pairs).reduce_by_key("m", u32::max).collect();
+        out.sort_unstable();
+        assert_eq!(out, vec![(0, 9), (1, 2)]);
+        // combine + reduce stages both logged for makespan attribution
+        let log = ctx.stage_log.lock().unwrap();
+        let labels: Vec<&str> = log.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["m.combine", "m.reduce"]);
     }
 
     #[test]

@@ -67,8 +67,17 @@ where
     out.into_iter().map(|v| v.expect("worker missed slot")).collect()
 }
 
-/// Parallel fold: each worker reduces its chunks locally with `fold`,
-/// partials are merged with `merge` in arbitrary order.
+/// Parallel fold: workers reduce one accumulator per claimed chunk with
+/// `fold`; the per-chunk partials are merged with `merge` in CHUNK-INDEX
+/// order, never in worker-finish order.
+///
+/// Determinism contract: for fixed `(n, chunk)` the merge tree is
+/// identical for every worker count (including 1) and every scheduling
+/// interleave, so a float-accumulating fold (a density sum, a timing
+/// aggregation) built on this primitive is bit-reproducible run-to-run.
+/// The price is one accumulator per chunk instead of one per worker;
+/// callers pick `chunk` large enough that `make_acc`/`merge` stay off
+/// the hot path.
 pub fn parallel_fold<A, F, M>(
     n: usize,
     workers: usize,
@@ -83,38 +92,49 @@ where
     M: Fn(A, A) -> A,
 {
     assert!(chunk > 0);
-    let workers = workers.max(1).min(n.max(1));
-    if n == 0 || workers == 1 {
+    if n == 0 {
+        return make_acc();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        // same per-chunk fold/merge shape as the parallel path, so the
+        // result is identical for any worker count
         let mut acc = make_acc();
-        for i in 0..n {
-            fold(&mut acc, i);
+        let mut start = 0;
+        while start < n {
+            let mut part = make_acc();
+            for i in start..(start + chunk).min(n) {
+                fold(&mut part, i);
+            }
+            acc = merge(acc, part);
+            start += chunk;
         }
         return acc;
     }
     let cursor = AtomicUsize::new(0);
-    let partials: Mutex<Vec<A>> = Mutex::new(Vec::new());
+    let partials: Mutex<Vec<(usize, A)>> = Mutex::new(Vec::new());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
-                let mut acc = make_acc();
+                let mut local: Vec<(usize, A)> = Vec::new();
                 loop {
                     let start = cursor.fetch_add(chunk, Ordering::Relaxed);
                     if start >= n {
                         break;
                     }
+                    let mut acc = make_acc();
                     for i in start..(start + chunk).min(n) {
                         fold(&mut acc, i);
                     }
+                    local.push((start, acc));
                 }
-                partials.lock().unwrap().push(acc);
+                partials.lock().unwrap().extend(local);
             });
         }
     });
-    partials
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .fold(make_acc(), merge)
+    let mut partials = partials.into_inner().unwrap();
+    partials.sort_unstable_by_key(|&(start, _)| start);
+    partials.into_iter().fold(make_acc(), |acc, (_, p)| merge(acc, p))
 }
 
 #[cfg(test)]
@@ -151,6 +171,44 @@ mod tests {
             |a, b| a + b,
         );
         assert_eq!(total, 9999 * 10_000 / 2);
+    }
+
+    #[test]
+    fn fold_deterministic_across_worker_counts() {
+        // float accumulation order is fixed by the chunk grid, so every
+        // worker count produces the exact same bits
+        let run = |workers| {
+            parallel_fold(
+                10_000,
+                workers,
+                7,
+                || 0.0f64,
+                |acc, i| *acc += (i as f64) * 0.1,
+                |a, b| a + b,
+            )
+        };
+        let baseline = run(1);
+        for workers in [2, 3, 4, 8] {
+            assert_eq!(baseline.to_bits(), run(workers).to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fold_merges_in_chunk_index_order() {
+        // each chunk's partial holds consecutive indices; chunk-ordered
+        // merging must reproduce 0..n exactly, without sorting
+        let out = parallel_fold(
+            100,
+            4,
+            9,
+            Vec::new,
+            |acc: &mut Vec<usize>, i| acc.push(i),
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        );
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
     }
 
     #[test]

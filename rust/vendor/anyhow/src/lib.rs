@@ -1,0 +1,268 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access (see DESIGN.md
+//! §Substitutions for the rand/rayon/clap/serde_json equivalents inside
+//! the main crate), so this vendored shim provides exactly the `anyhow`
+//! API surface the repo uses:
+//!
+//! * `anyhow::Result<T>` / `anyhow::Error` (with a readable cause chain),
+//! * the `anyhow!`, `bail!`, `ensure!` macros,
+//! * the `Context` extension trait on `Result<T, E: std::error::Error>`,
+//!   on `Result<T, anyhow::Error>`, and on `Option<T>`.
+//!
+//! Error content is carried as a string chain (outermost context first);
+//! `Display` joins the chain with `": "` like anyhow's `{:#}` alternate
+//! form, which is what error paths here print anyway.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in alias for `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error value. Deliberately NOT `std::error::Error`,
+/// exactly like the real `anyhow::Error`, so the blanket
+/// `From<E: std::error::Error>` impl below stays coherent.
+pub struct Error {
+    /// Outermost context first, root cause last. Never empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow::Error::msg`
+    /// entry point the macros lower to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Construct from a standard error, flattening its source chain.
+    pub fn from_std<E: StdError>(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+
+    /// Push an outer context frame (what `Context::context` does).
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("chain never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::from_std(err)
+    }
+}
+
+/// Private unification of "things `.context()` can upgrade": every
+/// standard error plus `Error` itself (the real anyhow's `ext::StdError`
+/// trick).
+pub trait IntoError: private::Sealed {
+    fn into_error(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from_std(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<E: std::error::Error + Send + Sync + 'static> Sealed for E {}
+    impl Sealed for super::Error {}
+}
+
+/// `anyhow::Context`: attach context to failures of `Result` and turn
+/// `None` into an error.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err(
+                $crate::anyhow!(concat!("condition failed: ", stringify!($cond))).into(),
+            );
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/here")
+            .with_context(|| format!("read {}", "/definitely/not/here"))?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_on_io_error() {
+        let err = io_fail().unwrap_err();
+        let text = err.to_string();
+        assert!(text.starts_with("read /definitely/not/here: "), "{text}");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let none: Option<u32> = None;
+        let err = none.context("missing key").unwrap_err();
+        assert_eq!(err.to_string(), "missing key");
+        assert_eq!(Some(5u32).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let inner: Result<()> = Err(anyhow!("inner {}", 1));
+        let err = inner.context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer: inner 1");
+        assert_eq!(err.root_cause(), "inner 1");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<u32> {
+            let v: u32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let err = anyhow!("root").wrap("mid").wrap("top");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+        assert_eq!(err.chain().count(), 3);
+    }
+}
