@@ -1,0 +1,124 @@
+//! Bench: the backend matrix — the identical cumuli → assembly →
+//! dedup+density workload on every `exec::` backend × worker counts,
+//! turning the paper's Tables 3–5 regime comparison into one sweep.
+//! Writes `BENCH_backends.json` (repo root) so the perf trajectory is
+//! machine-readable across PRs.
+//!
+//! Doubles as an acceptance gate: every run is checked against the
+//! online-miner reference cluster set (components AND supports), so a
+//! backend regression fails the process — CI smoke-runs the quick mode.
+//! `TRICLUSTER_BENCH_FULL=1` for the paper-sized contexts.
+
+use std::collections::BTreeMap;
+
+use tricluster::core::context::PolyContext;
+use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::datasets::{movielens, synthetic, MovielensParams};
+use tricluster::exec::{run_named, ExecTuning, BACKENDS};
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::util::json::Json;
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    sort_clusters(&mut cs);
+    cs
+}
+
+fn assert_matches(reference: &[Cluster], got: &[Cluster], label: &str) {
+    if let Some(diff) = diff_cluster_sets(reference, got) {
+        panic!("{label}: backend diverged from mine_online: {diff}");
+    }
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn main() {
+    let full = std::env::var("TRICLUSTER_BENCH_FULL").is_ok();
+    let datasets: Vec<(&str, PolyContext)> = if full {
+        vec![
+            ("K1-40", synthetic::k1(40).inner),
+            ("MovieLens200k", movielens(&MovielensParams::with_tuples(200_000))),
+        ]
+    } else {
+        vec![
+            ("K1-12", synthetic::k1(12).inner),
+            ("MovieLens20k", movielens(&MovielensParams::with_tuples(20_000))),
+        ]
+    };
+    let max_workers = tricluster::util::pool::default_workers();
+    let mut worker_counts = vec![1usize, 2, 4, max_workers];
+    worker_counts.sort_unstable();
+    worker_counts.dedup();
+    eprintln!(
+        "backend_matrix bench (full={full}): {} datasets × {:?} workers × {:?}",
+        datasets.len(),
+        worker_counts,
+        BACKENDS
+    );
+
+    let mut series: Vec<Json> = Vec::new();
+    for (name, ctx) in &datasets {
+        let reference = sorted(mine_online(ctx, &Constraints::none()));
+        let mut seq_ms = f64::NAN;
+        for &workers in &worker_counts {
+            for backend in BACKENDS {
+                // the sequential backend has no worker knob: run it once
+                if backend == "seq" && workers != worker_counts[0] {
+                    continue;
+                }
+                let tune = ExecTuning {
+                    workers,
+                    tasks: (workers * 4).max(8),
+                    ..ExecTuning::default()
+                };
+                let run = run_named(backend, ctx, 0.0, &tune).expect("backend run");
+                assert_matches(
+                    &reference,
+                    &run.clusters,
+                    &format!("{name}/{backend}/x{workers}"),
+                );
+                if backend == "seq" {
+                    seq_ms = run.wall_ms;
+                }
+                let speedup = seq_ms / run.wall_ms;
+                eprintln!(
+                    "  {name:<14} {backend:<7} x{workers}: {:8.1} ms  ({} clusters, {:.2}x vs seq)",
+                    run.wall_ms,
+                    run.clusters.len(),
+                    speedup
+                );
+                let mut o = BTreeMap::new();
+                o.insert("dataset".to_string(), Json::Str(name.to_string()));
+                o.insert("backend".to_string(), Json::Str(backend.to_string()));
+                o.insert("workers".to_string(), num(workers as f64));
+                o.insert("wall_ms".to_string(), num(run.wall_ms));
+                o.insert("clusters".to_string(), num(run.clusters.len() as f64));
+                o.insert("tuples".to_string(), num(ctx.len() as f64));
+                o.insert("speedup_vs_seq".to_string(), num(speedup));
+                series.push(Json::Obj(o));
+            }
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("backend_matrix".into()));
+    doc.insert("full".to_string(), Json::Bool(full));
+    doc.insert(
+        "backends".to_string(),
+        Json::Arr(BACKENDS.iter().map(|b| Json::Str(b.to_string())).collect()),
+    );
+    doc.insert(
+        "workers".to_string(),
+        Json::Arr(worker_counts.iter().map(|&w| num(w as f64)).collect()),
+    );
+    doc.insert(
+        "cores".to_string(),
+        num(tricluster::util::pool::default_workers() as f64),
+    );
+    doc.insert("series".to_string(), Json::Arr(series));
+    let json = Json::Obj(doc);
+    std::fs::write("BENCH_backends.json", json.to_string())
+        .expect("write BENCH_backends.json");
+    eprintln!("wrote BENCH_backends.json (all backends agreed with mine_online)");
+}

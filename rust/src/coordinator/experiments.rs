@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::coordinator::report::Report;
 use crate::core::context::PolyContext;
 use crate::datasets;
+use crate::exec::{run_named, ExecTuning, BACKENDS};
 use crate::mmc::{run_mmc, MmcConfig, MmcResult};
 use crate::noac::{mine_noac, NoacParams};
 use crate::oac::{mine_online, Constraints};
@@ -283,6 +284,75 @@ pub fn table5(cfg: &ExpConfig, workers: usize) -> Result<Report> {
     Ok(r)
 }
 
+/// Backend matrix: the identical cumuli → assembly → dedup+density
+/// pipeline across all four `exec::` backends — the Tables 3–5 regime
+/// comparison (§2 sequential vs §4 MapReduce vs §6 threads vs §7 Spark)
+/// as one sweep over the unified layer.
+pub fn backends(cfg: &ExpConfig, workers: usize) -> Result<Report> {
+    use datasets::*;
+    let sets: Vec<(&'static str, PolyContext)> = if cfg.full {
+        vec![
+            ("K1", k1(26).inner),
+            ("K2", k2(22).inner),
+            ("MovieLens50k", movielens(&MovielensParams::with_tuples(50_000))),
+        ]
+    } else {
+        vec![
+            ("K1~", k1(12).inner),
+            ("K2~", k2(8).inner),
+            ("MovieLens10k~", movielens(&MovielensParams::with_tuples(10_000))),
+        ]
+    };
+    let tune = ExecTuning {
+        workers,
+        tasks: (cfg.nodes * 4).max(8),
+        seed: cfg.seed,
+        ..ExecTuning::default()
+    };
+    let mut header = vec!["Backend".to_string()];
+    header.extend(sets.iter().map(|(n, _)| n.to_string()));
+    let mut r = Report::new(
+        &format!("Backend matrix: pipeline time, ms (x{workers} workers)"),
+        header,
+    );
+    let mut sizes = vec!["#tuples".to_string()];
+    for (_name, ctx) in &sets {
+        sizes.push(ctx.len().to_string());
+    }
+    r.push(sizes);
+    // reference cluster set per dataset (components + supports), filled by
+    // the first backend; every later backend must reproduce it exactly
+    let mut reference: Vec<Option<Vec<crate::core::pattern::Cluster>>> =
+        (0..sets.len()).map(|_| None).collect();
+    for backend in BACKENDS {
+        let mut row = vec![backend.to_string()];
+        for (i, (name, ctx)) in sets.iter().enumerate() {
+            let mut best = f64::INFINITY;
+            let mut clusters = Vec::new();
+            for _ in 0..cfg.runs.max(1) {
+                let run = run_named(backend, ctx, cfg.theta, &tune)?;
+                best = best.min(run.wall_ms);
+                clusters = run.clusters;
+            }
+            match &reference[i] {
+                Some(expected) => {
+                    if let Some(diff) =
+                        crate::core::pattern::diff_cluster_sets(expected, &clusters)
+                    {
+                        anyhow::bail!(
+                            "backend {backend} changed the {name} cluster set: {diff}"
+                        );
+                    }
+                }
+                None => reference[i] = Some(clusters),
+            }
+            row.push(fmt_ms(best));
+        }
+        r.push(row);
+    }
+    Ok(r)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +382,15 @@ mod tests {
         let m = measure_both(&sets[0].1, &cfg).unwrap();
         assert!(m.online_ms >= 0.0);
         assert_eq!(m.mr.stages.len(), 3);
+    }
+
+    #[test]
+    fn backend_matrix_report_shape() {
+        let r = backends(&tiny(), 2).unwrap();
+        // header row + sizes row + one row per backend
+        assert_eq!(r.rows.len(), 2 + BACKENDS.len());
+        assert_eq!(r.rows[1][0], "#tuples");
+        assert_eq!(r.rows[2][0], "seq");
     }
 
     #[test]

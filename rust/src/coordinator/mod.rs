@@ -7,5 +7,5 @@ pub mod experiments;
 pub mod report;
 
 pub use config::Config;
-pub use experiments::{fig2, measure_both, table3, table4, table5, ExpConfig};
+pub use experiments::{backends, fig2, measure_both, table3, table4, table5, ExpConfig};
 pub use report::Report;

@@ -27,6 +27,18 @@ impl PolyContext {
         }
     }
 
+    /// Context with capacity hints for bulk loads (dataset generators,
+    /// TSV ingest) where sizes are known upfront: `per_modality` entities
+    /// per interner and `tuples` incidences — the tuple store and its
+    /// dedup set dominate, so both are pre-sized too.
+    pub fn with_capacity(arity: usize, per_modality: usize, tuples: usize) -> Self {
+        Self {
+            interners: (0..arity).map(|_| Interner::with_capacity(per_modality)).collect(),
+            tuples: Vec::with_capacity(tuples),
+            seen: FxHashSet::with_capacity_and_hasher(tuples, Default::default()),
+        }
+    }
+
     pub fn arity(&self) -> usize {
         self.interners.len()
     }
@@ -102,6 +114,12 @@ pub struct TriContext {
 impl TriContext {
     pub fn new() -> Self {
         Self { inner: PolyContext::new(3) }
+    }
+
+    /// Triadic context with capacity hints (see
+    /// [`PolyContext::with_capacity`]).
+    pub fn with_capacity(per_modality: usize, triples: usize) -> Self {
+        Self { inner: PolyContext::with_capacity(3, per_modality, triples) }
     }
 
     pub fn add(&mut self, g: u32, m: u32, b: u32) -> bool {

@@ -2,19 +2,34 @@
 //! interned once per modality into dense `u32` ids. The whole pipeline
 //! (prime sets, cumuli, shuffle keys) operates on ids; strings only
 //! reappear when patterns are printed (paper §5.2 output format).
+//!
+//! Each name is allocated ONCE: the forward map and the reverse table
+//! share the same `Arc<str>` backing, so interning a fresh name costs one
+//! string allocation (plus two pointer-sized refs), not two copies.
+
+use std::sync::Arc;
 
 use crate::util::hash::FxHashMap;
 
 /// Bidirectional string↔id map for one modality.
 #[derive(Debug, Default, Clone)]
 pub struct Interner {
-    by_name: FxHashMap<String, u32>,
-    names: Vec<String>,
+    by_name: FxHashMap<Arc<str>, u32>,
+    names: Vec<Arc<str>>,
 }
 
 impl Interner {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-sized for a bulk load of roughly `capacity` distinct names
+    /// (dataset generators / TSV ingest), avoiding rehash-and-grow churn.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            by_name: FxHashMap::with_capacity_and_hasher(capacity, Default::default()),
+            names: Vec::with_capacity(capacity),
+        }
     }
 
     /// Intern `name`, returning its stable id.
@@ -23,8 +38,9 @@ impl Interner {
             return id;
         }
         let id = self.names.len() as u32;
-        self.names.push(name.to_string());
-        self.by_name.insert(name.to_string(), id);
+        let shared: Arc<str> = Arc::from(name);
+        self.names.push(Arc::clone(&shared));
+        self.by_name.insert(shared, id);
         id
     }
 
@@ -45,7 +61,7 @@ impl Interner {
     }
 
     pub fn names(&self) -> impl Iterator<Item = &str> {
-        self.names.iter().map(String::as_str)
+        self.names.iter().map(|s| &**s)
     }
 }
 
@@ -72,5 +88,23 @@ mod tests {
         for k in 0..100 {
             assert_eq!(i.intern(&format!("e{k}")), k);
         }
+    }
+
+    #[test]
+    fn forward_and_reverse_share_one_allocation() {
+        let mut i = Interner::new();
+        let id = i.intern("shared");
+        let by_id: &str = i.name(id);
+        let key = i.by_name.keys().next().unwrap();
+        assert!(std::ptr::eq(by_id, &**key), "one backing allocation");
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut i = Interner::with_capacity(1000);
+        assert!(i.is_empty());
+        assert_eq!(i.intern("x"), 0);
+        assert_eq!(i.intern("y"), 1);
+        assert_eq!(i.names().collect::<Vec<_>>(), vec!["x", "y"]);
     }
 }

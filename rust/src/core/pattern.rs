@@ -49,14 +49,10 @@ impl Cluster {
     /// Content fingerprint for duplicate elimination: clusters with equal
     /// components collide regardless of generating triple or element order.
     pub fn fingerprint(&self) -> u64 {
-        let mut acc = 0xABCD_EF01_2345_6789u64 ^ (self.arity() as u64);
-        for c in &self.components {
-            acc = acc
-                .rotate_left(17)
-                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                ^ set_fingerprint(c);
-        }
-        acc
+        combine_set_fingerprints(
+            self.arity(),
+            self.components.iter().map(|c| set_fingerprint(c)),
+        )
     }
 
     /// Minimal cardinality over all modalities (minsup constraint, §4.3).
@@ -68,6 +64,54 @@ impl Cluster {
 /// Triadic convenience constructor: (extent, intent, modus).
 pub fn tricluster(extent: Vec<u32>, intent: Vec<u32>, modus: Vec<u32>) -> Cluster {
     Cluster::new(vec![extent, intent, modus])
+}
+
+/// Fold per-component set fingerprints into one cluster content
+/// fingerprint — THE hashing scheme shared by [`Cluster::fingerprint`],
+/// the online miner's memoized dedup, and the basic algorithm's
+/// no-materialisation dedup. Keep every dedup path on this helper so a
+/// future tuning of the scheme cannot silently diverge between them.
+pub fn combine_set_fingerprints(
+    arity: usize,
+    set_fps: impl Iterator<Item = u64>,
+) -> u64 {
+    let mut acc = 0xABCD_EF01_2345_6789u64 ^ (arity as u64);
+    for fp in set_fps {
+        acc = acc.rotate_left(17).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ fp;
+    }
+    acc
+}
+
+/// Sort a cluster set into its canonical (component-lexicographic) order.
+pub fn sort_clusters(clusters: &mut [Cluster]) {
+    clusters.sort_by(|a, b| a.components.cmp(&b.components));
+}
+
+/// First difference between two canonically-ordered cluster sets, or
+/// `None` when they are identical — THE equivalence predicate every
+/// backend/shard gate shares (exec unit tests, the backend-equivalence
+/// property test, `benches/backend_matrix.rs`, and the `backends`
+/// experiment). Components and supports are compared; support density is
+/// derived from both, so it cannot diverge independently.
+pub fn diff_cluster_sets(a: &[Cluster], b: &[Cluster]) -> Option<String> {
+    if a.len() != b.len() {
+        return Some(format!("{} vs {} clusters", a.len(), b.len()));
+    }
+    for (x, y) in a.iter().zip(b) {
+        if x.components != y.components {
+            return Some(format!(
+                "components differ: {:?} vs {:?}",
+                x.components, y.components
+            ));
+        }
+        if x.support != y.support {
+            return Some(format!(
+                "support differs on {:?}: {} vs {}",
+                x.components, x.support, y.support
+            ));
+        }
+    }
+    None
 }
 
 #[cfg(test)]

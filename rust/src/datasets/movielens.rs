@@ -44,7 +44,8 @@ impl MovielensParams {
 }
 
 pub fn movielens(params: &MovielensParams) -> PolyContext {
-    let mut ctx = PolyContext::new(4);
+    // users dominate the modality sizes; one hint fits all four
+    let mut ctx = PolyContext::with_capacity(4, params.users.max(params.movies), params.tuples);
     for u in 0..params.users {
         ctx.interners[0].intern(&format!("user{u}"));
     }

@@ -13,7 +13,7 @@ use crate::core::context::{PolyContext, TriContext};
 /// `K₁(n)`: `G = M = B = {0..n}`, `I = G×M×B \ {(i,i,i)}`.
 /// Paper instance: `n = 60` → 215,940 triples.
 pub fn k1(n: usize) -> TriContext {
-    let mut ctx = TriContext::new();
+    let mut ctx = TriContext::with_capacity(n, n * n * n);
     intern_range(&mut ctx.inner, n, n, n);
     for g in 0..n as u32 {
         for m in 0..n as u32 {
@@ -30,7 +30,7 @@ pub fn k1(n: usize) -> TriContext {
 /// `K₂(n)`: three disjoint `n³` blocks. Paper instance: `n = 50` →
 /// 375,000 triples, exactly 3 final triclusters of density 1.
 pub fn k2(n: usize) -> TriContext {
-    let mut ctx = TriContext::new();
+    let mut ctx = TriContext::with_capacity(3 * n, 3 * n * n * n);
     intern_range(&mut ctx.inner, 3 * n, 3 * n, 3 * n);
     for blk in 0..3u32 {
         let off = blk * n as u32;
@@ -49,7 +49,7 @@ pub fn k2(n: usize) -> TriContext {
 /// Paper instance: `n = 30` → 810,000 tuples. The worst case for the
 /// reducers (maximal input, maximal duplicates) yet exactly one cluster.
 pub fn k3(n: usize) -> PolyContext {
-    let mut ctx = PolyContext::new(4);
+    let mut ctx = PolyContext::with_capacity(4, n, n * n * n * n);
     for k in 0..4 {
         for i in 0..n {
             ctx.interners[k].intern(&format!("a{k}_{i}"));

@@ -1,0 +1,165 @@
+//! The [`Backend`] trait — the execution substrate contract.
+//!
+//! A backend runs one map → shuffle → reduce round over typed records.
+//! The algorithm layer ([`crate::exec::stages`]) is written once against
+//! this trait; the four implementations differ only in *how* the round is
+//! executed:
+//!
+//! | backend                | map phase            | shuffle              | reduce phase         |
+//! |------------------------|----------------------|----------------------|----------------------|
+//! | [`Sequential`]         | in-order loop        | hash group + sort    | in-order loop        |
+//! | [`Pooled`]             | `util::pool` chunks  | hash group + sort    | `util::pool` chunks  |
+//! | [`HadoopSim`]          | map tasks + faults   | DFS-materialised     | reduce tasks         |
+//! | [`SparkSim`]           | narrow RDD op        | in-memory wide op    | narrow RDD op        |
+//!
+//! Record bounds are the union of what the engines need: the Hadoop-style
+//! engine serialises everything through [`crate::hadoop::record::Record`],
+//! the Spark-like engine hash-partitions keys, and the deterministic
+//! group order relies on `Ord`.
+//!
+//! [`Sequential`]: crate::exec::Sequential
+//! [`Pooled`]: crate::exec::Pooled
+//! [`HadoopSim`]: crate::exec::HadoopSim
+//! [`SparkSim`]: crate::exec::SparkSim
+
+use anyhow::Result;
+
+use crate::hadoop::record::Record;
+use crate::util::hash::FxHashMap;
+
+/// Any value that can travel through a backend: serialisable for the
+/// Hadoop-style shuffle, and shareable across worker threads.
+pub trait Data: Record + Send + Sync + Clone + 'static {}
+
+impl<T: Record + Send + Sync + Clone + 'static> Data for T {}
+
+/// A shuffle key: [`Data`] plus hashing (Spark-style partitioning) and a
+/// total order (deterministic group enumeration).
+pub trait Key: Data + std::hash::Hash + Eq + Ord {}
+
+impl<T: Data + std::hash::Hash + Eq + Ord> Key for T {}
+
+/// A typed `None` for [`Backend::map_reduce`]'s combiner slot.
+pub fn no_combine<K, V>() -> Option<fn(&K, Vec<V>) -> Vec<V>> {
+    None
+}
+
+/// Group a pair list by key, deterministically: values keep their input
+/// order within a key, groups are sorted by key. Shared by the in-memory
+/// backends (the Hadoop engine groups by encoded-byte sort instead).
+pub fn group_pairs<K: Key, V>(pairs: Vec<(K, V)>) -> Vec<(K, Vec<V>)> {
+    let mut groups: FxHashMap<K, Vec<V>> = FxHashMap::default();
+    for (k, v) in pairs {
+        groups.entry(k).or_default().push(v);
+    }
+    let mut out: Vec<(K, Vec<V>)> = groups.into_iter().collect();
+    out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// A pluggable execution substrate: three primitives (`map_partitions`,
+/// `group_by_key`, `reduce`) plus the composed `map_reduce` round the
+/// stage functions call. Engines with a fused job pipeline (HadoopSim)
+/// override `map_reduce`; the rest inherit the composition.
+pub trait Backend {
+    /// Short backend id (`seq` / `pool` / `hadoop` / `spark`).
+    fn name(&self) -> &'static str;
+
+    /// Elementwise flat-map over the dataset (the map phase / a narrow
+    /// transformation). Output order is deterministic for a fixed
+    /// backend and config, but only Sequential/Pooled/HadoopSim preserve
+    /// input order; SparkSim returns partition-major order. Callers that
+    /// need stream order (the serve router) must run on an
+    /// order-preserving backend.
+    fn map_partitions<I, O, F>(&self, label: &str, input: Vec<I>, f: F) -> Result<Vec<O>>
+    where
+        I: Data,
+        O: Data,
+        F: Fn(&I) -> Vec<O> + Sync;
+
+    /// The shuffle: group pairs by key. Group enumeration order is
+    /// backend-specific (in-memory backends sort by key; the engine
+    /// adapters follow partition order), so reduce logic must not depend
+    /// on it — pipeline outputs are canonicalised by a final sort.
+    fn group_by_key<K, V>(&self, label: &str, pairs: Vec<(K, V)>) -> Result<Vec<(K, Vec<V>)>>
+    where
+        K: Key,
+        V: Data;
+
+    /// Per-group reduce (the reduce phase). Output order follows group
+    /// order.
+    fn reduce<K, V, O, F>(&self, label: &str, groups: Vec<(K, Vec<V>)>, f: F) -> Result<Vec<O>>
+    where
+        K: Key,
+        V: Data,
+        O: Data,
+        F: Fn(&K, Vec<V>) -> Vec<O> + Sync;
+
+    /// One full map → shuffle → reduce round.
+    ///
+    /// `combine` is the optional map-side combiner (Hadoop's
+    /// `setCombinerClass`): it must be safe to apply 0..n times per key
+    /// group. The composed default applies it zero times — map-side
+    /// combining is a *physical* optimisation that only the fused
+    /// HadoopSim engine materialises (and measures, via shuffle-byte
+    /// counters); results are identical either way.
+    fn map_reduce<I, K, V, O, MF, CF, RF>(
+        &self,
+        label: &str,
+        input: Vec<I>,
+        map: MF,
+        combine: Option<CF>,
+        reduce: RF,
+    ) -> Result<Vec<O>>
+    where
+        I: Data,
+        K: Key,
+        V: Data,
+        O: Data,
+        MF: Fn(&I) -> Vec<(K, V)> + Sync,
+        CF: Fn(&K, Vec<V>) -> Vec<V> + Sync,
+        RF: Fn(&K, Vec<V>) -> Vec<O> + Sync,
+    {
+        let _ = combine;
+        let pairs = self.map_partitions(&format!("{label}-map"), input, map)?;
+        let groups = self.group_by_key(&format!("{label}-shuffle"), pairs)?;
+        self.reduce(&format!("{label}-reduce"), groups, reduce)
+    }
+
+    /// A shuffle → reduce round over PRE-KEYED pairs (no map phase): the
+    /// input moves straight into the shuffle, so no backend pays an
+    /// identity-map clone. Fused engines (HadoopSim) override this with
+    /// an identity-mapper job to keep their per-round accounting.
+    fn group_reduce<K, V, O, RF>(
+        &self,
+        label: &str,
+        pairs: Vec<(K, V)>,
+        reduce: RF,
+    ) -> Result<Vec<O>>
+    where
+        K: Key,
+        V: Data,
+        O: Data,
+        RF: Fn(&K, Vec<V>) -> Vec<O> + Sync,
+    {
+        let groups = self.group_by_key(&format!("{label}-shuffle"), pairs)?;
+        self.reduce(&format!("{label}-reduce"), groups, reduce)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_pairs_sorts_keys_and_keeps_value_order() {
+        let pairs = vec![(2u32, 10u32), (1, 20), (2, 30), (1, 40)];
+        let grouped = group_pairs(pairs);
+        assert_eq!(grouped, vec![(1, vec![20, 40]), (2, vec![10, 30])]);
+    }
+
+    #[test]
+    fn no_combine_is_none() {
+        assert!(no_combine::<u32, u32>().is_none());
+    }
+}

@@ -1,0 +1,196 @@
+//! `exec` — the backend-agnostic execution layer.
+//!
+//! The paper's central claim is a *comparison* of one OAC/NOAC pipeline
+//! under different execution regimes: the MapReduce model (§4) versus
+//! language-level parallelism (§6), with Spark as the projected third
+//! regime (§7). This layer makes that comparison structural instead of
+//! copy-based: the three M/R triclustering stages (cumuli → assembly →
+//! dedup+density, Algorithms 2–7) are written ONCE as backend-generic
+//! functions in [`stages`], and a [`Backend`] supplies the execution
+//! substrate:
+//!
+//! * [`Sequential`] — single-threaded reference semantics;
+//! * [`Pooled`] — `util::pool` thread-level parallelism (§6);
+//! * [`HadoopSim`] — the fused mini-Hadoop job engine (§4), with DFS
+//!   materialisation, fault injection, combiners, and per-stage stats;
+//! * [`SparkSim`] — the in-memory RDD engine (§7).
+//!
+//! `tricluster mr --backend {seq,pool,hadoop,spark}` selects a backend
+//! from the CLI, `benches/backend_matrix.rs` sweeps the full matrix
+//! (writing `BENCH_backends.json`), and
+//! `rust/tests/backend_equivalence.rs` property-tests that every backend
+//! reproduces `oac::mine_online` exactly.
+
+pub mod backend;
+pub mod hadoop_sim;
+pub mod pooled;
+pub mod sequential;
+pub mod spark_sim;
+pub mod stages;
+
+pub use backend::{no_combine, Backend, Data, Key};
+pub use hadoop_sim::HadoopSim;
+pub use pooled::Pooled;
+pub use sequential::Sequential;
+pub use spark_sim::SparkSim;
+pub use stages::{
+    run_pipeline, stage1_cumuli, stage2_assembly, stage3_dedup_density, Components,
+};
+
+use anyhow::Result;
+
+use crate::core::context::PolyContext;
+use crate::core::pattern::Cluster;
+use crate::hadoop::dfs::{Dfs, DfsConfig};
+use crate::hadoop::job::JobConfig;
+use crate::spark::rdd::SparkContext;
+use crate::util::pool;
+use crate::util::stats::Timer;
+
+/// The four backend names, in canonical comparison order.
+pub const BACKENDS: [&str; 4] = ["seq", "pool", "hadoop", "spark"];
+
+/// Tuning knobs shared by every backend (each uses the subset it
+/// understands).
+#[derive(Debug, Clone)]
+pub struct ExecTuning {
+    /// Worker threads (Pooled; executor threads for HadoopSim/SparkSim).
+    pub workers: usize,
+    /// Task granularity: map/reduce tasks (HadoopSim) and RDD partitions
+    /// (SparkSim).
+    pub tasks: usize,
+    /// HadoopSim task-retry probability (duplicate injection).
+    pub fault_prob: f64,
+    pub seed: u64,
+    /// HadoopSim: materialise intermediates through the replicated DFS.
+    pub use_dfs: bool,
+}
+
+impl Default for ExecTuning {
+    fn default() -> Self {
+        let workers = pool::default_workers();
+        Self {
+            workers,
+            tasks: (workers * 4).max(8),
+            fault_prob: 0.0,
+            seed: 0x5EED,
+            use_dfs: false,
+        }
+    }
+}
+
+/// Result of [`run_named`]: the canonical (component-sorted) cluster set
+/// plus wall time.
+#[derive(Debug)]
+pub struct PipelineRun {
+    pub backend: &'static str,
+    pub clusters: Vec<Cluster>,
+    pub wall_ms: f64,
+}
+
+/// Run the full cumuli → assembly → dedup+density pipeline on the
+/// backend named by the CLI `--backend` flag (`seq`, `pool`, `hadoop`,
+/// or `spark`).
+pub fn run_named(
+    name: &str,
+    ctx: &PolyContext,
+    theta: f64,
+    tune: &ExecTuning,
+) -> Result<PipelineRun> {
+    let timer = Timer::start();
+    let (backend, clusters) = match name {
+        "seq" => ("seq", run_pipeline(&Sequential, ctx, theta, false)?),
+        "pool" => ("pool", run_pipeline(&Pooled::new(tune.workers), ctx, theta, false)?),
+        "hadoop" => {
+            let backend = HadoopSim::new(
+                JobConfig {
+                    name: "exec".into(),
+                    map_tasks: tune.tasks,
+                    reduce_tasks: tune.tasks,
+                    executor_threads: tune.workers,
+                    fault_prob: tune.fault_prob,
+                    seed: tune.seed,
+                    use_dfs: tune.use_dfs,
+                },
+                Dfs::new(DfsConfig::default()),
+            );
+            ("hadoop", run_pipeline(&backend, ctx, theta, false)?)
+        }
+        "spark" => {
+            let sc = SparkContext::new(tune.tasks.max(1), tune.workers);
+            ("spark", run_pipeline(&SparkSim::new(&sc), ctx, theta, false)?)
+        }
+        other => anyhow::bail!("unknown backend {other:?} (expected seq|pool|hadoop|spark)"),
+    };
+    Ok(PipelineRun { backend, clusters, wall_ms: timer.elapsed_ms() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::{diff_cluster_sets, sort_clusters};
+    use crate::datasets::synthetic::{k1, k2};
+    use crate::oac::{mine_online, Constraints};
+
+    fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+        sort_clusters(&mut cs);
+        cs
+    }
+
+    fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) {
+        if let Some(diff) = diff_cluster_sets(a, b) {
+            panic!("{label}: {diff}");
+        }
+    }
+
+    #[test]
+    fn all_backends_match_online_on_k1() {
+        let ctx = k1(6).inner;
+        let reference = sorted(mine_online(&ctx, &Constraints::none()));
+        let tune = ExecTuning { workers: 4, tasks: 4, ..ExecTuning::default() };
+        for name in BACKENDS {
+            let run = run_named(name, &ctx, 0.0, &tune).unwrap();
+            assert_same(&run.clusters, &reference, name);
+        }
+    }
+
+    #[test]
+    fn all_backends_agree_under_theta() {
+        let ctx = k1(5).inner;
+        let theta = 0.9;
+        let reference = sorted(mine_online(
+            &ctx,
+            &Constraints { min_density: theta, min_support: 0 },
+        ));
+        let tune = ExecTuning { workers: 2, tasks: 3, ..ExecTuning::default() };
+        for name in BACKENDS {
+            let run = run_named(name, &ctx, theta, &tune).unwrap();
+            assert_same(&run.clusters, &reference, name);
+        }
+    }
+
+    #[test]
+    fn hadoop_combiner_and_faults_leave_output_unchanged() {
+        let ctx = k2(4).inner;
+        let clean = run_pipeline(&HadoopSim::with_defaults(), &ctx, 0.0, false).unwrap();
+        let backend = HadoopSim::new(
+            JobConfig {
+                name: "faulty".into(),
+                fault_prob: 1.0,
+                use_dfs: false,
+                ..JobConfig::default()
+            },
+            Dfs::new(DfsConfig::default()),
+        );
+        let noisy = run_pipeline(&backend, &ctx, 0.0, true).unwrap();
+        assert_same(&clean, &noisy, "faulty+combiner");
+        let stats = backend.take_stats();
+        assert_eq!(stats.len(), 3, "three fused stage jobs");
+    }
+
+    #[test]
+    fn unknown_backend_is_an_error() {
+        let ctx = k2(2).inner;
+        assert!(run_named("flink", &ctx, 0.0, &ExecTuning::default()).is_err());
+    }
+}

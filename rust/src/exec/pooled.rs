@@ -1,0 +1,124 @@
+//! The `Pooled` backend: language-level parallelism (paper §6) on the
+//! scoped worker pool of [`crate::util::pool`] — the same substrate the
+//! parallel NOAC and the serving layer's drain waves run on.
+//!
+//! Map and reduce phases are chunked dynamic-scheduled parallel loops;
+//! the shuffle is a serial hash grouping (mirroring the serving router,
+//! where only the per-shard concat sits on the serial path). Results are
+//! deterministic for every worker count: chunk outputs are concatenated
+//! in index order and groups are enumerated in key order.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::backend::{group_pairs, Backend, Data, Key};
+use crate::util::pool;
+
+/// Thread-pool backend over `util::pool`.
+#[derive(Debug, Clone)]
+pub struct Pooled {
+    /// Worker threads for the map and reduce phases.
+    pub workers: usize,
+}
+
+impl Pooled {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Chunk size for `n` items: enough chunks to balance skew (~8 per
+    /// worker), capped so tiny inputs stay single-chunk-per-item.
+    fn chunk(&self, n: usize, cap: usize) -> usize {
+        (n / (self.workers * 8)).clamp(1, cap)
+    }
+}
+
+impl Backend for Pooled {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn map_partitions<I, O, F>(&self, _label: &str, input: Vec<I>, f: F) -> Result<Vec<O>>
+    where
+        I: Data,
+        O: Data,
+        F: Fn(&I) -> Vec<O> + Sync,
+    {
+        let n = input.len();
+        let chunk = self.chunk(n, 1024);
+        let outs: Vec<Vec<O>> =
+            pool::parallel_map(n, self.workers, chunk, |i| f(&input[i]));
+        Ok(outs.into_iter().flatten().collect())
+    }
+
+    fn group_by_key<K, V>(&self, _label: &str, pairs: Vec<(K, V)>) -> Result<Vec<(K, Vec<V>)>>
+    where
+        K: Key,
+        V: Data,
+    {
+        Ok(group_pairs(pairs))
+    }
+
+    fn reduce<K, V, O, F>(&self, _label: &str, groups: Vec<(K, Vec<V>)>, f: F) -> Result<Vec<O>>
+    where
+        K: Key,
+        V: Data,
+        O: Data,
+        F: Fn(&K, Vec<V>) -> Vec<O> + Sync,
+    {
+        let n = groups.len();
+        let chunk = self.chunk(n, 64);
+        // hand each task exclusive ownership of its group (the rdd idiom)
+        let slots: Vec<Mutex<Option<(K, Vec<V>)>>> =
+            groups.into_iter().map(|g| Mutex::new(Some(g))).collect();
+        let outs: Vec<Vec<O>> = pool::parallel_map(n, self.workers, chunk, |i| {
+            let (k, vs) = slots[i].lock().unwrap().take().expect("taken once");
+            f(&k, vs)
+        });
+        Ok(outs.into_iter().flatten().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::no_combine;
+    use super::*;
+
+    fn histogram(workers: usize) -> Vec<(u32, u32)> {
+        let input: Vec<u32> = (0..5_000).collect();
+        Pooled::new(workers)
+            .map_reduce(
+                "hist",
+                input,
+                |&x: &u32| vec![(x % 13, 1u32)],
+                no_combine::<u32, u32>(),
+                |k: &u32, vs: Vec<u32>| vec![(*k, vs.iter().sum())],
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let baseline = histogram(1);
+        assert_eq!(baseline.len(), 13);
+        assert_eq!(baseline.iter().map(|&(_, c)| c).sum::<u32>(), 5_000);
+        for workers in [2, 3, 8] {
+            assert_eq!(histogram(workers), baseline, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<(u32, u32)> = Pooled::new(4)
+            .map_reduce(
+                "empty",
+                Vec::<u32>::new(),
+                |&x: &u32| vec![(x, x)],
+                no_combine::<u32, u32>(),
+                |k: &u32, _vs: Vec<u32>| vec![(*k, 0)],
+            )
+            .unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,77 @@
+//! The `Sequential` backend: the paper's single-threaded baseline (§2's
+//! online/basic regime). Every phase is an in-order loop on the calling
+//! thread — the reference semantics the parallel backends must match.
+
+use anyhow::Result;
+
+use super::backend::{group_pairs, Backend, Data, Key};
+
+/// Single-threaded reference backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Sequential;
+
+impl Backend for Sequential {
+    fn name(&self) -> &'static str {
+        "seq"
+    }
+
+    fn map_partitions<I, O, F>(&self, _label: &str, input: Vec<I>, f: F) -> Result<Vec<O>>
+    where
+        I: Data,
+        O: Data,
+        F: Fn(&I) -> Vec<O> + Sync,
+    {
+        let mut out = Vec::new();
+        for item in &input {
+            out.extend(f(item));
+        }
+        Ok(out)
+    }
+
+    fn group_by_key<K, V>(&self, _label: &str, pairs: Vec<(K, V)>) -> Result<Vec<(K, Vec<V>)>>
+    where
+        K: Key,
+        V: Data,
+    {
+        Ok(group_pairs(pairs))
+    }
+
+    fn reduce<K, V, O, F>(&self, _label: &str, groups: Vec<(K, Vec<V>)>, f: F) -> Result<Vec<O>>
+    where
+        K: Key,
+        V: Data,
+        O: Data,
+        F: Fn(&K, Vec<V>) -> Vec<O> + Sync,
+    {
+        let mut out = Vec::new();
+        for (k, vs) in groups {
+            out.extend(f(&k, vs));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_count_round() {
+        let input: Vec<String> = vec!["a b a".into(), "b c".into()];
+        let out = Sequential
+            .map_reduce(
+                "wc",
+                input,
+                |line: &String| {
+                    line.split_whitespace().map(|w| (w.to_string(), 1u32)).collect()
+                },
+                super::super::backend::no_combine::<String, u32>(),
+                |w: &String, counts: Vec<u32>| vec![(w.clone(), counts.len() as u32)],
+            )
+            .unwrap();
+        assert_eq!(
+            out,
+            vec![("a".to_string(), 2), ("b".to_string(), 2), ("c".to_string(), 1)]
+        );
+    }
+}

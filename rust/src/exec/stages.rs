@@ -1,0 +1,230 @@
+//! The three M/R triclustering stages (paper §4.1, Algorithms 2–7) in
+//! their ONE backend-generic form. Every execution path — sequential,
+//! thread-pooled, Hadoop-sim, Spark-sim — runs exactly these functions;
+//! the backends differ only in how a `map_reduce` round is executed.
+//!
+//! Stage 1 — cumuli: tuples fan out to N ⟨subrelation, entity⟩ pairs
+//!   (Alg. 2); the reducer accumulates each subrelation's cumulus
+//!   (Alg. 3 — we emit the final cumulus once; emitting the running
+//!   prefix per value, as the pseudo-code literally reads, produces the
+//!   same final stage-2 input with strictly more traffic).
+//! Stage 2 — assembly: each ⟨subrelation, cumulus⟩ is expanded back to
+//!   its generating tuples (Alg. 4); the reducer zips the N cumuli into
+//!   a multimodal cluster per generating tuple (Alg. 5), keyed by its
+//!   components — Alg. 6's key swap, fused.
+//! Stage 3 — dedup + density: group by components, count distinct
+//!   generating tuples, keep clusters with support/volume ≥ θ (Alg. 7).
+
+use anyhow::Result;
+
+use super::backend::{no_combine, Backend};
+use crate::core::context::PolyContext;
+use crate::core::pattern::Cluster;
+use crate::core::tuple::{NTuple, SubRelation};
+
+/// A cluster's component sets — the stage-3 grouping key.
+pub type Components = Vec<Vec<u32>>;
+
+/// Alg. 2: `(e_1..e_N)` → `⟨subrelation_k, e_k⟩` for every k.
+pub fn s1_map(t: &NTuple) -> Vec<(SubRelation, u32)> {
+    (0..t.arity()).map(|k| (t.subrelation(k), t.get(k))).collect()
+}
+
+/// Optional map-side combiner for stage 1: deduplicate a map task's
+/// local entity emissions per subrelation before the shuffle. Safe
+/// because the stage-1 reduce is a set union — associative and
+/// idempotent. Shuffle-byte savings are measured by the combiner
+/// ablation (HadoopSim is the only backend that materialises it).
+pub fn s1_combine(_key: &SubRelation, mut values: Vec<u32>) -> Vec<u32> {
+    values.sort_unstable();
+    values.dedup();
+    values
+}
+
+/// Alg. 3: accumulate the cumulus of each subrelation. Values may repeat
+/// (task retries); the cumulus is a set.
+pub fn s1_reduce(key: &SubRelation, mut values: Vec<u32>) -> Vec<(SubRelation, Vec<u32>)> {
+    values.sort_unstable();
+    values.dedup();
+    vec![(*key, values)]
+}
+
+/// Alg. 4: re-insert each cumulus element at the dropped position to
+/// recover the generating tuples; the cumulus travels with each, tagged
+/// by the dropped modality so the stage-2 reduce can order the N cumuli.
+pub fn s2_map(input: &(SubRelation, Vec<u32>)) -> Vec<(NTuple, (u32, Vec<u32>))> {
+    let (sub, cumulus) = input;
+    let k = sub.dropped() as u32;
+    cumulus
+        .iter()
+        .map(|&e| (NTuple::from_subrelation(sub, e), (k, cumulus.clone())))
+        .collect()
+}
+
+/// Alg. 5: zip the N cumuli of one generating tuple into a cluster,
+/// keyed by its components (Alg. 6's key swap, fused into the emit).
+pub fn s2_reduce(
+    generating: &NTuple,
+    values: Vec<(u32, Vec<u32>)>,
+) -> Vec<(Components, NTuple)> {
+    let n = generating.arity();
+    let mut comps: Vec<Option<Vec<u32>>> = vec![None; n];
+    for (k, cumulus) in values {
+        let slot = &mut comps[k as usize];
+        // duplicates from retries carry identical cumuli; keep first
+        if slot.is_none() {
+            *slot = Some(cumulus);
+        }
+    }
+    // every position must be present: tuple (e_1..e_N) ∈ I implies all
+    // N subrelations emitted a cumulus containing e_k
+    let comps: Components = comps
+        .into_iter()
+        .map(|c| c.expect("missing cumulus for a generating tuple"))
+        .collect();
+    vec![(comps, *generating)]
+}
+
+/// Stage 1 on any backend: tuples → ⟨subrelation, cumulus⟩.
+pub fn stage1_cumuli<B: Backend>(
+    backend: &B,
+    tuples: Vec<NTuple>,
+    combiner: bool,
+) -> Result<Vec<(SubRelation, Vec<u32>)>> {
+    let combine: Option<fn(&SubRelation, Vec<u32>) -> Vec<u32>> =
+        if combiner { Some(s1_combine) } else { None };
+    backend.map_reduce("s1", tuples, s1_map, combine, s1_reduce)
+}
+
+/// Stage 2 on any backend: cumuli → one ⟨components, generating tuple⟩
+/// per generating tuple.
+pub fn stage2_assembly<B: Backend>(
+    backend: &B,
+    cumuli: Vec<(SubRelation, Vec<u32>)>,
+) -> Result<Vec<(Components, NTuple)>> {
+    backend.map_reduce("s2", cumuli, s2_map, no_combine::<NTuple, (u32, Vec<u32>)>(), s2_reduce)
+}
+
+/// Stage 3 on any backend: dedup by components, support = |distinct
+/// generating tuples|, keep clusters with support/volume ≥ `theta`
+/// (Alg. 7). Alg. 6's map is pure key swap and [`s2_reduce`] already
+/// emits ⟨components, generating tuple⟩, so this round is shuffle →
+/// reduce over the pre-keyed pairs (no identity map phase).
+pub fn stage3_dedup_density<B: Backend>(
+    backend: &B,
+    assembled: Vec<(Components, NTuple)>,
+    theta: f64,
+) -> Result<Vec<Cluster>> {
+    backend.group_reduce(
+        "s3",
+        assembled,
+        move |comps: &Components, mut gens: Vec<NTuple>| {
+            gens.sort_unstable();
+            gens.dedup();
+            let mut c = Cluster::new(comps.clone());
+            c.support = gens.len();
+            let vol = c.volume();
+            if vol > 0.0 && c.support as f64 / vol >= theta {
+                vec![c]
+            } else {
+                Vec::new()
+            }
+        },
+    )
+}
+
+/// The full pipeline: cumuli → assembly → dedup+density, with the output
+/// canonicalised by component order (reduce partition/group order is
+/// backend-dependent).
+pub fn run_pipeline<B: Backend>(
+    backend: &B,
+    ctx: &PolyContext,
+    theta: f64,
+    combiner: bool,
+) -> Result<Vec<Cluster>> {
+    let cumuli = stage1_cumuli(backend, ctx.tuples().to_vec(), combiner)?;
+    let assembled = stage2_assembly(backend, cumuli)?;
+    let mut clusters = stage3_dedup_density(backend, assembled, theta)?;
+    crate::core::pattern::sort_clusters(&mut clusters);
+    Ok(clusters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Sequential;
+    use super::*;
+
+    #[test]
+    fn s1_map_fans_out_n_pairs() {
+        let t = NTuple::triple(1, 2, 3);
+        let out = s1_map(&t);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], (t.subrelation(0), 1));
+        assert_eq!(out[2], (t.subrelation(2), 3));
+    }
+
+    #[test]
+    fn s1_reduce_dedups_cumulus() {
+        let sub = NTuple::triple(0, 1, 2).subrelation(0);
+        let out = s1_reduce(&sub, vec![5, 3, 5, 3, 1]);
+        assert_eq!(out, vec![(sub, vec![1, 3, 5])]);
+    }
+
+    #[test]
+    fn s2_map_rebuilds_generating_tuples() {
+        let t = NTuple::triple(7, 1, 2);
+        let sub = t.subrelation(0);
+        let out = s2_map(&(sub, vec![7, 9]));
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, NTuple::triple(7, 1, 2));
+        assert_eq!(out[1].0, NTuple::triple(9, 1, 2));
+        assert_eq!(out[0].1, (0, vec![7, 9]));
+    }
+
+    #[test]
+    fn s2_reduce_zips_cumuli_in_modality_order() {
+        let t = NTuple::triple(0, 1, 2);
+        let out = s2_reduce(
+            &t,
+            vec![
+                (2, vec![2, 9]), // modus arrives first
+                (0, vec![0]),
+                (1, vec![1, 4]),
+                (1, vec![1, 4]), // retry duplicate — ignored
+            ],
+        );
+        assert_eq!(out, vec![(vec![vec![0], vec![1, 4], vec![2, 9]], t)]);
+    }
+
+    #[test]
+    fn stage3_counts_distinct_and_filters() {
+        let comps = vec![vec![0], vec![1, 4], vec![2]];
+        // volume 2; 2 distinct generating tuples (one duplicated) → ρ = 1
+        let assembled = vec![
+            (comps.clone(), NTuple::triple(0, 1, 2)),
+            (comps.clone(), NTuple::triple(0, 4, 2)),
+            (comps.clone(), NTuple::triple(0, 1, 2)),
+        ];
+        let kept = stage3_dedup_density(&Sequential, assembled.clone(), 0.9).unwrap();
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].support, 2);
+        // θ = 1.1 rejects everything
+        let none = stage3_dedup_density(&Sequential, assembled, 1.1).unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn pipeline_merges_table1_example_on_sequential() {
+        // the §1 motivating example: triples split by label must still
+        // produce the merged ({u2},{i1,i2},{l1,l2})
+        let mut ctx = crate::core::context::TriContext::new();
+        ctx.add_named("u2", "i1", "l1");
+        ctx.add_named("u2", "i2", "l1");
+        ctx.add_named("u2", "i1", "l2");
+        ctx.add_named("u2", "i2", "l2");
+        let out = run_pipeline(&Sequential, &ctx.inner, 0.0, false).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].components, vec![vec![0], vec![0, 1], vec![0, 1]]);
+        assert_eq!(out[0].support, 4);
+    }
+}

@@ -33,12 +33,13 @@ COMMANDS
   generate   --dataset <name> --out <file.tsv>
   online     --dataset <name> [--min-density R] [--min-support N] [--show N]
   mr         --dataset <name> [--theta R] [--nodes N] [--fault-prob P]
+             [--backend seq|pool|hadoop|spark] [--workers N]
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
   density    [--edge N] [--engine exact|xla|mc]
   serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
              [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
-  experiment --id table3|table4|fig2|table5|skew|faults|engines|memory [--full] [--config f.ini]
-             [--nodes N] [--runs N]
+  experiment --id table3|table4|fig2|table5|backends|skew|faults|engines|memory
+             [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
 
 DATASETS: imdb k1 k2 k3 ml100k ml250k ml500k ml1m bibsonomy
 ";
@@ -115,11 +116,45 @@ fn online(args: &Args) -> Result<()> {
 fn mr(args: &Args) -> Result<()> {
     let ctx = load(args)?;
     let nodes: usize = args.parse_or("nodes", 10);
+    let backend = args.get_or("backend", "hadoop");
+    if backend != "hadoop" {
+        // the unified exec:: layer runs the identical stage functions on
+        // the selected substrate; `hadoop` keeps the stats-rich run_mmc
+        // path below
+        if args.get("fault-prob").is_some() {
+            eprintln!("note: --fault-prob simulates Hadoop task retries; ignored for --backend {backend}");
+        }
+        let tune = tricluster::exec::ExecTuning {
+            workers: args.parse_or("workers", tricluster::util::pool::default_workers()),
+            tasks: (nodes * 4).max(8),
+            ..tricluster::exec::ExecTuning::default()
+        };
+        let run = tricluster::exec::run_named(
+            backend,
+            &ctx,
+            args.parse_or("theta", 0.0),
+            &tune,
+        )?;
+        println!(
+            "3-stage pipeline [{}]: {} tuples -> {} clusters in {} ms (x{} workers)",
+            run.backend,
+            ctx.len(),
+            run.clusters.len(),
+            fmt_ms(run.wall_ms),
+            tune.workers
+        );
+        for c in run.clusters.iter().take(args.parse_or("show", 3)) {
+            println!("{}", io::format_cluster(&ctx, c));
+        }
+        return Ok(());
+    }
     let cfg = MmcConfig {
         theta: args.parse_or("theta", 0.0),
         fault_prob: args.parse_or("fault-prob", 0.0),
         map_tasks: nodes * 4,
         reduce_tasks: nodes * 4,
+        executor_threads: args
+            .parse_or("workers", tricluster::util::pool::default_workers()),
         ..MmcConfig::default()
     };
     let res = run_mmc(&ctx, &cfg)?;
@@ -296,6 +331,10 @@ fn experiment(args: &Args) -> Result<()> {
         "table5" | "fig3" => experiments::table5(
             &cfg,
             args.parse_or("workers", tricluster::util::pool::default_workers().max(2)),
+        )?,
+        "backends" => experiments::backends(
+            &cfg,
+            args.parse_or("workers", tricluster::util::pool::default_workers()),
         )?,
         "skew" => ablations::partition_skew(cfg.nodes)?,
         "faults" => ablations::fault_injection()?,

@@ -1,17 +1,19 @@
-//! The `App` (paper §4.2): chains the three MapReduce stages into the
-//! full distributed multimodal clustering pipeline and collects the
-//! per-stage statistics Table 4 reports.
+//! The `App` (paper §4.2): the full distributed multimodal clustering
+//! pipeline on the Hadoop-style engine, plus the per-stage statistics
+//! Table 4 reports.
+//!
+//! The stage logic itself (Algorithms 2–7) lives in its single
+//! backend-generic form in [`crate::exec::stages`]; this module binds it
+//! to the [`crate::exec::HadoopSim`] backend and retains each fused
+//! job's [`JobStats`] for the virtual cluster clock.
 
 use anyhow::Result;
 
 use crate::core::context::PolyContext;
 use crate::core::pattern::Cluster;
+use crate::exec::{run_pipeline, HadoopSim};
 use crate::hadoop::dfs::{Dfs, DfsConfig};
-use crate::hadoop::job::{run_job, JobConfig, JobStats};
-use crate::mmc::stages::{
-    FirstMapper, FirstReducer, SecondMapper, SecondReducer, ThirdMapper,
-    ThirdReducer,
-};
+use crate::hadoop::job::{JobConfig, JobStats};
 
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
@@ -74,66 +76,24 @@ impl MmcResult {
 
 /// Run the full three-stage pipeline on a context.
 pub fn run_mmc(ctx: &PolyContext, cfg: &MmcConfig) -> Result<MmcResult> {
-    let dfs = Dfs::new(DfsConfig {
-        replication: cfg.replication,
-        ..DfsConfig::default()
-    });
     let timer = crate::util::stats::Timer::start();
-    let job_cfg = |name: &str| JobConfig {
-        name: name.into(),
-        map_tasks: cfg.map_tasks,
-        reduce_tasks: cfg.reduce_tasks,
-        executor_threads: cfg.executor_threads,
-        fault_prob: cfg.fault_prob,
-        seed: cfg.seed,
-        use_dfs: cfg.use_dfs,
-    };
-
-    // Stage 1: tuples → cumuli (optionally with the map-side combiner)
-    let input: Vec<((), crate::core::tuple::NTuple)> =
-        ctx.tuples().iter().map(|&t| ((), t)).collect();
-    let (cumuli, s1) = if cfg.combiner {
-        crate::hadoop::job::run_job_with_combiner(
-            &job_cfg("mmc-1"),
-            &FirstMapper,
-            Some(&crate::mmc::stages::FirstCombiner),
-            &FirstReducer,
-            input,
-            &dfs,
-        )?
-    } else {
-        run_job(&job_cfg("mmc-1"), &FirstMapper, &FirstReducer, input, &dfs)?
-    };
-
-    // Stage 2: cumuli → per-generating-tuple clusters
-    let (assembled, s2) =
-        run_job(&job_cfg("mmc-2"), &SecondMapper, &SecondReducer, cumuli, &dfs)?;
-
-    // Stage 3: dedup + density threshold
-    let (kept, s3) = run_job(
-        &job_cfg("mmc-3"),
-        &ThirdMapper,
-        &ThirdReducer { theta: cfg.theta },
-        assembled,
-        &dfs,
-    )?;
-
-    let mut clusters: Vec<Cluster> = kept
-        .into_iter()
-        .map(|(mut c, support)| {
-            c.support = support as usize;
-            c
-        })
-        .collect();
-    // deterministic output order (reduce partition order is config-
-    // dependent): sort by components
-    clusters.sort_by(|a, b| a.components.cmp(&b.components));
-
-    Ok(MmcResult {
-        clusters,
-        stages: [s1, s2, s3],
-        wall_ms: timer.elapsed_ms(),
-    })
+    let backend = HadoopSim::new(
+        JobConfig {
+            name: "mmc".into(),
+            map_tasks: cfg.map_tasks,
+            reduce_tasks: cfg.reduce_tasks,
+            executor_threads: cfg.executor_threads,
+            fault_prob: cfg.fault_prob,
+            seed: cfg.seed,
+            use_dfs: cfg.use_dfs,
+        },
+        Dfs::new(DfsConfig { replication: cfg.replication, ..DfsConfig::default() }),
+    );
+    let clusters = run_pipeline(&backend, ctx, cfg.theta, cfg.combiner)?;
+    let stages = backend.take_stats();
+    anyhow::ensure!(stages.len() == 3, "pipeline ran {} stage jobs, expected 3", stages.len());
+    let stages: [JobStats; 3] = stages.try_into().expect("length checked above");
+    Ok(MmcResult { clusters, stages, wall_ms: timer.elapsed_ms() })
 }
 
 #[cfg(test)]

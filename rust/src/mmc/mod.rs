@@ -1,8 +1,16 @@
 //! Distributed multimodal clustering — the paper's §4.1 contribution:
 //! three chained MapReduce stages computing cumuli, assembling clusters,
 //! and deduplicating with an exact support-density threshold.
+//!
+//! The stage logic (Algorithms 2–7) exists in exactly one backend-generic
+//! form in [`crate::exec::stages`]; this module is the Hadoop-flavoured
+//! entry point ([`run_mmc`]) that runs it on [`crate::exec::HadoopSim`]
+//! and reports the per-stage statistics of Table 4. The former
+//! `mmc::stages` Mapper/Reducer structs were replaced by the stage
+//! functions `exec::stages::{s1_map, s1_combine, s1_reduce, s2_map,
+//! s2_reduce}` plus the stage-3 `group_reduce` round (see
+//! docs/ARCHITECTURE.md for the migration map).
 
 pub mod app;
-pub mod stages;
 
 pub use app::{run_mmc, MmcConfig, MmcResult};

@@ -1,20 +1,28 @@
 //! The BASIC (offline) prime OAC-triclustering algorithm of [9] (paper
-//! §2): precompute all prime sets, then generate one tricluster per
-//! triple with on-the-fly hash dedup, optionally checking an exact
-//! minimal-density threshold.
+//! §2): precompute all prime sets, generate one tricluster per triple,
+//! hash-dedup, optionally check an exact minimal-density threshold.
+//!
+//! Phase 1 is the backend-generic stage 1 of [`crate::exec::stages`]
+//! (Algs. 2/3) on the [`Sequential`] backend. Phase 2 applies the
+//! stage-2 assembly kernel per generating triple — looking its N cumuli
+//! up instead of shuffling them, so the wall-clock budget can interrupt
+//! between triples — fused with the dedup and the exact density check
+//! that makes the basic algorithm the paper's slow baseline (stage 3's
+//! support density is NOT the basic algorithm's measure).
 //!
 //! Complexity (paper §2): `O(|G||M||B| + |I|(|G|+|M|+|B|))` without a
 //! density threshold and `O(|I||G||M||B|)` with one — this is the
 //! ">3000 s on large contexts" competitor that motivates the online and
-//! M/R versions. A time budget makes the blow-up observable without
-//! hanging the benches.
+//! M/R versions. The budget is checked every 1024 triples, so the
+//! blow-up stays observable without hanging the benches.
 
 use std::time::Duration;
 
 use crate::core::context::TriContext;
-use crate::core::pattern::Cluster;
-use crate::oac::primes::PrimeStore;
-use crate::util::hash::FxHashSet;
+use crate::core::pattern::{combine_set_fingerprints, Cluster};
+use crate::core::tuple::SubRelation;
+use crate::exec::{stage1_cumuli, Sequential};
+use crate::util::hash::{set_fingerprint, FxHashMap, FxHashSet};
 use crate::util::stats::Timer;
 
 /// Outcome of a budgeted run.
@@ -53,12 +61,20 @@ pub fn mine_basic(
     budget: Duration,
 ) -> BasicOutcome {
     let timer = Timer::start();
-    // Phase 1: precompute prime sets (one pass, shared with online).
-    let mut primes = PrimeStore::new(3);
-    for t in ctx.triples() {
-        primes.add(t);
+    // Phase 1 = stage 1 (Algs. 2/3): cumuli per subrelation key, one
+    // linear pass (no budget risk — the expensive part comes next).
+    let cumuli = stage1_cumuli(&Sequential, ctx.triples().to_vec(), false)
+        .expect("the sequential backend is infallible");
+    if timer.elapsed() > budget {
+        return BasicOutcome::TimedOut { processed_triples: 0, elapsed_ms: timer.elapsed_ms() };
     }
-    // Phase 2: per-triple tricluster generation + hash dedup (+ density).
+    let index: FxHashMap<SubRelation, usize> =
+        cumuli.iter().enumerate().map(|(i, (sub, _))| (*sub, i)).collect();
+    // each cumulus is fingerprinted once, not once per sharing triple
+    let cum_fp: Vec<u64> = cumuli.iter().map(|(_, c)| set_fingerprint(c)).collect();
+    // Phase 2: per-triple assembly (the stage-2 kernel restricted to one
+    // generating tuple, via lookup instead of shuffle) + hash dedup + the
+    // exact density check. Cumuli are only cloned for first-seen clusters.
     let mut seen: FxHashSet<u64> = FxHashSet::default();
     let mut clusters = Vec::new();
     for (i, t) in ctx.triples().iter().enumerate() {
@@ -68,16 +84,20 @@ pub fn mine_basic(
                 elapsed_ms: timer.elapsed_ms(),
             };
         }
-        let comps: Vec<Vec<u32>> = (0..3)
-            .map(|k| {
-                let id = primes.get(&t.subrelation(k)).expect("prime set exists");
-                primes.arena.materialize(id)
-            })
-            .collect();
-        let mut c = Cluster::new(comps);
-        if !seen.insert(c.fingerprint()) {
+        let mut comp_at = [0usize; 3];
+        for (k, slot) in comp_at.iter_mut().enumerate() {
+            *slot = index[&t.subrelation(k)];
+        }
+        // content fingerprint over the three cumuli — the same scheme as
+        // `Cluster::fingerprint` (stage-1 cumuli are already sorted sets)
+        let fp =
+            combine_set_fingerprints(3, comp_at.iter().map(|&ci| cum_fp[ci]));
+        if !seen.insert(fp) {
             continue;
         }
+        let comps: Vec<Vec<u32>> =
+            comp_at.iter().map(|&ci| cumuli[ci].1.clone()).collect();
+        let mut c = Cluster::new(comps);
         if min_density > 0.0 {
             // the expensive exact check — the basic algorithm's downfall
             if exact_density(ctx, &c) < min_density {
@@ -152,5 +172,23 @@ mod tests {
         let ctx = k1(3);
         let c = Cluster::new(vec![vec![], vec![0], vec![0]]);
         assert_eq!(exact_density(&ctx, &c), 0.0);
+    }
+
+    #[test]
+    fn basic_components_match_online() {
+        use crate::oac::{mine_online, Constraints};
+        let ctx = k1(5);
+        let mut online = mine_online(&ctx.inner, &Constraints::none());
+        online.sort_by(|a, b| a.components.cmp(&b.components));
+        match mine_basic(&ctx, 0.0, Duration::from_secs(30)) {
+            BasicOutcome::Done { mut clusters, .. } => {
+                clusters.sort_by(|a, b| a.components.cmp(&b.components));
+                assert_eq!(clusters.len(), online.len());
+                for (a, b) in clusters.iter().zip(&online) {
+                    assert_eq!(a.components, b.components);
+                }
+            }
+            BasicOutcome::TimedOut { .. } => panic!("should finish"),
+        }
     }
 }

@@ -100,30 +100,34 @@ pub fn dedup_generated(
     generated: &[Generated],
     constraints: &crate::oac::post::Constraints,
 ) -> Vec<Cluster> {
+    use crate::core::pattern::combine_set_fingerprints;
     use crate::util::hash::{set_fingerprint, FxHashMap};
     let n_sets = arena.len();
     let mut set_fp: Vec<u64> = vec![0; n_sets];
     let mut set_done: Vec<bool> = vec![false; n_sets];
     let mut by_fp: FxHashMap<u64, usize> = FxHashMap::default();
+    // one scratch buffer for every first-touch materialisation (the hot
+    // per-triple loop allocates nothing per lookup)
+    let mut scratch: Vec<u32> = Vec::new();
     // group index → (representative set ids, generating tuples)
     let mut groups: Vec<(Vec<u32>, Vec<NTuple>)> = Vec::new();
     for g in generated {
-        let mut acc = 0xABCD_EF01_2345_6789u64 ^ (g.set_ids.len() as u64);
-        for &id in &g.set_ids {
-            let i = id as usize;
-            if !set_done[i] {
-                set_fp[i] = set_fingerprint(&arena.materialize(id));
-                set_done[i] = true;
-            }
-            acc = acc
-                .rotate_left(17)
-                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                ^ set_fp[i];
-        }
-        match by_fp.get(&acc) {
+        let fp = combine_set_fingerprints(
+            g.set_ids.len(),
+            g.set_ids.iter().map(|&id| {
+                let i = id as usize;
+                if !set_done[i] {
+                    arena.materialize_into(id, &mut scratch);
+                    set_fp[i] = set_fingerprint(&scratch);
+                    set_done[i] = true;
+                }
+                set_fp[i]
+            }),
+        );
+        match by_fp.get(&fp) {
             Some(&gi) => groups[gi].1.push(g.tuple),
             None => {
-                by_fp.insert(acc, groups.len());
+                by_fp.insert(fp, groups.len());
                 groups.push((g.set_ids.clone(), vec![g.tuple]));
             }
         }

@@ -9,7 +9,7 @@
 //! Here "pointer" = arena index (`SetId`); the arena owns the sets and
 //! materialisation resolves ids → sorted contents once, at the end.
 
-use crate::core::tuple::{NTuple, SubRelation};
+use crate::core::tuple::{NTuple, SubRelation, MAX_ARITY};
 use crate::util::hash::FxHashMap;
 
 /// Index of a prime set / cumulus in the arena.
@@ -51,27 +51,52 @@ impl SetArena {
 
     /// Sorted, deduplicated contents.
     pub fn materialize(&self, id: SetId) -> Vec<u32> {
-        let mut v = self.sets[id as usize].clone();
-        v.sort_unstable();
-        v.dedup();
+        let mut v = Vec::new();
+        self.materialize_into(id, &mut v);
         v
+    }
+
+    /// [`Self::materialize`] into a caller-owned buffer (clear + fill +
+    /// sort + dedup). Hot per-triple loops (the online dedup, the basic
+    /// algorithm) reuse one buffer across lookups instead of allocating a
+    /// fresh `Vec` per set.
+    pub fn materialize_into(&self, id: SetId, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend_from_slice(&self.sets[id as usize]);
+        out.sort_unstable();
+        out.dedup();
     }
 }
 
-/// Pack the non-dropped elements of a subrelation into a `u128` key.
-/// Valid for original arity ≤ 5 (4 × 32-bit elements); the dict index
+/// Pack up to 4 entity ids into a `u128` key, 32 bits each, low-to-high.
+/// The ONE packing rule shared by the tuple-side fast path ([`pack_key`])
+/// and the subrelation-side lookup ([`PrimeStore::get`]).
+#[inline]
+fn pack_elems(elems: &[u32]) -> u128 {
+    debug_assert!(elems.len() <= 4, "packed keys hold ≤ 4 elements");
+    let mut key: u128 = 0;
+    let mut shift = 0;
+    for &e in elems {
+        key |= (e as u128) << shift;
+        shift += 32;
+    }
+    key
+}
+
+/// Packed key of the subrelation of `t` with position `k` dropped —
+/// valid for original arity ≤ 5 (4 × 32-bit elements); the dict index
 /// already encodes the dropped position, so only the elements matter.
 #[inline]
 fn pack_key(t: &NTuple, k: usize) -> u128 {
-    let mut key: u128 = 0;
-    let mut shift = 0;
+    let mut buf = [0u32; MAX_ARITY];
+    let mut j = 0;
     for (i, &e) in t.as_slice().iter().enumerate() {
         if i != k {
-            key |= (e as u128) << shift;
-            shift += 32;
+            buf[j] = e;
+            j += 1;
         }
     }
-    key
+    pack_elems(&buf[..j])
 }
 
 /// The cumulus dictionaries for an N-ary context: one map per modality,
@@ -156,14 +181,7 @@ impl PrimeStore {
     pub fn get(&self, sub: &SubRelation) -> Option<SetId> {
         let k = sub.dropped();
         if !self.packed.is_empty() {
-            // rebuild the packed key from the subrelation elements
-            let mut key: u128 = 0;
-            let mut shift = 0;
-            for &e in sub.as_slice() {
-                key |= (e as u128) << shift;
-                shift += 32;
-            }
-            self.packed[k].get(&key).copied()
+            self.packed[k].get(&pack_elems(sub.as_slice())).copied()
         } else {
             self.general[k].get(sub).copied()
         }
@@ -219,6 +237,18 @@ mod tests {
         // cum(i, 0) over subrelation (1,2,3) = {0, 4}
         assert_eq!(ps.arena.materialize(ids[0]), vec![0, 4]);
         assert_eq!(ps.total_keys(), 1 + 2 + 2 + 2);
+    }
+
+    #[test]
+    fn materialize_into_reuses_buffer() {
+        let mut ps = PrimeStore::new(3);
+        let ids = ps.add(&NTuple::triple(0, 0, 0));
+        ps.add(&NTuple::triple(5, 0, 0));
+        ps.add(&NTuple::triple(5, 0, 0)); // duplicate append
+        let mut buf = vec![99, 98, 97]; // stale contents must be cleared
+        ps.arena.materialize_into(ids[0], &mut buf);
+        assert_eq!(buf, vec![0, 5]);
+        assert_eq!(ps.arena.materialize(ids[0]), buf);
     }
 
     #[test]

@@ -13,8 +13,15 @@
 //! land on the same shard, preserving the retry-idempotence the M/R
 //! pipeline relies on, and per-shard arrival order equals stream order
 //! (chunk splits are re-concatenated in index order).
+//!
+//! The route-split is the stage-1 `map → group_by_key` shape, so it runs
+//! on the [`crate::exec::Pooled`] backend — the same substrate the
+//! unified pipeline uses. Only the mining wave stays on the raw pool:
+//! it mutates long-lived shards in place, which is outside the pure
+//! data-flow contract of [`crate::exec::Backend`].
 
 use crate::core::tuple::NTuple;
+use crate::exec::{Backend, Pooled};
 use crate::util::hash::fxhash;
 use crate::util::pool;
 
@@ -43,7 +50,8 @@ pub struct Router {
     /// Staged (not yet routed) tuples, in arrival order.
     staged: Vec<NTuple>,
     max_pending: usize,
-    workers: usize,
+    /// Execution substrate for drain-wave data flow (route-split).
+    backend: Pooled,
     stats: RouterStats,
 }
 
@@ -54,7 +62,7 @@ impl Router {
             shards: (0..n).map(|i| Shard::new(i, arity)).collect(),
             staged: Vec::new(),
             max_pending: max_pending.max(1),
-            workers: workers.max(1),
+            backend: Pooled::new(workers),
             stats: RouterStats::default(),
         }
     }
@@ -98,8 +106,9 @@ impl Router {
         }
     }
 
-    /// Synchronously mine every staged tuple: parallel route-split, then
-    /// one mining task per shard (each task owns its shard for the wave).
+    /// Synchronously mine every staged tuple: parallel route-split on the
+    /// exec backend, then one mining task per shard (each task owns its
+    /// shard for the wave).
     pub fn drain(&mut self) {
         if self.staged.is_empty() {
             return;
@@ -107,27 +116,33 @@ impl Router {
         self.stats.drains += 1;
         let staged = std::mem::take(&mut self.staged);
         let n = self.shards.len();
-        let workers = self.workers;
-        // route-split off the serial path: each task hashes one chunk of
-        // the staged stream into per-shard bins
-        let n_chunks = staged.len().div_ceil(SPLIT_CHUNK);
-        let split: Vec<Vec<Vec<NTuple>>> =
-            pool::parallel_map(n_chunks, workers, 1, |ci| {
-                let lo = ci * SPLIT_CHUNK;
+        // route-split off the serial path: map chunk INDICES of the
+        // staged stream (no upfront copy) to per-shard BINS on the Pooled
+        // backend — binning runs inside the parallel map tasks, so only
+        // the per-shard concat below is serial. Chunk-major map output
+        // order makes per-shard order equal stream order.
+        let n_chunks = staged.len().div_ceil(SPLIT_CHUNK) as u32;
+        let routed: Vec<(u32, Vec<NTuple>)> = self
+            .backend
+            .map_partitions("route-split", (0..n_chunks).collect(), |&ci: &u32| {
+                let lo = ci as usize * SPLIT_CHUNK;
                 let hi = (lo + SPLIT_CHUNK).min(staged.len());
                 let mut bins: Vec<Vec<NTuple>> = vec![Vec::new(); n];
                 for t in &staged[lo..hi] {
                     bins[(fxhash(t) % n as u64) as usize].push(*t);
                 }
-                bins
-            });
+                bins.into_iter()
+                    .enumerate()
+                    .filter(|(_, bin)| !bin.is_empty())
+                    .map(|(s, bin)| (s as u32, bin))
+                    .collect()
+            })
+            .expect("the pooled backend is infallible");
         // concat bins in chunk order: per-shard order == stream order
         let mut queues: Vec<Vec<NTuple>> =
             (0..n).map(|_| Vec::with_capacity(staged.len() / n + 1)).collect();
-        for bins in split {
-            for (s, bin) in bins.into_iter().enumerate() {
-                queues[s].extend_from_slice(&bin);
-            }
+        for (s, bin) in routed {
+            queues[s as usize].extend_from_slice(&bin);
         }
         for q in &queues {
             self.stats.max_queue = self.stats.max_queue.max(q.len());
@@ -139,7 +154,7 @@ impl Router {
             .zip(queues)
             .map(|job| std::sync::Mutex::new(Some(job)))
             .collect();
-        pool::parallel_map(jobs.len(), workers, 1, |i| {
+        pool::parallel_map(jobs.len(), self.backend.workers, 1, |i| {
             let (shard, queue) = jobs[i].lock().unwrap().take().expect("taken once");
             shard.ingest(&queue);
         });

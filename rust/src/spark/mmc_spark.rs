@@ -1,16 +1,15 @@
-//! The three-stage multimodal clustering pipeline on the Spark-like
-//! engine: the same Algorithms 2–7, but with the inter-stage
-//! materialisation replaced by in-memory narrow/wide transformations —
-//! the paper's §7 expectation, executable.
-//!
-//! Stage boundaries collapse: the 6 map/reduce procedures become
-//! `flat_map → group_by_key → map → flat_map → group_by_key → map →
-//! group_by_key → filter`, i.e. exactly three wide shuffles and
-//! everything else fused.
+//! The multimodal clustering pipeline on the Spark-like engine — the
+//! paper's §7 expectation, executable. This is now just the
+//! backend-generic stage functions ([`crate::exec::stages`]) bound to
+//! [`crate::exec::SparkSim`]: the same Algorithms 2–7, with each stage
+//! running as ONE fused RDD lineage (narrow map → wide shuffle → narrow
+//! reduce, all in memory). Exactly three wide shuffles run; stage
+//! boundaries hand a `Vec` between the backend-generic stage functions,
+//! which stands in for Spark's driver-side stage barrier.
 
 use crate::core::context::PolyContext;
 use crate::core::pattern::Cluster;
-use crate::core::tuple::NTuple;
+use crate::exec::{run_pipeline, SparkSim};
 use crate::spark::rdd::SparkContext;
 
 /// Result mirror of `mmc::MmcResult` for the Spark-like engine.
@@ -26,61 +25,8 @@ pub fn run_mmc_spark(
     theta: f64,
 ) -> SparkMmcResult {
     let timer = crate::util::stats::Timer::start();
-    let tuples: Vec<NTuple> = ctx.tuples().to_vec();
-
-    let clusters = sc
-        .parallelize(tuples)
-        // Alg. 2: tuple → N ⟨subrelation, entity⟩ pairs
-        .flat_map("s1-map", |t: NTuple| {
-            (0..t.arity())
-                .map(move |k| (t.subrelation(k), t.get(k)))
-                .collect::<Vec<_>>()
-        })
-        // Alg. 3: cumuli
-        .group_by_key("s1-shuffle")
-        .map("s1-cumulus", |(sub, mut es)| {
-            es.sort_unstable();
-            es.dedup();
-            (sub, es)
-        })
-        // Alg. 4: expand back to generating tuples
-        .flat_map("s2-map", |(sub, cumulus)| {
-            let k = sub.dropped() as u32;
-            cumulus
-                .iter()
-                .map(|&e| (NTuple::from_subrelation(&sub, e), (k, cumulus.clone())))
-                .collect::<Vec<_>>()
-        })
-        // Alg. 5: assemble one cluster per generating tuple
-        .group_by_key("s2-shuffle")
-        .map("s2-assemble", |(gen, cumuli)| {
-            let n = gen.arity();
-            let mut comps: Vec<Option<Vec<u32>>> = vec![None; n];
-            for (k, c) in cumuli {
-                let slot = &mut comps[k as usize];
-                if slot.is_none() {
-                    *slot = Some(c);
-                }
-            }
-            let comps: Vec<Vec<u32>> =
-                comps.into_iter().map(|c| c.expect("cumulus present")).collect();
-            // Alg. 6's key swap happens here: key by the cluster contents
-            (comps, gen)
-        })
-        // Alg. 7: dedup by content, support = distinct generating tuples
-        .group_by_key("s3-shuffle")
-        .flat_map("s3-density", move |(comps, mut gens)| {
-            gens.sort_unstable();
-            gens.dedup();
-            let mut c = Cluster::new(comps);
-            c.support = gens.len();
-            let vol = c.volume();
-            (vol > 0.0 && c.support as f64 / vol >= theta).then_some(c)
-        })
-        .collect();
-
-    let mut clusters = clusters;
-    clusters.sort_by(|a, b| a.components.cmp(&b.components));
+    let clusters = run_pipeline(&SparkSim::new(sc), ctx, theta, false)
+        .expect("the in-memory spark-sim backend is infallible");
     SparkMmcResult { clusters, wall_ms: timer.elapsed_ms() }
 }
 

@@ -1,0 +1,89 @@
+//! The exec-layer invariant, tested end to end: for ANY random polyadic
+//! context (arity 3 and 4), density threshold, task/worker granularity,
+//! and fault-injection setting, all four backends — Sequential, Pooled,
+//! HadoopSim, SparkSim — produce the identical deduplicated cluster set
+//! (components, supports, densities) as single-pass `oac::mine_online`.
+
+use tricluster::core::context::PolyContext;
+use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::exec::{run_named, ExecTuning, BACKENDS};
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::util::proptest_lite::{assert_prop, Gen};
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    sort_clusters(&mut cs);
+    cs
+}
+
+fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) -> Result<(), String> {
+    match diff_cluster_sets(a, b) {
+        Some(diff) => Err(format!("{label}: {diff}")),
+        None => Ok(()),
+    }
+}
+
+/// Random context → every backend → exact cluster-set equality.
+#[test]
+fn prop_all_backends_equal_online() {
+    assert_prop(48, |g: &mut Gen| {
+        // small entity universes force heavy cumulus sharing — the regime
+        // where assembly/dedup can go wrong
+        let arity = 3 + g.usize_below(2);
+        let universe = 2 + g.u32_below(8);
+        let n_tuples = 1 + g.usize_below(250);
+        let mut ctx = PolyContext::new(arity);
+        for _ in 0..n_tuples {
+            let ids: Vec<u32> = (0..arity).map(|_| g.u32_below(universe)).collect();
+            ctx.add_ids(&ids);
+        }
+        let theta = if g.bool(0.5) { 0.0 } else { g.f64() * 0.6 };
+        let reference = sorted(mine_online(
+            &ctx,
+            &Constraints { min_density: theta, min_support: 0 },
+        ));
+        let tune = ExecTuning {
+            workers: 1 + g.usize_below(4),
+            tasks: 1 + g.usize_below(8),
+            // injected task retries must be invisible in the output
+            fault_prob: if g.bool(0.3) { 1.0 } else { 0.0 },
+            seed: 0xBACC ^ n_tuples as u64,
+            use_dfs: g.bool(0.2),
+        };
+        for backend in BACKENDS {
+            let run = run_named(backend, &ctx, theta, &tune)
+                .map_err(|e| format!("{backend}: {e}"))?;
+            assert_same(
+                &reference,
+                &run.clusters,
+                &format!("{backend} (arity {arity}, {n_tuples} tuples, θ={theta:.3})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The two deterministic worker-sensitive backends are bit-stable across
+/// worker counts on a fixed context.
+#[test]
+fn pooled_and_spark_stable_across_worker_counts() {
+    let ctx = tricluster::datasets::synthetic::k1(7).inner;
+    for backend in ["pool", "spark"] {
+        let baseline = run_named(
+            backend,
+            &ctx,
+            0.0,
+            &ExecTuning { workers: 1, tasks: 3, ..ExecTuning::default() },
+        )
+        .unwrap();
+        for workers in [2, 3, 8] {
+            let run = run_named(
+                backend,
+                &ctx,
+                0.0,
+                &ExecTuning { workers, tasks: 5, ..ExecTuning::default() },
+            )
+            .unwrap();
+            assert_same(&baseline.clusters, &run.clusters, backend).unwrap();
+        }
+    }
+}
