@@ -1,0 +1,248 @@
+//! CI gate: check the perf trajectory in `BENCH_cluster.json` (and, when
+//! present, `BENCH_backends.json`) against `ci/bench_baseline.json`.
+//!
+//! Run after the benches (the CI `bench-regression` step does):
+//!
+//! ```text
+//! cargo bench --bench cluster_scaling
+//! cargo bench --bench check_bench            # uses ci/bench_baseline.json
+//! cargo bench --bench check_bench -- --baseline other.json
+//! cargo bench --bench check_bench -- --pin   # rewrite baseline from current
+//! ```
+//!
+//! What it enforces (exit 1 on violation):
+//!
+//! 1. **Monotone speedup** — for every straggler rate, the
+//!    speculation-on simulated makespan is non-increasing from 1→8
+//!    nodes (within `monotone_tolerance`). This is machine-independent:
+//!    the cluster bench uses the per-record cost model.
+//! 2. **Baseline entries** — each `entries[]` item pins one
+//!    `(nodes, stragglers, speculation)` point: current
+//!    `sim_makespan_ms` must not exceed `max_sim_makespan_ms ×
+//!    (1 + tolerance)` (default tolerance 0.25, i.e. a >25% makespan
+//!    regression fails), and `speedup_vs_1node` must not fall below
+//!    `min_speedup_vs_1node`.
+//! 3. **Backend agreement** — every `BENCH_backends.json` series entry
+//!    for one dataset reports the same cluster count (belt-and-braces on
+//!    top of the in-process equivalence assertion).
+//!
+//! `--pin` rewrites the baseline from the current `BENCH_cluster.json`
+//! (max makespans = observed, speedup floors = 80% of observed), so a
+//! session with a toolchain can tighten the committed baseline.
+
+use std::collections::BTreeMap;
+use std::process::exit;
+
+use tricluster::util::cli::Args;
+use tricluster::util::json::Json;
+
+fn load(path: &str) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    match Json::parse(&text) {
+        Ok(doc) => Some(doc),
+        Err(e) => {
+            eprintln!("check_bench: {path} is not valid JSON: {e}");
+            exit(1);
+        }
+    }
+}
+
+fn f(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+fn key_of(nodes: f64, stragglers: f64, speculation: bool) -> String {
+    format!(
+        "nodes={} stragglers={:.2} spec={}",
+        nodes,
+        stragglers,
+        if speculation { "on" } else { "off" }
+    )
+}
+
+fn main() {
+    let args = Args::from_env();
+    let baseline_path = args.get_or("baseline", "ci/bench_baseline.json");
+    let cluster_path = args.get_or("cluster", "BENCH_cluster.json");
+    let backends_path = args.get_or("backends", "BENCH_backends.json");
+
+    let Some(cluster) = load(cluster_path) else {
+        // bare `cargo bench` runs targets in name order, so this checker
+        // can run before cluster_scaling has written its JSON: skip
+        // unless the caller (CI) demands the gate with --require
+        if args.has("require") {
+            eprintln!(
+                "check_bench: {cluster_path} not found — run `cargo bench --bench \
+                 cluster_scaling` first"
+            );
+            exit(1);
+        }
+        eprintln!(
+            "check_bench: {cluster_path} not found — skipping (pass -- --require \
+             to make this fatal, as CI does)"
+        );
+        return;
+    };
+    let entries = cluster.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+    if entries.is_empty() {
+        eprintln!("check_bench: {cluster_path} has no entries");
+        exit(1);
+    }
+
+    if args.has("pin") {
+        pin(baseline_path, entries);
+        return;
+    }
+
+    let Some(baseline) = load(baseline_path) else {
+        eprintln!("check_bench: baseline {baseline_path} not found");
+        exit(1);
+    };
+    let tolerance =
+        baseline.get("tolerance").and_then(Json::as_f64).unwrap_or(0.25);
+    let monotone_tol = baseline
+        .get("monotone_tolerance")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.02);
+    let require_monotone = baseline
+        .get("require_monotone_speedup")
+        .and_then(Json::as_bool)
+        .unwrap_or(true);
+    let mut failures: Vec<String> = Vec::new();
+
+    // 1. monotone speedup per (stragglers, speculation=on) series
+    if require_monotone {
+        let mut series: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+        for e in entries {
+            if e.get("speculation").and_then(Json::as_bool) != Some(true) {
+                continue;
+            }
+            series
+                .entry(format!("{:.4}", f(e, "stragglers")))
+                .or_default()
+                .push((f(e, "nodes"), f(e, "sim_makespan_ms")));
+        }
+        for (stragglers, mut points) in series {
+            points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in points.windows(2) {
+                let ((n0, m0), (n1, m1)) = (w[0], w[1]);
+                if m1 > m0 * (1.0 + monotone_tol) {
+                    failures.push(format!(
+                        "speedup not monotone at stragglers={stragglers}: {m1:.1} ms \
+                         @ {n1} nodes > {m0:.1} ms @ {n0} nodes (spec on)"
+                    ));
+                }
+            }
+        }
+    }
+
+    // 2. pinned baseline entries
+    let pins = baseline.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut checked = 0usize;
+    for pin in pins {
+        if pin.get("bench").and_then(Json::as_str) != Some("cluster_scaling") {
+            continue;
+        }
+        let (nodes, stragglers) = (f(pin, "nodes"), f(pin, "stragglers"));
+        let speculation =
+            pin.get("speculation").and_then(Json::as_bool).unwrap_or(true);
+        let key = key_of(nodes, stragglers, speculation);
+        let Some(cur) = entries.iter().find(|e| {
+            f(e, "nodes") == nodes
+                && (f(e, "stragglers") - stragglers).abs() < 1e-9
+                && e.get("speculation").and_then(Json::as_bool) == Some(speculation)
+        }) else {
+            failures.push(format!("baseline entry {key} missing from {cluster_path}"));
+            continue;
+        };
+        checked += 1;
+        let max_ms = f(pin, "max_sim_makespan_ms");
+        if max_ms.is_finite() {
+            let cur_ms = f(cur, "sim_makespan_ms");
+            if cur_ms > max_ms * (1.0 + tolerance) {
+                failures.push(format!(
+                    "{key}: sim_makespan_ms {cur_ms:.1} regressed >{:.0}% over \
+                     baseline {max_ms:.1}",
+                    tolerance * 100.0
+                ));
+            }
+        }
+        let min_speedup = f(pin, "min_speedup_vs_1node");
+        if min_speedup.is_finite() {
+            let cur_speedup = f(cur, "speedup_vs_1node");
+            if cur_speedup < min_speedup {
+                failures.push(format!(
+                    "{key}: speedup_vs_1node {cur_speedup:.2} fell below the \
+                     baseline floor {min_speedup:.2}"
+                ));
+            }
+        }
+    }
+
+    // 3. backend agreement (when the backend matrix ran)
+    if let Some(backends) = load(backends_path) {
+        let mut per_dataset: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for e in backends.get("series").and_then(Json::as_arr).unwrap_or(&[]) {
+            let ds = e
+                .get("dataset")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            per_dataset.entry(ds).or_default().push(f(e, "clusters"));
+        }
+        for (ds, counts) in per_dataset {
+            if counts.windows(2).any(|w| w[0] != w[1]) {
+                failures.push(format!(
+                    "backend matrix disagreement on {ds}: cluster counts {counts:?}"
+                ));
+            }
+        }
+    } else {
+        eprintln!("check_bench: {backends_path} absent — skipping backend agreement");
+    }
+
+    if failures.is_empty() {
+        println!(
+            "check_bench: OK — {} cluster entries, {checked} baseline pins, \
+             monotone speedup held",
+            entries.len()
+        );
+    } else {
+        for fail in &failures {
+            eprintln!("check_bench: FAIL: {fail}");
+        }
+        exit(1);
+    }
+}
+
+/// `--pin`: rewrite the baseline from the current bench output.
+fn pin(baseline_path: &str, entries: &[Json]) {
+    let mut pins: Vec<Json> = Vec::new();
+    for e in entries {
+        let mut o = BTreeMap::new();
+        o.insert("bench".to_string(), Json::Str("cluster_scaling".into()));
+        o.insert("nodes".to_string(), Json::Num(f(e, "nodes")));
+        o.insert("stragglers".to_string(), Json::Num(f(e, "stragglers")));
+        o.insert(
+            "speculation".to_string(),
+            Json::Bool(e.get("speculation").and_then(Json::as_bool).unwrap_or(true)),
+        );
+        o.insert(
+            "max_sim_makespan_ms".to_string(),
+            Json::Num(f(e, "sim_makespan_ms")),
+        );
+        o.insert(
+            "min_speedup_vs_1node".to_string(),
+            Json::Num((f(e, "speedup_vs_1node") * 0.8 * 100.0).floor() / 100.0),
+        );
+        pins.push(Json::Obj(o));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("tolerance".to_string(), Json::Num(0.25));
+    doc.insert("monotone_tolerance".to_string(), Json::Num(0.02));
+    doc.insert("require_monotone_speedup".to_string(), Json::Bool(true));
+    doc.insert("entries".to_string(), Json::Arr(pins));
+    std::fs::write(baseline_path, Json::Obj(doc).to_string())
+        .expect("write baseline");
+    println!("check_bench: pinned {baseline_path} from current BENCH_cluster.json");
+}

@@ -1,0 +1,140 @@
+//! Bench: cluster scaling — the identical cumuli → assembly →
+//! dedup+density workload on the simulated N-node `ClusterSim` backend,
+//! swept over nodes × straggler rate × speculation. Writes
+//! `BENCH_cluster.json` (repo root): simulated-makespan speedup curves
+//! mirroring the paper's scalability figures, with distribution itself
+//! (placement, stragglers, speculation) as the variable.
+//!
+//! Uses the per-record cost model, so every number is a deterministic
+//! function of the workload and the seed — machine-independent, which is
+//! what lets `ci/check_bench.rs` pin the trajectory against
+//! `ci/bench_baseline.json` (monotone speedup 1→8 nodes with speculation
+//! on, speedup floors, optional absolute makespans).
+//!
+//! Doubles as an acceptance gate: every configuration is checked against
+//! the online-miner reference cluster set, so a divergence fails the
+//! process. `TRICLUSTER_BENCH_FULL=1` for the paper-sized context.
+
+use std::collections::BTreeMap;
+
+use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::datasets::{movielens, MovielensParams};
+use tricluster::exec::{run_pipeline, ExecTuning};
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::util::json::Json;
+
+/// Simulated per-record task cost (ms) — the deterministic cost model.
+const COST_MS_PER_RECORD: f64 = 0.002;
+
+/// Fixed per-phase task count: the sweep pins granularity so the task
+/// duration multiset AND the per-task straggler fates are identical at
+/// every node count — the curves then isolate distribution (the
+/// adaptive-task-count path is exercised by the equivalence tests and
+/// `experiment --id cluster-scaling` instead).
+const TASKS: usize = 64;
+
+const NODE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const STRAGGLER_RATES: [f64; 3] = [0.0, 0.1, 0.3];
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    sort_clusters(&mut cs);
+    cs
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn main() {
+    let full = std::env::var("TRICLUSTER_BENCH_FULL").is_ok();
+    let tuples = if full { 200_000 } else { 20_000 };
+    let ctx = movielens(&MovielensParams::with_tuples(tuples));
+    let reference = sorted(mine_online(&ctx, &Constraints::none()));
+    eprintln!(
+        "cluster_scaling bench (full={full}): {} tuples, nodes {:?} x stragglers {:?} x spec",
+        ctx.len(),
+        NODE_COUNTS,
+        STRAGGLER_RATES
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    for &stragglers in &STRAGGLER_RATES {
+        for speculation in [true, false] {
+            let mut base = f64::NAN; // 1-node makespan of this series
+            let mut prev = f64::INFINITY;
+            for &nodes in &NODE_COUNTS {
+                let tune = ExecTuning {
+                    nodes,
+                    straggler_prob: stragglers,
+                    speculation,
+                    cost_ms_per_record: Some(COST_MS_PER_RECORD),
+                    tasks: TASKS,
+                    adaptive_tasks: false,
+                    seed: 0xC1_05_7E,
+                    ..ExecTuning::default()
+                };
+                let backend = tune.cluster_backend().expect("cluster backend");
+                let clusters =
+                    sorted(run_pipeline(&backend, &ctx, 0.0, false).expect("pipeline"));
+                if let Some(diff) = diff_cluster_sets(&reference, &clusters) {
+                    panic!(
+                        "cluster diverged from mine_online (nodes={nodes}, \
+                         stragglers={stragglers}, spec={speculation}): {diff}"
+                    );
+                }
+                let makespan = backend.sim_makespan_ms();
+                if nodes == NODE_COUNTS[0] {
+                    base = makespan;
+                }
+                let speedup = base / makespan;
+                let stats = backend.take_stats();
+                let spec_launched: usize = stats.iter().map(|s| s.spec_launched).sum();
+                let spec_wins: usize = stats.iter().map(|s| s.spec_wins).sum();
+                let failures: usize = stats.iter().map(|s| s.failures).sum();
+                eprintln!(
+                    "  nodes={nodes} stragglers={stragglers:.2} spec={}: \
+                     makespan {makespan:9.1} ms  speedup {speedup:5.2}x  \
+                     (spec {spec_launched}/{spec_wins})",
+                    if speculation { "on " } else { "off" }
+                );
+                // the headline acceptance property, enforced at the source:
+                // with speculation on, adding nodes never slows the cluster
+                if speculation && makespan > prev * 1.02 {
+                    panic!(
+                        "non-monotone speedup with speculation on: {makespan} ms at \
+                         {nodes} nodes > {prev} ms at fewer (stragglers={stragglers})"
+                    );
+                }
+                prev = makespan;
+                let mut o = BTreeMap::new();
+                o.insert("nodes".to_string(), num(nodes as f64));
+                o.insert("stragglers".to_string(), num(stragglers));
+                o.insert("speculation".to_string(), Json::Bool(speculation));
+                o.insert("sim_makespan_ms".to_string(), num(makespan));
+                o.insert("speedup_vs_1node".to_string(), num(speedup));
+                o.insert("spec_launched".to_string(), num(spec_launched as f64));
+                o.insert("spec_wins".to_string(), num(spec_wins as f64));
+                o.insert("failures".to_string(), num(failures as f64));
+                o.insert("clusters".to_string(), num(clusters.len() as f64));
+                entries.push(Json::Obj(o));
+            }
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("cluster_scaling".into()));
+    doc.insert("full".to_string(), Json::Bool(full));
+    doc.insert("tuples".to_string(), num(ctx.len() as f64));
+    doc.insert("cost_ms_per_record".to_string(), num(COST_MS_PER_RECORD));
+    doc.insert(
+        "nodes".to_string(),
+        Json::Arr(NODE_COUNTS.iter().map(|&n| num(n as f64)).collect()),
+    );
+    doc.insert("entries".to_string(), Json::Arr(entries));
+    std::fs::write("BENCH_cluster.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_cluster.json");
+    eprintln!(
+        "wrote BENCH_cluster.json (all configurations agreed with mine_online; \
+         speedup monotone 1→8 nodes with speculation on)"
+    );
+}

@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::coordinator::report::Report;
 use crate::core::context::PolyContext;
 use crate::datasets;
-use crate::exec::{run_named, ExecTuning, BACKENDS};
+use crate::exec::{run_named, run_pipeline, ExecTuning, BACKENDS};
 use crate::mmc::{run_mmc, MmcConfig, MmcResult};
 use crate::noac::{mine_noac, NoacParams};
 use crate::oac::{mine_online, Constraints};
@@ -349,6 +349,82 @@ pub fn backends(cfg: &ExpConfig, workers: usize) -> Result<Report> {
             row.push(fmt_ms(best));
         }
         r.push(row);
+    }
+    Ok(r)
+}
+
+/// Cluster-scaling: the simulated N-node sweep (mirrors the paper's
+/// Fig. 2 regime, but with distribution itself as the variable) —
+/// simulated makespan and speedup vs 1 node, speculation on and off,
+/// under `straggler_prob` stragglers. Uses the per-record cost model so
+/// the numbers are machine-independent, and checks every configuration
+/// against `oac::mine_online`.
+pub fn cluster_scaling(cfg: &ExpConfig, straggler_prob: f64) -> Result<Report> {
+    use crate::core::pattern::{diff_cluster_sets, sort_clusters};
+    let ctx = if cfg.full {
+        datasets::movielens(&datasets::MovielensParams::with_tuples(100_000))
+    } else {
+        datasets::movielens(&datasets::MovielensParams::with_tuples(10_000))
+    };
+    let mut reference = crate::oac::mine_online(
+        &ctx,
+        &Constraints { min_density: cfg.theta, min_support: 0 },
+    );
+    sort_clusters(&mut reference);
+    let mut node_counts = vec![1usize, 2, 4, 8];
+    if !node_counts.contains(&cfg.nodes) {
+        node_counts.push(cfg.nodes);
+        node_counts.sort_unstable();
+    }
+    let mut r = Report::new(
+        &format!(
+            "Cluster scaling: simulated makespan, {} tuples, {:.0}% stragglers",
+            ctx.len(),
+            straggler_prob * 100.0
+        ),
+        vec![
+            "Nodes".into(),
+            "Makespan ms (spec on)".into(),
+            "Speedup (spec on)".into(),
+            "Makespan ms (spec off)".into(),
+            "Speedup (spec off)".into(),
+            "Spec launched/won".into(),
+        ],
+    );
+    let mut base = [f64::NAN; 2]; // 1-node makespan per speculation mode
+    for &nodes in &node_counts {
+        let mut cells: Vec<String> = vec![nodes.to_string()];
+        let mut spec_cell = String::new();
+        for (mode, speculation) in [(0usize, true), (1usize, false)] {
+            let tune = ExecTuning {
+                nodes,
+                straggler_prob,
+                speculation,
+                seed: cfg.seed,
+                cost_ms_per_record: Some(0.002),
+                ..ExecTuning::default()
+            };
+            let backend = tune.cluster_backend()?;
+            let mut clusters = run_pipeline(&backend, &ctx, cfg.theta, false)?;
+            sort_clusters(&mut clusters);
+            if let Some(diff) = diff_cluster_sets(&reference, &clusters) {
+                anyhow::bail!("cluster backend diverged at {nodes} nodes: {diff}");
+            }
+            let makespan = backend.sim_makespan_ms();
+            if nodes == node_counts[0] {
+                base[mode] = makespan;
+            }
+            cells.push(fmt_ms(makespan));
+            cells.push(format!("{:.2}x", base[mode] / makespan));
+            if speculation {
+                let stats = backend.take_stats();
+                let launched: usize = stats.iter().map(|s| s.spec_launched).sum();
+                let won: usize = stats.iter().map(|s| s.spec_wins).sum();
+                spec_cell = format!("{launched}/{won}");
+            }
+        }
+        cells.push(spec_cell);
+        r.push(cells);
     }
     Ok(r)
 }

@@ -2,7 +2,7 @@
 //!
 //! A backend runs one map → shuffle → reduce round over typed records.
 //! The algorithm layer ([`crate::exec::stages`]) is written once against
-//! this trait; the four implementations differ only in *how* the round is
+//! this trait; the five implementations differ only in *how* the round is
 //! executed:
 //!
 //! | backend                | map phase            | shuffle              | reduce phase         |
@@ -11,6 +11,11 @@
 //! | [`Pooled`]             | `util::pool` chunks  | hash group + sort    | `util::pool` chunks  |
 //! | [`HadoopSim`]          | map tasks + faults   | DFS-materialised     | reduce tasks         |
 //! | [`SparkSim`]           | narrow RDD op        | in-memory wide op    | narrow RDD op        |
+//! | [`ClusterSim`]         | placed sim tasks     | hash group + barrier | placed sim tasks     |
+//!
+//! `ClusterSim` additionally simulates multi-node placement, stragglers,
+//! failures, and speculative execution on a virtual clock (see
+//! [`crate::exec::cluster_sim`]).
 //!
 //! Record bounds are the union of what the engines need: the Hadoop-style
 //! engine serialises everything through [`crate::hadoop::record::Record`],
@@ -21,6 +26,7 @@
 //! [`Pooled`]: crate::exec::Pooled
 //! [`HadoopSim`]: crate::exec::HadoopSim
 //! [`SparkSim`]: crate::exec::SparkSim
+//! [`ClusterSim`]: crate::exec::ClusterSim
 
 use anyhow::Result;
 
@@ -55,6 +61,32 @@ pub fn group_pairs<K: Key, V>(pairs: Vec<(K, V)>) -> Vec<(K, Vec<V>)> {
     let mut out: Vec<(K, Vec<V>)> = groups.into_iter().collect();
     out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
     out
+}
+
+/// Fast-path grouping for pairs whose keys are ALREADY in ascending
+/// order (equal keys adjacent): one O(n) adjacent-run scan — no hash
+/// map, no O(n log n) key sort. Produces exactly what [`group_pairs`]
+/// would: groups in key order, values in input order within a key.
+///
+/// Caller contract: `pairs` is sorted by key (checked with
+/// `debug_assert!`). [`sorted_by_key`] is the cheap runtime test.
+pub fn group_pairs_presorted<K: Key, V>(pairs: Vec<(K, V)>) -> Vec<(K, Vec<V>)> {
+    debug_assert!(sorted_by_key(&pairs), "group_pairs_presorted needs sorted keys");
+    let mut out: Vec<(K, Vec<V>)> = Vec::new();
+    for (k, v) in pairs {
+        if out.last().is_some_and(|(last, _)| *last == k) {
+            out.last_mut().expect("just checked").1.push(v);
+        } else {
+            out.push((k, vec![v]));
+        }
+    }
+    out
+}
+
+/// O(n) check whether a pair list is already key-sorted (the
+/// [`group_pairs_presorted`] precondition).
+pub fn sorted_by_key<K: Key, V>(pairs: &[(K, V)]) -> bool {
+    pairs.windows(2).all(|w| w[0].0 <= w[1].0)
 }
 
 /// A pluggable execution substrate: three primitives (`map_partitions`,
@@ -128,8 +160,11 @@ pub trait Backend {
 
     /// A shuffle → reduce round over PRE-KEYED pairs (no map phase): the
     /// input moves straight into the shuffle, so no backend pays an
-    /// identity-map clone. Fused engines (HadoopSim) override this with
-    /// an identity-mapper job to keep their per-round accounting.
+    /// identity-map clone. Already-key-sorted input (detected with one
+    /// O(n) scan) skips the hash-group + O(n log n) key sort entirely
+    /// via [`group_pairs_presorted`]. Fused engines (HadoopSim) override
+    /// this with an identity-mapper job to keep their per-round
+    /// accounting.
     fn group_reduce<K, V, O, RF>(
         &self,
         label: &str,
@@ -142,7 +177,11 @@ pub trait Backend {
         O: Data,
         RF: Fn(&K, Vec<V>) -> Vec<O> + Sync,
     {
-        let groups = self.group_by_key(&format!("{label}-shuffle"), pairs)?;
+        let groups = if sorted_by_key(&pairs) {
+            group_pairs_presorted(pairs)
+        } else {
+            self.group_by_key(&format!("{label}-shuffle"), pairs)?
+        };
         self.reduce(&format!("{label}-reduce"), groups, reduce)
     }
 }
@@ -161,5 +200,40 @@ mod tests {
     #[test]
     fn no_combine_is_none() {
         assert!(no_combine::<u32, u32>().is_none());
+    }
+
+    #[test]
+    fn presorted_grouping_matches_group_pairs() {
+        let pairs = vec![(1u32, 20u32), (1, 40), (2, 10), (2, 30), (5, 1)];
+        assert!(sorted_by_key(&pairs));
+        assert_eq!(group_pairs_presorted(pairs.clone()), group_pairs(pairs));
+    }
+
+    #[test]
+    fn presorted_grouping_keeps_value_order_and_handles_edges() {
+        assert_eq!(
+            group_pairs_presorted(Vec::<(u32, u32)>::new()),
+            Vec::<(u32, Vec<u32>)>::new()
+        );
+        assert_eq!(group_pairs_presorted(vec![(3u32, 9u32)]), vec![(3, vec![9])]);
+    }
+
+    #[test]
+    fn sortedness_check_detects_unsorted() {
+        assert!(sorted_by_key(&[(1u32, 0u32), (1, 1), (2, 2)]));
+        assert!(!sorted_by_key(&[(2u32, 0u32), (1, 1)]));
+        assert!(sorted_by_key(&[] as &[(u32, u32)]));
+    }
+
+    #[test]
+    fn default_group_reduce_fast_path_agrees_with_slow_path() {
+        use crate::exec::Sequential;
+        let sorted_in = vec![(1u32, 1u32), (1, 2), (2, 3)];
+        let shuffled = vec![(2u32, 3u32), (1, 1), (1, 2)];
+        let sum = |k: &u32, vs: Vec<u32>| vec![(*k, vs.iter().sum::<u32>())];
+        let fast = Sequential.group_reduce("t", sorted_in, sum).unwrap();
+        let slow = Sequential.group_reduce("t", shuffled, sum).unwrap();
+        assert_eq!(fast, vec![(1, 3), (2, 3)]);
+        assert_eq!(fast, slow);
     }
 }

@@ -1,0 +1,752 @@
+//! The `ClusterSim` backend: an N-node cluster simulator behind the
+//! [`Backend`] trait — the repo's first engine where *distribution
+//! itself* (task placement, stragglers, speculative execution) is a
+//! first-class, testable variable.
+//!
+//! Every map/reduce phase executes its task closures for real (on
+//! [`crate::util::pool`], so outputs are exact and input-order
+//! preserving) while a deterministic discrete-event simulation replays
+//! the tasks onto `nodes × slots_per_node` simulated worker slots:
+//!
+//! * **Placement** — a pluggable [`Placement`] policy (round-robin,
+//!   locality-aware by shuffle-key partition, least-loaded greedy list
+//!   scheduling) picks the node for each task.
+//! * **Stragglers / heterogeneity** — per-task slowdown draws and
+//!   optional per-node slowdown spread stretch simulated durations.
+//! * **Failures** — a failed first attempt wastes half its duration on
+//!   its node, then is rescheduled on the least-loaded node (retries
+//!   never fail again, so `failure_prob = 1.0` stays terminating).
+//! * **Speculation** — a task whose projected duration exceeds
+//!   `speculation_factor ×` the running median of realized task
+//!   durations gets a duplicate attempt on the least-loaded *other*
+//!   slot; the attempts race, first result wins, the loser is cancelled
+//!   (its slot is released at the winner's finish time) and only the
+//!   winner's output is delivered — duplicate results are deduplicated
+//!   by task id, so the backend-equivalence invariant holds under any
+//!   fault/straggler schedule. The running median is primed with the
+//!   median *estimated* cost of the phase's tasks (a JobTracker knows
+//!   its input-split sizes), so even the first scheduled task can be
+//!   rescued; backup attempts do not re-draw the straggler fate — the
+//!   detector just excluded that cause, and this is what makes
+//!   node-count sweeps monotone under any straggler schedule.
+//! * **Adaptive task counts** — each phase picks its task count from
+//!   the input size and the previous phase's measured cost skew
+//!   ([`super::placement::adaptive_task_count`]), threading granularity
+//!   through `exec::stages` without the stage functions knowing.
+//!
+//! All randomness comes from a seeded [`crate::util::rng::Rng`] with a
+//! fixed number of draws per task in task-index order, so for a FIXED
+//! task count the straggler/failure schedule is identical across node
+//! counts and placement policies. Note that adaptive task counts (the
+//! default) derive granularity from `nodes × slots`, which changes the
+//! task set itself across node counts — sweeps that must be comparable
+//! point to point pin the task count and disable adaptivity, as
+//! `benches/cluster_scaling.rs` (`BENCH_cluster.json`) does.
+//! With a [`CostModel::PerRecord`] cost model the whole simulation is
+//! bit-deterministic machine to machine; with [`CostModel::Measured`]
+//! task costs are real wall times (the schedule structure still only
+//! depends on the seed).
+//!
+//! The shuffle between phases is modelled as a barrier: every slot
+//! advances to the phase makespan before the next phase schedules
+//! (Hadoop's map→reduce barrier), and grouping itself is charged zero
+//! simulated time so speedup curves isolate compute distribution.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::backend::{group_pairs, Backend, Data, Key};
+use super::placement::{adaptive_task_count, NodeView, Placement, TaskMeta};
+use crate::util::hash::fxhash;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+/// How a task's simulated base cost is derived.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CostModel {
+    /// Real wall time of the task closure on this machine.
+    Measured,
+    /// `records × ms` — machine-independent, bit-deterministic; used by
+    /// the scaling bench and the CI baseline check.
+    PerRecord(f64),
+}
+
+/// Tuning for the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Simulated nodes.
+    pub nodes: usize,
+    /// Worker slots per node (a node's local pool).
+    pub slots_per_node: usize,
+    /// Probability a task attempt straggles (duration × `straggler_factor`).
+    pub straggler_prob: f64,
+    /// Slowdown multiplier for a straggling attempt.
+    pub straggler_factor: f64,
+    /// Probability the FIRST attempt of a task fails mid-flight.
+    pub failure_prob: f64,
+    /// Launch speculative duplicates for detected stragglers.
+    pub speculation: bool,
+    /// Straggler detection threshold: projected duration vs running
+    /// median of realized task durations.
+    pub speculation_factor: f64,
+    /// Per-node heterogeneity: node `i` runs at `1 + spread·i/(nodes-1)`
+    /// slowdown (0.0 = homogeneous, keeps node-count sweeps monotone).
+    pub node_slowdown_spread: f64,
+    /// Simulated cost of a task.
+    pub cost: CostModel,
+    /// Fixed task count per phase when `adaptive_tasks` is off.
+    pub tasks: usize,
+    /// Pick per-phase task counts from input size + previous skew.
+    pub adaptive_tasks: bool,
+    /// REAL executor threads that run the task closures.
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        let workers = pool::default_workers();
+        Self {
+            nodes: 4,
+            slots_per_node: 2,
+            straggler_prob: 0.0,
+            straggler_factor: 6.0,
+            failure_prob: 0.0,
+            speculation: true,
+            speculation_factor: 1.5,
+            node_slowdown_spread: 0.0,
+            cost: CostModel::Measured,
+            tasks: 16,
+            adaptive_tasks: true,
+            workers,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Per-phase simulation outcome, drained via [`ClusterSim::take_stats`].
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// Phase label (`s1-map`, `s3-reduce`, ...).
+    pub label: String,
+    pub tasks: usize,
+    /// Records processed by the phase.
+    pub records: usize,
+    /// Simulated phase makespan (barrier to barrier), ms.
+    pub sim_phase_ms: f64,
+    /// max/mean of base task costs — fed to the next phase's adaptive
+    /// task count.
+    pub skew: f64,
+    /// Attempts that drew the straggler slowdown.
+    pub stragglers: usize,
+    /// Speculative duplicates launched / that won their race.
+    pub spec_launched: usize,
+    pub spec_wins: usize,
+    /// First attempts that failed and were rescheduled.
+    pub failures: usize,
+}
+
+/// One task entering the simulator.
+struct SimTask {
+    /// Locality key (input-split index or key-hash partition).
+    partition: u64,
+    /// Base cost before node slowdown / straggler multipliers, ms.
+    base_ms: f64,
+}
+
+/// Simulation state carried across phases (the cluster's clock).
+struct SimState {
+    /// Accumulated simulated makespan over all phases so far, ms.
+    makespan_ms: f64,
+    /// Previous phase's measured skew (max/mean of base task costs).
+    prev_skew: f64,
+    /// Phase counter — salts the per-phase RNG stream.
+    round: u64,
+    stats: Vec<ClusterStats>,
+}
+
+/// The simulated-cluster backend (fifth entry of [`super::BACKENDS`]).
+pub struct ClusterSim {
+    cfg: ClusterConfig,
+    placement: Box<dyn Placement>,
+    state: Mutex<SimState>,
+}
+
+/// Insert into an ascending-sorted vec (running-median bookkeeping).
+fn insert_sorted(xs: &mut Vec<f64>, x: f64) {
+    let at = xs.partition_point(|&y| y < x);
+    xs.insert(at, x);
+}
+
+fn median_sorted(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs[xs.len() / 2])
+    }
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ClusterConfig, placement: Box<dyn Placement>) -> Self {
+        Self {
+            cfg,
+            placement,
+            state: Mutex::new(SimState {
+                makespan_ms: 0.0,
+                prev_skew: 1.0,
+                round: 0,
+                stats: Vec::new(),
+            }),
+        }
+    }
+
+    /// Default-tuned homogeneous 4-node cluster with least-loaded
+    /// placement.
+    pub fn with_defaults() -> Self {
+        Self::new(ClusterConfig::default(), Box::new(super::placement::LeastLoaded))
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Total simulated makespan accumulated since construction, ms.
+    pub fn sim_makespan_ms(&self) -> f64 {
+        self.state.lock().unwrap().makespan_ms
+    }
+
+    /// Drain per-phase stats collected so far, in phase order.
+    pub fn take_stats(&self) -> Vec<ClusterStats> {
+        std::mem::take(&mut self.state.lock().unwrap().stats)
+    }
+
+    /// Task count for a phase over `items` input items.
+    fn task_count(&self, items: usize, prev_skew: f64) -> usize {
+        if self.cfg.adaptive_tasks {
+            adaptive_task_count(
+                items,
+                self.cfg.nodes.max(1) * self.cfg.slots_per_node.max(1),
+                prev_skew,
+            )
+        } else {
+            self.cfg.tasks.clamp(1, items.max(1))
+        }
+    }
+
+    /// Simulated slowdown of node `i` (1.0 when homogeneous).
+    fn node_slowdown(&self, i: usize) -> f64 {
+        if self.cfg.nodes <= 1 || self.cfg.node_slowdown_spread <= 0.0 {
+            1.0
+        } else {
+            1.0 + self.cfg.node_slowdown_spread * i as f64 / (self.cfg.nodes - 1) as f64
+        }
+    }
+
+    /// Replay `tasks` onto the simulated cluster: placement, stragglers,
+    /// failures, speculation, first-result-wins. Advances the global
+    /// clock by the phase makespan (barrier semantics) and records a
+    /// [`ClusterStats`] entry.
+    fn simulate_phase(&self, label: &str, tasks: &[SimTask]) {
+        let nodes = self.cfg.nodes.max(1);
+        let slots = self.cfg.slots_per_node.max(1);
+        let mut state = self.state.lock().unwrap();
+        state.round += 1;
+        let round = state.round;
+        let mut stats = ClusterStats {
+            label: label.to_string(),
+            tasks: tasks.len(),
+            records: 0,
+            sim_phase_ms: 0.0,
+            skew: 1.0,
+            stragglers: 0,
+            spec_launched: 0,
+            spec_wins: 0,
+            failures: 0,
+        };
+        if tasks.is_empty() {
+            state.stats.push(stats);
+            return;
+        }
+        // per-phase RNG with a FIXED number of draws per task in task
+        // order, so the schedule is identical across node counts and
+        // placement policies
+        let mut rng =
+            Rng::new(self.cfg.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // lane[node][slot] = simulated time the slot frees up (phase-local)
+        let mut lanes: Vec<Vec<f64>> = vec![vec![0.0; slots]; nodes];
+        let mut busy: Vec<f64> = vec![0.0; nodes];
+        // running median of task durations, primed with the median
+        // ESTIMATED cost so detection works from the very first task
+        let mut realized: Vec<f64> = Vec::with_capacity(tasks.len() + 1);
+        {
+            let mut est: Vec<f64> = tasks.iter().map(|t| t.base_ms).collect();
+            est.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            realized.push(est[est.len() / 2]);
+        }
+        let mut phase_end = 0.0f64;
+
+        let views = |lanes: &[Vec<f64>], busy: &[f64]| -> Vec<NodeView> {
+            lanes
+                .iter()
+                .enumerate()
+                .map(|(id, ls)| NodeView {
+                    id,
+                    free_at_ms: ls.iter().cloned().fold(f64::INFINITY, f64::min),
+                    busy_ms: busy[id],
+                })
+                .collect()
+        };
+        // earliest slot overall, optionally excluding one (node, slot)
+        let earliest_slot = |lanes: &[Vec<f64>],
+                             exclude: Option<(usize, usize)>|
+         -> Option<(usize, usize, f64)> {
+            let mut best: Option<(usize, usize, f64)> = None;
+            for (n, ls) in lanes.iter().enumerate() {
+                for (s, &free) in ls.iter().enumerate() {
+                    if exclude == Some((n, s)) {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((_, _, b)) => free < b,
+                    };
+                    if better {
+                        best = Some((n, s, free));
+                    }
+                }
+            }
+            best
+        };
+
+        for (i, task) in tasks.iter().enumerate() {
+            // fixed draw schedule: 3 draws per task in task order,
+            // branch-independent — so the straggler/failure fates are
+            // identical across node counts and placement policies
+            let straggle1 = rng.chance(self.cfg.straggler_prob);
+            let fail = rng.chance(self.cfg.failure_prob);
+            let straggle2 = rng.chance(self.cfg.straggler_prob);
+
+            let meta = TaskMeta {
+                index: i,
+                partition: task.partition,
+                est_cost_ms: task.base_ms,
+            };
+            let node = self.placement.place(&meta, &views(&lanes, &busy)).min(nodes - 1);
+            let slot = (0..slots)
+                .min_by(|&a, &b| lanes[node][a].partial_cmp(&lanes[node][b]).unwrap())
+                .unwrap();
+            let mut start = lanes[node][slot];
+            let mult1 = if straggle1 { self.cfg.straggler_factor } else { 1.0 };
+            let mut active = (node, slot);
+            let mut dur = task.base_ms * self.node_slowdown(node) * mult1;
+            if straggle1 {
+                stats.stragglers += 1;
+            }
+            let first_attempt_start = start;
+            if fail {
+                // first attempt dies halfway; its slot is released then,
+                // and the retry goes to the earliest slot anywhere
+                stats.failures += 1;
+                let abort = start + 0.5 * dur;
+                lanes[node][slot] = abort;
+                busy[node] += 0.5 * dur;
+                let (rn, rs, free) =
+                    earliest_slot(&lanes, None).expect("cluster has slots");
+                let mult_r = if straggle2 { self.cfg.straggler_factor } else { 1.0 };
+                if straggle2 {
+                    stats.stragglers += 1;
+                }
+                active = (rn, rs);
+                start = abort.max(free);
+                dur = task.base_ms * self.node_slowdown(rn) * mult_r;
+            }
+            let finish = start + dur;
+            // straggler detection: projected duration vs the running
+            // median of realized durations (scheduling order stands in
+            // for completion order at this simulation granularity)
+            let mut completion = finish;
+            let median = median_sorted(&realized);
+            let backup = if self.cfg.speculation {
+                median.filter(|&m| m > 0.0 && dur > self.cfg.speculation_factor * m)
+            } else {
+                None
+            };
+            if let Some(m) = backup {
+                if let Some((bn, bs, bfree)) = earliest_slot(&lanes, Some(active)) {
+                    stats.spec_launched += 1;
+                    let detect = start + self.cfg.speculation_factor * m;
+                    let bstart = detect.max(bfree);
+                    // backups never re-draw the straggler fate: the
+                    // detector just excluded that cause
+                    let bdur = task.base_ms * self.node_slowdown(bn);
+                    let bfinish = bstart + bdur;
+                    completion = finish.min(bfinish);
+                    if bfinish < finish {
+                        // backup wins: original attempt cancelled at the
+                        // winner's finish — first-result-wins, the
+                        // loser's (identical) output is dropped
+                        stats.spec_wins += 1;
+                        lanes[active.0][active.1] = completion;
+                        busy[active.0] += completion - start;
+                        lanes[bn][bs] = bfinish;
+                        busy[bn] += bdur;
+                    } else {
+                        // original wins: backup cancelled at the winner's
+                        // finish — or never started at all, leaving its
+                        // slot untouched
+                        lanes[active.0][active.1] = finish;
+                        busy[active.0] += dur;
+                        let bused = (completion - bstart).max(0.0);
+                        if bused > 0.0 {
+                            lanes[bn][bs] = bstart + bused;
+                            busy[bn] += bused;
+                        }
+                    }
+                } else {
+                    lanes[active.0][active.1] = finish;
+                    busy[active.0] += dur;
+                }
+            } else {
+                lanes[active.0][active.1] = finish;
+                busy[active.0] += dur;
+            }
+            insert_sorted(&mut realized, completion - first_attempt_start);
+            phase_end = phase_end.max(completion);
+        }
+
+        let total: f64 = tasks.iter().map(|t| t.base_ms).sum();
+        let max = tasks.iter().map(|t| t.base_ms).fold(0.0, f64::max);
+        let mean = total / tasks.len() as f64;
+        stats.skew = if mean > 0.0 { max / mean } else { 1.0 };
+        stats.sim_phase_ms = phase_end;
+        state.prev_skew = stats.skew;
+        state.makespan_ms += phase_end; // barrier: next phase starts here
+        state.stats.push(stats);
+    }
+
+    fn prev_skew(&self) -> f64 {
+        self.state.lock().unwrap().prev_skew
+    }
+
+    /// Attach record counts to the latest stats entry (executed outside
+    /// the simulate lock).
+    fn note_records(&self, records: usize) {
+        if let Some(last) = self.state.lock().unwrap().stats.last_mut() {
+            last.records = records;
+        }
+    }
+
+    fn base_cost(&self, measured_ms: f64, records: usize) -> f64 {
+        match self.cfg.cost {
+            CostModel::Measured => measured_ms.max(1e-6),
+            CostModel::PerRecord(ms) => (records as f64 * ms).max(1e-6),
+        }
+    }
+}
+
+impl Backend for ClusterSim {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    /// Map phase: input split into adaptively-many tasks, each executed
+    /// for real (outputs concatenated in split order — input order is
+    /// preserved) and replayed onto the simulated cluster. A map task's
+    /// locality key is its input-split index.
+    fn map_partitions<I, O, F>(&self, label: &str, input: Vec<I>, f: F) -> Result<Vec<O>>
+    where
+        I: Data,
+        O: Data,
+        F: Fn(&I) -> Vec<O> + Sync,
+    {
+        let n = input.len();
+        if n == 0 {
+            self.simulate_phase(label, &[]);
+            return Ok(Vec::new());
+        }
+        let t_count = self.task_count(n, self.prev_skew());
+        let per = n.div_ceil(t_count).max(1);
+        let splits: Vec<&[I]> = input.chunks(per).collect();
+        let outs: Vec<(Vec<O>, f64)> =
+            pool::parallel_map(splits.len(), self.cfg.workers, 1, |t| {
+                let timer = Timer::start();
+                let mut out = Vec::new();
+                for item in splits[t] {
+                    out.extend(f(item));
+                }
+                (out, timer.elapsed_ms())
+            });
+        let tasks: Vec<SimTask> = outs
+            .iter()
+            .enumerate()
+            .map(|(t, (_, ms))| SimTask {
+                partition: t as u64,
+                base_ms: self.base_cost(*ms, splits[t].len()),
+            })
+            .collect();
+        self.simulate_phase(label, &tasks);
+        self.note_records(n);
+        Ok(outs.into_iter().flat_map(|(o, _)| o).collect())
+    }
+
+    /// The shuffle: deterministic in-memory grouping (sorted by key).
+    /// Simulated as a barrier — grouping is charged zero simulated time
+    /// so node-count sweeps isolate compute distribution.
+    fn group_by_key<K, V>(&self, _label: &str, pairs: Vec<(K, V)>) -> Result<Vec<(K, Vec<V>)>>
+    where
+        K: Key,
+        V: Data,
+    {
+        Ok(group_pairs(pairs))
+    }
+
+    /// Reduce phase: groups chunked into tasks; a reduce task's locality
+    /// key is the hash partition of its first key (so locality-aware
+    /// placement co-locates a partition's reduce work).
+    fn reduce<K, V, O, F>(&self, label: &str, groups: Vec<(K, Vec<V>)>, f: F) -> Result<Vec<O>>
+    where
+        K: Key,
+        V: Data,
+        O: Data,
+        F: Fn(&K, Vec<V>) -> Vec<O> + Sync,
+    {
+        let n = groups.len();
+        if n == 0 {
+            self.simulate_phase(label, &[]);
+            return Ok(Vec::new());
+        }
+        let t_count = self.task_count(n, self.prev_skew());
+        let per = n.div_ceil(t_count).max(1);
+        let mut buckets: Vec<Vec<(K, Vec<V>)>> = Vec::with_capacity(t_count);
+        let mut metas: Vec<(u64, usize)> = Vec::with_capacity(t_count); // (partition, records)
+        let mut it = groups.into_iter();
+        loop {
+            let chunk: Vec<(K, Vec<V>)> = it.by_ref().take(per).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            let partition = fxhash(&chunk[0].0);
+            let records = chunk.iter().map(|(_, vs)| vs.len()).sum();
+            metas.push((partition, records));
+            buckets.push(chunk);
+        }
+        // hand each task exclusive ownership of its bucket
+        let slots: Vec<Mutex<Option<Vec<(K, Vec<V>)>>>> =
+            buckets.into_iter().map(|b| Mutex::new(Some(b))).collect();
+        let outs: Vec<(Vec<O>, f64)> =
+            pool::parallel_map(slots.len(), self.cfg.workers, 1, |t| {
+                let bucket = slots[t].lock().unwrap().take().expect("taken once");
+                let timer = Timer::start();
+                let mut out = Vec::new();
+                for (k, vs) in bucket {
+                    out.extend(f(&k, vs));
+                }
+                (out, timer.elapsed_ms())
+            });
+        let total_records: usize = metas.iter().map(|&(_, r)| r).sum();
+        let tasks: Vec<SimTask> = outs
+            .iter()
+            .zip(&metas)
+            .map(|((_, ms), &(partition, records))| SimTask {
+                partition,
+                base_ms: self.base_cost(*ms, records),
+            })
+            .collect();
+        self.simulate_phase(label, &tasks);
+        self.note_records(total_records);
+        Ok(outs.into_iter().flat_map(|(o, _)| o).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::no_combine;
+    use super::super::placement::{by_name, LeastLoaded, LocalityAware, RoundRobin};
+    use super::*;
+
+    fn sim(cfg: ClusterConfig) -> ClusterSim {
+        ClusterSim::new(cfg, Box::new(LeastLoaded))
+    }
+
+    fn deterministic_cfg() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 4,
+            workers: 2,
+            cost: CostModel::PerRecord(0.01),
+            seed: 7,
+            ..ClusterConfig::default()
+        }
+    }
+
+    fn word_count(backend: &ClusterSim) -> Vec<(String, u64)> {
+        let input: Vec<String> =
+            vec!["a b a".into(), "b c".into(), "a".into(), "c c b".into()];
+        let mut out = backend
+            .map_reduce(
+                "wc",
+                input,
+                |line: &String| {
+                    line.split_whitespace().map(|w| (w.to_string(), 1u64)).collect()
+                },
+                no_combine::<String, u64>(),
+                |w: &String, ones: Vec<u64>| vec![(w.clone(), ones.iter().sum())],
+            )
+            .unwrap();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn round_matches_wordcount_and_records_stats() {
+        let backend = sim(deterministic_cfg());
+        let out = word_count(&backend);
+        assert_eq!(
+            out,
+            vec![("a".to_string(), 3), ("b".to_string(), 3), ("c".to_string(), 3)]
+        );
+        let stats = backend.take_stats();
+        assert_eq!(stats.len(), 2, "map phase + reduce phase");
+        assert!(stats.iter().all(|s| s.sim_phase_ms > 0.0));
+        assert!(backend.sim_makespan_ms() > 0.0);
+        assert!(backend.take_stats().is_empty(), "stats drained");
+    }
+
+    #[test]
+    fn map_preserves_input_order() {
+        let backend = sim(deterministic_cfg());
+        let out: Vec<u32> = backend
+            .map_partitions("x2", (0..500u32).collect(), |&x| vec![x * 2])
+            .unwrap();
+        assert_eq!(out, (0..500).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_record_simulation_is_deterministic() {
+        let run = || {
+            let backend = sim(ClusterConfig {
+                straggler_prob: 0.3,
+                failure_prob: 0.2,
+                ..deterministic_cfg()
+            });
+            word_count(&backend);
+            backend.sim_makespan_ms()
+        };
+        let a = run();
+        assert!(a > 0.0);
+        assert_eq!(a.to_bits(), run().to_bits(), "same seed, same makespan");
+    }
+
+    #[test]
+    fn failures_and_stragglers_leave_output_unchanged() {
+        let clean = word_count(&sim(deterministic_cfg()));
+        let noisy_backend = sim(ClusterConfig {
+            straggler_prob: 1.0,
+            failure_prob: 1.0,
+            ..deterministic_cfg()
+        });
+        assert_eq!(word_count(&noisy_backend), clean);
+        let stats = noisy_backend.take_stats();
+        assert!(stats.iter().any(|s| s.failures > 0), "failures injected");
+        assert!(stats.iter().any(|s| s.stragglers > 0), "stragglers injected");
+    }
+
+    #[test]
+    fn speculation_wins_races_and_shortens_makespan() {
+        let heavy = |speculation| {
+            let backend = sim(ClusterConfig {
+                straggler_prob: 0.4,
+                straggler_factor: 20.0,
+                speculation,
+                adaptive_tasks: false,
+                tasks: 32,
+                ..deterministic_cfg()
+            });
+            let out: Vec<u32> = backend
+                .map_partitions("spec", (0..4096u32).collect(), |&x| vec![x])
+                .unwrap();
+            assert_eq!(out.len(), 4096);
+            let stats = backend.take_stats();
+            (backend.sim_makespan_ms(), stats)
+        };
+        let (with_spec, stats_on) = heavy(true);
+        let (without, stats_off) = heavy(false);
+        let launched: usize = stats_on.iter().map(|s| s.spec_launched).sum();
+        let wins: usize = stats_on.iter().map(|s| s.spec_wins).sum();
+        assert!(launched > 0, "stragglers must trigger speculation");
+        assert!(wins > 0, "some backups must win the race");
+        assert_eq!(
+            stats_off.iter().map(|s| s.spec_launched).sum::<usize>(),
+            0,
+            "speculation off launches nothing"
+        );
+        assert!(
+            with_spec < without,
+            "speculation must cut the straggler tail: {with_spec} !< {without}"
+        );
+    }
+
+    #[test]
+    fn more_nodes_never_slow_the_simulated_cluster() {
+        let makespan = |nodes| {
+            let backend = sim(ClusterConfig {
+                nodes,
+                straggler_prob: 0.1,
+                ..deterministic_cfg()
+            });
+            word_count(&backend);
+            backend.sim_makespan_ms()
+        };
+        let mut prev = f64::INFINITY;
+        for nodes in [1, 2, 4, 8] {
+            let m = makespan(nodes);
+            assert!(
+                m <= prev * 1.001,
+                "makespan must be monotone non-increasing: {m} at {nodes} nodes > {prev}"
+            );
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn every_placement_policy_produces_identical_output() {
+        let mk = |placement: Box<dyn crate::exec::placement::Placement>| {
+            let backend = ClusterSim::new(
+                ClusterConfig { straggler_prob: 0.2, ..deterministic_cfg() },
+                placement,
+            );
+            word_count(&backend)
+        };
+        let reference = mk(Box::new(LeastLoaded));
+        assert_eq!(mk(Box::new(RoundRobin)), reference);
+        assert_eq!(mk(Box::new(LocalityAware)), reference);
+        assert_eq!(mk(by_name("locality").unwrap()), reference);
+    }
+
+    #[test]
+    fn adaptive_task_count_reacts_to_previous_skew() {
+        let backend = sim(deterministic_cfg());
+        assert_eq!(backend.task_count(10_000, 1.0), 16); // 4 nodes × 2 slots × 2
+        assert_eq!(backend.task_count(10_000, 4.0), 64); // skew → finer tasks
+        assert_eq!(backend.task_count(3, 4.0), 3);
+        let fixed = sim(ClusterConfig { adaptive_tasks: false, ..deterministic_cfg() });
+        assert_eq!(fixed.task_count(10_000, 4.0), 16);
+    }
+
+    #[test]
+    fn empty_input_round_is_a_no_op() {
+        let backend = sim(deterministic_cfg());
+        let out: Vec<(u32, u32)> = backend
+            .map_reduce(
+                "empty",
+                Vec::<u32>::new(),
+                |&x: &u32| vec![(x, x)],
+                no_combine::<u32, u32>(),
+                |k: &u32, _vs: Vec<u32>| vec![(*k, 0)],
+            )
+            .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(backend.sim_makespan_ms(), 0.0);
+    }
+}

@@ -13,23 +13,36 @@
 //! * [`Pooled`] — `util::pool` thread-level parallelism (§6);
 //! * [`HadoopSim`] — the fused mini-Hadoop job engine (§4), with DFS
 //!   materialisation, fault injection, combiners, and per-stage stats;
-//! * [`SparkSim`] — the in-memory RDD engine (§7).
+//! * [`SparkSim`] — the in-memory RDD engine (§7);
+//! * [`ClusterSim`] — the simulated N-node cluster (§4's distribution
+//!   claim made testable): pluggable task [`placement`], per-node worker
+//!   slots, straggler/failure injection, speculative execution with
+//!   first-result-wins, and per-stage adaptive task counts.
 //!
-//! `tricluster mr --backend {seq,pool,hadoop,spark}` selects a backend
-//! from the CLI, `benches/backend_matrix.rs` sweeps the full matrix
-//! (writing `BENCH_backends.json`), and
-//! `rust/tests/backend_equivalence.rs` property-tests that every backend
-//! reproduces `oac::mine_online` exactly.
+//! `tricluster mr --backend {seq,pool,hadoop,spark,cluster}` selects a
+//! backend from the CLI, `benches/backend_matrix.rs` sweeps the full
+//! matrix (writing `BENCH_backends.json`),
+//! `benches/cluster_scaling.rs` sweeps the simulated cluster
+//! (nodes × straggler rate × speculation, writing `BENCH_cluster.json`),
+//! and `rust/tests/backend_equivalence.rs` property-tests that every
+//! backend reproduces `oac::mine_online` exactly — including
+//! [`ClusterSim`] under randomized straggler/failure schedules.
 
 pub mod backend;
+pub mod cluster_sim;
 pub mod hadoop_sim;
+pub mod placement;
 pub mod pooled;
 pub mod sequential;
 pub mod spark_sim;
 pub mod stages;
 
-pub use backend::{no_combine, Backend, Data, Key};
+pub use backend::{
+    group_pairs_presorted, no_combine, sorted_by_key, Backend, Data, Key,
+};
+pub use cluster_sim::{ClusterConfig, ClusterSim, ClusterStats, CostModel};
 pub use hadoop_sim::HadoopSim;
+pub use placement::Placement;
 pub use pooled::Pooled;
 pub use sequential::Sequential;
 pub use spark_sim::SparkSim;
@@ -47,23 +60,44 @@ use crate::spark::rdd::SparkContext;
 use crate::util::pool;
 use crate::util::stats::Timer;
 
-/// The four backend names, in canonical comparison order.
-pub const BACKENDS: [&str; 4] = ["seq", "pool", "hadoop", "spark"];
+/// The five backend names, in canonical comparison order.
+pub const BACKENDS: [&str; 5] = ["seq", "pool", "hadoop", "spark", "cluster"];
 
 /// Tuning knobs shared by every backend (each uses the subset it
 /// understands).
 #[derive(Debug, Clone)]
 pub struct ExecTuning {
-    /// Worker threads (Pooled; executor threads for HadoopSim/SparkSim).
+    /// Worker threads (Pooled; executor threads for HadoopSim/SparkSim;
+    /// REAL task-closure threads for ClusterSim).
     pub workers: usize,
-    /// Task granularity: map/reduce tasks (HadoopSim) and RDD partitions
-    /// (SparkSim).
+    /// Task granularity: map/reduce tasks (HadoopSim), RDD partitions
+    /// (SparkSim), fixed per-phase task count for ClusterSim when
+    /// `adaptive_tasks` is off.
     pub tasks: usize,
-    /// HadoopSim task-retry probability (duplicate injection).
+    /// HadoopSim task-retry probability; ClusterSim first-attempt task
+    /// failure probability.
     pub fault_prob: f64,
     pub seed: u64,
     /// HadoopSim: materialise intermediates through the replicated DFS.
     pub use_dfs: bool,
+    /// ClusterSim: simulated node count.
+    pub nodes: usize,
+    /// ClusterSim: worker slots per simulated node.
+    pub node_slots: usize,
+    /// ClusterSim: per-attempt straggler probability.
+    pub straggler_prob: f64,
+    /// ClusterSim: straggler slowdown multiplier.
+    pub straggler_factor: f64,
+    /// ClusterSim: race speculative duplicates against stragglers.
+    pub speculation: bool,
+    /// ClusterSim: placement policy name (`rr` | `locality` | `least`).
+    pub placement: String,
+    /// ClusterSim: per-phase adaptive task counts (input size × previous
+    /// stage's measured skew).
+    pub adaptive_tasks: bool,
+    /// ClusterSim: simulated per-record task cost (ms); `None` uses the
+    /// measured wall time of each task closure.
+    pub cost_ms_per_record: Option<f64>,
 }
 
 impl Default for ExecTuning {
@@ -75,7 +109,43 @@ impl Default for ExecTuning {
             fault_prob: 0.0,
             seed: 0x5EED,
             use_dfs: false,
+            nodes: 4,
+            node_slots: 2,
+            straggler_prob: 0.0,
+            straggler_factor: 6.0,
+            speculation: true,
+            placement: "least".into(),
+            adaptive_tasks: true,
+            cost_ms_per_record: None,
         }
+    }
+}
+
+impl ExecTuning {
+    /// Build the ClusterSim config encoded in these knobs.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            nodes: self.nodes.max(1),
+            slots_per_node: self.node_slots.max(1),
+            straggler_prob: self.straggler_prob,
+            straggler_factor: self.straggler_factor,
+            failure_prob: self.fault_prob,
+            speculation: self.speculation,
+            cost: match self.cost_ms_per_record {
+                Some(ms) => CostModel::PerRecord(ms),
+                None => CostModel::Measured,
+            },
+            tasks: self.tasks,
+            adaptive_tasks: self.adaptive_tasks,
+            workers: self.workers,
+            seed: self.seed,
+            ..ClusterConfig::default()
+        }
+    }
+
+    /// Build the ClusterSim backend encoded in these knobs.
+    pub fn cluster_backend(&self) -> Result<ClusterSim> {
+        Ok(ClusterSim::new(self.cluster_config(), placement::by_name(&self.placement)?))
     }
 }
 
@@ -90,7 +160,7 @@ pub struct PipelineRun {
 
 /// Run the full cumuli → assembly → dedup+density pipeline on the
 /// backend named by the CLI `--backend` flag (`seq`, `pool`, `hadoop`,
-/// or `spark`).
+/// `spark`, or `cluster`).
 pub fn run_named(
     name: &str,
     ctx: &PolyContext,
@@ -120,7 +190,13 @@ pub fn run_named(
             let sc = SparkContext::new(tune.tasks.max(1), tune.workers);
             ("spark", run_pipeline(&SparkSim::new(&sc), ctx, theta, false)?)
         }
-        other => anyhow::bail!("unknown backend {other:?} (expected seq|pool|hadoop|spark)"),
+        "cluster" => {
+            let backend = tune.cluster_backend()?;
+            ("cluster", run_pipeline(&backend, ctx, theta, false)?)
+        }
+        other => anyhow::bail!(
+            "unknown backend {other:?} (expected seq|pool|hadoop|spark|cluster)"
+        ),
     };
     Ok(PipelineRun { backend, clusters, wall_ms: timer.elapsed_ms() })
 }
@@ -192,5 +268,31 @@ mod tests {
     fn unknown_backend_is_an_error() {
         let ctx = k2(2).inner;
         assert!(run_named("flink", &ctx, 0.0, &ExecTuning::default()).is_err());
+        assert!(run_named(
+            "cluster",
+            &ctx,
+            0.0,
+            &ExecTuning { placement: "yarn".into(), ..ExecTuning::default() }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cluster_backend_matches_online_under_faults_and_stragglers() {
+        let ctx = k2(4).inner;
+        let reference = sorted(mine_online(&ctx, &Constraints::none()));
+        for placement in ["rr", "locality", "least"] {
+            let tune = ExecTuning {
+                workers: 2,
+                nodes: 3,
+                straggler_prob: 0.5,
+                fault_prob: 0.5,
+                placement: placement.into(),
+                cost_ms_per_record: Some(0.01),
+                ..ExecTuning::default()
+            };
+            let run = run_named("cluster", &ctx, 0.0, &tune).unwrap();
+            assert_same(&run.clusters, &reference, &format!("cluster/{placement}"));
+        }
     }
 }

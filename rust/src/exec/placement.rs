@@ -1,0 +1,196 @@
+//! Task placement policies + adaptive task sizing for the simulated
+//! cluster backend ([`crate::exec::ClusterSim`]).
+//!
+//! The paper's scalability argument (§4) rests on map/reduce tasks being
+//! independent, so *where* a task runs is a free variable. This module
+//! makes it a first-class, pluggable one: a [`Placement`] policy maps a
+//! task (index, shuffle-key partition, estimated cost) onto a node given
+//! the nodes' simulated load, and [`adaptive_task_count`] picks the task
+//! granularity for a stage from the input size and the previous stage's
+//! measured skew (§1: "the number of tasks should be larger than the
+//! number of working nodes" — how much larger depends on how skewed the
+//! last stage was).
+
+use anyhow::Result;
+
+/// What a placement policy may know about a task before it runs.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskMeta {
+    /// Task index within its phase (submission order).
+    pub index: usize,
+    /// Shuffle-key partition affinity: the input-split index for map
+    /// tasks, the hash partition of the task's first key for reduce
+    /// tasks. Locality-aware placement keys off this.
+    pub partition: u64,
+    /// Estimated cost in simulated ms (records × per-record estimate).
+    pub est_cost_ms: f64,
+}
+
+/// What a placement policy may know about a node: its earliest available
+/// worker slot and cumulative assigned work, both in simulated ms.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeView {
+    pub id: usize,
+    /// Simulated time at which the node's earliest slot frees up.
+    pub free_at_ms: f64,
+    /// Total simulated work assigned to the node so far this phase.
+    pub busy_ms: f64,
+}
+
+/// A pluggable node-selection policy. Implementations must be pure
+/// functions of `(task, nodes)` so a fixed seed reproduces the exact
+/// schedule (the determinism contract of the cluster simulation).
+pub trait Placement: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Pick the node for `task`. `nodes` is never empty.
+    fn place(&self, task: &TaskMeta, nodes: &[NodeView]) -> usize;
+}
+
+/// Cycle through nodes in task order — the zero-information baseline.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundRobin;
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&self, task: &TaskMeta, nodes: &[NodeView]) -> usize {
+        task.index % nodes.len()
+    }
+}
+
+/// Send a task to the node that owns its shuffle-key partition
+/// (`partition % nodes`), so reduce tasks land where the map output for
+/// their keys was partitioned — Hadoop's rack-locality analogue in a
+/// world without racks. Degrades to hash-slicing load balance, which is
+/// exactly the skew the adaptive task count compensates for.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LocalityAware;
+
+impl Placement for LocalityAware {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn place(&self, task: &TaskMeta, nodes: &[NodeView]) -> usize {
+        (task.partition % nodes.len() as u64) as usize
+    }
+}
+
+/// Greedy list scheduling: the node whose earliest slot frees first
+/// (ties broken by total assigned work, then node id — total order, so
+/// the schedule is deterministic).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LeastLoaded;
+
+impl Placement for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn place(&self, _task: &TaskMeta, nodes: &[NodeView]) -> usize {
+        nodes
+            .iter()
+            .min_by(|a, b| {
+                (a.free_at_ms, a.busy_ms, a.id)
+                    .partial_cmp(&(b.free_at_ms, b.busy_ms, b.id))
+                    .expect("simulated clocks are finite")
+            })
+            .expect("at least one node")
+            .id
+    }
+}
+
+/// Resolve a policy from its CLI name.
+pub fn by_name(name: &str) -> Result<Box<dyn Placement>> {
+    match name {
+        "rr" | "round-robin" => Ok(Box::new(RoundRobin)),
+        "locality" => Ok(Box::new(LocalityAware)),
+        "least" | "least-loaded" => Ok(Box::new(LeastLoaded)),
+        other => anyhow::bail!(
+            "unknown placement {other:?} (expected rr|locality|least)"
+        ),
+    }
+}
+
+/// Per-stage adaptive task count: enough tasks to keep every worker slot
+/// busy for ~2 waves, scaled up (smaller tasks) when the previous stage
+/// measured high skew — a skewed stage means per-item costs vary, and
+/// finer tasks let list scheduling and speculation absorb the tail.
+///
+/// `prev_skew` is max/mean of the previous stage's task costs (1.0 =
+/// perfectly uniform; the first stage of a pipeline passes 1.0). The
+/// result is clamped to `[1, items]` so tiny inputs never produce empty
+/// tasks.
+pub fn adaptive_task_count(items: usize, slots: usize, prev_skew: f64) -> usize {
+    if items == 0 {
+        return 1;
+    }
+    let slots = slots.max(1) as f64;
+    let skew = if prev_skew.is_finite() { prev_skew.clamp(1.0, 4.0) } else { 1.0 };
+    ((slots * 2.0 * skew).ceil() as usize).clamp(1, items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(free: &[f64]) -> Vec<NodeView> {
+        free.iter()
+            .enumerate()
+            .map(|(id, &f)| NodeView { id, free_at_ms: f, busy_ms: f })
+            .collect()
+    }
+
+    fn task(index: usize, partition: u64) -> TaskMeta {
+        TaskMeta { index, partition, est_cost_ms: 1.0 }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let ns = nodes(&[0.0, 0.0, 0.0]);
+        let p = RoundRobin;
+        assert_eq!(p.place(&task(0, 9), &ns), 0);
+        assert_eq!(p.place(&task(1, 9), &ns), 1);
+        assert_eq!(p.place(&task(5, 9), &ns), 2);
+    }
+
+    #[test]
+    fn locality_follows_partition_not_index() {
+        let ns = nodes(&[0.0, 5.0, 0.0]);
+        let p = LocalityAware;
+        assert_eq!(p.place(&task(0, 4), &ns), 1);
+        assert_eq!(p.place(&task(7, 4), &ns), 1, "same partition, same node");
+    }
+
+    #[test]
+    fn least_loaded_picks_earliest_slot_deterministically() {
+        let p = LeastLoaded;
+        assert_eq!(p.place(&task(0, 0), &nodes(&[3.0, 1.0, 2.0])), 1);
+        // tie on free_at → lowest id
+        assert_eq!(p.place(&task(0, 0), &nodes(&[2.0, 2.0, 5.0])), 0);
+    }
+
+    #[test]
+    fn by_name_resolves_and_rejects() {
+        for (name, want) in
+            [("rr", "round-robin"), ("locality", "locality"), ("least", "least-loaded")]
+        {
+            assert_eq!(by_name(name).unwrap().name(), want);
+        }
+        assert!(by_name("yarn").is_err());
+    }
+
+    #[test]
+    fn adaptive_count_scales_with_skew_and_clamps() {
+        // uniform: 2 waves over all slots
+        assert_eq!(adaptive_task_count(10_000, 8, 1.0), 16);
+        // skewed: finer tasks, capped at 4x
+        assert_eq!(adaptive_task_count(10_000, 8, 3.0), 48);
+        assert_eq!(adaptive_task_count(10_000, 8, 100.0), 64);
+        // never more tasks than items, never zero
+        assert_eq!(adaptive_task_count(5, 8, 1.0), 5);
+        assert_eq!(adaptive_task_count(0, 8, 1.0), 1);
+    }
+}

@@ -1,7 +1,12 @@
 //! The three M/R triclustering stages (paper §4.1, Algorithms 2–7) in
 //! their ONE backend-generic form. Every execution path — sequential,
-//! thread-pooled, Hadoop-sim, Spark-sim — runs exactly these functions;
-//! the backends differ only in how a `map_reduce` round is executed.
+//! thread-pooled, Hadoop-sim, Spark-sim, cluster-sim — runs exactly
+//! these functions; the backends differ only in how a `map_reduce`
+//! round is executed. Because each stage is a separate labelled round,
+//! per-stage adaptivity threads through without the stage functions
+//! knowing: [`crate::exec::ClusterSim`] picks every phase's task count
+//! from its input size and the PREVIOUS stage's measured cost skew
+//! ([`crate::exec::placement::adaptive_task_count`]).
 //!
 //! Stage 1 — cumuli: tuples fan out to N ⟨subrelation, entity⟩ pairs
 //!   (Alg. 2); the reducer accumulates each subrelation's cumulus

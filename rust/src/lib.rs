@@ -22,10 +22,12 @@
 //! the AOT-compiled JAX/Pallas density kernels from `artifacts/`.
 //!
 //! The three M/R triclustering stages exist in ONE backend-generic form
-//! in [`exec`]: a [`exec::Backend`] trait with four implementations
-//! (Sequential, Pooled, HadoopSim, SparkSim) executes the identical
-//! stage functions, so the paper's regime comparison (§4 vs §6 vs §7)
-//! is a backend sweep rather than four pipeline copies.
+//! in [`exec`]: a [`exec::Backend`] trait with five implementations
+//! (Sequential, Pooled, HadoopSim, SparkSim, ClusterSim) executes the
+//! identical stage functions, so the paper's regime comparison (§4 vs
+//! §6 vs §7) is a backend sweep rather than five pipeline copies —
+//! and the simulated N-node ClusterSim makes distribution itself
+//! (placement, stragglers, speculative execution) a testable variable.
 //!
 //! On top of the batch pipeline sits the [`serve`] layer — a sharded,
 //! incrementally-updatable triclustering SERVICE (ingest → shard → merge

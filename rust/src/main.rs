@@ -33,12 +33,15 @@ COMMANDS
   generate   --dataset <name> --out <file.tsv>
   online     --dataset <name> [--min-density R] [--min-support N] [--show N]
   mr         --dataset <name> [--theta R] [--nodes N] [--fault-prob P]
-             [--backend seq|pool|hadoop|spark] [--workers N]
+             [--backend seq|pool|hadoop|spark|cluster] [--workers N]
+             [--stragglers P] [--speculation on|off]
+             [--placement rr|locality|least] [--node-slots N]
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
   density    [--edge N] [--engine exact|xla|mc]
   serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
              [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
-  experiment --id table3|table4|fig2|table5|backends|skew|faults|engines|memory
+  experiment --id table3|table4|fig2|table5|backends|cluster-scaling|skew|
+                  faults|engines|memory
              [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
 
 DATASETS: imdb k1 k2 k3 ml100k ml250k ml500k ml1m bibsonomy
@@ -117,6 +120,71 @@ fn mr(args: &Args) -> Result<()> {
     let ctx = load(args)?;
     let nodes: usize = args.parse_or("nodes", 10);
     let backend = args.get_or("backend", "hadoop");
+    if backend == "cluster" {
+        // the simulated N-node cluster: placement, stragglers, failures,
+        // speculation — reported from its own virtual clock
+        let tune = tricluster::exec::ExecTuning {
+            workers: args.parse_or("workers", tricluster::util::pool::default_workers()),
+            nodes,
+            node_slots: args.parse_or("node-slots", 2),
+            straggler_prob: args.parse_or("stragglers", 0.0),
+            fault_prob: args.parse_or("fault-prob", 0.0),
+            speculation: match args.get_or("speculation", "on") {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                other => anyhow::bail!("--speculation {other:?} (expected on|off)"),
+            },
+            placement: args.get_or("placement", "least").to_string(),
+            seed: args.parse_or("seed", 0x5EED),
+            ..tricluster::exec::ExecTuning::default()
+        };
+        let backend = tune.cluster_backend()?;
+        let t = Timer::start();
+        let clusters = tricluster::exec::run_pipeline(
+            &backend,
+            &ctx,
+            args.parse_or("theta", 0.0),
+            false,
+        )?;
+        let wall_ms = t.elapsed_ms();
+        let stats = backend.take_stats();
+        let (spec, wins, fails, stragglers) = stats.iter().fold(
+            (0usize, 0usize, 0usize, 0usize),
+            |(s, w, f, g), st| {
+                (s + st.spec_launched, w + st.spec_wins, f + st.failures, g + st.stragglers)
+            },
+        );
+        println!(
+            "cluster-sim [{} nodes x{} slots, {} placement]: {} tuples -> {} clusters in {} ms",
+            tune.nodes,
+            tune.node_slots,
+            tune.placement,
+            ctx.len(),
+            clusters.len(),
+            fmt_ms(wall_ms)
+        );
+        println!(
+            "  simulated makespan: {} ms over {} phases",
+            fmt_ms(backend.sim_makespan_ms()),
+            stats.len()
+        );
+        for st in &stats {
+            println!(
+                "    {:<10} {:>3} tasks  {:>9} ms  skew {:.2}",
+                st.label,
+                st.tasks,
+                fmt_ms(st.sim_phase_ms),
+                st.skew
+            );
+        }
+        println!(
+            "  stragglers: {stragglers}  speculative: {spec} launched / {wins} won  failures: {fails}"
+        );
+        for c in clusters.iter().take(args.parse_or("show", 3)) {
+            println!("{}", io::format_cluster(&ctx, c));
+        }
+        return Ok(());
+    }
     if backend != "hadoop" {
         // the unified exec:: layer runs the identical stage functions on
         // the selected substrate; `hadoop` keeps the stats-rich run_mmc
@@ -335,6 +403,10 @@ fn experiment(args: &Args) -> Result<()> {
         "backends" => experiments::backends(
             &cfg,
             args.parse_or("workers", tricluster::util::pool::default_workers()),
+        )?,
+        "cluster-scaling" => experiments::cluster_scaling(
+            &cfg,
+            args.parse_or("stragglers", 0.1),
         )?,
         "skew" => ablations::partition_skew(cfg.nodes)?,
         "faults" => ablations::fault_injection()?,

@@ -138,7 +138,12 @@ impl Router {
                     .collect()
             })
             .expect("the pooled backend is infallible");
-        // concat bins in chunk order: per-shard order == stream order
+        // concat bins in chunk order: per-shard order == stream order.
+        // The route-split output is already shard-keyed, so direct
+        // indexing groups it in one O(bins) pass — the degenerate case
+        // of `exec::group_pairs_presorted`, whose general fast path the
+        // default `Backend::group_reduce` applies for sorted pair
+        // streams (no hash map, no O(n log n) key sort).
         let mut queues: Vec<Vec<NTuple>> =
             (0..n).map(|_| Vec::with_capacity(staged.len() / n + 1)).collect();
         for (s, bin) in routed {

@@ -1,8 +1,10 @@
 //! The exec-layer invariant, tested end to end: for ANY random polyadic
 //! context (arity 3 and 4), density threshold, task/worker granularity,
-//! and fault-injection setting, all four backends — Sequential, Pooled,
-//! HadoopSim, SparkSim — produce the identical deduplicated cluster set
-//! (components, supports, densities) as single-pass `oac::mine_online`.
+//! fault-injection setting, and — for the simulated cluster — straggler/
+//! failure schedule, speculation mode, and placement policy, all five
+//! backends — Sequential, Pooled, HadoopSim, SparkSim, ClusterSim —
+//! produce the identical deduplicated cluster set (components, supports,
+//! densities) as single-pass `oac::mine_online`.
 
 use tricluster::core::context::PolyContext;
 use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
@@ -45,9 +47,21 @@ fn prop_all_backends_equal_online() {
             workers: 1 + g.usize_below(4),
             tasks: 1 + g.usize_below(8),
             // injected task retries must be invisible in the output
+            // (doubles as the ClusterSim task-failure probability)
             fault_prob: if g.bool(0.3) { 1.0 } else { 0.0 },
             seed: 0xBACC ^ n_tuples as u64,
             use_dfs: g.bool(0.2),
+            // ClusterSim: randomized straggler/failure schedule,
+            // speculation on/off, every placement policy, both cost
+            // models — none of it may leak into the output
+            nodes: 1 + g.usize_below(6),
+            node_slots: 1 + g.usize_below(3),
+            straggler_prob: if g.bool(0.5) { g.f64() } else { 0.0 },
+            speculation: g.bool(0.5),
+            placement: ["rr", "locality", "least"][g.usize_below(3)].to_string(),
+            adaptive_tasks: g.bool(0.5),
+            cost_ms_per_record: if g.bool(0.5) { Some(0.01) } else { None },
+            ..ExecTuning::default()
         };
         for backend in BACKENDS {
             let run = run_named(backend, &ctx, theta, &tune)
@@ -62,12 +76,42 @@ fn prop_all_backends_equal_online() {
     });
 }
 
-/// The two deterministic worker-sensitive backends are bit-stable across
-/// worker counts on a fixed context.
+/// ClusterSim under an adversarial schedule — every first attempt
+/// fails, half the attempts straggle 20×, speculative duplicates race —
+/// must still equal `mine_online` with speculation on or off.
+#[test]
+fn cluster_sim_equal_under_adversarial_schedules() {
+    let ctx = tricluster::datasets::synthetic::k2(5).inner;
+    let reference = sorted(mine_online(&ctx, &Constraints::none()));
+    for speculation in [true, false] {
+        let tune = ExecTuning {
+            nodes: 5,
+            node_slots: 2,
+            straggler_prob: 0.5,
+            straggler_factor: 20.0,
+            fault_prob: 1.0,
+            speculation,
+            cost_ms_per_record: Some(0.005),
+            ..ExecTuning::default()
+        };
+        let run = run_named("cluster", &ctx, 0.0, &tune).unwrap();
+        assert_same(
+            &reference,
+            &run.clusters,
+            &format!("cluster adversarial, speculation={speculation}"),
+        )
+        .unwrap();
+    }
+}
+
+/// The deterministic worker-sensitive backends are bit-stable across
+/// worker counts on a fixed context (for ClusterSim, `workers` is the
+/// REAL executor thread count — simulated placement must not leak into
+/// the output either).
 #[test]
 fn pooled_and_spark_stable_across_worker_counts() {
     let ctx = tricluster::datasets::synthetic::k1(7).inner;
-    for backend in ["pool", "spark"] {
+    for backend in ["pool", "spark", "cluster"] {
         let baseline = run_named(
             backend,
             &ctx,
