@@ -25,10 +25,18 @@
 //! 3. **Backend agreement** — every `BENCH_backends.json` series entry
 //!    for one dataset reports the same cluster count (belt-and-braces on
 //!    top of the in-process equivalence assertion).
+//! 4. **Serve-cluster placement trajectory** — when
+//!    `BENCH_serve_cluster.json` is present: every entry reports the
+//!    same cluster count (equivalence held under churn + re-placement),
+//!    locality moved strictly fewer drain-path MiB than round-robin,
+//!    and `locality_speedup_vs_rr` is at least the baseline's
+//!    `serve_cluster.min_locality_speedup_vs_rr` floor.
 //!
 //! `--pin` rewrites the baseline from the current `BENCH_cluster.json`
-//! (max makespans = observed, speedup floors = 80% of observed), so a
-//! session with a toolchain can tighten the committed baseline.
+//! (max makespans = observed, speedup floors = 80% of observed) and,
+//! when present, `BENCH_serve_cluster.json` (locality-vs-rr floor = 90%
+//! of observed), so a session with a toolchain can tighten the committed
+//! baseline.
 
 use std::collections::BTreeMap;
 use std::process::exit;
@@ -65,6 +73,8 @@ fn main() {
     let baseline_path = args.get_or("baseline", "ci/bench_baseline.json");
     let cluster_path = args.get_or("cluster", "BENCH_cluster.json");
     let backends_path = args.get_or("backends", "BENCH_backends.json");
+    let serve_cluster_path =
+        args.get_or("serve-cluster", "BENCH_serve_cluster.json");
 
     let Some(cluster) = load(cluster_path) else {
         // bare `cargo bench` runs targets in name order, so this checker
@@ -90,7 +100,7 @@ fn main() {
     }
 
     if args.has("pin") {
-        pin(baseline_path, entries);
+        pin(baseline_path, entries, load(serve_cluster_path).as_ref());
         return;
     }
 
@@ -201,6 +211,58 @@ fn main() {
         eprintln!("check_bench: {backends_path} absent — skipping backend agreement");
     }
 
+    // 4. serve-cluster placement trajectory (when that bench ran)
+    if let Some(serve) = load(serve_cluster_path) {
+        let entries = serve.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+        if entries.is_empty() {
+            failures.push(format!("{serve_cluster_path} has no entries"));
+        }
+        let counts: Vec<f64> = entries.iter().map(|e| f(e, "clusters")).collect();
+        if counts.windows(2).any(|w| w[0] != w[1]) {
+            failures.push(format!(
+                "serve-cluster equivalence broke: cluster counts {counts:?} \
+                 differ across placement/churn configurations"
+            ));
+        }
+        let clean = |placement: &str| {
+            entries.iter().find(|e| {
+                e.get("placement").and_then(Json::as_str) == Some(placement)
+                    && f(e, "churn") == 0.0
+            })
+        };
+        if let (Some(rr), Some(loc)) = (clean("rr"), clean("locality")) {
+            if f(loc, "shuffle_mib") >= f(rr, "shuffle_mib") {
+                failures.push(format!(
+                    "locality moved {:.2} MiB, not fewer than rr's {:.2} MiB",
+                    f(loc, "shuffle_mib"),
+                    f(rr, "shuffle_mib")
+                ));
+            }
+        } else {
+            failures.push(
+                "serve-cluster bench is missing the churn-free rr/locality entries"
+                    .to_string(),
+            );
+        }
+        let ratio = f(&serve, "locality_speedup_vs_rr");
+        let floor = baseline
+            .get("serve_cluster")
+            .and_then(|s| s.get("min_locality_speedup_vs_rr"))
+            .and_then(Json::as_f64);
+        if let Some(min) = floor {
+            if ratio.is_nan() || ratio < min {
+                failures.push(format!(
+                    "locality_speedup_vs_rr {ratio:.3} fell below the baseline \
+                     floor {min:.3}"
+                ));
+            }
+        }
+    } else {
+        eprintln!(
+            "check_bench: {serve_cluster_path} absent — skipping serve-cluster gate"
+        );
+    }
+
     if failures.is_empty() {
         println!(
             "check_bench: OK — {} cluster entries, {checked} baseline pins, \
@@ -216,7 +278,7 @@ fn main() {
 }
 
 /// `--pin`: rewrite the baseline from the current bench output.
-fn pin(baseline_path: &str, entries: &[Json]) {
+fn pin(baseline_path: &str, entries: &[Json], serve_cluster: Option<&Json>) {
     let mut pins: Vec<Json> = Vec::new();
     for e in entries {
         let mut o = BTreeMap::new();
@@ -242,7 +304,30 @@ fn pin(baseline_path: &str, entries: &[Json]) {
     doc.insert("monotone_tolerance".to_string(), Json::Num(0.02));
     doc.insert("require_monotone_speedup".to_string(), Json::Bool(true));
     doc.insert("entries".to_string(), Json::Arr(pins));
+    match serve_cluster.map(|s| f(s, "locality_speedup_vs_rr")) {
+        Some(ratio) if ratio.is_finite() => {
+            let mut sc = BTreeMap::new();
+            sc.insert(
+                "min_locality_speedup_vs_rr".to_string(),
+                Json::Num((ratio * 0.9 * 1000.0).floor() / 1000.0),
+            );
+            doc.insert("serve_cluster".to_string(), Json::Obj(sc));
+        }
+        _ => {
+            // serve_cluster bench did not run: KEEP the committed floor
+            // instead of silently deleting the gate from the baseline
+            let old_baseline = load(baseline_path);
+            if let Some(old) =
+                old_baseline.as_ref().and_then(|b| b.get("serve_cluster"))
+            {
+                doc.insert("serve_cluster".to_string(), old.clone());
+            }
+        }
+    }
     std::fs::write(baseline_path, Json::Obj(doc).to_string())
         .expect("write baseline");
-    println!("check_bench: pinned {baseline_path} from current BENCH_cluster.json");
+    println!(
+        "check_bench: pinned {baseline_path} from current BENCH_cluster.json \
+         (+ BENCH_serve_cluster.json when present)"
+    );
 }

@@ -1,0 +1,147 @@
+//! CI gate: docs freshness. Path-checks every repo file referenced by
+//! `docs/ARCHITECTURE.md` and `docs/PAPER_MAP.md` (no network): if a
+//! module a doc points at no longer exists — a rename, a deletion, a
+//! moved bench — the build fails with the stale references listed, so
+//! the paper-to-code map can never silently rot.
+//!
+//! Run as a bench target so it shares the library build:
+//!
+//! ```text
+//! cargo bench --bench check_docs
+//! cargo bench --bench check_docs -- --docs docs/PAPER_MAP.md
+//! ```
+//!
+//! What counts as a reference: a token containing `/` and ending in a
+//! known source extension, rooted at one of the repo's tracked
+//! directories (`rust/`, `docs/`, `ci/`, `python/`, `examples/`,
+//! `.github/`) or a root-level manifest. `{a,b}` brace groups expand
+//! (so `serve/{router,shard}.rs` checks both), `:line` suffixes are
+//! stripped (PAPER_MAP uses `file.rs:line` anchors — only the FILE is
+//! checked, lines may drift), and generated artefacts (`BENCH_*.json`,
+//! `target/`, `artifacts/`) are ignored. Paths written relative to the
+//! crate source root also resolve via a `rust/` prefix retry (docs say
+//! `benches/fig2.rs` for `rust/benches/fig2.rs`).
+
+use std::path::Path;
+use std::process::exit;
+
+use tricluster::util::cli::Args;
+
+const DEFAULT_DOCS: [&str; 2] = ["docs/ARCHITECTURE.md", "docs/PAPER_MAP.md"];
+const EXTENSIONS: [&str; 6] = [".rs", ".md", ".py", ".json", ".toml", ".yml"];
+const ROOTS: [&str; 6] = ["rust/", "docs/", "ci/", "python/", "examples/", ".github/"];
+
+/// Expand one `{a,b,c}` group (the docs never nest them).
+fn expand_braces(token: &str) -> Vec<String> {
+    let (Some(open), Some(close)) = (token.find('{'), token.find('}')) else {
+        return vec![token.to_string()];
+    };
+    if close < open {
+        return vec![token.to_string()];
+    }
+    let (head, rest) = token.split_at(open);
+    let body = &rest[1..close - open];
+    let tail = &rest[close - open + 1..];
+    body.split(',')
+        .map(|alt| format!("{head}{}{tail}", alt.trim()))
+        .collect()
+}
+
+/// Strip wrapping punctuation and a trailing `:line` anchor. Iterates
+/// to a fixpoint: `` `path.rs`). `` needs the sentence dot removed
+/// before the closing backtick/paren become trailing and strippable.
+fn clean(token: &str) -> &str {
+    let mut token = token;
+    loop {
+        let stripped = token
+            .trim_matches(|c: char| "`*()[],;\"'".contains(c))
+            .trim_end_matches('.');
+        let stripped = match stripped.rfind(':') {
+            Some(at) if !stripped[at + 1..].is_empty()
+                && stripped[at + 1..].chars().all(|c| c.is_ascii_digit()) =>
+            {
+                &stripped[..at]
+            }
+            _ => stripped.trim_end_matches(':'),
+        };
+        if stripped == token {
+            return token;
+        }
+        token = stripped;
+    }
+}
+
+/// Does this token look like a repo file reference worth checking?
+fn is_candidate(token: &str) -> bool {
+    if !token.contains('/') || token.contains("://") {
+        return false;
+    }
+    if !EXTENSIONS.iter().any(|ext| token.ends_with(ext)) {
+        return false;
+    }
+    // generated artefacts and build output are not tracked files
+    let name = token.rsplit('/').next().unwrap_or(token);
+    if name.starts_with("BENCH_") || token.starts_with("target/") || token.contains("artifacts/")
+    {
+        return false;
+    }
+    true
+}
+
+/// Resolve a reference against the repo root, retrying under `rust/` for
+/// crate-root-relative spellings.
+fn resolves(repo: &Path, reference: &str) -> bool {
+    if repo.join(reference).is_file() {
+        return true;
+    }
+    if ROOTS.iter().any(|r| reference.starts_with(r)) {
+        return false; // explicitly rooted: no retry
+    }
+    repo.join("rust").join(reference).is_file()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let repo = Path::new(".");
+    let docs: Vec<String> = match args.get("docs") {
+        Some(doc) => vec![doc.to_string()],
+        None => DEFAULT_DOCS.iter().map(|d| d.to_string()).collect(),
+    };
+    let mut checked = 0usize;
+    let mut stale: Vec<String> = Vec::new();
+    for doc in &docs {
+        let text = match std::fs::read_to_string(repo.join(doc)) {
+            Ok(text) => text,
+            Err(e) => {
+                eprintln!("check_docs: cannot read {doc}: {e}");
+                exit(1);
+            }
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            for raw in line.split_whitespace() {
+                for token in expand_braces(clean(raw)) {
+                    let token = clean(&token).to_string();
+                    if !is_candidate(&token) {
+                        continue;
+                    }
+                    checked += 1;
+                    if !resolves(repo, &token) {
+                        stale.push(format!("{doc}:{}: {token}", lineno + 1));
+                    }
+                }
+            }
+        }
+    }
+    if stale.is_empty() {
+        println!("check_docs: OK — {checked} file references across {} docs resolve", docs.len());
+    } else {
+        for s in &stale {
+            eprintln!("check_docs: STALE: {s}");
+        }
+        eprintln!(
+            "check_docs: {} stale reference(s) — update the doc or restore the file",
+            stale.len()
+        );
+        exit(1);
+    }
+}

@@ -29,6 +29,8 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse INI-style text (`[section]` + `key = value`) into flat
+    ///  `section.key` entries.
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
@@ -56,20 +58,24 @@ impl Config {
         Ok(Self { values })
     }
 
+    /// Read and [`Self::parse`] a config file.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Raw value of `section.key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(String::as_str)
     }
 
+    /// Value of `key` parsed as `T`, if present and well-formed.
     pub fn parse_key<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
         self.get(key).and_then(|v| v.parse().ok())
     }
 
+    /// Boolean value of `key` (`true/1/yes/on` vs `false/0/no/off`).
     pub fn bool_key(&self, key: &str) -> Option<bool> {
         match self.get(key)? {
             "true" | "1" | "yes" | "on" => Some(true),

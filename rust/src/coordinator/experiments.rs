@@ -29,6 +29,7 @@ pub struct ExpConfig {
     pub theta: f64,
     /// Repetitions (the paper averages 5 runs).
     pub runs: usize,
+    /// Seed for dataset generation and fault injection.
     pub seed: u64,
 }
 
@@ -99,8 +100,11 @@ impl ExpConfig {
 
 /// Measured pair of methods on one dataset.
 pub struct Measured {
+    /// Online OAC wall time, averaged over `runs`, ms.
     pub online_ms: f64,
+    /// The M/R run (clusters + per-stage stats).
     pub mr: MmcResult,
+    /// Cluster count of the online run (must match the M/R count).
     pub online_clusters: usize,
 }
 
@@ -429,6 +433,86 @@ pub fn cluster_scaling(cfg: &ExpConfig, straggler_prob: f64) -> Result<Report> {
     Ok(r)
 }
 
+/// Serve-on-cluster: the sharded serving layer placed on a simulated
+/// N-node cluster (`serve::cluster::ServeSim`) — placement policy ×
+/// churn sweep under a skewed ingress, reporting simulated makespan,
+/// drain-path shuffle volume, recovery traffic, and kill/replay
+/// counters. Every configuration is checked against `oac::mine_online`,
+/// so a divergence (e.g. a broken churn replay) fails the experiment.
+pub fn serve_cluster(cfg: &ExpConfig, churn_prob: f64) -> Result<Report> {
+    use crate::core::pattern::{diff_cluster_sets, sort_clusters};
+    use crate::exec::cluster_sim::ChurnConfig;
+    use crate::serve::cluster::{ServeSim, ServeSimConfig};
+
+    let ctx = if cfg.full {
+        datasets::movielens(&datasets::MovielensParams::with_tuples(100_000))
+    } else {
+        datasets::movielens(&datasets::MovielensParams::with_tuples(10_000))
+    };
+    let mut reference = mine_online(
+        &ctx,
+        &Constraints { min_density: cfg.theta, min_support: 0 },
+    );
+    sort_clusters(&mut reference);
+    let nodes = cfg.nodes.clamp(2, 8);
+    let shards = nodes * 4;
+    let mut r = Report::new(
+        &format!(
+            "Serve-on-cluster: {} tuples, {nodes} nodes x {shards} shards, skewed ingress",
+            ctx.len()
+        ),
+        vec![
+            "Placement".into(),
+            "Churn".into(),
+            "Makespan ms".into(),
+            "Shuffle MiB".into(),
+            "Recovery MiB".into(),
+            "Kills".into(),
+            "Replayed".into(),
+            "Migrations".into(),
+            "#clusters".into(),
+        ],
+    );
+    for placement in ["rr", "locality", "least"] {
+        for churn in [0.0, churn_prob] {
+            let mut sim_cfg = ServeSimConfig::new(ctx.arity(), shards, nodes);
+            sim_cfg.placement = placement.into();
+            sim_cfg.slots_per_node = 8;
+            sim_cfg.batch = 2_048;
+            sim_cfg.compact_every = 2;
+            sim_cfg.source_skew = 2.0;
+            sim_cfg.churn = ChurnConfig { kill_prob: churn, restart_ms: 50.0 };
+            sim_cfg.seed = cfg.seed;
+            sim_cfg.constraints =
+                Constraints { min_density: cfg.theta, min_support: 0 };
+            let mut sim = ServeSim::new(sim_cfg)?;
+            sim.run(ctx.tuples());
+            let mut clusters = sim.clusters().to_vec();
+            sort_clusters(&mut clusters);
+            if let Some(diff) = diff_cluster_sets(&reference, &clusters) {
+                anyhow::bail!(
+                    "serve-cluster diverged from mine_online \
+                     ({placement}, churn={churn}): {diff}"
+                );
+            }
+            let clusters = clusters.len();
+            let s = sim.stats().clone();
+            r.push(row![
+                placement,
+                format!("{churn:.2}"),
+                fmt_ms(sim.sim_makespan_ms()),
+                format!("{:.2}", s.shuffle_mib),
+                format!("{:.2}", s.recovery_mib),
+                s.kills,
+                s.replayed_tuples,
+                s.migrations,
+                clusters
+            ]);
+        }
+    }
+    Ok(r)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,6 +551,15 @@ mod tests {
         assert_eq!(r.rows.len(), 2 + BACKENDS.len());
         assert_eq!(r.rows[1][0], "#tuples");
         assert_eq!(r.rows[2][0], "seq");
+    }
+
+    #[test]
+    fn serve_cluster_sweeps_policies_and_checks_equivalence() {
+        let r = serve_cluster(&tiny(), 0.3).unwrap();
+        // header + 3 placements × 2 churn settings
+        assert_eq!(r.rows.len(), 7);
+        assert_eq!(r.rows[1][0], "rr");
+        assert_eq!(r.rows[3][0], "locality");
     }
 
     #[test]

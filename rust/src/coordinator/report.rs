@@ -11,15 +11,19 @@ use crate::util::table;
 /// A titled table with a header row.
 #[derive(Debug, Clone)]
 pub struct Report {
+    /// Report title (rendered as the table caption).
     pub title: String,
+    /// Header row followed by data rows.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Report {
+    /// New report holding only the header row.
     pub fn new(title: &str, header: Vec<String>) -> Self {
         Self { title: title.into(), rows: vec![header] }
     }
 
+    /// Append one data row.
     pub fn push(&mut self, row: Vec<String>) {
         self.rows.push(row);
     }

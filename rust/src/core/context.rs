@@ -19,6 +19,7 @@ pub struct PolyContext {
 }
 
 impl PolyContext {
+    /// Empty context over `arity` modalities.
     pub fn new(arity: usize) -> Self {
         Self {
             interners: (0..arity).map(|_| Interner::new()).collect(),
@@ -39,6 +40,7 @@ impl PolyContext {
         }
     }
 
+    /// Number of modalities (3 = triadic).
     pub fn arity(&self) -> usize {
         self.interners.len()
     }
@@ -48,18 +50,22 @@ impl PolyContext {
         self.interners[k].len()
     }
 
+    /// Number of distinct tuples.
     pub fn len(&self) -> usize {
         self.tuples.len()
     }
 
+    /// True when no tuple was added.
     pub fn is_empty(&self) -> bool {
         self.tuples.is_empty()
     }
 
+    /// All tuples, in first-insertion order.
     pub fn tuples(&self) -> &[NTuple] {
         &self.tuples
     }
 
+    /// True when `t` is in the relation.
     pub fn contains(&self, t: &NTuple) -> bool {
         self.seen.contains(t)
     }
@@ -108,10 +114,12 @@ impl PolyContext {
 /// Triadic context (arity-3 specialisation with the paper's G/M/B naming).
 #[derive(Debug, Clone)]
 pub struct TriContext {
+    /// The underlying 3-ary [`PolyContext`].
     pub inner: PolyContext,
 }
 
 impl TriContext {
+    /// Empty triadic context.
     pub fn new() -> Self {
         Self { inner: PolyContext::new(3) }
     }
@@ -122,30 +130,37 @@ impl TriContext {
         Self { inner: PolyContext::with_capacity(3, per_modality, triples) }
     }
 
+    /// Insert `(g, m, b)` by ids; false if it was already present.
     pub fn add(&mut self, g: u32, m: u32, b: u32) -> bool {
         self.inner.add_ids(&[g, m, b])
     }
 
+    /// Intern the names and insert the triple; false if already present.
     pub fn add_named(&mut self, g: &str, m: &str, b: &str) -> bool {
         self.inner.add_named(&[g, m, b])
     }
 
+    /// All triples, in first-insertion order.
     pub fn triples(&self) -> &[NTuple] {
         self.inner.tuples()
     }
 
+    /// Number of distinct triples.
     pub fn len(&self) -> usize {
         self.inner.len()
     }
 
+    /// True when no triple was added.
     pub fn is_empty(&self) -> bool {
         self.inner.is_empty()
     }
 
+    /// True when `(g, m, b)` is in the relation.
     pub fn contains(&self, g: u32, m: u32, b: u32) -> bool {
         self.inner.contains(&NTuple::triple(g, m, b))
     }
 
+    /// Modality cardinalities `(|G|, |M|, |B|)`.
     pub fn sizes(&self) -> (usize, usize, usize) {
         (
             self.inner.modality_size(0),
@@ -166,11 +181,13 @@ impl Default for TriContext {
 /// functional constraint (one value per triple) is enforced on insert.
 #[derive(Debug, Clone, Default)]
 pub struct ManyValuedTriContext {
+    /// The binary presence relation (values stored separately).
     pub context: TriContext,
     values: FxHashMap<NTuple, f64>,
 }
 
 impl ManyValuedTriContext {
+    /// Empty many-valued context.
     pub fn new() -> Self {
         Self::default()
     }
@@ -188,18 +205,22 @@ impl ManyValuedTriContext {
         }
     }
 
+    /// The value of `(g, m, b)`, if the triple is present.
     pub fn value(&self, g: u32, m: u32, b: u32) -> Option<f64> {
         self.values.get(&NTuple::triple(g, m, b)).copied()
     }
 
+    /// Number of distinct triples.
     pub fn len(&self) -> usize {
         self.context.len()
     }
 
+    /// True when no triple was added.
     pub fn is_empty(&self) -> bool {
         self.context.is_empty()
     }
 
+    /// All triples, in first-insertion order.
     pub fn triples(&self) -> &[NTuple] {
         self.context.triples()
     }

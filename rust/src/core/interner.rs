@@ -19,6 +19,7 @@ pub struct Interner {
 }
 
 impl Interner {
+    /// Empty interner.
     pub fn new() -> Self {
         Self::default()
     }
@@ -44,22 +45,27 @@ impl Interner {
         id
     }
 
+    /// Id of `name`, if it was interned.
     pub fn get(&self, name: &str) -> Option<u32> {
         self.by_name.get(name).copied()
     }
 
+    /// Name of `id` (panics on an id this interner never produced).
     pub fn name(&self, id: u32) -> &str {
         &self.names[id as usize]
     }
 
+    /// Number of interned names.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// True when nothing was interned.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }
 
+    /// All names, in id order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.names.iter().map(|s| &**s)
     }

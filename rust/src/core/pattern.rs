@@ -18,6 +18,8 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Cluster over the given components (each sorted + deduped;
+    ///  `support` starts at 1).
     pub fn new(mut components: Vec<Vec<u32>>) -> Self {
         for c in components.iter_mut() {
             c.sort_unstable();
@@ -26,6 +28,7 @@ impl Cluster {
         Self { components, support: 1 }
     }
 
+    /// Number of modalities.
     pub fn arity(&self) -> usize {
         self.components.len()
     }

@@ -19,6 +19,7 @@ pub struct NTuple {
 }
 
 impl NTuple {
+    /// Tuple over `elems` (panics unless `2 ≤ arity ≤ MAX_ARITY`).
     pub fn new(elems: &[u32]) -> Self {
         assert!(
             (2..=MAX_ARITY).contains(&elems.len()),
@@ -30,22 +31,26 @@ impl NTuple {
         Self { elems: buf, arity: elems.len() as u8 }
     }
 
+    /// Arity-3 convenience constructor (the paper's `(g, m, b)`).
     pub fn triple(g: u32, m: u32, b: u32) -> Self {
         Self::new(&[g, m, b])
     }
 
     #[inline]
+    /// Number of components.
     pub fn arity(&self) -> usize {
         self.arity as usize
     }
 
     #[inline]
+    /// Component `k` (0-based).
     pub fn get(&self, k: usize) -> u32 {
         debug_assert!(k < self.arity());
         self.elems[k]
     }
 
     #[inline]
+    /// The components as a slice.
     pub fn as_slice(&self) -> &[u32] {
         &self.elems[..self.arity()]
     }
@@ -102,16 +107,19 @@ pub struct SubRelation {
 
 impl SubRelation {
     #[inline]
+    /// Which position was dropped (the subrelation's modality tag).
     pub fn dropped(&self) -> usize {
         self.dropped as usize
     }
 
     #[inline]
+    /// Arity of the original tuple this subrelation came from.
     pub fn original_arity(&self) -> usize {
         self.arity as usize
     }
 
     #[inline]
+    /// The kept components, in original order.
     pub fn as_slice(&self) -> &[u32] {
         &self.elems[..self.arity as usize - 1]
     }

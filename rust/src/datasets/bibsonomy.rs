@@ -11,11 +11,17 @@ use crate::core::context::TriContext;
 use crate::util::rng::{Rng, Zipf};
 
 #[derive(Debug, Clone)]
+/// Generation parameters for the BibSonomy-like tagging stream.
 pub struct BibsonomyParams {
+    /// Distinct users.
     pub users: usize,
+    /// Distinct tags.
     pub tags: usize,
+    /// Distinct bookmarks.
     pub bookmarks: usize,
+    /// Triples to generate.
     pub triples: usize,
+    /// Stream seed.
     pub seed: u64,
 }
 
@@ -47,6 +53,7 @@ impl BibsonomyParams {
     }
 }
 
+/// Generate the BibSonomy-like `(user, tag, bookmark)` context.
 pub fn bibsonomy(params: &BibsonomyParams) -> TriContext {
     let mut ctx = TriContext::new();
     for u in 0..params.users {

@@ -64,9 +64,13 @@ const TAG_STEMS: &[&str] = &[
 /// Generation parameters (defaults match Table 2).
 #[derive(Debug, Clone)]
 pub struct ImdbParams {
+    /// Distinct movies.
     pub movies: usize,
+    /// Distinct keyword tags to draw from.
     pub tag_universe: usize,
+    /// Triples to aim for.
     pub target_triples: usize,
+    /// Stream seed.
     pub seed: u64,
 }
 

@@ -11,15 +11,21 @@ use crate::core::context::PolyContext;
 use crate::util::rng::{Rng, Zipf};
 
 #[derive(Debug, Clone)]
+/// Generation parameters for the MovieLens-like rating stream.
 pub struct MovielensParams {
+    /// Distinct users.
     pub users: usize,
+    /// Distinct movies.
     pub movies: usize,
+    /// Distinct star ratings.
     pub ratings: usize,
     /// timestamp buckets (the raw seconds are binned; the paper's 4th
     /// modality would otherwise be almost all-distinct and meaningless
     /// for clustering)
     pub time_buckets: usize,
+    /// Tuples to generate.
     pub tuples: usize,
+    /// Stream seed.
     pub seed: u64,
 }
 
@@ -43,6 +49,7 @@ impl MovielensParams {
     }
 }
 
+/// Generate the MovieLens-like `(user, movie, rating, time)` context.
 pub fn movielens(params: &MovielensParams) -> PolyContext {
     // users dominate the modality sizes; one hint fits all four
     let mut ctx = PolyContext::with_capacity(4, params.users.max(params.movies), params.tuples);

@@ -10,11 +10,17 @@ use crate::core::context::ManyValuedTriContext;
 use crate::util::rng::{Rng, Zipf};
 
 #[derive(Debug, Clone)]
+/// Generation parameters for the verb-frame stream (Table 5's data).
 pub struct TriframesParams {
+    /// Distinct subjects.
     pub subjects: usize,
+    /// Distinct verbs.
     pub verbs: usize,
+    /// Distinct objects.
     pub objects: usize,
+    /// Triples to generate.
     pub triples: usize,
+    /// Stream seed.
     pub seed: u64,
 }
 
@@ -37,6 +43,7 @@ impl TriframesParams {
     }
 }
 
+/// Generate the many-valued `(subject, verb, object)` context.
 pub fn triframes(params: &TriframesParams) -> ManyValuedTriContext {
     let mut ctx = ManyValuedTriContext::new();
     for s in 0..params.subjects {

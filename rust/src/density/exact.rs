@@ -5,6 +5,8 @@ use crate::core::pattern::Cluster;
 use crate::density::DensityEngine;
 
 #[derive(Default)]
+/// Exact per-cluster density over the raw tuple set (the reference
+///  the sampled and compiled engines are validated against).
 pub struct ExactEngine;
 
 impl DensityEngine for ExactEngine {

@@ -27,6 +27,7 @@ use crate::core::pattern::Cluster;
 /// A density engine maps clusters to exact or estimated cuboid densities
 /// over the given context.
 pub trait DensityEngine {
+    /// Short engine id (`exact` / `mc` / `xla`).
     fn name(&self) -> &'static str;
 
     /// Densities ρ(c) = |cuboid ∩ I| / volume for each cluster.

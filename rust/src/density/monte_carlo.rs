@@ -16,7 +16,9 @@ use crate::density::DensityEngine;
 use crate::runtime::{McExecutable, Runtime};
 use crate::util::rng::Rng;
 
+/// Sampled density estimation: `samples` uniform probes per cluster.
 pub struct MonteCarloEngine {
+    /// Uniform probes drawn per cluster.
     pub samples: usize,
     rng: Rng,
     /// Optional AOT backend (used when the whole context fits one tile).
@@ -25,6 +27,7 @@ pub struct MonteCarloEngine {
 }
 
 impl MonteCarloEngine {
+    /// Host-only engine (no AOT artifact), seeded.
     pub fn host(samples: usize, seed: u64) -> Self {
         Self { samples, rng: Rng::new(seed), artifact: None, tiles: None }
     }

@@ -10,6 +10,7 @@ use crate::core::context::TriContext;
 
 /// Dense f32 tiles of a context for a fixed tile edge `t`.
 pub struct DenseTiles {
+    /// Tile edge (elements per axis).
     pub t: usize,
     /// number of tiles along (G, M, B)
     pub grid: (usize, usize, usize),
@@ -45,10 +46,12 @@ impl DenseTiles {
         Self { t, grid, tiles }
     }
 
+    /// The dense tile at grid position `(gi, mi, bi)`, row-major.
     pub fn tile(&self, gi: usize, mi: usize, bi: usize) -> &[f32] {
         &self.tiles[(gi * self.grid.1 + mi) * self.grid.2 + bi]
     }
 
+    /// Total number of tiles.
     pub fn n_tiles(&self) -> usize {
         self.tiles.len()
     }

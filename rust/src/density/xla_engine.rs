@@ -13,6 +13,7 @@ use crate::density::tiling::{tile_mask, DenseTiles};
 use crate::density::DensityEngine;
 use crate::runtime::{DensityExecutable, Runtime};
 
+/// Density engine backed by an AOT-compiled JAX/Pallas kernel via PJRT.
 pub struct XlaEngine {
     exe: DensityExecutable,
     /// reuse tiles across calls for the same context (keyed by ptr+len)
@@ -26,10 +27,12 @@ impl XlaEngine {
         Ok(Self { exe: rt.best_density(edge, batch)?, cached: None })
     }
 
+    /// Tile edge the compiled kernel expects.
     pub fn tile(&self) -> usize {
         self.exe.tile
     }
 
+    /// Cluster-batch size the compiled kernel expects.
     pub fn k(&self) -> usize {
         self.exe.k
     }

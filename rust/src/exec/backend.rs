@@ -93,6 +93,30 @@ pub fn sorted_by_key<K: Key, V>(pairs: &[(K, V)]) -> bool {
 /// `group_by_key`, `reduce`) plus the composed `map_reduce` round the
 /// stage functions call. Engines with a fused job pipeline (HadoopSim)
 /// override `map_reduce`; the rest inherit the composition.
+///
+/// # Example
+///
+/// One map → shuffle → reduce round (word count) on the reference
+/// backend; swapping [`Sequential`] for any other implementation
+/// produces the identical result:
+///
+/// ```
+/// use tricluster::exec::{no_combine, Backend, Sequential};
+///
+/// let lines: Vec<String> = vec!["a b a".into(), "b".into()];
+/// let counts: Vec<(String, u64)> = Sequential
+///     .map_reduce(
+///         "wc",
+///         lines,
+///         |line: &String| {
+///             line.split_whitespace().map(|w| (w.to_string(), 1u64)).collect()
+///         },
+///         no_combine::<String, u64>(),
+///         |word: &String, ones: Vec<u64>| vec![(word.clone(), ones.iter().sum())],
+///     )
+///     .unwrap();
+/// assert_eq!(counts, vec![("a".into(), 2), ("b".into(), 2)]);
+/// ```
 pub trait Backend {
     /// Short backend id (`seq` / `pool` / `hadoop` / `spark`).
     fn name(&self) -> &'static str;

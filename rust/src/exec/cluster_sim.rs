@@ -34,6 +34,28 @@
 //!   ([`super::placement::adaptive_task_count`]), threading granularity
 //!   through `exec::stages` without the stage functions knowing.
 //!
+//! * **Shuffle cost** ([`ShuffleModel`]) — every phase records where its
+//!   output records landed (the winning attempt's node, sizes MEASURED
+//!   per task); the next phase's tasks then pay `bytes moved × per-byte
+//!   latency` for the fraction of their input that is NOT already on
+//!   their node. The first phase reads node-local input splits and pays
+//!   nothing (data-local map scheduling). Every attempt fetches — a
+//!   failed or speculative attempt re-fetches its input, exactly like a
+//!   re-executed Hadoop task. Xu et al.'s iterative-MapReduce FCA
+//!   measurements (PAPERS.md) are the motivation: at scale the shuffle
+//!   volume, not the compute, dominates — with the model off (the
+//!   default) the simulation reduces bit-exactly to the PR 3 behaviour.
+//! * **Node churn** ([`ChurnConfig`]) — per phase, each node draws a
+//!   seeded kill fate; a killed node goes down at a deterministic
+//!   mid-phase instant and restarts `restart_ms` later. An attempt whose
+//!   execution window crosses its node's kill instant is killed (work
+//!   lost, like a failure), then rescheduled on the earliest slot of
+//!   another node; an attempt is churn-killed at most once — later
+//!   retries and speculative backups ride out downtime windows by
+//!   waiting for the restart. Churn draws come from a SEPARATE salted
+//!   RNG stream, so enabling churn never perturbs the straggler/failure
+//!   schedule.
+//!
 //! All randomness comes from a seeded [`crate::util::rng::Rng`] with a
 //! fixed number of draws per task in task-index order, so for a FIXED
 //! task count the straggler/failure schedule is identical across node
@@ -49,8 +71,10 @@
 //!
 //! The shuffle between phases is modelled as a barrier: every slot
 //! advances to the phase makespan before the next phase schedules
-//! (Hadoop's map→reduce barrier), and grouping itself is charged zero
-//! simulated time so speedup curves isolate compute distribution.
+//! (Hadoop's map→reduce barrier). Grouping compute is charged zero
+//! simulated time; the DATA MOTION of the shuffle is charged to the
+//! consuming task via the [`ShuffleModel`] above (zero when off, so
+//! speedup curves can still isolate compute distribution).
 
 use std::sync::Mutex;
 
@@ -71,6 +95,69 @@ pub enum CostModel {
     /// `records × ms` — machine-independent, bit-deterministic; used by
     /// the scaling bench and the CI baseline check.
     PerRecord(f64),
+}
+
+/// The shuffle-cost model: `bytes moved × per-byte latency` between
+/// non-colocated producer and consumer tasks. Record counts are MEASURED
+/// per task (a JobTracker reads its map-output index files); the byte
+/// size per record and the network latency are configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShuffleModel {
+    /// Estimated wire size of one shuffled record, bytes.
+    pub bytes_per_record: f64,
+    /// Transfer latency per MiB moved between two DIFFERENT nodes, ms
+    /// (intra-node exchange is free). 0.0 disables the model.
+    pub ms_per_mib: f64,
+}
+
+impl ShuffleModel {
+    /// Network cost disabled — the PR 3 compute-only simulation.
+    pub fn off() -> Self {
+        Self { bytes_per_record: 0.0, ms_per_mib: 0.0 }
+    }
+
+    /// True when moving bytes costs simulated time.
+    pub fn is_active(&self) -> bool {
+        self.ms_per_mib > 0.0 && self.bytes_per_record > 0.0
+    }
+
+    /// MiB on the wire for `records` records.
+    pub fn mib(&self, records: usize) -> f64 {
+        records as f64 * self.bytes_per_record / (1u64 << 20) as f64
+    }
+}
+
+impl Default for ShuffleModel {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+/// Seeded node churn: kill/restart mid-phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnConfig {
+    /// Per-phase probability that EACH node is killed during the phase.
+    pub kill_prob: f64,
+    /// Downtime before a killed node's slots accept work again, ms.
+    pub restart_ms: f64,
+}
+
+impl ChurnConfig {
+    /// No churn (the default).
+    pub fn off() -> Self {
+        Self { kill_prob: 0.0, restart_ms: 0.0 }
+    }
+
+    /// True when nodes can die.
+    pub fn is_active(&self) -> bool {
+        self.kill_prob > 0.0
+    }
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self::off()
+    }
 }
 
 /// Tuning for the simulated cluster.
@@ -100,8 +187,13 @@ pub struct ClusterConfig {
     pub tasks: usize,
     /// Pick per-phase task counts from input size + previous skew.
     pub adaptive_tasks: bool,
+    /// Network cost of moving shuffled bytes between nodes.
+    pub shuffle: ShuffleModel,
+    /// Seeded node kill/restart mid-phase.
+    pub churn: ChurnConfig,
     /// REAL executor threads that run the task closures.
     pub workers: usize,
+    /// Seed for the straggler/failure/churn schedules.
     pub seed: u64,
 }
 
@@ -120,6 +212,8 @@ impl Default for ClusterConfig {
             cost: CostModel::Measured,
             tasks: 16,
             adaptive_tasks: true,
+            shuffle: ShuffleModel::off(),
+            churn: ChurnConfig::off(),
             workers,
             seed: 0x5EED,
         }
@@ -131,6 +225,7 @@ impl Default for ClusterConfig {
 pub struct ClusterStats {
     /// Phase label (`s1-map`, `s3-reduce`, ...).
     pub label: String,
+    /// Tasks the phase was split into.
     pub tasks: usize,
     /// Records processed by the phase.
     pub records: usize,
@@ -141,11 +236,17 @@ pub struct ClusterStats {
     pub skew: f64,
     /// Attempts that drew the straggler slowdown.
     pub stragglers: usize,
-    /// Speculative duplicates launched / that won their race.
+    /// Speculative duplicates launched.
     pub spec_launched: usize,
+    /// Speculative duplicates that won their race.
     pub spec_wins: usize,
     /// First attempts that failed and were rescheduled.
     pub failures: usize,
+    /// Shuffled MiB fetched from remote nodes this phase (every
+    /// attempt's fetch counts — retries and backups re-fetch).
+    pub shuffle_mib: f64,
+    /// Attempts killed by node churn this phase.
+    pub churn_kills: usize,
 }
 
 /// One task entering the simulator.
@@ -154,6 +255,11 @@ struct SimTask {
     partition: u64,
     /// Base cost before node slowdown / straggler multipliers, ms.
     base_ms: f64,
+    /// Input records — sized against the previous phase's output for the
+    /// shuffle-cost model.
+    records: usize,
+    /// Output records — where they land feeds the NEXT phase's shuffle.
+    out_records: usize,
 }
 
 /// Simulation state carried across phases (the cluster's clock).
@@ -162,6 +268,10 @@ struct SimState {
     makespan_ms: f64,
     /// Previous phase's measured skew (max/mean of base task costs).
     prev_skew: f64,
+    /// Previous phase's output records per node (the winning attempt's
+    /// node) — the data layout the next phase shuffles against. Empty
+    /// before the first phase: input splits are node-local.
+    prev_out: Vec<f64>,
     /// Phase counter — salts the per-phase RNG stream.
     round: u64,
     stats: Vec<ClusterStats>,
@@ -189,6 +299,7 @@ fn median_sorted(xs: &[f64]) -> Option<f64> {
 }
 
 impl ClusterSim {
+    /// Simulator over `cfg` with the given placement policy.
     pub fn new(cfg: ClusterConfig, placement: Box<dyn Placement>) -> Self {
         Self {
             cfg,
@@ -196,6 +307,7 @@ impl ClusterSim {
             state: Mutex::new(SimState {
                 makespan_ms: 0.0,
                 prev_skew: 1.0,
+                prev_out: Vec::new(),
                 round: 0,
                 stats: Vec::new(),
             }),
@@ -208,6 +320,7 @@ impl ClusterSim {
         Self::new(ClusterConfig::default(), Box::new(super::placement::LeastLoaded))
     }
 
+    /// The configuration this simulator runs under.
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
     }
@@ -245,15 +358,19 @@ impl ClusterSim {
     }
 
     /// Replay `tasks` onto the simulated cluster: placement, stragglers,
-    /// failures, speculation, first-result-wins. Advances the global
-    /// clock by the phase makespan (barrier semantics) and records a
-    /// [`ClusterStats`] entry.
+    /// failures, node churn, shuffle fetches, speculation,
+    /// first-result-wins. Advances the global clock by the phase
+    /// makespan (barrier semantics) and records a [`ClusterStats`]
+    /// entry.
     fn simulate_phase(&self, label: &str, tasks: &[SimTask]) {
         let nodes = self.cfg.nodes.max(1);
         let slots = self.cfg.slots_per_node.max(1);
         let mut state = self.state.lock().unwrap();
         state.round += 1;
         let round = state.round;
+        // where the PREVIOUS phase's output landed: the data layout this
+        // phase's tasks fetch their input against
+        let prev_out = std::mem::take(&mut state.prev_out);
         let mut stats = ClusterStats {
             label: label.to_string(),
             tasks: tasks.len(),
@@ -264,8 +381,11 @@ impl ClusterSim {
             spec_launched: 0,
             spec_wins: 0,
             failures: 0,
+            shuffle_mib: 0.0,
+            churn_kills: 0,
         };
         if tasks.is_empty() {
+            state.prev_out = vec![0.0; nodes];
             state.stats.push(stats);
             return;
         }
@@ -274,6 +394,56 @@ impl ClusterSim {
         // placement policies
         let mut rng =
             Rng::new(self.cfg.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // churn fates draw from a SEPARATE salted stream (two draws per
+        // node, phase order), so enabling churn never perturbs the
+        // per-task straggler/failure schedule above
+        let windows: Vec<Option<(f64, f64)>> = if self.cfg.churn.is_active() {
+            let mut crng = Rng::new(
+                self.cfg.seed
+                    ^ round.wrapping_mul(0xA24B_AED4_963E_E407)
+                    ^ 0x4348_5552_4E21,
+            );
+            let est_total: f64 = tasks.iter().map(|t| t.base_ms).sum();
+            let est_span = (est_total / (nodes * slots) as f64).max(1e-6);
+            (0..nodes)
+                .map(|_| {
+                    let kill = crng.chance(self.cfg.churn.kill_prob);
+                    let frac = crng.f64();
+                    if kill {
+                        let at = frac * est_span;
+                        Some((at, at + self.cfg.churn.restart_ms.max(0.0)))
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        } else {
+            vec![None; nodes]
+        };
+        // push a start time out of a node's downtime window
+        let delay_past_window = |node: usize, t: f64| -> f64 {
+            match windows[node] {
+                Some((kill, up)) if t >= kill && t < up => up,
+                _ => t,
+            }
+        };
+        // the kill instant, when running [start, start+dur] on `node`
+        // crosses it
+        let crossing_kill = |node: usize, start: f64, dur: f64| -> Option<(f64, f64)> {
+            windows[node].filter(|&(kill, _)| start < kill && start + dur > kill)
+        };
+        // fraction of a task's input NOT already on `node` (0 when the
+        // shuffle model is off or this is the first phase: map tasks
+        // read node-local splits)
+        let shuffle = self.cfg.shuffle;
+        let prev_total: f64 = prev_out.iter().sum();
+        let remote_frac = |node: usize| -> f64 {
+            if !shuffle.is_active() || prev_total <= 0.0 {
+                0.0
+            } else {
+                1.0 - prev_out.get(node).copied().unwrap_or(0.0) / prev_total
+            }
+        };
         // lane[node][slot] = simulated time the slot frees up (phase-local)
         let mut lanes: Vec<Vec<f64>> = vec![vec![0.0; slots]; nodes];
         let mut busy: Vec<f64> = vec![0.0; nodes];
@@ -320,6 +490,9 @@ impl ClusterSim {
             best
         };
 
+        // where each task's output lands (the winning attempt's node) —
+        // becomes `prev_out` for the next phase's shuffle accounting
+        let mut out_node: Vec<f64> = vec![0.0; nodes];
         for (i, task) in tasks.iter().enumerate() {
             // fixed draw schedule: 3 draws per task in task order,
             // branch-independent — so the straggler/failure fates are
@@ -328,19 +501,19 @@ impl ClusterSim {
             let fail = rng.chance(self.cfg.failure_prob);
             let straggle2 = rng.chance(self.cfg.straggler_prob);
 
-            let meta = TaskMeta {
-                index: i,
-                partition: task.partition,
-                est_cost_ms: task.base_ms,
-            };
+            let meta = TaskMeta::new(i, task.partition, task.base_ms);
             let node = self.placement.place(&meta, &views(&lanes, &busy)).min(nodes - 1);
             let slot = (0..slots)
                 .min_by(|&a, &b| lanes[node][a].partial_cmp(&lanes[node][b]).unwrap())
                 .unwrap();
-            let mut start = lanes[node][slot];
+            let mut start = delay_past_window(node, lanes[node][slot]);
             let mult1 = if straggle1 { self.cfg.straggler_factor } else { 1.0 };
             let mut active = (node, slot);
-            let mut dur = task.base_ms * self.node_slowdown(node) * mult1;
+            let mut attempt_mult = mult1;
+            let fetch = shuffle.mib(task.records) * remote_frac(node);
+            stats.shuffle_mib += fetch;
+            let mut dur =
+                task.base_ms * self.node_slowdown(node) * mult1 + fetch * shuffle.ms_per_mib;
             if straggle1 {
                 stats.stragglers += 1;
             }
@@ -348,6 +521,7 @@ impl ClusterSim {
             if fail {
                 // first attempt dies halfway; its slot is released then,
                 // and the retry goes to the earliest slot anywhere
+                // (re-fetching its shuffled input)
                 stats.failures += 1;
                 let abort = start + 0.5 * dur;
                 lanes[node][slot] = abort;
@@ -359,14 +533,55 @@ impl ClusterSim {
                     stats.stragglers += 1;
                 }
                 active = (rn, rs);
-                start = abort.max(free);
-                dur = task.base_ms * self.node_slowdown(rn) * mult_r;
+                attempt_mult = mult_r;
+                start = delay_past_window(rn, abort.max(free));
+                let fetch_r = shuffle.mib(task.records) * remote_frac(rn);
+                stats.shuffle_mib += fetch_r;
+                dur = task.base_ms * self.node_slowdown(rn) * mult_r
+                    + fetch_r * shuffle.ms_per_mib;
+            }
+            // node churn: an attempt whose execution window crosses its
+            // node's kill instant dies there (work lost), keeps its
+            // straggler fate, and is rescheduled on the earliest slot of
+            // another node; an attempt is churn-killed at most once —
+            // later downtime windows only delay it
+            if let Some((kill_at, _)) = crossing_kill(active.0, start, dur) {
+                stats.churn_kills += 1;
+                busy[active.0] += (kill_at - start).max(0.0);
+                let up = windows[active.0].expect("crossing implies a window").1;
+                lanes[active.0][active.1] = up;
+                let mut best: Option<(usize, usize, f64)> = None;
+                for (n, ls) in lanes.iter().enumerate() {
+                    if n == active.0 && nodes > 1 {
+                        continue; // prefer a surviving node
+                    }
+                    for (s, &free) in ls.iter().enumerate() {
+                        let better = match best {
+                            None => true,
+                            Some((_, _, b)) => free < b,
+                        };
+                        if better {
+                            best = Some((n, s, free));
+                        }
+                    }
+                }
+                let (rn, rs, free) = best.expect("cluster has slots");
+                active = (rn, rs);
+                start = delay_past_window(rn, kill_at.max(free));
+                let fetch_c = shuffle.mib(task.records) * remote_frac(rn);
+                stats.shuffle_mib += fetch_c;
+                dur = task.base_ms * self.node_slowdown(rn) * attempt_mult
+                    + fetch_c * shuffle.ms_per_mib;
+                if let Some((_, up_r)) = crossing_kill(rn, start, dur) {
+                    start = up_r; // ride out the downtime
+                }
             }
             let finish = start + dur;
             // straggler detection: projected duration vs the running
             // median of realized durations (scheduling order stands in
             // for completion order at this simulation granularity)
             let mut completion = finish;
+            let mut winner_node = active.0;
             let median = median_sorted(&realized);
             let backup = if self.cfg.speculation {
                 median.filter(|&m| m > 0.0 && dur > self.cfg.speculation_factor * m)
@@ -377,10 +592,16 @@ impl ClusterSim {
                 if let Some((bn, bs, bfree)) = earliest_slot(&lanes, Some(active)) {
                     stats.spec_launched += 1;
                     let detect = start + self.cfg.speculation_factor * m;
-                    let bstart = detect.max(bfree);
-                    // backups never re-draw the straggler fate: the
-                    // detector just excluded that cause
-                    let bdur = task.base_ms * self.node_slowdown(bn);
+                    let mut bstart = delay_past_window(bn, detect.max(bfree));
+                    // backups never re-draw the straggler fate (the
+                    // detector just excluded that cause) and are never
+                    // churn-killed — they wait out downtime windows
+                    let bfetch = shuffle.mib(task.records) * remote_frac(bn);
+                    let bdur =
+                        task.base_ms * self.node_slowdown(bn) + bfetch * shuffle.ms_per_mib;
+                    if let Some((_, up_b)) = crossing_kill(bn, bstart, bdur) {
+                        bstart = up_b;
+                    }
                     let bfinish = bstart + bdur;
                     completion = finish.min(bfinish);
                     if bfinish < finish {
@@ -388,6 +609,8 @@ impl ClusterSim {
                         // winner's finish — first-result-wins, the
                         // loser's (identical) output is dropped
                         stats.spec_wins += 1;
+                        stats.shuffle_mib += bfetch;
+                        winner_node = bn;
                         lanes[active.0][active.1] = completion;
                         busy[active.0] += completion - start;
                         lanes[bn][bs] = bfinish;
@@ -400,6 +623,7 @@ impl ClusterSim {
                         busy[active.0] += dur;
                         let bused = (completion - bstart).max(0.0);
                         if bused > 0.0 {
+                            stats.shuffle_mib += bfetch;
                             lanes[bn][bs] = bstart + bused;
                             busy[bn] += bused;
                         }
@@ -412,6 +636,7 @@ impl ClusterSim {
                 lanes[active.0][active.1] = finish;
                 busy[active.0] += dur;
             }
+            out_node[winner_node] += task.out_records as f64;
             insert_sorted(&mut realized, completion - first_attempt_start);
             phase_end = phase_end.max(completion);
         }
@@ -422,6 +647,7 @@ impl ClusterSim {
         stats.skew = if mean > 0.0 { max / mean } else { 1.0 };
         stats.sim_phase_ms = phase_end;
         state.prev_skew = stats.skew;
+        state.prev_out = out_node;
         state.makespan_ms += phase_end; // barrier: next phase starts here
         state.stats.push(stats);
     }
@@ -481,9 +707,11 @@ impl Backend for ClusterSim {
         let tasks: Vec<SimTask> = outs
             .iter()
             .enumerate()
-            .map(|(t, (_, ms))| SimTask {
+            .map(|(t, (out, ms))| SimTask {
                 partition: t as u64,
                 base_ms: self.base_cost(*ms, splits[t].len()),
+                records: splits[t].len(),
+                out_records: out.len(),
             })
             .collect();
         self.simulate_phase(label, &tasks);
@@ -492,8 +720,10 @@ impl Backend for ClusterSim {
     }
 
     /// The shuffle: deterministic in-memory grouping (sorted by key).
-    /// Simulated as a barrier — grouping is charged zero simulated time
-    /// so node-count sweeps isolate compute distribution.
+    /// Simulated as a barrier — grouping COMPUTE is charged zero
+    /// simulated time; the data motion is charged to the consuming
+    /// phase's tasks by the [`ShuffleModel`] (zero when off, so
+    /// node-count sweeps can isolate compute distribution).
     fn group_by_key<K, V>(&self, _label: &str, pairs: Vec<(K, V)>) -> Result<Vec<(K, Vec<V>)>>
     where
         K: Key,
@@ -549,9 +779,11 @@ impl Backend for ClusterSim {
         let tasks: Vec<SimTask> = outs
             .iter()
             .zip(&metas)
-            .map(|((_, ms), &(partition, records))| SimTask {
+            .map(|((out, ms), &(partition, records))| SimTask {
                 partition,
                 base_ms: self.base_cost(*ms, records),
+                records,
+                out_records: out.len(),
             })
             .collect();
         self.simulate_phase(label, &tasks);
@@ -722,6 +954,99 @@ mod tests {
         assert_eq!(mk(Box::new(RoundRobin)), reference);
         assert_eq!(mk(Box::new(LocalityAware)), reference);
         assert_eq!(mk(by_name("locality").unwrap()), reference);
+    }
+
+    #[test]
+    fn shuffle_cost_charges_remote_fetches_only_after_the_first_phase() {
+        let clean = word_count(&sim(deterministic_cfg()));
+        let free_makespan = {
+            let b = sim(deterministic_cfg());
+            word_count(&b);
+            b.sim_makespan_ms()
+        };
+        let backend = sim(ClusterConfig {
+            shuffle: ShuffleModel { bytes_per_record: 65_536.0, ms_per_mib: 10.0 },
+            ..deterministic_cfg()
+        });
+        assert_eq!(word_count(&backend), clean, "network cost never changes output");
+        let stats = backend.take_stats();
+        // the map phase reads node-local input splits: nothing fetched
+        assert_eq!(stats[0].shuffle_mib, 0.0, "map phase is data-local");
+        // the reduce phase fetches the map output it is not colocated with
+        assert!(stats[1].shuffle_mib > 0.0, "reduce phase must fetch remotely");
+        assert!(
+            backend.sim_makespan_ms() > free_makespan,
+            "moving bytes must cost simulated time"
+        );
+    }
+
+    #[test]
+    fn shuffle_simulation_is_bit_deterministic() {
+        let run = || {
+            let backend = sim(ClusterConfig {
+                straggler_prob: 0.3,
+                failure_prob: 0.2,
+                shuffle: ShuffleModel { bytes_per_record: 4_096.0, ms_per_mib: 5.0 },
+                ..deterministic_cfg()
+            });
+            word_count(&backend);
+            backend.sim_makespan_ms()
+        };
+        assert_eq!(run().to_bits(), run().to_bits());
+    }
+
+    #[test]
+    fn churn_kills_attempts_but_output_survives() {
+        let clean = word_count(&sim(deterministic_cfg()));
+        // single node + certain kill: the node's slots are busy
+        // back-to-back from t=0, so the kill instant (drawn inside the
+        // estimated span) always lands inside some attempt's window
+        let run = || {
+            let backend = sim(ClusterConfig {
+                nodes: 1,
+                churn: ChurnConfig { kill_prob: 1.0, restart_ms: 100.0 },
+                ..deterministic_cfg()
+            });
+            let out = backend
+                .map_partitions("churned", (0..4096u32).collect(), |&x| vec![x])
+                .unwrap();
+            let kills: usize =
+                backend.take_stats().iter().map(|s| s.churn_kills).sum();
+            (out, kills, backend.sim_makespan_ms())
+        };
+        let (out, kills, ms) = run();
+        assert_eq!(out, (0..4096).collect::<Vec<_>>());
+        assert!(kills > 0, "a certain kill on a saturated node must hit an attempt");
+        assert_eq!(ms.to_bits(), run().2.to_bits(), "churn schedule is seeded");
+        // multi-node churn with failures + stragglers still reproduces
+        // the exact word count
+        let noisy = sim(ClusterConfig {
+            straggler_prob: 0.5,
+            failure_prob: 0.5,
+            churn: ChurnConfig { kill_prob: 0.7, restart_ms: 25.0 },
+            ..deterministic_cfg()
+        });
+        assert_eq!(word_count(&noisy), clean);
+    }
+
+    #[test]
+    fn churn_off_draws_nothing_and_costs_nothing() {
+        let a = {
+            let b = sim(ClusterConfig { straggler_prob: 0.3, ..deterministic_cfg() });
+            word_count(&b);
+            b.sim_makespan_ms()
+        };
+        let b = {
+            let b = sim(ClusterConfig {
+                straggler_prob: 0.3,
+                churn: ChurnConfig { kill_prob: 0.0, restart_ms: 1_000.0 },
+                shuffle: ShuffleModel::off(),
+                ..deterministic_cfg()
+            });
+            word_count(&b);
+            b.sim_makespan_ms()
+        };
+        assert_eq!(a.to_bits(), b.to_bits(), "disabled models are bit-invisible");
     }
 
     #[test]

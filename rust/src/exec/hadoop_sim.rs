@@ -120,6 +120,7 @@ pub struct HadoopSim {
 }
 
 impl HadoopSim {
+    /// Backend over the given job config and DFS.
     pub fn new(cfg: JobConfig, dfs: Dfs) -> Self {
         Self { cfg, dfs, stats: Mutex::new(Vec::new()) }
     }

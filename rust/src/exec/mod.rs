@@ -17,7 +17,14 @@
 //! * [`ClusterSim`] — the simulated N-node cluster (§4's distribution
 //!   claim made testable): pluggable task [`placement`], per-node worker
 //!   slots, straggler/failure injection, speculative execution with
-//!   first-result-wins, and per-stage adaptive task counts.
+//!   first-result-wins, per-stage adaptive task counts, a shuffle-cost
+//!   model ([`ShuffleModel`]: bytes moved × per-MiB latency between
+//!   non-colocated tasks), and seeded node churn ([`ChurnConfig`]:
+//!   kill/restart mid-phase).
+//!
+//! The serving layer rides the same abstractions:
+//! [`crate::serve::cluster::ServeSim`] places serve shards on the
+//! simulated nodes via the [`Placement`] trait.
 //!
 //! `tricluster mr --backend {seq,pool,hadoop,spark,cluster}` selects a
 //! backend from the CLI, `benches/backend_matrix.rs` sweeps the full
@@ -40,7 +47,9 @@ pub mod stages;
 pub use backend::{
     group_pairs_presorted, no_combine, sorted_by_key, Backend, Data, Key,
 };
-pub use cluster_sim::{ClusterConfig, ClusterSim, ClusterStats, CostModel};
+pub use cluster_sim::{
+    ChurnConfig, ClusterConfig, ClusterSim, ClusterStats, CostModel, ShuffleModel,
+};
 pub use hadoop_sim::HadoopSim;
 pub use placement::Placement;
 pub use pooled::Pooled;
@@ -77,6 +86,7 @@ pub struct ExecTuning {
     /// HadoopSim task-retry probability; ClusterSim first-attempt task
     /// failure probability.
     pub fault_prob: f64,
+    /// Seed for fault/straggler/churn schedules.
     pub seed: u64,
     /// HadoopSim: materialise intermediates through the replicated DFS.
     pub use_dfs: bool,
@@ -98,6 +108,17 @@ pub struct ExecTuning {
     /// ClusterSim: simulated per-record task cost (ms); `None` uses the
     /// measured wall time of each task closure.
     pub cost_ms_per_record: Option<f64>,
+    /// ClusterSim: wire size of one shuffled record, bytes (0 disables
+    /// the shuffle-cost model).
+    pub shuffle_bytes_per_record: f64,
+    /// ClusterSim: transfer latency per MiB moved between two different
+    /// nodes, ms (0 disables the shuffle-cost model).
+    pub shuffle_ms_per_mib: f64,
+    /// ClusterSim: per-phase probability that each node is killed
+    /// mid-phase (0 disables churn).
+    pub churn_prob: f64,
+    /// ClusterSim: downtime of a killed node before restart, ms.
+    pub churn_restart_ms: f64,
 }
 
 impl Default for ExecTuning {
@@ -117,6 +138,10 @@ impl Default for ExecTuning {
             placement: "least".into(),
             adaptive_tasks: true,
             cost_ms_per_record: None,
+            shuffle_bytes_per_record: 0.0,
+            shuffle_ms_per_mib: 0.0,
+            churn_prob: 0.0,
+            churn_restart_ms: 50.0,
         }
     }
 }
@@ -137,6 +162,14 @@ impl ExecTuning {
             },
             tasks: self.tasks,
             adaptive_tasks: self.adaptive_tasks,
+            shuffle: ShuffleModel {
+                bytes_per_record: self.shuffle_bytes_per_record,
+                ms_per_mib: self.shuffle_ms_per_mib,
+            },
+            churn: ChurnConfig {
+                kill_prob: self.churn_prob,
+                restart_ms: self.churn_restart_ms,
+            },
             workers: self.workers,
             seed: self.seed,
             ..ClusterConfig::default()
@@ -153,8 +186,11 @@ impl ExecTuning {
 /// plus wall time.
 #[derive(Debug)]
 pub struct PipelineRun {
+    /// Backend id the pipeline ran on.
     pub backend: &'static str,
+    /// Component-sorted cluster set.
     pub clusters: Vec<Cluster>,
+    /// Wall time of the full pipeline, ms.
     pub wall_ms: f64,
 }
 

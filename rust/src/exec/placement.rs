@@ -20,16 +20,32 @@ pub struct TaskMeta {
     pub index: usize,
     /// Shuffle-key partition affinity: the input-split index for map
     /// tasks, the hash partition of the task's first key for reduce
-    /// tasks. Locality-aware placement keys off this.
+    /// tasks. Locality-aware placement keys off this when no measured
+    /// `affinity` is available.
     pub partition: u64,
     /// Estimated cost in simulated ms (records × per-record estimate).
     pub est_cost_ms: f64,
+    /// MEASURED input locality, when the scheduler knows it: the node
+    /// currently holding the largest share of this task's input bytes
+    /// (the serve layer tracks per-shard input provenance; generic M/R
+    /// phases pass `None`). [`LocalityAware`] prefers this over the
+    /// `partition` hash — moving the task to its data instead of hoping
+    /// the hash lands there.
+    pub affinity: Option<usize>,
+}
+
+impl TaskMeta {
+    /// Meta with no measured affinity (the generic M/R case).
+    pub fn new(index: usize, partition: u64, est_cost_ms: f64) -> Self {
+        Self { index, partition, est_cost_ms, affinity: None }
+    }
 }
 
 /// What a placement policy may know about a node: its earliest available
 /// worker slot and cumulative assigned work, both in simulated ms.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeView {
+    /// Node id (index into the cluster's node list).
     pub id: usize,
     /// Simulated time at which the node's earliest slot frees up.
     pub free_at_ms: f64,
@@ -41,6 +57,7 @@ pub struct NodeView {
 /// functions of `(task, nodes)` so a fixed seed reproduces the exact
 /// schedule (the determinism contract of the cluster simulation).
 pub trait Placement: Send + Sync {
+    /// Policy id (`round-robin` / `locality` / `least-loaded`).
     fn name(&self) -> &'static str;
     /// Pick the node for `task`. `nodes` is never empty.
     fn place(&self, task: &TaskMeta, nodes: &[NodeView]) -> usize;
@@ -60,11 +77,15 @@ impl Placement for RoundRobin {
     }
 }
 
-/// Send a task to the node that owns its shuffle-key partition
-/// (`partition % nodes`), so reduce tasks land where the map output for
-/// their keys was partitioned — Hadoop's rack-locality analogue in a
-/// world without racks. Degrades to hash-slicing load balance, which is
-/// exactly the skew the adaptive task count compensates for.
+/// Send a task to the node that owns its input: the MEASURED
+/// input-majority node when the scheduler knows it (`TaskMeta::affinity`
+/// — the serve layer's shard placement), otherwise the shuffle-key
+/// partition hash (`partition % nodes`), so reduce tasks land where the
+/// map output for their keys was partitioned — Hadoop's rack-locality
+/// analogue in a world without racks. Minimises bytes moved at the price
+/// of compute balance: under heavy source skew it piles work onto the
+/// data-heavy node, which is exactly the communication-vs-balance
+/// trade-off the serve-cluster bench measures.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct LocalityAware;
 
@@ -74,7 +95,10 @@ impl Placement for LocalityAware {
     }
 
     fn place(&self, task: &TaskMeta, nodes: &[NodeView]) -> usize {
-        (task.partition % nodes.len() as u64) as usize
+        match task.affinity {
+            Some(node) => node.min(nodes.len().saturating_sub(1)),
+            None => (task.partition % nodes.len() as u64) as usize,
+        }
     }
 }
 
@@ -144,7 +168,7 @@ mod tests {
     }
 
     fn task(index: usize, partition: u64) -> TaskMeta {
-        TaskMeta { index, partition, est_cost_ms: 1.0 }
+        TaskMeta::new(index, partition, 1.0)
     }
 
     #[test]
@@ -162,6 +186,21 @@ mod tests {
         let p = LocalityAware;
         assert_eq!(p.place(&task(0, 4), &ns), 1);
         assert_eq!(p.place(&task(7, 4), &ns), 1, "same partition, same node");
+    }
+
+    #[test]
+    fn locality_prefers_measured_affinity_over_partition_hash() {
+        let ns = nodes(&[0.0, 5.0, 0.0]);
+        let p = LocalityAware;
+        let with_affinity = TaskMeta { affinity: Some(2), ..task(0, 4) };
+        assert_eq!(p.place(&with_affinity, &ns), 2, "affinity wins");
+        // an affinity pointing past the cluster (node died and the view
+        // shrank) is clamped, never out of range
+        let stale = TaskMeta { affinity: Some(9), ..task(0, 4) };
+        assert_eq!(p.place(&stale, &ns), 2);
+        // round-robin and least-loaded ignore affinity entirely
+        assert_eq!(RoundRobin.place(&with_affinity, &ns), 0);
+        assert_eq!(LeastLoaded.place(&with_affinity, &ns), 0);
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub struct Pooled {
 }
 
 impl Pooled {
+    /// Backend over `workers` pool threads (min 1).
     pub fn new(workers: usize) -> Self {
         Self { workers: workers.max(1) }
     }

@@ -18,10 +18,12 @@ pub struct SparkSim<'a> {
 }
 
 impl<'a> SparkSim<'a> {
+    /// Backend over an existing Spark-like context.
     pub fn new(sc: &'a SparkContext) -> Self {
         Self { sc }
     }
 
+    /// The underlying context (partitions, stage log).
     pub fn context(&self) -> &SparkContext {
         self.sc
     }

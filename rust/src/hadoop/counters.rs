@@ -5,17 +5,29 @@ use std::collections::BTreeMap;
 
 /// Well-known counter names used across the pipeline.
 pub mod names {
+    /// Records read by map tasks.
     pub const MAP_INPUT_RECORDS: &str = "map.input.records";
+    /// Records emitted by map tasks.
     pub const MAP_OUTPUT_RECORDS: &str = "map.output.records";
+    /// Distinct keys seen by reduce tasks.
     pub const REDUCE_INPUT_GROUPS: &str = "reduce.input.groups";
+    /// Values consumed by reduce tasks.
     pub const REDUCE_INPUT_RECORDS: &str = "reduce.input.records";
+    /// Records emitted by reduce tasks.
     pub const REDUCE_OUTPUT_RECORDS: &str = "reduce.output.records";
+    /// Logical bytes moved through the shuffle.
     pub const SHUFFLE_BYTES: &str = "shuffle.bytes";
+    /// Bytes spilled to disk by the DFS.
     pub const SPILLED_BYTES: &str = "dfs.spilled.bytes";
+    /// Bytes written including DFS replication.
     pub const REPLICATED_BYTES: &str = "dfs.replicated.bytes";
+    /// Task attempts that were retried (fault injection).
     pub const TASK_RETRIES: &str = "task.retries";
+    /// Duplicate task inputs observed (retry idempotence check).
     pub const DUPLICATE_INPUTS: &str = "task.duplicate.inputs";
+    /// Records entering the map-side combiner.
     pub const COMBINE_INPUT_RECORDS: &str = "combine.input.records";
+    /// Records leaving the map-side combiner.
     pub const COMBINE_OUTPUT_RECORDS: &str = "combine.output.records";
 }
 
@@ -26,14 +38,17 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Empty counter set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `by` to counter `name` (creating it at 0).
     pub fn inc(&mut self, name: &str, by: u64) {
         *self.values.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Current value of counter `name` (0 if never incremented).
     pub fn get(&self, name: &str) -> u64 {
         self.values.get(name).copied().unwrap_or(0)
     }
@@ -45,10 +60,12 @@ impl Counters {
         }
     }
 
+    /// All counters in name order.
     pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
         self.values.iter().map(|(k, &v)| (k.as_str(), v))
     }
 
+    /// True when no counter was ever incremented.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }

@@ -51,6 +51,7 @@ pub struct Dfs {
 }
 
 impl Dfs {
+    /// A DFS with the given spill/replication configuration.
     pub fn new(cfg: DfsConfig) -> Self {
         Self {
             cfg,
@@ -60,6 +61,7 @@ impl Dfs {
         }
     }
 
+    /// A DFS that never spills to disk (pure in-memory blocks).
     pub fn in_memory() -> Self {
         Self::new(DfsConfig { spill_threshold: None, ..DfsConfig::default() })
     }
@@ -100,6 +102,7 @@ impl Dfs {
         }
     }
 
+    /// Remove a block (and its on-disk spill file, if any).
     pub fn delete(&self, name: &str) {
         if let Some(Block::Disk(path, _)) =
             self.blocks.lock().unwrap().remove(name)
@@ -108,6 +111,7 @@ impl Dfs {
         }
     }
 
+    /// True when a block with this name exists.
     pub fn exists(&self, name: &str) -> bool {
         self.blocks.lock().unwrap().contains_key(name)
     }
@@ -122,6 +126,7 @@ impl Dfs {
         self.logical_bytes() * self.cfg.replication as u64
     }
 
+    /// Configured replication factor.
     pub fn replication(&self) -> u32 {
         self.cfg.replication
     }

@@ -24,11 +24,16 @@ use crate::util::stats::Timer;
 /// Typed map function. One mapper instance is shared by all map tasks
 /// (must be `Sync`); per-record state lives in the emitter.
 pub trait Mapper: Sync {
+    /// Input key type.
     type InK: Record + Send + Sync + Clone;
+    /// Input value type.
     type InV: Record + Send + Sync + Clone;
+    /// Emitted key type.
     type OutK: Record + Send + Sync;
+    /// Emitted value type.
     type OutV: Record + Send + Sync;
 
+    /// Map one input record, emitting any number of pairs.
     fn map(
         &self,
         key: Self::InK,
@@ -39,11 +44,16 @@ pub trait Mapper: Sync {
 
 /// Typed reduce function: sees one key with all shuffled values.
 pub trait Reducer: Sync {
+    /// Shuffle key type.
     type InK: Record + Send;
+    /// Shuffled value type.
     type InV: Record + Send;
+    /// Emitted key type.
     type OutK: Record + Send;
+    /// Emitted value type.
     type OutV: Record + Send;
 
+    /// Reduce one key group, emitting any number of pairs.
     fn reduce(
         &self,
         key: Self::InK,
@@ -57,7 +67,9 @@ pub trait Reducer: Sync {
 /// be algebraically safe to apply 0..n times (associative + idempotent
 /// w.r.t. the reducer), which holds for the stage-1 cumulus union.
 pub trait Combiner: Sync {
+    /// Key type.
     type K: Record + Send;
+    /// Value type.
     type V: Record + Send;
 
     /// Fold `values` (≥2 entries of one key) into fewer entries.
@@ -97,6 +109,7 @@ impl<K, V> Emitter<K, V> {
     }
 
     #[inline]
+    /// Emit one key/value pair into the task output buffer.
     pub fn emit(&mut self, key: K, value: V) {
         self.pairs.push((key, value));
     }
@@ -115,6 +128,7 @@ impl<K, V> Emitter<K, V> {
 /// Job configuration — the `JobConfigurator` analogue.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
+    /// Job name (used in stats and DFS block names).
     pub name: String,
     /// Number of map tasks the input is split into.
     pub map_tasks: usize,
@@ -148,6 +162,7 @@ impl Default for JobConfig {
 }
 
 impl JobConfig {
+    /// Default config with the given job name.
     pub fn named(name: &str) -> Self {
         Self { name: name.into(), ..Self::default() }
     }
@@ -156,6 +171,7 @@ impl JobConfig {
 /// Everything measured about one job run.
 #[derive(Debug, Clone, Default)]
 pub struct JobStats {
+    /// Name of the job these stats describe.
     pub name: String,
     /// Wall-clock per map task (ms) — feeds the virtual cluster clock.
     pub map_task_ms: Vec<f64>,
@@ -165,6 +181,7 @@ pub struct JobStats {
     pub wall_ms: f64,
     /// Bytes moved through the shuffle (logical).
     pub shuffle_bytes: u64,
+    /// Counter values accumulated across all tasks.
     pub counters: Counters,
 }
 

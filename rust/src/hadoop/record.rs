@@ -13,15 +13,19 @@ use crate::core::tuple::{NTuple, SubRelation};
 /// Serializable record. `decode` must consume exactly the bytes `encode`
 /// produced (records are concatenated in shuffle buffers).
 pub trait Record: Sized {
+    /// Append this record's bytes to `out`.
     fn encode(&self, out: &mut Vec<u8>);
+    /// Read one record from the front of `buf`, advancing it.
     fn decode(buf: &mut &[u8]) -> Self;
 
+    /// Encode into a fresh buffer.
     fn to_bytes(&self) -> Vec<u8> {
         let mut v = Vec::new();
         self.encode(&mut v);
         v
     }
 
+    /// Decode a record that occupies the WHOLE buffer.
     fn from_bytes(mut bytes: &[u8]) -> Self {
         let v = Self::decode(&mut bytes);
         debug_assert!(bytes.is_empty(), "trailing bytes after decode");

@@ -36,12 +36,18 @@ COMMANDS
              [--backend seq|pool|hadoop|spark|cluster] [--workers N]
              [--stragglers P] [--speculation on|off]
              [--placement rr|locality|least] [--node-slots N]
+             [--churn P] [--restart-ms MS]
+             [--shuffle-ms-per-mib MS] [--shuffle-bytes B]
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
   density    [--edge N] [--engine exact|xla|mc]
   serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
              [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
-  experiment --id table3|table4|fig2|table5|backends|cluster-scaling|skew|
-                  faults|engines|memory
+             [--nodes N] [--placement rr|locality|least] [--churn P]
+             [--node-slots S] [--source-skew A] [--restart-ms MS]
+             [--pipeline on|off]   (--nodes places shards on a simulated
+                                    cluster: shuffle costs, churn, replay)
+  experiment --id table3|table4|fig2|table5|backends|cluster-scaling|
+                  serve-cluster|skew|faults|engines|memory
              [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
 
 DATASETS: imdb k1 k2 k3 ml100k ml250k ml500k ml1m bibsonomy
@@ -136,6 +142,10 @@ fn mr(args: &Args) -> Result<()> {
             },
             placement: args.get_or("placement", "least").to_string(),
             seed: args.parse_or("seed", 0x5EED),
+            churn_prob: args.parse_or("churn", 0.0),
+            churn_restart_ms: args.parse_or("restart-ms", 50.0),
+            shuffle_ms_per_mib: args.parse_or("shuffle-ms-per-mib", 0.0),
+            shuffle_bytes_per_record: args.parse_or("shuffle-bytes", 64.0),
             ..tricluster::exec::ExecTuning::default()
         };
         let backend = tune.cluster_backend()?;
@@ -154,6 +164,8 @@ fn mr(args: &Args) -> Result<()> {
                 (s + st.spec_launched, w + st.spec_wins, f + st.failures, g + st.stragglers)
             },
         );
+        let shuffle_mib: f64 = stats.iter().map(|st| st.shuffle_mib).sum();
+        let churn_kills: usize = stats.iter().map(|st| st.churn_kills).sum();
         println!(
             "cluster-sim [{} nodes x{} slots, {} placement]: {} tuples -> {} clusters in {} ms",
             tune.nodes,
@@ -180,6 +192,11 @@ fn mr(args: &Args) -> Result<()> {
         println!(
             "  stragglers: {stragglers}  speculative: {spec} launched / {wins} won  failures: {fails}"
         );
+        if shuffle_mib > 0.0 || churn_kills > 0 {
+            println!(
+                "  shuffle: {shuffle_mib:.2} MiB moved  churn: {churn_kills} attempts killed"
+            );
+        }
         for c in clusters.iter().take(args.parse_or("show", 3)) {
             println!("{}", io::format_cluster(&ctx, c));
         }
@@ -304,6 +321,9 @@ fn serve_sim(args: &Args) -> Result<()> {
         min_density: args.parse_or("min-density", 0.0),
         min_support: args.parse_or("min-support", 0),
     };
+    if args.get("nodes").is_some() {
+        return serve_sim_cluster(args, names, shards, batch, &cons);
+    }
 
     for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let ctx = datasets::by_name(name)
@@ -375,6 +395,86 @@ fn serve_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve-sim --nodes N`: the serving layer placed on a simulated
+/// cluster — shard placement policies, shuffle costs, seeded churn with
+/// snapshot replay (`serve::cluster::ServeSim`).
+fn serve_sim_cluster(
+    args: &Args,
+    names: &str,
+    shards: usize,
+    batch: usize,
+    cons: &Constraints,
+) -> Result<()> {
+    use tricluster::exec::cluster_sim::ChurnConfig;
+    use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
+
+    let nodes: usize = args.parse_or("nodes", 4);
+    let placement = args.get_or("placement", "least");
+    let top: usize = args.parse_or("top", 5);
+    if args.get("snapshot").is_some() {
+        eprintln!(
+            "note: --snapshot is not supported with --nodes (serve-sim on the \
+             simulated cluster recovers from in-simulation snapshots instead); \
+             run without --nodes to write one"
+        );
+    }
+    for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let ctx = datasets::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}; see `tricluster info`"))?;
+        let mut cfg = ServeSimConfig::new(ctx.arity(), shards, nodes);
+        cfg.placement = placement.to_string();
+        cfg.batch = batch;
+        cfg.slots_per_node = args.parse_or("node-slots", 2);
+        cfg.compact_every = args.parse_or("compact-every", 4);
+        cfg.source_skew = args.parse_or("source-skew", 1.5);
+        cfg.churn = ChurnConfig {
+            kill_prob: args.parse_or("churn", 0.0),
+            restart_ms: args.parse_or("restart-ms", 50.0),
+        };
+        cfg.pipeline = match args.get_or("pipeline", "on") {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => anyhow::bail!("--pipeline {other:?} (expected on|off)"),
+        };
+        cfg.seed = args.parse_or("seed", 0x5EED);
+        cfg.constraints = cons.clone();
+        let mut sim = ServeSim::new(cfg)?;
+        let t = Timer::start();
+        sim.run(ctx.tuples());
+        let wall_ms = t.elapsed_ms();
+        let clusters = sim.clusters().len();
+        let stats = sim.stats().clone();
+        println!(
+            "== serve-sim {name} on {nodes} nodes [{placement}]: {} tuples over {shards} shards ==",
+            ctx.len()
+        );
+        println!(
+            "  simulated makespan: {} ms over {} waves ({} compactions; wall {} ms)",
+            fmt_ms(sim.sim_makespan_ms()),
+            stats.waves,
+            stats.compactions,
+            fmt_ms(wall_ms)
+        );
+        println!(
+            "  shuffle: {:.2} MiB drain + {:.2} MiB recovery  churn: {} kills, {} tuples replayed, {} migrations",
+            stats.shuffle_mib, stats.recovery_mib, stats.kills, stats.replayed_tuples,
+            stats.migrations
+        );
+        println!(
+            "  index: {clusters} clusters  placement: {:?}  mined/node: {:?}",
+            sim.assignment(),
+            stats.per_node_records
+        );
+        let q = tricluster::serve::QueryEngine::new(sim.clusters());
+        println!("  top-{top} by density:");
+        for c in q.top_k_by_density(top) {
+            println!("    {}", io::format_cluster(&ctx, c));
+        }
+        println!();
+    }
+    Ok(())
+}
+
 fn experiment(args: &Args) -> Result<()> {
     // --config file.ini provides defaults; CLI flags override
     let file_cfg = match args.get("config") {
@@ -407,6 +507,10 @@ fn experiment(args: &Args) -> Result<()> {
         "cluster-scaling" => experiments::cluster_scaling(
             &cfg,
             args.parse_or("stragglers", 0.1),
+        )?,
+        "serve-cluster" => experiments::serve_cluster(
+            &cfg,
+            args.parse_or("churn", 0.2),
         )?,
         "skew" => ablations::partition_skew(cfg.nodes)?,
         "faults" => ablations::fault_injection()?,

@@ -22,11 +22,13 @@ pub struct MmcConfig {
     pub theta: f64,
     /// Map/reduce task counts per stage (JobTracker granularity).
     pub map_tasks: usize,
+    /// Reduce tasks per stage.
     pub reduce_tasks: usize,
     /// OS threads executing tasks on this machine.
     pub executor_threads: usize,
     /// Map-task retry probability (duplicate injection).
     pub fault_prob: f64,
+    /// Seed for fault injection.
     pub seed: u64,
     /// Materialise intermediates through the replicated DFS.
     pub use_dfs: bool,
@@ -56,8 +58,11 @@ impl Default for MmcConfig {
 /// Result of a pipeline run: the clusters plus per-stage stats.
 #[derive(Debug)]
 pub struct MmcResult {
+    /// The final deduplicated, θ-filtered cluster set.
     pub clusters: Vec<Cluster>,
+    /// Per-stage job stats (cumuli, assembly, dedup+density).
     pub stages: [JobStats; 3],
+    /// Total wall time, ms.
     pub wall_ms: f64,
 }
 

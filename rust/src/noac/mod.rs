@@ -23,8 +23,11 @@ use crate::oac::post::Constraints;
 /// NOAC parameters as the paper writes them: `NOAC(δ, ρ_min, minsup)`.
 #[derive(Debug, Clone, Copy)]
 pub struct NoacParams {
+    /// δ: the value tolerance of the δ-prime operators.
     pub delta: f64,
+    /// ρ_min: minimal density over the binary presence relation.
     pub min_density: f64,
+    /// minsup: minimal cardinality per modality component.
     pub min_support: usize,
 }
 
@@ -34,6 +37,7 @@ impl NoacParams {
         Self { delta: 100.0, min_density: 0.8, min_support: 2 }
     }
 
+    /// The paper's loose Table-5 setting: `NOAC(100, 0.5, 0)`.
     pub fn table5_loose() -> Self {
         Self { delta: 100.0, min_density: 0.5, min_support: 0 }
     }

@@ -13,6 +13,8 @@ use crate::noac::NoacParams;
 use crate::oac::generic::Validity;
 use crate::util::hash::FxHashSet;
 
+/// NOAC validity predicate: ρ_min over binary presence + minsup per
+///  modality (paper §3.2).
 pub struct NoacValidity {
     presence: FxHashSet<(u32, u32, u32)>,
     min_density: f64,
@@ -20,6 +22,7 @@ pub struct NoacValidity {
 }
 
 impl NoacValidity {
+    /// Precompute the presence set of `ctx` for the given parameters.
     pub fn new(ctx: &ManyValuedTriContext, params: &NoacParams) -> Self {
         let presence = ctx
             .triples()

@@ -28,9 +28,20 @@ use crate::util::stats::Timer;
 /// Outcome of a budgeted run.
 #[derive(Debug)]
 pub enum BasicOutcome {
-    Done { clusters: Vec<Cluster>, elapsed_ms: f64 },
+    /// Finished within budget.
+    Done {
+        /// The deduplicated, density-checked cluster set.
+        clusters: Vec<Cluster>,
+        /// Wall time spent, ms.
+        elapsed_ms: f64,
+    },
     /// The time budget expired (the paper reports these as ">3000 s").
-    TimedOut { processed_triples: usize, elapsed_ms: f64 },
+    TimedOut {
+        /// Triples processed before the budget ran out.
+        processed_triples: usize,
+        /// Wall time spent, ms.
+        elapsed_ms: f64,
+    },
 }
 
 /// Exact density of a tricluster cuboid: |X×Y×Z ∩ I| / |X||Y||Z| — the

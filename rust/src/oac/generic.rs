@@ -26,6 +26,7 @@ pub trait TriOperator: Sync {
 
 /// Pluggable validity check (Alg. 8 line 7).
 pub trait Validity: Sync {
+    /// True when `c` should be kept.
     fn is_valid(&self, c: &Cluster) -> bool;
 }
 

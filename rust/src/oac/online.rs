@@ -15,7 +15,9 @@ use crate::oac::primes::{PrimeStore, SetArena, SetId};
 /// generating tuple.
 #[derive(Debug, Clone)]
 pub struct Generated {
+    /// The N cumulus-set ids, one per dropped modality.
     pub set_ids: Vec<SetId>,
+    /// The tuple that generated this cluster.
     pub tuple: NTuple,
 }
 
@@ -27,6 +29,7 @@ pub struct OnlineMiner {
 }
 
 impl OnlineMiner {
+    /// Empty miner over `arity` modalities.
     pub fn new(arity: usize) -> Self {
         Self { primes: PrimeStore::new(arity), generated: Vec::new() }
     }
@@ -40,18 +43,22 @@ impl OnlineMiner {
         }
     }
 
+    /// Generated clusters so far (= tuples processed).
     pub fn len(&self) -> usize {
         self.generated.len()
     }
 
+    /// True before the first tuple.
     pub fn is_empty(&self) -> bool {
         self.generated.is_empty()
     }
 
+    /// The prime-set store backing the cumuli.
     pub fn primes(&self) -> &PrimeStore {
         &self.primes
     }
 
+    /// Every generated cluster, in ingest order.
     pub fn generated(&self) -> &[Generated] {
         &self.generated
     }

@@ -23,10 +23,12 @@ impl Default for Constraints {
 }
 
 impl Constraints {
+    /// No constraints: keep every cluster.
     pub fn none() -> Self {
         Self::default()
     }
 
+    /// True when `c` passes the support and density thresholds.
     pub fn satisfied_by(&self, c: &Cluster) -> bool {
         if self.min_support > 0
             && c.components.iter().any(|comp| comp.len() < self.min_support)

@@ -26,20 +26,24 @@ pub struct SetArena {
 }
 
 impl SetArena {
+    /// Allocate a fresh empty set, returning its id.
     pub fn alloc(&mut self) -> SetId {
         self.sets.push(Vec::new());
         (self.sets.len() - 1) as SetId
     }
 
     #[inline]
+    /// Append `value` to set `id` (duplicates dedup on materialise).
     pub fn push(&mut self, id: SetId, value: u32) {
         self.sets[id as usize].push(value);
     }
 
+    /// Number of allocated sets.
     pub fn len(&self) -> usize {
         self.sets.len()
     }
 
+    /// True before the first allocation.
     pub fn is_empty(&self) -> bool {
         self.sets.is_empty()
     }
@@ -112,10 +116,12 @@ pub struct PrimeStore {
     packed: Vec<FxHashMap<u128, SetId>>,
     /// general path: dicts[k]: subrelation → set id
     general: Vec<FxHashMap<SubRelation, SetId>>,
+    /// The arena holding every prime set's contents.
     pub arena: SetArena,
 }
 
 impl PrimeStore {
+    /// Empty store over `arity` modalities.
     pub fn new(arity: usize) -> Self {
         let fast = arity <= 5;
         Self {
@@ -134,6 +140,7 @@ impl PrimeStore {
         }
     }
 
+    /// Number of modalities.
     pub fn arity(&self) -> usize {
         self.arity
     }

@@ -10,12 +10,16 @@ use crate::util::json::Json;
 /// Shape + dtype of one input/output of an artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor name in the AOT signature.
     pub name: String,
+    /// Dimension sizes.
     pub shape: Vec<usize>,
+    /// Element dtype (`f32`, `i32`, ...).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -24,24 +28,36 @@ impl TensorSpec {
 /// One AOT module: file + io signature + geometry hints.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (`density_t64_k128`, ...).
     pub name: String,
+    /// Source graph (`density`, `delta`, `mc`).
     pub graph: String,
+    /// Path of the serialized module.
     pub file: PathBuf,
+    /// Input tensor signature.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signature.
     pub outputs: Vec<TensorSpec>,
     /// density tiles: edge size; delta: slab K; etc.
     pub tile: Option<usize>,
+    /// delta: fiber-batch size K.
     pub k: Option<usize>,
+    /// delta: padded fiber length L.
     pub l: Option<usize>,
+    /// mc: samples per cluster.
     pub samples: Option<usize>,
 }
 
 /// Parsed manifest.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every artifact the manifest lists.
     pub artifacts: Vec<ArtifactSpec>,
+    /// Compiler-reported density-kernel VMEM per step, bytes.
     pub density_vmem_bytes: Option<f64>,
+    /// Compiler-reported density-kernel MXU MACs.
     pub density_mxu_macs: Option<f64>,
 }
 
@@ -128,6 +144,7 @@ impl Manifest {
         })
     }
 
+    /// The artifact named `name`, if the manifest lists it.
     pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }

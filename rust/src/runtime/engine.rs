@@ -11,6 +11,7 @@ use crate::runtime::artifacts::{ArtifactSpec, Manifest};
 /// process; executables are compiled lazily per artifact and reused.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The parsed artifact manifest this runtime serves.
     pub manifest: Manifest,
 }
 
@@ -22,6 +23,7 @@ impl Runtime {
         Ok(Self { client, manifest })
     }
 
+    /// PJRT platform name (`cpu`, `tpu`, ...).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -111,7 +113,9 @@ fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
 /// one T³ tile.
 pub struct DensityExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// Tile edge the kernel was compiled for.
     pub tile: usize,
+    /// Cluster-batch size the kernel was compiled for.
     pub k: usize,
 }
 
@@ -143,7 +147,9 @@ impl DensityExecutable {
 /// K fibers of padded length L.
 pub struct DeltaExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// Fiber-batch size K.
     pub k: usize,
+    /// Padded fiber length L.
     pub l: usize,
 }
 
@@ -172,7 +178,9 @@ impl DeltaExecutable {
 /// Compiled `mc_g{T}_s{S}`: Monte-Carlo density estimate over one tile.
 pub struct McExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// Tile edge the kernel was compiled for.
     pub tile: usize,
+    /// Samples per cluster.
     pub samples: usize,
 }
 

@@ -1,0 +1,734 @@
+//! serve-on-cluster: the serving layer placed on a simulated N-node
+//! cluster — the paper's "distributed" claim (§4) carried from the batch
+//! pipeline to the SERVICE.
+//!
+//! [`ServeSim`] fuses the two previously independent subsystems: the
+//! sharded incremental service ([`super::shard`] + [`super::merge`])
+//! supplies the REAL mining and compaction (so every correctness
+//! invariant keeps holding), while the cluster layer supplies the
+//! simulated placement and cost accounting:
+//!
+//! * **Shard placement** — each shard is pinned to a simulated node by a
+//!   pluggable [`Placement`] policy (`rr` / `locality` / `least`, the
+//!   same trait [`crate::exec::ClusterSim`] places M/R tasks with). The
+//!   locality policy uses MEASURED input provenance
+//!   ([`TaskMeta::affinity`]): the node that sourced most of the shard's
+//!   bytes so far.
+//! * **Shuffle cost** — each ingest wave is a two-phase drain:
+//!   route-split tasks run on the node where their stream chunk ARRIVED
+//!   (sources can be skewed), and the per-shard mining task then pays
+//!   `bytes moved × per-MiB latency` ([`ShuffleModel`]) for every bin
+//!   produced on a different node. Bin sizes are measured, not
+//!   estimated — the real router hash decides them.
+//! * **Node churn** ([`ChurnConfig`]) — a seeded kill between the route
+//!   and mine phases of a wave takes a node down mid-drain. Its shards
+//!   lose every tuple since the last compaction and are re-placed on a
+//!   surviving node, which REPLAYS the last compacted snapshot (charged:
+//!   snapshot fetch + rebuild compute) and re-ingests the retained
+//!   in-flight window. The replay is performed for real — the rebuilt
+//!   shard is a fresh [`Shard`] fed the compacted history then the
+//!   window — so the compacted index still equals
+//!   [`crate::oac::mine_online`] under any churn schedule
+//!   (property-tested in `rust/tests/serve_equivalence.rs`).
+//! * **Wave pipelining** — with `pipeline` on (the default, mirroring
+//!   the real router's overlapped drain in [`super::router`]), wave
+//!   `w+1`'s route-split may start as soon as wave `w`'s route-split is
+//!   done, overlapping with wave `w`'s mining in simulated time; with it
+//!   off every wave is a barrier.
+//!
+//! The communication-vs-balance trade-off this measures is the one
+//! Arifuzzaman et al. report for distributed triangle counting
+//! (PAPERS.md): under skewed sources, locality placement concentrates
+//! mining where the data already is (minimum bytes moved, maximum
+//! compute imbalance), round-robin does the opposite, and least-loaded
+//! splits the difference. `benches/serve_cluster.rs` sweeps the three
+//! policies × churn and gates the trajectory in CI.
+
+use anyhow::Result;
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::NTuple;
+use crate::exec::cluster_sim::{ChurnConfig, ShuffleModel};
+use crate::exec::placement::{by_name, NodeView, Placement, TaskMeta};
+use crate::oac::post::Constraints;
+use crate::util::hash::fxhash;
+use crate::util::rng::Rng;
+
+use super::merge::Compactor;
+use super::shard::Shard;
+
+/// Configuration of a [`ServeSim`].
+#[derive(Debug, Clone)]
+pub struct ServeSimConfig {
+    /// Relation arity (3 for triadic contexts).
+    pub arity: usize,
+    /// Shard count (each shard is one incremental miner).
+    pub shards: usize,
+    /// Simulated nodes.
+    pub nodes: usize,
+    /// Worker slots per simulated node.
+    pub slots_per_node: usize,
+    /// Placement policy name (`rr` | `locality` | `least`).
+    pub placement: String,
+    /// Tuples per ingest wave (one drain).
+    pub batch: usize,
+    /// Tuples per route-split task within a wave.
+    pub route_chunk: usize,
+    /// Waves between compactions (the final [`ServeSim::run`] always
+    /// compacts once more at end of stream).
+    pub compact_every: usize,
+    /// Simulated mining cost per tuple, ms (also the replay cost per
+    /// tuple after a churn kill).
+    pub mine_ms_per_record: f64,
+    /// Simulated route-split cost per tuple, ms.
+    pub route_ms_per_record: f64,
+    /// Network cost of moving bins between non-colocated tasks.
+    pub shuffle: ShuffleModel,
+    /// Seeded node kill/restart mid-drain.
+    pub churn: ChurnConfig,
+    /// Source skew: stream chunk `c` arrives at node `i` with probability
+    /// ∝ `1/(i+1)^source_skew` (0.0 = uniform arrivals; 1.5+ = one hot
+    /// ingress node, the regime where placement policies diverge).
+    pub source_skew: f64,
+    /// Overlap wave `w+1`'s route-split with wave `w`'s mining in
+    /// simulated time (the real router's drain does — see
+    /// [`super::router`]).
+    pub pipeline: bool,
+    /// Re-place shards by the policy at every compaction (migrations pay
+    /// snapshot transfer + rebuild compute).
+    pub rebalance: bool,
+    /// Constraints applied when materialising the cluster index.
+    pub constraints: Constraints,
+    /// Seed for source-arrival and churn draws.
+    pub seed: u64,
+}
+
+impl ServeSimConfig {
+    /// Defaults tuned for the quick CLI/bench paths: homogeneous costs,
+    /// shuffle model on with commodity-network latency, churn off.
+    pub fn new(arity: usize, shards: usize, nodes: usize) -> Self {
+        Self {
+            arity,
+            shards: shards.max(1),
+            nodes: nodes.max(1),
+            slots_per_node: 2,
+            placement: "least".into(),
+            batch: 4096,
+            route_chunk: 1024,
+            compact_every: 4,
+            mine_ms_per_record: 0.002,
+            route_ms_per_record: 0.0005,
+            shuffle: ShuffleModel { bytes_per_record: 64.0, ms_per_mib: 20.0 },
+            churn: ChurnConfig::off(),
+            source_skew: 0.0,
+            pipeline: true,
+            rebalance: true,
+            constraints: Constraints::none(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Counters and simulated-cost totals of a [`ServeSim`] run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeSimStats {
+    /// Ingest waves (drains) executed.
+    pub waves: usize,
+    /// Tuples ingested.
+    pub tuples: usize,
+    /// Compactions executed.
+    pub compactions: usize,
+    /// MiB fetched by mining tasks from non-colocated route bins — the
+    /// steady-state drain-path network cost a placement policy controls.
+    pub shuffle_mib: f64,
+    /// MiB of compacted snapshots fetched during churn recovery and
+    /// rebalance migrations (kept separate from `shuffle_mib` so the
+    /// policy comparison is not polluted by one-off recovery traffic).
+    pub recovery_mib: f64,
+    /// Nodes killed by churn.
+    pub kills: usize,
+    /// Tuples replayed from compacted snapshots + re-delivered windows
+    /// after kills.
+    pub replayed_tuples: usize,
+    /// Shards moved to a different node by a compaction rebalance.
+    pub migrations: usize,
+    /// Tuples mined per node (the winning assignment's node) — the
+    /// compute-balance picture a placement policy produced.
+    pub per_node_records: Vec<usize>,
+}
+
+/// The serving layer on a simulated N-node cluster: real sharded mining
+/// and compaction, simulated placement, network, and churn.
+///
+/// # Example
+///
+/// ```
+/// use tricluster::core::tuple::NTuple;
+/// use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
+///
+/// let stream: Vec<NTuple> =
+///     (0..500u32).map(|i| NTuple::triple(i % 7, i % 5, i % 3)).collect();
+/// let mut sim = ServeSim::new(ServeSimConfig::new(3, 4, 2)).unwrap();
+/// sim.run(&stream);
+/// assert!(!sim.clusters().is_empty());
+/// assert!(sim.sim_makespan_ms() > 0.0);
+/// ```
+pub struct ServeSim {
+    cfg: ServeSimConfig,
+    placement: Box<dyn Placement>,
+    shards: Vec<Shard>,
+    compactor: Compactor,
+    /// shard → node.
+    assignment: Vec<usize>,
+    /// Simulated time each node×slot frees up.
+    lanes: Vec<Vec<f64>>,
+    /// Cumulative simulated work per node.
+    busy: Vec<f64>,
+    /// Per-shard finish time of its latest mining/recovery task (a shard
+    /// is sequential: wave w+1 mines after wave w).
+    mine_done: Vec<f64>,
+    /// When the previous wave's route-split finished / the wave fully
+    /// finished — the two pipelining readiness modes.
+    prev_route_done: f64,
+    prev_wave_end: f64,
+    /// shard × node: input bytes sourced from each node (measured
+    /// provenance — feeds locality affinity).
+    input_bytes: Vec<Vec<f64>>,
+    /// Per-shard generated-tuple count at the last compaction (the
+    /// snapshot watermark a churn recovery replays to).
+    compacted_len: Vec<usize>,
+    /// Per-shard epoch at the last compaction.
+    epoch_at_compact: Vec<u64>,
+    /// Per-shard tuples mined since the last compaction (rebalance cost
+    /// estimate).
+    recent_records: Vec<usize>,
+    /// Cumulative source-weight table for skewed arrivals.
+    source_cum: Vec<f64>,
+    /// Source-arrival draws (one `f64` per route chunk).
+    rng: Rng,
+    /// Churn draws, on a SEPARATE salted stream so enabling churn never
+    /// perturbs the source-arrival schedule (same design as
+    /// [`crate::exec::ClusterSim`]'s churn stream).
+    churn_rng: Rng,
+    stats: ServeSimStats,
+}
+
+impl ServeSim {
+    /// Build the simulation; fails only on an unknown placement name.
+    pub fn new(cfg: ServeSimConfig) -> Result<Self> {
+        let placement = by_name(&cfg.placement)?;
+        let nodes = cfg.nodes.max(1);
+        let n_shards = cfg.shards.max(1);
+        let mut acc = 0.0;
+        let source_cum: Vec<f64> = (0..nodes)
+            .map(|i| {
+                acc += (i as f64 + 1.0).powf(-cfg.source_skew.max(0.0));
+                acc
+            })
+            .collect();
+        let mut sim = Self {
+            shards: (0..n_shards).map(|s| Shard::new(s, cfg.arity)).collect(),
+            compactor: Compactor::new(n_shards),
+            assignment: vec![0; n_shards],
+            lanes: vec![vec![0.0; cfg.slots_per_node.max(1)]; nodes],
+            busy: vec![0.0; nodes],
+            mine_done: vec![0.0; n_shards],
+            prev_route_done: 0.0,
+            prev_wave_end: 0.0,
+            input_bytes: vec![vec![0.0; nodes]; n_shards],
+            compacted_len: vec![0; n_shards],
+            epoch_at_compact: vec![0; n_shards],
+            recent_records: vec![0; n_shards],
+            source_cum,
+            rng: Rng::new(cfg.seed),
+            churn_rng: Rng::new(cfg.seed ^ 0x4348_5552_4E21),
+            stats: ServeSimStats {
+                per_node_records: vec![0; nodes],
+                ..ServeSimStats::default()
+            },
+            placement,
+            cfg,
+        };
+        // initial placement: no provenance yet, so the policy sees only
+        // virtual unit loads (placing sequentially so least-loaded
+        // spreads instead of stacking everything on node 0)
+        let mut virt = vec![0.0f64; nodes];
+        for s in 0..n_shards {
+            let views: Vec<NodeView> = virt
+                .iter()
+                .enumerate()
+                .map(|(id, &b)| NodeView { id, free_at_ms: b, busy_ms: b })
+                .collect();
+            let meta = TaskMeta::new(s, s as u64, 1.0);
+            let node = sim.placement.place(&meta, &views).min(nodes - 1);
+            sim.assignment[s] = node;
+            virt[node] += 1.0;
+        }
+        Ok(sim)
+    }
+
+    /// The configuration this simulation runs under.
+    pub fn cfg(&self) -> &ServeSimConfig {
+        &self.cfg
+    }
+
+    /// Current shard → node assignment.
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Counters and simulated-cost totals so far.
+    pub fn stats(&self) -> &ServeSimStats {
+        &self.stats
+    }
+
+    /// Simulated makespan: the time the busiest node slot reaches once
+    /// every scheduled task has run.
+    pub fn sim_makespan_ms(&self) -> f64 {
+        self.prev_wave_end
+    }
+
+    /// The compacted cluster index under the configured constraints
+    /// (call after [`Self::compact`] / [`Self::run`]).
+    pub fn clusters(&mut self) -> &[Cluster] {
+        self.compactor.clusters(&self.cfg.constraints)
+    }
+
+    /// Drive a whole stream: waves of `batch` tuples, compacting every
+    /// `compact_every` waves and once more at end of stream (unless the
+    /// last wave already compacted — a back-to-back double compaction
+    /// would only re-run the rebalance on zero new data).
+    pub fn run(&mut self, stream: &[NTuple]) {
+        let batch = self.cfg.batch.max(1);
+        let every = self.cfg.compact_every.max(1);
+        let mut uncompacted = 0usize;
+        for (i, wave) in stream.chunks(batch).enumerate() {
+            self.ingest(wave);
+            uncompacted += 1;
+            if (i + 1) % every == 0 {
+                self.compact();
+                uncompacted = 0;
+            }
+        }
+        if uncompacted > 0 {
+            self.compact();
+        }
+    }
+
+    /// One ingest wave: route-split on the (possibly skewed) source
+    /// nodes, an optional churn kill between the phases, then one mining
+    /// task per touched shard on its assigned node.
+    pub fn ingest(&mut self, wave: &[NTuple]) {
+        if wave.is_empty() {
+            return;
+        }
+        self.stats.waves += 1;
+        self.stats.tuples += wave.len();
+        let nodes = self.lanes.len();
+        let n_shards = self.shards.len();
+        let ready = if self.cfg.pipeline {
+            // the staging buffer frees once the previous wave is routed:
+            // this wave's routing overlaps the previous wave's mining
+            self.prev_route_done
+        } else {
+            self.prev_wave_end
+        };
+
+        // ---- phase 1: route-split, one task per chunk on its source ----
+        // bins[chunk] = (source node, per-shard tuple bins)
+        let mut chunk_bins: Vec<(usize, Vec<Vec<NTuple>>)> = Vec::new();
+        let mut route_done = ready;
+        for chunk in wave.chunks(self.cfg.route_chunk.max(1)) {
+            let source = self.draw_source(nodes);
+            let mut bins: Vec<Vec<NTuple>> = vec![Vec::new(); n_shards];
+            for t in chunk {
+                bins[(fxhash(t) % n_shards as u64) as usize].push(*t);
+            }
+            let cost = chunk.len() as f64 * self.cfg.route_ms_per_record;
+            let finish = self.schedule(source, ready, cost);
+            route_done = route_done.max(finish);
+            chunk_bins.push((source, bins));
+        }
+
+        // ---- churn: a seeded kill lands between route and mine ----
+        // (own RNG stream, two draws per wave — source arrivals are
+        // identical across churn probabilities, so churned vs clean
+        // runs differ only by the kills themselves)
+        if self.cfg.churn.is_active() {
+            let victim = self.churn_rng.usize_below(nodes);
+            if self.churn_rng.chance(self.cfg.churn.kill_prob) {
+                self.kill_node(victim, route_done);
+            }
+        }
+
+        // ---- phase 2: one mining task per touched shard ----
+        let mut wave_end = route_done;
+        for s in 0..n_shards {
+            let mut tuples: Vec<NTuple> = Vec::new();
+            let mut moved_mib = 0.0;
+            let node = self.assignment[s];
+            for (source, bins) in &mut chunk_bins {
+                let bin = std::mem::take(&mut bins[s]);
+                if bin.is_empty() {
+                    continue;
+                }
+                let mib = self.cfg.shuffle.mib(bin.len());
+                self.input_bytes[s][*source] += mib;
+                if *source != node {
+                    moved_mib += mib;
+                }
+                tuples.extend(bin);
+            }
+            if tuples.is_empty() {
+                continue;
+            }
+            // REAL mining — the correctness path
+            self.shards[s].ingest(&tuples);
+            self.recent_records[s] += tuples.len();
+            self.stats.per_node_records[node] += tuples.len();
+            self.stats.shuffle_mib += moved_mib;
+            let cost = tuples.len() as f64 * self.cfg.mine_ms_per_record
+                + moved_mib * self.cfg.shuffle.ms_per_mib;
+            // mining waits for the wave's full route phase (the same
+            // route→mine barrier the real drain has within one wave) and
+            // for this shard's previous mining/recovery task
+            let at = route_done.max(self.mine_done[s]);
+            let finish = self.schedule(node, at, cost);
+            self.mine_done[s] = finish;
+            wave_end = wave_end.max(finish);
+        }
+
+        self.prev_route_done = route_done;
+        self.prev_wave_end = self.prev_wave_end.max(wave_end);
+    }
+
+    /// Merge every shard's pending delta into the global index, advance
+    /// the snapshot watermarks, and (when `rebalance` is on) re-place
+    /// shards by the policy — a migration ships the compacted snapshot
+    /// and rebuilds the miner on the destination.
+    pub fn compact(&mut self) {
+        self.compactor.pull(&mut self.shards);
+        self.stats.compactions += 1;
+        for s in 0..self.shards.len() {
+            self.compacted_len[s] = self.shards[s].len();
+            self.epoch_at_compact[s] = self.shards[s].epoch();
+        }
+        if !self.cfg.rebalance {
+            for r in &mut self.recent_records {
+                *r = 0;
+            }
+            return;
+        }
+        // re-place sequentially with virtual load updates, so greedy
+        // policies spread instead of stacking on the instantaneous
+        // minimum
+        let nodes = self.lanes.len();
+        let mut virt_busy = self.busy.clone();
+        let mut virt_free: Vec<f64> = self
+            .lanes
+            .iter()
+            .map(|ls| ls.iter().cloned().fold(f64::INFINITY, f64::min))
+            .collect();
+        // all of this compaction's migrations start from the same ready
+        // floor — independent migrations to different nodes run in
+        // parallel (same-node ones still queue on its slot lanes)
+        let migrate_ready = self.prev_wave_end;
+        let mut migrate_end = self.prev_wave_end;
+        for s in 0..self.shards.len() {
+            let est = (self.recent_records[s] as f64 * self.cfg.mine_ms_per_record)
+                .max(1.0);
+            let views: Vec<NodeView> = (0..nodes)
+                .map(|id| NodeView {
+                    id,
+                    free_at_ms: virt_free[id],
+                    busy_ms: virt_busy[id],
+                })
+                .collect();
+            let meta = TaskMeta {
+                affinity: self.affinity_of(s),
+                ..TaskMeta::new(s, s as u64, est)
+            };
+            let node = self.placement.place(&meta, &views).min(nodes - 1);
+            virt_busy[node] += est;
+            virt_free[node] += est / self.cfg.slots_per_node.max(1) as f64;
+            if node != self.assignment[s] {
+                // migration: the destination fetches the compacted
+                // snapshot and rebuilds the miner before serving
+                self.stats.migrations += 1;
+                let records = self.compacted_len[s];
+                let mib = self.cfg.shuffle.mib(records);
+                self.stats.recovery_mib += mib;
+                let cost = mib * self.cfg.shuffle.ms_per_mib
+                    + records as f64 * self.cfg.mine_ms_per_record;
+                let finish = self.schedule(node, migrate_ready, cost);
+                self.mine_done[s] = self.mine_done[s].max(finish);
+                migrate_end = migrate_end.max(finish);
+                self.assignment[s] = node;
+            }
+        }
+        self.prev_wave_end = migrate_end;
+        for r in &mut self.recent_records {
+            *r = 0;
+        }
+    }
+
+    /// Node holding the largest measured share of shard `s`'s input so
+    /// far (None before any input).
+    fn affinity_of(&self, s: usize) -> Option<usize> {
+        let bytes = &self.input_bytes[s];
+        let (node, &max) = bytes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))?;
+        (max > 0.0).then_some(node)
+    }
+
+    /// Seeded skewed source-node draw (one `f64` per chunk).
+    fn draw_source(&mut self, nodes: usize) -> usize {
+        let total = *self.source_cum.last().expect("at least one node");
+        let x = self.rng.f64() * total;
+        self.source_cum.partition_point(|&c| c <= x).min(nodes - 1)
+    }
+
+    /// Put `cost` ms of work on `node`'s earliest slot, no earlier than
+    /// `ready`; returns the finish time.
+    fn schedule(&mut self, node: usize, ready: f64, cost: f64) -> f64 {
+        let slot = (0..self.lanes[node].len())
+            .min_by(|&a, &b| {
+                self.lanes[node][a].partial_cmp(&self.lanes[node][b]).unwrap()
+            })
+            .expect("nodes have slots");
+        let start = self.lanes[node][slot].max(ready);
+        let finish = start + cost;
+        self.lanes[node][slot] = finish;
+        self.busy[node] += cost;
+        finish
+    }
+
+    /// Kill `node` at simulated instant `at`: its slots refuse work for
+    /// `restart_ms`, and every shard on it loses all state since the
+    /// last compaction — each is re-placed and REALLY rebuilt from the
+    /// compacted snapshot plus the retained in-flight window.
+    fn kill_node(&mut self, node: usize, at: f64) {
+        self.stats.kills += 1;
+        let restart = self.cfg.churn.restart_ms.max(0.0);
+        for lane in &mut self.lanes[node] {
+            *lane = lane.max(at) + restart;
+        }
+        let nodes = self.lanes.len();
+        for s in 0..self.shards.len() {
+            if self.assignment[s] != node {
+                continue;
+            }
+            // REAL replay: compacted prefix (whose contributions the
+            // global index already holds — its re-derived delta is
+            // discarded) then the re-delivered window (exported at the
+            // next compaction as usual)
+            let history = self.shards[s].ingested_tuples();
+            let (compacted, window) = history.split_at(self.compacted_len[s]);
+            let mut fresh = Shard::new(s, self.cfg.arity);
+            if !compacted.is_empty() {
+                fresh.ingest(compacted);
+                let _ = fresh.take_delta();
+            }
+            fresh.set_epoch(self.epoch_at_compact[s]);
+            if !window.is_empty() {
+                fresh.ingest(window);
+            }
+            self.shards[s] = fresh;
+            self.stats.replayed_tuples += history.len();
+            // re-place on a surviving node (the policy may still pick the
+            // dead node — rr does — in which case recovery waits out the
+            // restart on its bumped lanes)
+            let views: Vec<NodeView> = self
+                .lanes
+                .iter()
+                .enumerate()
+                .map(|(id, ls)| NodeView {
+                    id,
+                    free_at_ms: ls.iter().cloned().fold(f64::INFINITY, f64::min),
+                    busy_ms: self.busy[id],
+                })
+                .collect();
+            let meta = TaskMeta {
+                affinity: self.affinity_of(s),
+                ..TaskMeta::new(
+                    s,
+                    s as u64,
+                    (history.len() as f64 * self.cfg.mine_ms_per_record).max(1.0),
+                )
+            };
+            let dest = self.placement.place(&meta, &views).min(nodes - 1);
+            self.assignment[s] = dest;
+            // recovery cost on the destination: snapshot fetch + full
+            // replay compute; mining of the current wave's bin for this
+            // shard queues behind it
+            let mib = self.cfg.shuffle.mib(history.len());
+            self.stats.recovery_mib += mib;
+            let cost = mib * self.cfg.shuffle.ms_per_mib
+                + history.len() as f64 * self.cfg.mine_ms_per_record;
+            let finish = self.schedule(dest, at, cost);
+            self.mine_done[s] = self.mine_done[s].max(finish);
+        }
+    }
+}
+
+impl std::fmt::Debug for ServeSim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeSim")
+            .field("cfg", &self.cfg)
+            .field("placement", &self.placement.name())
+            .field("assignment", &self.assignment)
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oac::mine_online;
+
+    fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+        cs.sort_by(|a, b| a.components.cmp(&b.components));
+        cs
+    }
+
+    fn assert_matches_online(sim: &mut ServeSim, ctx: &crate::core::context::PolyContext) {
+        let reference = sorted(mine_online(ctx, &Constraints::none()));
+        let got = sorted(sim.clusters().to_vec());
+        assert_eq!(got.len(), reference.len(), "cluster count");
+        for (a, b) in got.iter().zip(&reference) {
+            assert_eq!(a.components, b.components);
+            assert_eq!(a.support, b.support);
+        }
+    }
+
+    /// Exactly `n` DISTINCT random triples over `universe³` cells
+    /// (`PolyContext` is a set, so callers must pick `universe³ > n`;
+    /// small universes force heavy cross-shard cumulus sharing).
+    fn stream(n: usize, universe: u64) -> crate::core::context::PolyContext {
+        assert!(universe * universe * universe > n as u64);
+        let mut ctx = crate::core::context::PolyContext::new(3);
+        let mut rng = Rng::new(99);
+        while ctx.len() < n {
+            ctx.add_ids(&[
+                rng.below(universe) as u32,
+                rng.below(universe) as u32,
+                rng.below(universe) as u32,
+            ]);
+        }
+        ctx
+    }
+
+    #[test]
+    fn every_placement_matches_online_mining() {
+        let ctx = stream(400, 8);
+        for placement in ["rr", "locality", "least"] {
+            let mut cfg = ServeSimConfig::new(3, 5, 3);
+            cfg.placement = placement.into();
+            cfg.batch = 97;
+            cfg.source_skew = 1.5;
+            let mut sim = ServeSim::new(cfg).unwrap();
+            sim.run(ctx.tuples());
+            assert_matches_online(&mut sim, &ctx);
+            assert!(sim.sim_makespan_ms() > 0.0, "{placement}: work costs time");
+            let mined: usize = sim.stats().per_node_records.iter().sum();
+            assert_eq!(mined, ctx.len(), "{placement}: every tuple mined once");
+        }
+    }
+
+    #[test]
+    fn churn_replays_snapshots_and_keeps_the_index_exact() {
+        let ctx = stream(960, 12);
+        let mut cfg = ServeSimConfig::new(3, 4, 3);
+        cfg.batch = 64; // many waves → many kill opportunities
+        cfg.compact_every = 3;
+        cfg.churn = ChurnConfig { kill_prob: 0.5, restart_ms: 40.0 };
+        cfg.seed = 11;
+        let mut sim = ServeSim::new(cfg).unwrap();
+        sim.run(ctx.tuples());
+        assert!(sim.stats().kills > 0, "p=0.5 over 15 waves must kill");
+        assert!(sim.stats().replayed_tuples > 0, "kills replay state");
+        assert_matches_online(&mut sim, &ctx);
+    }
+
+    #[test]
+    fn locality_moves_fewer_bytes_than_round_robin_under_skew() {
+        let ctx = stream(4000, 64);
+        let run = |placement: &str| {
+            let mut cfg = ServeSimConfig::new(3, 8, 4);
+            cfg.placement = placement.into();
+            cfg.slots_per_node = 8;
+            // many short waves with frequent rebalances, so the measured
+            // affinity converges onto the hot ingress node early (the
+            // seeded draw schedule was verified to make node 0 dominate
+            // well before the first rebalance)
+            cfg.batch = 256;
+            cfg.compact_every = 2;
+            cfg.seed = 123;
+            cfg.source_skew = 2.0; // node 0 sources most of the stream
+            let mut sim = ServeSim::new(cfg).unwrap();
+            sim.run(ctx.tuples());
+            sim.stats().clone()
+        };
+        let rr = run("rr");
+        let locality = run("locality");
+        assert!(
+            locality.shuffle_mib < rr.shuffle_mib,
+            "locality must move fewer bytes: {} !< {}",
+            locality.shuffle_mib,
+            rr.shuffle_mib
+        );
+    }
+
+    #[test]
+    fn pipelined_waves_never_slow_the_drain() {
+        let ctx = stream(3000, 64);
+        let run = |pipeline: bool| {
+            let mut cfg = ServeSimConfig::new(3, 4, 3);
+            cfg.batch = 256;
+            cfg.pipeline = pipeline;
+            // round-robin: placement is independent of the simulated
+            // clocks, so both runs schedule the identical task set on
+            // the identical nodes and only the readiness times differ —
+            // the one setting where earlier-ready ⇒ earlier-finish is a
+            // theorem, not a heuristic
+            cfg.placement = "rr".into();
+            let mut sim = ServeSim::new(cfg).unwrap();
+            sim.run(ctx.tuples());
+            sim.sim_makespan_ms()
+        };
+        let overlapped = run(true);
+        let barriered = run(false);
+        assert!(
+            overlapped <= barriered,
+            "overlap must not lengthen the schedule: {overlapped} > {barriered}"
+        );
+    }
+
+    #[test]
+    fn simulation_is_deterministic_for_a_seed() {
+        let ctx = stream(1000, 16);
+        let run = || {
+            let mut cfg = ServeSimConfig::new(3, 4, 3);
+            cfg.source_skew = 1.0;
+            cfg.churn = ChurnConfig { kill_prob: 0.3, restart_ms: 20.0 };
+            let mut sim = ServeSim::new(cfg).unwrap();
+            sim.run(ctx.tuples());
+            (sim.sim_makespan_ms(), sim.stats().shuffle_mib, sim.stats().kills)
+        };
+        let (a_ms, a_mib, a_kills) = run();
+        let (b_ms, b_mib, b_kills) = run();
+        assert_eq!(a_ms.to_bits(), b_ms.to_bits());
+        assert_eq!(a_mib.to_bits(), b_mib.to_bits());
+        assert_eq!(a_kills, b_kills);
+    }
+
+    #[test]
+    fn unknown_placement_is_an_error() {
+        let mut cfg = ServeSimConfig::new(3, 2, 2);
+        cfg.placement = "yarn".into();
+        assert!(ServeSim::new(cfg).is_err());
+    }
+}

@@ -47,6 +47,7 @@ pub struct Compactor {
 }
 
 impl Compactor {
+    /// Empty global index expecting deltas from `n_shards` shards.
     pub fn new(n_shards: usize) -> Self {
         Self {
             keys: FxHashMap::default(),

@@ -16,19 +16,24 @@
 //!   globally-correct index, deduplicated with the exact
 //!   [`crate::oac::online::dedup_generated`] the online miner uses;
 //! * [`query`] — top-k by density, membership lookup, aggregate stats;
-//! * [`snapshot`] — JSON snapshot/restore for restart recovery.
+//! * [`snapshot`] — JSON snapshot/restore for restart recovery;
+//! * [`cluster`] — the service placed on a simulated N-node cluster:
+//!   shard placement via [`crate::exec::Placement`], shuffle-cost
+//!   accounting, and node churn with snapshot replay.
 //!
 //! Correctness invariant (unit- and property-tested): for any shard
 //! count, batch chunking, and compaction schedule, the compacted index
 //! equals single-miner [`crate::oac::mine_online`] output — same
 //! components, supports, and densities.
 
+pub mod cluster;
 pub mod merge;
 pub mod query;
 pub mod router;
 pub mod shard;
 pub mod snapshot;
 
+pub use cluster::{ServeSim, ServeSimConfig, ServeSimStats};
 pub use merge::Compactor;
 pub use query::{IndexStats, QueryEngine};
 pub use router::{Router, RouterStats};
@@ -47,6 +52,7 @@ pub struct ServeConfig {
     /// Relation arity (3 for triadic contexts, up to
     /// [`crate::core::tuple::MAX_ARITY`]).
     pub arity: usize,
+    /// Number of shards (each one an incremental miner).
     pub shards: usize,
     /// Router high-water mark, in queued tuples: crossing it triggers a
     /// parallel drain wave (backpressure).
@@ -58,6 +64,7 @@ pub struct ServeConfig {
 }
 
 impl ServeConfig {
+    /// Config with backpressure/worker defaults.
     pub fn new(arity: usize, shards: usize) -> Self {
         Self {
             arity,
@@ -68,6 +75,7 @@ impl ServeConfig {
         }
     }
 
+    /// Set the constraints applied at index materialisation.
     pub fn with_constraints(mut self, constraints: Constraints) -> Self {
         self.constraints = constraints;
         self
@@ -77,6 +85,7 @@ impl ServeConfig {
 /// Live service stats (router + compactor counters).
 #[derive(Debug, Clone)]
 pub struct ServiceStats {
+    /// Shard count.
     pub shards: usize,
     /// Tuples accepted by the router so far.
     pub tuples: usize,
@@ -111,12 +120,14 @@ pub struct TriclusterService {
 }
 
 impl TriclusterService {
+    /// Service with fresh shards and an empty global index.
     pub fn new(cfg: ServeConfig) -> Self {
         let router = Router::new(cfg.arity, cfg.shards, cfg.max_pending, cfg.workers);
         let compactor = Compactor::new(cfg.shards);
         Self { cfg, router, compactor }
     }
 
+    /// The configuration this service runs under.
     pub fn cfg(&self) -> &ServeConfig {
         &self.cfg
     }
@@ -151,6 +162,7 @@ impl TriclusterService {
         QueryEngine::new(self.compactor.clusters(&constraints))
     }
 
+    /// Live router + compactor counters.
     pub fn stats(&self) -> ServiceStats {
         let r = self.router.stats();
         ServiceStats {

@@ -13,10 +13,13 @@ use crate::util::hash::FxHashMap;
 /// Aggregate statistics of a compacted index.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IndexStats {
+    /// Clusters in the snapshot.
     pub clusters: usize,
     /// Σ support (= tuples ingested, when no constraints filter).
     pub total_support: usize,
+    /// Mean support-density.
     pub mean_density: f64,
+    /// Largest support-density.
     pub max_density: f64,
     /// Largest single-modality component cardinality.
     pub max_component: usize,
@@ -31,6 +34,7 @@ pub struct QueryEngine<'a> {
 }
 
 impl<'a> QueryEngine<'a> {
+    /// Build the inverted membership index over one snapshot.
     pub fn new(clusters: &'a [Cluster]) -> Self {
         let mut member: FxHashMap<(u8, u32), Vec<u32>> = FxHashMap::default();
         for (i, c) in clusters.iter().enumerate() {
@@ -43,10 +47,12 @@ impl<'a> QueryEngine<'a> {
         Self { clusters, member }
     }
 
+    /// Clusters in the snapshot.
     pub fn len(&self) -> usize {
         self.clusters.len()
     }
 
+    /// True when the snapshot has no clusters.
     pub fn is_empty(&self) -> bool {
         self.clusters.is_empty()
     }
@@ -96,6 +102,7 @@ impl<'a> QueryEngine<'a> {
         }
     }
 
+    /// Aggregate stats over the whole snapshot.
     pub fn stats(&self) -> IndexStats {
         let all: Vec<&Cluster> = self.clusters.iter().collect();
         stats_of(&all)

@@ -1,13 +1,21 @@
 //! Hash routing + bounded in-flight batching for the serving layer.
 //!
 //! `submit` stages incoming [`NTuple`] batches; when the staged volume
-//! crosses the `max_pending` high-water mark the router runs one DRAIN
-//! WAVE on [`crate::util::pool`]: a parallel route-split (chunks of the
-//! staged stream are hashed to per-shard bins concurrently — routing
-//! never sits on the serial path), a cheap per-shard concat, then one
-//! mining task per shard. At most one wave is in flight at a time, and a
-//! submitter is blocked inside `submit` while its wave runs — that is the
-//! backpressure contract: queues cannot grow without bound.
+//! crosses the `max_pending` high-water mark the router drains them as an
+//! ASYNC WAVE PIPELINE on [`crate::util::pool`]: the staged stream is cut
+//! into waves (at least [`WAVE_TUPLES`], scaled up with the worker count
+//! so each route-split saturates the pool), and while wave `w` is mined (one
+//! task per shard), wave `w+1`'s route-split (chunks hashed to per-shard
+//! bins in parallel) runs concurrently on a scoped thread — the
+//! route-split never sits on the serial path OR behind the miners.
+//! Waves are mined strictly in order, so per-shard arrival order still
+//! equals stream order. A submitter is blocked inside `submit` while its
+//! drain runs — that is the backpressure contract: queues cannot grow
+//! without bound.
+//!
+//! [`crate::serve::cluster::ServeSim`] models exactly this overlap in
+//! simulated time (its `pipeline` flag), so the virtual serve-on-cluster
+//! numbers and the real drain share one execution shape.
 //!
 //! Routing hashes the whole tuple, so replays of the same tuple always
 //! land on the same shard, preserving the retry-idempotence the M/R
@@ -30,6 +38,12 @@ use super::shard::Shard;
 /// Tuples hashed per route-split task in a drain wave.
 const SPLIT_CHUNK: usize = 4096;
 
+/// MINIMUM tuples per pipeline wave: while one wave mines, the next one
+/// routes. The actual wave size is `SPLIT_CHUNK × workers` when that is
+/// larger, so a single wave's route-split always has enough chunk tasks
+/// to saturate the pool.
+pub const WAVE_TUPLES: usize = 4 * SPLIT_CHUNK;
+
 /// Ingest counters, exposed through `TriclusterService::stats`.
 #[derive(Debug, Clone, Default)]
 pub struct RouterStats {
@@ -37,8 +51,11 @@ pub struct RouterStats {
     pub batches: usize,
     /// Tuples routed.
     pub tuples: usize,
-    /// Drain waves (backpressure or explicit flush).
+    /// Drains (backpressure or explicit flush).
     pub drains: usize,
+    /// Pipeline waves executed across all drains (> `drains` when a
+    /// drain was large enough to overlap route-split with mining).
+    pub waves: usize,
     /// High-water mark of a single shard's per-wave queue, in tuples.
     pub max_queue: usize,
 }
@@ -56,6 +73,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Router over `n_shards` fresh shards.
     pub fn new(arity: usize, n_shards: usize, max_pending: usize, workers: usize) -> Self {
         let n = n_shards.max(1);
         Self {
@@ -67,18 +85,22 @@ impl Router {
         }
     }
 
+    /// Shard count.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// The shards (read-only).
     pub fn shards(&self) -> &[Shard] {
         &self.shards
     }
 
+    /// The shards (the compactor pulls deltas through this).
     pub fn shards_mut(&mut self) -> &mut [Shard] {
         &mut self.shards
     }
 
+    /// Ingest counters.
     pub fn stats(&self) -> &RouterStats {
         &self.stats
     }
@@ -106,9 +128,11 @@ impl Router {
         }
     }
 
-    /// Synchronously mine every staged tuple: parallel route-split on the
-    /// exec backend, then one mining task per shard (each task owns its
-    /// shard for the wave).
+    /// Synchronously mine every staged tuple as a pipeline of waves:
+    /// wave `w+1`'s parallel route-split runs on a scoped thread WHILE
+    /// wave `w` is mined (one task per shard), so routing and mining
+    /// overlap; waves complete in order, preserving per-shard stream
+    /// order.
     pub fn drain(&mut self) {
         if self.staged.is_empty() {
             return;
@@ -116,54 +140,85 @@ impl Router {
         self.stats.drains += 1;
         let staged = std::mem::take(&mut self.staged);
         let n = self.shards.len();
-        // route-split off the serial path: map chunk INDICES of the
-        // staged stream (no upfront copy) to per-shard BINS on the Pooled
-        // backend — binning runs inside the parallel map tasks, so only
-        // the per-shard concat below is serial. Chunk-major map output
-        // order makes per-shard order equal stream order.
-        let n_chunks = staged.len().div_ceil(SPLIT_CHUNK) as u32;
-        let routed: Vec<(u32, Vec<NTuple>)> = self
-            .backend
-            .map_partitions("route-split", (0..n_chunks).collect(), |&ci: &u32| {
-                let lo = ci as usize * SPLIT_CHUNK;
-                let hi = (lo + SPLIT_CHUNK).min(staged.len());
-                let mut bins: Vec<Vec<NTuple>> = vec![Vec::new(); n];
-                for t in &staged[lo..hi] {
-                    bins[(fxhash(t) % n as u64) as usize].push(*t);
-                }
-                bins.into_iter()
-                    .enumerate()
-                    .filter(|(_, bin)| !bin.is_empty())
-                    .map(|(s, bin)| (s as u32, bin))
-                    .collect()
-            })
-            .expect("the pooled backend is infallible");
-        // concat bins in chunk order: per-shard order == stream order.
-        // The route-split output is already shard-keyed, so direct
-        // indexing groups it in one O(bins) pass — the degenerate case
-        // of `exec::group_pairs_presorted`, whose general fast path the
+        // disjoint field borrows: the route-split closure reads the
+        // backend, the mining path mutates the shards
+        let backend = &self.backend;
+        let workers = self.backend.workers;
+        let shards = &mut self.shards;
+        let stats = &mut self.stats;
+        // route-split off the serial path: map chunk INDICES of one wave
+        // (no upfront copy) to per-shard BINS on the Pooled backend —
+        // binning runs inside the parallel map tasks, so only the
+        // per-shard concat is serial. Chunk-major map output order makes
+        // per-shard order equal stream order. The concat's direct
+        // indexing is the degenerate case of
+        // `exec::group_pairs_presorted`, whose general fast path the
         // default `Backend::group_reduce` applies for sorted pair
         // streams (no hash map, no O(n log n) key sort).
-        let mut queues: Vec<Vec<NTuple>> =
-            (0..n).map(|_| Vec::with_capacity(staged.len() / n + 1)).collect();
-        for (s, bin) in routed {
-            queues[s as usize].extend_from_slice(&bin);
+        let route_split = |wave: &[NTuple]| -> Vec<Vec<NTuple>> {
+            let n_chunks = wave.len().div_ceil(SPLIT_CHUNK) as u32;
+            let routed: Vec<(u32, Vec<NTuple>)> = backend
+                .map_partitions("route-split", (0..n_chunks).collect(), |&ci: &u32| {
+                    let lo = ci as usize * SPLIT_CHUNK;
+                    let hi = (lo + SPLIT_CHUNK).min(wave.len());
+                    let mut bins: Vec<Vec<NTuple>> = vec![Vec::new(); n];
+                    for t in &wave[lo..hi] {
+                        bins[(fxhash(t) % n as u64) as usize].push(*t);
+                    }
+                    bins.into_iter()
+                        .enumerate()
+                        .filter(|(_, bin)| !bin.is_empty())
+                        .map(|(s, bin)| (s as u32, bin))
+                        .collect()
+                })
+                .expect("the pooled backend is infallible");
+            let mut queues: Vec<Vec<NTuple>> =
+                (0..n).map(|_| Vec::with_capacity(wave.len() / n + 1)).collect();
+            for (s, bin) in routed {
+                queues[s as usize].extend_from_slice(&bin);
+            }
+            queues
+        };
+        // wave size: big enough that one wave's route-split saturates
+        // the worker pool (one SPLIT_CHUNK task per worker), never
+        // smaller than the pipelining floor
+        let wave_tuples = (SPLIT_CHUNK * workers).max(WAVE_TUPLES);
+        let waves: Vec<&[NTuple]> = staged.chunks(wave_tuples).collect();
+        let mut current = route_split(waves[0]);
+        for next_idx in 1..=waves.len() {
+            stats.waves += 1;
+            for q in &current {
+                stats.max_queue = stats.max_queue.max(q.len());
+            }
+            // overlap: the NEXT wave routes on a scoped thread while the
+            // CURRENT wave mines here (waves stay ordered — wave w+1 is
+            // never mined before wave w finished)
+            let next = std::thread::scope(|scope| {
+                let handle = (next_idx < waves.len())
+                    .then(|| scope.spawn(|| route_split(waves[next_idx])));
+                mine_wave(shards, std::mem::take(&mut current), workers);
+                handle.map(|h| h.join().expect("route-split thread"))
+            });
+            match next {
+                Some(queues) => current = queues,
+                None => break,
+            }
         }
-        for q in &queues {
-            self.stats.max_queue = self.stats.max_queue.max(q.len());
-        }
-        // one mining task per shard
-        let jobs: Vec<std::sync::Mutex<Option<(&mut Shard, Vec<NTuple>)>>> = self
-            .shards
-            .iter_mut()
-            .zip(queues)
-            .map(|job| std::sync::Mutex::new(Some(job)))
-            .collect();
-        pool::parallel_map(jobs.len(), self.backend.workers, 1, |i| {
-            let (shard, queue) = jobs[i].lock().unwrap().take().expect("taken once");
-            shard.ingest(&queue);
-        });
     }
+}
+
+/// One mining task per shard over one wave's queues (each task owns its
+/// shard for the wave).
+fn mine_wave(shards: &mut [Shard], queues: Vec<Vec<NTuple>>, workers: usize) {
+    let jobs: Vec<std::sync::Mutex<Option<(&mut Shard, Vec<NTuple>)>>> = shards
+        .iter_mut()
+        .zip(queues)
+        .map(|job| std::sync::Mutex::new(Some(job)))
+        .collect();
+    pool::parallel_map(jobs.len(), workers, 1, |i| {
+        let (shard, queue) = jobs[i].lock().unwrap().take().expect("taken once");
+        shard.ingest(&queue);
+    });
 }
 
 #[cfg(test)]
@@ -230,6 +285,28 @@ mod tests {
                 .map(|(t, _)| *t)
                 .collect();
             assert_eq!(got, want, "shard {i} order");
+        }
+    }
+
+    #[test]
+    fn pipelined_waves_preserve_stream_order_and_mine_everything() {
+        // > 2 waves, so route-split of wave w+1 really overlaps mining of
+        // wave w; per-shard order must still equal stream order
+        let data: Vec<NTuple> = (0..(2 * super::WAVE_TUPLES as u32 + 999))
+            .map(|i| NTuple::triple(i % 1009, i % 911, i % 773))
+            .collect();
+        let mut r = Router::new(3, 4, usize::MAX, 4);
+        r.submit(&data);
+        r.drain();
+        assert_eq!(r.stats().drains, 1);
+        assert!(r.stats().waves >= 3, "large drain must pipeline in waves");
+        let mined: usize = r.shards().iter().map(Shard::len).sum();
+        assert_eq!(mined, data.len());
+        for (i, shard) in r.shards().iter().enumerate() {
+            let got = shard.ingested_tuples();
+            let want: Vec<NTuple> =
+                data.iter().filter(|t| r.route(t) == i).copied().collect();
+            assert_eq!(got, want, "shard {i} stream order across waves");
         }
     }
 

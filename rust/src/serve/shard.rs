@@ -35,6 +35,7 @@ pub struct ShardDelta {
 }
 
 impl ShardDelta {
+    /// True when the delta carries no new tuples.
     pub fn is_empty(&self) -> bool {
         self.tuples.is_empty()
     }
@@ -51,10 +52,12 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// Fresh shard `id` over `arity` modalities.
     pub fn new(id: usize, arity: usize) -> Self {
         Self { id, miner: OnlineMiner::new(arity), epoch: 0, exported: 0 }
     }
 
+    /// This shard's id (= its routing index).
     pub fn id(&self) -> usize {
         self.id
     }
@@ -69,10 +72,12 @@ impl Shard {
         self.miner.len()
     }
 
+    /// True before the first ingested tuple.
     pub fn is_empty(&self) -> bool {
         self.miner.is_empty()
     }
 
+    /// The underlying incremental miner.
     pub fn miner(&self) -> &OnlineMiner {
         &self.miner
     }

@@ -14,7 +14,9 @@ use crate::spark::rdd::SparkContext;
 
 /// Result mirror of `mmc::MmcResult` for the Spark-like engine.
 pub struct SparkMmcResult {
+    /// The final cluster set.
     pub clusters: Vec<Cluster>,
+    /// Total wall time, ms.
     pub wall_ms: f64,
 }
 

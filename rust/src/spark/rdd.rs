@@ -23,13 +23,17 @@ use crate::util::stats::Timer;
 /// Execution context: partition count, executor threads, and the task
 /// timing log shared by all ops of one job.
 pub struct SparkContext {
+    /// Partitions per RDD (wide ops re-partition to this count).
     pub partitions: usize,
+    /// OS threads executing partition tasks.
     pub executor_threads: usize,
     /// (stage label, per-partition task ms)
     pub stage_log: std::sync::Mutex<Vec<(String, Vec<f64>)>>,
 }
 
 impl SparkContext {
+    /// Context with `partitions` partitions (min 1) and
+    ///  `executor_threads` threads.
     pub fn new(partitions: usize, executor_threads: usize) -> Self {
         Self {
             partitions: partitions.max(1),
@@ -71,10 +75,12 @@ pub struct Rdd<'a, T> {
 }
 
 impl<'a, T: Send> Rdd<'a, T> {
+    /// Number of partitions backing this RDD.
     pub fn num_partitions(&self) -> usize {
         self.parts.len()
     }
 
+    /// Total elements across partitions.
     pub fn count(&self) -> usize {
         self.parts.iter().map(Vec::len).sum()
     }

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
+/// Parsed command line: subcommand + `--flag value` pairs + switches.
 pub struct Args {
     /// First non-flag token (subcommand), if any.
     pub command: Option<String>,
@@ -51,22 +52,27 @@ impl Args {
         Self::parse_from(std::env::args().skip(1))
     }
 
+    /// Value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Value of `--name` parsed as `T`, if given and well-formed.
     pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
         self.get(name).and_then(|v| v.parse().ok())
     }
 
+    /// Value of `--name` parsed as `T`, or `default`.
     pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
         self.parse(name).unwrap_or(default)
     }
 
+    /// True when `--switch` was given (with or without a value).
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
     }

@@ -61,8 +61,11 @@ impl Hasher for FxHasher {
     }
 }
 
+/// `BuildHasher` for FxHash-keyed collections.
 pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+/// `HashMap` keyed by FxHash (the repo's default map).
 pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+/// `HashSet` keyed by FxHash (the repo's default set).
 pub type FxHashSet<T> = std::collections::HashSet<T, FxBuildHasher>;
 
 /// Hash any `Hash` value with FxHash — used for tricluster dedup keys and

@@ -9,16 +9,24 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed JSON value.
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (members kept in key order).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse one JSON document (rejects trailing input).
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { s: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -30,6 +38,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member `key`, if this is an object containing it.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -37,6 +46,7 @@ impl Json {
         }
     }
 
+    /// Array element `i`, if this is an array long enough.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -44,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -51,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The number payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -58,10 +70,12 @@ impl Json {
         }
     }
 
+    /// The number payload truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The bool payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -69,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -76,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The members, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

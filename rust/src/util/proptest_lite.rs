@@ -11,8 +11,11 @@ use crate::util::rng::Rng;
 /// Configuration of a property run.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Random cases to run.
     pub cases: usize,
+    /// Base seed (case i uses a derived stream).
     pub seed: u64,
+    /// Upper bound for size-scaled generators.
     pub max_size: usize,
 }
 
@@ -24,23 +27,29 @@ impl Default for Config {
 
 /// Generator context for one case: PRNG + target size.
 pub struct Gen {
+    /// The case's PRNG.
     pub rng: Rng,
+    /// The case's target size.
     pub size: usize,
 }
 
 impl Gen {
+    /// Uniform in `[0, n)` (n clamped to ≥ 1).
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.rng.usize_below(n.max(1))
     }
 
+    /// Uniform in `[0, n)` (n clamped to ≥ 1).
     pub fn u32_below(&mut self, n: u32) -> u32 {
         self.rng.below(n.max(1) as u64) as u32
     }
 
+    /// Uniform in `[0, 1)`.
     pub fn f64(&mut self) -> f64 {
         self.rng.f64()
     }
 
+    /// Bernoulli trial.
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.chance(p)
     }
@@ -68,9 +77,13 @@ impl Gen {
 /// Outcome of a failed property with its reproduction info.
 #[derive(Debug)]
 pub struct Failure {
+    /// Index of the failing case.
     pub case: usize,
+    /// Seed that reproduces it.
     pub seed: u64,
+    /// Size the failure shrank to.
     pub size: usize,
+    /// The property's failure message.
     pub message: String,
 }
 

@@ -12,11 +12,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -42,6 +44,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -72,6 +75,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Uniform in `[0, n)` as usize.
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
     }
@@ -137,6 +141,8 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Zipf(s) sampler over `{0, .., n-1}` (dense CDF for small n,
+    ///  rejection sampling otherwise).
     pub fn new(n: u64, s: f64) -> Self {
         assert!(n >= 1);
         if n <= 64 {
@@ -169,6 +175,7 @@ impl Zipf {
         }
     }
 
+    /// Draw one rank (0 = most popular).
     pub fn sample(&self, rng: &mut Rng) -> u64 {
         if let Some(cdf) = &self.dense {
             let u = rng.f64();

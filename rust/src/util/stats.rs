@@ -8,14 +8,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Time since `start`.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since `start`, ms.
     pub fn elapsed_ms(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
     }
@@ -24,16 +27,24 @@ impl Timer {
 /// Summary of a sample of measurements (times in ms, counts, ...).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Standard deviation (population).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median.
     pub median: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarise a non-empty sample.
     pub fn of(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "empty sample");
         let n = samples.len();

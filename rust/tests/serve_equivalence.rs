@@ -7,7 +7,9 @@
 use tricluster::core::context::PolyContext;
 use tricluster::core::pattern::Cluster;
 use tricluster::datasets::{movielens, synthetic, MovielensParams};
+use tricluster::exec::cluster_sim::ChurnConfig;
 use tricluster::oac::{mine_online, Constraints};
+use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
 use tricluster::serve::{ServeConfig, TriclusterService};
 use tricluster::util::proptest_lite::{assert_prop, Gen};
 
@@ -115,6 +117,58 @@ fn structured_families_match() {
         let total: usize = got.iter().map(|c| c.support).sum();
         assert_eq!(total, ctx.len(), "{name}: support mass conserved");
     }
+}
+
+/// Random context → random serve-on-cluster schedule WITH randomized
+/// node churn (seeded kills land mid-drain, between a wave's route and
+/// mine phases): shards are re-placed, the last compacted snapshot is
+/// replayed for real, and the in-flight window re-delivered — the
+/// compacted index must still equal single-miner `mine_online` for any
+/// placement policy, kill rate, restart delay, rebalance mode, and
+/// pipelining mode.
+#[test]
+fn prop_churned_serve_cluster_equals_sequential() {
+    assert_prop(48, |g: &mut Gen| {
+        let universe = 2 + g.u32_below(9);
+        let n_tuples = 50 + g.usize_below(400);
+        let mut ctx = PolyContext::new(3);
+        for _ in 0..n_tuples {
+            let ids: Vec<u32> = (0..3).map(|_| g.u32_below(universe)).collect();
+            ctx.add_ids(&ids);
+        }
+        let reference = sorted(mine_online(&ctx, &Constraints::none()));
+
+        let shards = 1 + g.usize_below(6);
+        let nodes = 1 + g.usize_below(4);
+        let placement = ["rr", "locality", "least"][g.usize_below(3)];
+        let mut cfg = ServeSimConfig::new(3, shards, nodes);
+        cfg.placement = placement.into();
+        cfg.slots_per_node = 1 + g.usize_below(3);
+        cfg.batch = 8 + g.usize_below(64);
+        cfg.route_chunk = 4 + g.usize_below(32);
+        cfg.compact_every = 1 + g.usize_below(4);
+        cfg.source_skew = g.f64() * 2.5;
+        cfg.churn = ChurnConfig {
+            kill_prob: 0.2 + g.f64() * 0.6,
+            restart_ms: g.f64() * 100.0,
+        };
+        cfg.rebalance = g.bool(0.7);
+        cfg.pipeline = g.bool(0.5);
+        cfg.seed = g.rng.next_u64();
+        let mut sim = ServeSim::new(cfg).map_err(|e| e.to_string())?;
+        sim.run(ctx.tuples());
+        let kills = sim.stats().kills;
+        let got = sorted(sim.clusters().to_vec());
+        assert_same(
+            &got,
+            &reference,
+            &format!(
+                "churned serve-cluster: {placement} shards={shards} nodes={nodes} \
+                 tuples={} kills={kills}",
+                ctx.len()
+            ),
+        )
+    });
 }
 
 /// Duplicate deliveries (at-least-once upstream) must not change the
