@@ -31,12 +31,25 @@
 //!    locality moved strictly fewer drain-path MiB than round-robin,
 //!    and `locality_speedup_vs_rr` is at least the baseline's
 //!    `serve_cluster.min_locality_speedup_vs_rr` floor.
+//! 5. **Hot-path kernels** — when `BENCH_hotpath.json` is present:
+//!    sequential ingest throughput must not fall below
+//!    `hotpath.min_ingest_tuples_per_s`, merge-based parallel ingest
+//!    must be at least `hotpath.min_parallel_vs_sequential` × the
+//!    sequential rate (the "parallel ≥ sequential" acceptance gate —
+//!    skipped when the bench machine had fewer than 2 workers, where
+//!    the parallel path IS the sequential fallback and the ratio is
+//!    noise), and the in-bench equivalence verdicts
+//!    (`parallel_matches_sequential`, `bitset_matches_scalar`) must be
+//!    true.
 //!
 //! `--pin` rewrites the baseline from the current `BENCH_cluster.json`
 //! (max makespans = observed, speedup floors = 80% of observed) and,
 //! when present, `BENCH_serve_cluster.json` (locality-vs-rr floor = 90%
-//! of observed), so a session with a toolchain can tighten the committed
-//! baseline.
+//! of observed) and `BENCH_hotpath.json` (ingest floor = 30% of
+//! observed — wall-clock rates are machine-dependent, unlike the
+//! simulated makespans; the parallel-vs-sequential floor stays pinned
+//! at 1.0 by policy), so a session with a toolchain can tighten the
+//! committed baseline.
 
 use std::collections::BTreeMap;
 use std::process::exit;
@@ -75,6 +88,7 @@ fn main() {
     let backends_path = args.get_or("backends", "BENCH_backends.json");
     let serve_cluster_path =
         args.get_or("serve-cluster", "BENCH_serve_cluster.json");
+    let hotpath_path = args.get_or("hotpath", "BENCH_hotpath.json");
 
     let Some(cluster) = load(cluster_path) else {
         // bare `cargo bench` runs targets in name order, so this checker
@@ -100,7 +114,12 @@ fn main() {
     }
 
     if args.has("pin") {
-        pin(baseline_path, entries, load(serve_cluster_path).as_ref());
+        pin(
+            baseline_path,
+            entries,
+            load(serve_cluster_path).as_ref(),
+            load(hotpath_path).as_ref(),
+        );
         return;
     }
 
@@ -263,6 +282,51 @@ fn main() {
         );
     }
 
+    // 5. hot-path kernel floors (when the hotpath bench ran)
+    if let Some(hot) = load(hotpath_path) {
+        for verdict in ["parallel_matches_sequential", "bitset_matches_scalar"] {
+            if hot.get(verdict).and_then(Json::as_bool) == Some(false) {
+                failures.push(format!("hotpath equivalence verdict {verdict} is false"));
+            }
+        }
+        let hot_base = baseline.get("hotpath");
+        let seq_rate = f(&hot, "ingest_seq_tuples_per_s");
+        if let Some(min) = hot_base
+            .and_then(|h| h.get("min_ingest_tuples_per_s"))
+            .and_then(Json::as_f64)
+        {
+            if seq_rate.is_nan() || seq_rate < min {
+                failures.push(format!(
+                    "hotpath ingest {seq_rate:.0} tuples/s fell below the baseline \
+                     floor {min:.0}"
+                ));
+            }
+        }
+        let ratio = f(&hot, "parallel_vs_sequential");
+        let bench_workers = f(&hot, "workers");
+        if let Some(min) = hot_base
+            .and_then(|h| h.get("min_parallel_vs_sequential"))
+            .and_then(Json::as_f64)
+        {
+            if bench_workers < 2.0 {
+                // single-core runner: par_add_batch takes the sequential
+                // fallback, so the ratio is pure timing noise around 1.0
+                // — nothing to gate
+                eprintln!(
+                    "check_bench: hotpath ran with {bench_workers} worker(s) — \
+                     skipping the parallel-vs-sequential floor"
+                );
+            } else if ratio.is_nan() || ratio < min {
+                failures.push(format!(
+                    "hotpath parallel ingest at {ratio:.3}x sequential fell below \
+                     the baseline floor {min:.3}x"
+                ));
+            }
+        }
+    } else {
+        eprintln!("check_bench: {hotpath_path} absent — skipping hot-path gate");
+    }
+
     if failures.is_empty() {
         println!(
             "check_bench: OK — {} cluster entries, {checked} baseline pins, \
@@ -278,7 +342,12 @@ fn main() {
 }
 
 /// `--pin`: rewrite the baseline from the current bench output.
-fn pin(baseline_path: &str, entries: &[Json], serve_cluster: Option<&Json>) {
+fn pin(
+    baseline_path: &str,
+    entries: &[Json],
+    serve_cluster: Option<&Json>,
+    hotpath: Option<&Json>,
+) {
     let mut pins: Vec<Json> = Vec::new();
     for e in entries {
         let mut o = BTreeMap::new();
@@ -321,6 +390,26 @@ fn pin(baseline_path: &str, entries: &[Json], serve_cluster: Option<&Json>) {
                 old_baseline.as_ref().and_then(|b| b.get("serve_cluster"))
             {
                 doc.insert("serve_cluster".to_string(), old.clone());
+            }
+        }
+    }
+    match hotpath.map(|h| f(h, "ingest_seq_tuples_per_s")) {
+        Some(rate) if rate.is_finite() => {
+            let mut hp = BTreeMap::new();
+            // wall-clock rate: pin LOOSELY (30% of observed) — unlike the
+            // simulated makespans this number moves with the CI machine
+            hp.insert(
+                "min_ingest_tuples_per_s".to_string(),
+                Json::Num((rate * 0.3).floor()),
+            );
+            // policy, not measurement: parallel ingest must never lose
+            hp.insert("min_parallel_vs_sequential".to_string(), Json::Num(1.0));
+            doc.insert("hotpath".to_string(), Json::Obj(hp));
+        }
+        _ => {
+            let old_baseline = load(baseline_path);
+            if let Some(old) = old_baseline.as_ref().and_then(|b| b.get("hotpath")) {
+                doc.insert("hotpath".to_string(), old.clone());
             }
         }
     }

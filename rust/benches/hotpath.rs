@@ -1,59 +1,154 @@
-//! Micro-benchmarks of the Layer-3 hot paths, with throughput targets
-//! from EXPERIMENTS.md §Perf:
-//!   * online OAC ingest (prime-store add)        — target ≥ 1M tuples/s
-//!   * record codec (shuffle serialisation)       — target ≥ 10M rec/s
-//!   * shuffle sort+group                          — reported
-//!   * dedup fingerprinting                        — reported
-//!   * density engines per cluster                 — reported
+//! Micro-benchmarks of the Layer-3 hot paths. Writes
+//! `BENCH_hotpath.json` (repo root), gated by `ci/check_bench.rs`
+//! against `ci/bench_baseline.json`:
+//!
+//!   * online OAC ingest, sequential vs merge-based parallel
+//!     (`PrimeStore::par_add_batch`) on the dense K1 context — the gate
+//!     enforces an absolute sequential floor AND parallel ≥ sequential;
+//!   * fingerprint dedup over the ingested state (cached-sorted-cumuli
+//!     path);
+//!   * exact density, scalar hash-probe oracle vs the bitset
+//!     (`density::densities_bitset`) kernel;
+//!   * record codec + shuffle sort/group (reported, not gated).
+//!
+//! Doubles as an equivalence gate, enforced at the source: the parallel
+//! ingest must export cumuli identical to sequential ingest, and the
+//! bitset densities must equal the scalar oracle exactly — the bench
+//! aborts otherwise, so CI's smoke run fails on divergence.
+
+use std::collections::BTreeMap;
 
 use tricluster::core::tuple::NTuple;
+use tricluster::datasets::synthetic::k1;
 use tricluster::datasets::{movielens, MovielensParams};
+use tricluster::density::{densities_bitset, densities_scalar};
 use tricluster::hadoop::record::Record;
-use tricluster::oac::{dedup_and_filter, Constraints, OnlineMiner};
+use tricluster::oac::primes::PrimeStore;
+use tricluster::oac::{mine_online, Constraints, OnlineMiner};
+use tricluster::util::json::Json;
+use tricluster::util::pool;
 use tricluster::util::stats::{measure_ms, Summary};
 
-fn report(name: &str, unit_per_run: f64, unit: &str, samples: &[f64]) {
+fn report(name: &str, unit_per_run: f64, unit: &str, samples: &[f64]) -> f64 {
     let s = Summary::of(samples);
     let rate = unit_per_run / (s.median / 1e3);
     println!(
-        "{name:<28} median {m:>9.2} ms  (p95 {p:>9.2})  => {rate:>12.0} {unit}/s",
+        "{name:<30} median {m:>9.2} ms  (p95 {p:>9.2})  => {rate:>12.0} {unit}/s",
         m = s.median,
         p = s.p95,
     );
+    rate
+}
+
+fn median_ms(samples: &[f64]) -> f64 {
+    Summary::of(samples).median
 }
 
 fn main() {
-    let n = 200_000usize;
-    let ctx = movielens(&MovielensParams::with_tuples(n));
-    let tuples = ctx.tuples().to_vec();
+    let full = std::env::var("TRICLUSTER_BENCH_FULL").is_ok();
+    let workers = pool::default_workers();
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("hotpath".into()));
+    doc.insert("full".to_string(), Json::Bool(full));
+    doc.insert("workers".to_string(), Json::Num(workers as f64));
 
-    // 1) online ingest
-    let samples = measure_ms(1, 5, || {
-        let mut miner = OnlineMiner::new(4);
+    // ── ingest: sequential vs merge-based parallel, dense K1 regime ──
+    let k1_n = if full { 80 } else { 48 };
+    let ctx = k1(k1_n);
+    let tuples = ctx.triples().to_vec();
+    let n = tuples.len();
+    println!("ingest context: K1({k1_n}) = {n} triples, {workers} workers\n");
+
+    // equivalence gate before timing: parallel ingest must export the
+    // exact cumuli sequential ingest builds
+    {
+        let mut seq = PrimeStore::new(3);
+        for t in &tuples {
+            seq.add(t);
+        }
+        let mut par = PrimeStore::new(3);
+        par.par_add_batch(&tuples, workers.max(2));
+        assert_eq!(
+            seq.cumuli(),
+            par.cumuli(),
+            "parallel ingest diverged from sequential"
+        );
+    }
+
+    let seq_samples = measure_ms(1, 7, || {
+        let mut miner = OnlineMiner::new(3);
         miner.add_batch(&tuples);
         std::hint::black_box(miner.len());
     });
-    report("online ingest (4-ary)", n as f64, "tuples", &samples);
+    let seq_rate = report("ingest sequential (K1)", n as f64, "tuples", &seq_samples);
 
-    // 2) materialise + dedup (naive path vs memoized §Perf path)
-    let mut miner = OnlineMiner::new(4);
-    miner.add_batch(&tuples);
-    let samples = measure_ms(1, 5, || {
-        let m = miner.materialize_all();
-        let out = dedup_and_filter(m, &Constraints::none());
-        std::hint::black_box(out.len());
+    let par_samples = measure_ms(1, 7, || {
+        let mut miner = OnlineMiner::new(3);
+        miner.par_add_batch(&tuples, workers);
+        std::hint::black_box(miner.len());
     });
-    report("materialize + dedup (naive)", n as f64, "tuples", &samples);
-    let samples = measure_ms(1, 5, || {
+    let par_rate = report("ingest parallel (K1)", n as f64, "tuples", &par_samples);
+    let ratio = median_ms(&seq_samples) / median_ms(&par_samples);
+    println!("{:<30} {ratio:>32.2}x vs sequential", "parallel speedup");
+
+    doc.insert("ingest_tuples".to_string(), Json::Num(n as f64));
+    doc.insert("ingest_seq_tuples_per_s".to_string(), Json::Num(seq_rate));
+    doc.insert("ingest_par_tuples_per_s".to_string(), Json::Num(par_rate));
+    doc.insert("parallel_vs_sequential".to_string(), Json::Num(ratio));
+    doc.insert("parallel_matches_sequential".to_string(), Json::Bool(true));
+
+    // ── dedup over the ingested state (cached sorted cumuli) ──
+    let mut miner = OnlineMiner::new(3);
+    miner.add_batch(&tuples);
+    let dedup_samples = measure_ms(1, 5, || {
         let out = miner.dedup_and_filter(&Constraints::none());
         std::hint::black_box(out.len());
     });
-    report("dedup (memoized sets)", n as f64, "tuples", &samples);
+    let dedup_rate = report("dedup (memoized sets)", n as f64, "tuples", &dedup_samples);
+    doc.insert("dedup_tuples_per_s".to_string(), Json::Num(dedup_rate));
 
-    // 3) record codec roundtrip
-    let samples = measure_ms(1, 5, || {
-        let mut buf = Vec::with_capacity(tuples.len() * 20);
-        for t in &tuples {
+    // ── exact density: scalar oracle vs bitset kernel ──
+    let d_n = if full { 56 } else { 32 };
+    let dctx = k1(d_n);
+    let clusters = mine_online(&dctx.inner, &Constraints::none());
+    let cells: f64 = clusters.iter().map(|c| c.volume()).sum();
+    println!(
+        "\ndensity context: K1({d_n}), {} clusters, {cells:.0} cuboid cells",
+        clusters.len()
+    );
+    let scalar = densities_scalar(&dctx, &clusters);
+    let bitset = densities_bitset(&dctx, &clusters, usize::MAX)
+        .expect("K1 row table fits any cap");
+    assert_eq!(scalar, bitset, "bitset densities diverged from the scalar oracle");
+
+    let scalar_samples = measure_ms(1, 3, || {
+        std::hint::black_box(densities_scalar(&dctx, &clusters).len());
+    });
+    let scalar_rate = report("density scalar oracle", cells, "cells", &scalar_samples);
+    let bitset_samples = measure_ms(1, 5, || {
+        std::hint::black_box(
+            densities_bitset(&dctx, &clusters, usize::MAX).unwrap().len(),
+        );
+    });
+    let bitset_rate = report("density bitset kernel", cells, "cells", &bitset_samples);
+    doc.insert("density_cells".to_string(), Json::Num(cells));
+    doc.insert("density_scalar_cells_per_s".to_string(), Json::Num(scalar_rate));
+    doc.insert("density_bitset_cells_per_s".to_string(), Json::Num(bitset_rate));
+    doc.insert(
+        "bitset_vs_scalar".to_string(),
+        Json::Num(median_ms(&scalar_samples) / median_ms(&bitset_samples)),
+    );
+    doc.insert("bitset_matches_scalar".to_string(), Json::Bool(true));
+
+    // ── record codec + shuffle sort/group (reported only) ──
+    let mcount = if full { 500_000 } else { 200_000 };
+    let mctx = movielens(&MovielensParams::with_tuples(mcount));
+    let mtuples = mctx.tuples().to_vec();
+    let mn = mtuples.len();
+    println!("\ncodec/shuffle stream: movielens {mn} 4-ary tuples");
+    let codec_samples = measure_ms(1, 5, || {
+        let mut buf = Vec::with_capacity(mtuples.len() * 20);
+        for t in &mtuples {
             t.encode(&mut buf);
         }
         let mut slice = buf.as_slice();
@@ -62,16 +157,16 @@ fn main() {
             std::hint::black_box(NTuple::decode(&mut slice));
             count += 1;
         }
-        assert_eq!(count, tuples.len());
+        assert_eq!(count, mtuples.len());
     });
-    report("record codec roundtrip", n as f64, "records", &samples);
+    let codec_rate = report("record codec roundtrip", mn as f64, "records", &codec_samples);
+    doc.insert("codec_records_per_s".to_string(), Json::Num(codec_rate));
 
-    // 4) shuffle sort+group over encoded pairs
-    let pairs: Vec<(Vec<u8>, Vec<u8>)> = tuples
+    let pairs: Vec<(Vec<u8>, Vec<u8>)> = mtuples
         .iter()
         .map(|t| (t.subrelation(0).to_bytes(), t.get(0).to_bytes()))
         .collect();
-    let samples = measure_ms(1, 5, || {
+    let shuffle_samples = measure_ms(1, 5, || {
         let mut p = pairs.clone();
         p.sort_unstable();
         let mut groups = 0usize;
@@ -86,30 +181,15 @@ fn main() {
         }
         std::hint::black_box(groups);
     });
-    report("shuffle sort+group", n as f64, "pairs", &samples);
+    let shuffle_rate = report("shuffle sort+group", mn as f64, "pairs", &shuffle_samples);
+    doc.insert("shuffle_pairs_per_s".to_string(), Json::Num(shuffle_rate));
 
-    // 5) XLA density engine, if artifacts are present
-    if tricluster::runtime::artifacts_available() {
-        use tricluster::density::{DensityEngine, ExactEngine, XlaEngine};
-        let rt = tricluster::runtime::Runtime::load(
-            &tricluster::runtime::default_artifact_dir(),
-        )
-        .unwrap();
-        let tri = tricluster::datasets::synthetic::k1(48);
-        let clusters = tricluster::oac::mine_online(
-            &tri.inner,
-            &tricluster::oac::Constraints::none(),
-        );
-        let mut xla = XlaEngine::new(&rt, 48, clusters.len()).unwrap();
-        let samples = measure_ms(1, 5, || {
-            std::hint::black_box(xla.densities(&tri, &clusters).len());
-        });
-        report("density xla (145 clusters)", clusters.len() as f64, "clusters", &samples);
-        let samples = measure_ms(1, 3, || {
-            std::hint::black_box(ExactEngine.densities(&tri, &clusters).len());
-        });
-        report("density exact (145 clusters)", clusters.len() as f64, "clusters", &samples);
-    }
-
-    println!("\ntargets (EXPERIMENTS.md §Perf): ingest ≥ 1M tuples/s, codec ≥ 10M rec/s");
+    std::fs::write("BENCH_hotpath.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_hotpath.json");
+    println!(
+        "\nwrote BENCH_hotpath.json (parallel ingest and bitset density verified \
+         against their sequential/scalar oracles; parallel speedup {ratio:.2}x, \
+         bitset speedup {b:.1}x)",
+        b = median_ms(&scalar_samples) / median_ms(&bitset_samples)
+    );
 }

@@ -28,6 +28,18 @@ impl Cluster {
         Self { components, support: 1 }
     }
 
+    /// Cluster over components that are ALREADY sorted and deduplicated
+    /// (debug-asserted) — the §Perf constructor for materialised cumuli
+    /// (the arena and the stage-1 reduce both emit sorted sets), skipping
+    /// [`Cluster::new`]'s re-sort of every component.
+    pub fn from_sorted(components: Vec<Vec<u32>>) -> Self {
+        debug_assert!(
+            components.iter().all(|c| c.windows(2).all(|w| w[0] < w[1])),
+            "from_sorted requires strictly sorted, deduplicated components"
+        );
+        Self { components, support: 1 }
+    }
+
     /// Number of modalities.
     pub fn arity(&self) -> usize {
         self.components.len()
@@ -127,6 +139,13 @@ mod tests {
         let c = Cluster::new(vec![vec![3, 1, 3], vec![2], vec![5, 4]]);
         assert_eq!(c.components[0], vec![1, 3]);
         assert_eq!(c.components[2], vec![4, 5]);
+    }
+
+    #[test]
+    fn from_sorted_preserves_components() {
+        let c = Cluster::from_sorted(vec![vec![1, 3], vec![2], vec![4, 5]]);
+        assert_eq!(c, Cluster::new(vec![vec![3, 1], vec![2], vec![5, 4]]));
+        assert_eq!(c.support, 1);
     }
 
     #[test]

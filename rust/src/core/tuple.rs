@@ -106,6 +106,24 @@ pub struct SubRelation {
 }
 
 impl SubRelation {
+    /// Rebuild a subrelation from its kept components (in original
+    /// order) and the dropped position — the inverse of
+    /// [`NTuple::subrelation`] over `(kept, dropped)`, used by the
+    /// prime-store ingest kernel to export packed `u128` keys back as
+    /// subrelations. Panics unless `kept.len() + 1 ≤ MAX_ARITY` and
+    /// `dropped ≤ kept.len()`.
+    pub fn from_parts(kept: &[u32], dropped: usize) -> Self {
+        let arity = kept.len() + 1;
+        assert!(
+            (2..=MAX_ARITY).contains(&arity),
+            "subrelation arity {arity} out of range 2..={MAX_ARITY}"
+        );
+        assert!(dropped < arity, "dropped position {dropped} out of range");
+        let mut buf = [0u32; MAX_ARITY];
+        buf[..kept.len()].copy_from_slice(kept);
+        Self { elems: buf, arity: arity as u8, dropped: dropped as u8 }
+    }
+
     #[inline]
     /// Which position was dropped (the subrelation's modality tag).
     pub fn dropped(&self) -> usize {
@@ -161,6 +179,15 @@ mod tests {
     #[should_panic]
     fn arity_too_large_panics() {
         NTuple::new(&[0; MAX_ARITY + 1]);
+    }
+
+    #[test]
+    fn from_parts_inverts_subrelation() {
+        let t = NTuple::new(&[4, 9, 2, 7]);
+        for k in 0..4 {
+            let sub = t.subrelation(k);
+            assert_eq!(SubRelation::from_parts(sub.as_slice(), k), sub);
+        }
     }
 
     #[test]

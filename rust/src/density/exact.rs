@@ -1,20 +1,76 @@
-//! Exact density by hash-membership counting (the reference engine).
+//! Exact density: the scalar hash-membership oracle and the bitset
+//! kernel that replaces it on the hot path.
+//!
+//! The scalar path probes the context's tuple hash set once per cuboid
+//! cell — `O(volume)` probes per cluster, each a full tuple hash. The
+//! bitset kernel ([`densities_bitset`]) instead builds per-(g, m) `u64`
+//! rows over the third modality ONCE per call ([`BitRows`]) and reduces
+//! each cluster to `popcount(row & modus_mask)` sums — 64 cells per
+//! word-AND, no hashing, sequential row reads. Both count exactly, so
+//! they return bit-identical densities (property-tested in
+//! `rust/tests/proptests.rs`); the scalar path remains the reference
+//! oracle and the fallback when the row table would not fit
+//! [`BITSET_MAX_BYTES`] or the workload is too small to amortise the
+//! build.
 
 use crate::core::context::TriContext;
 use crate::core::pattern::Cluster;
+use crate::density::tiling::{bit_mask, BitRows};
 use crate::density::DensityEngine;
+
+/// Byte cap on the bitset row table (|G|·|M|·⌈|B|/64⌉·8); above it the
+/// engine falls back to scalar counting.
+pub const BITSET_MAX_BYTES: usize = 64 << 20;
+
+/// Minimum total cuboid cells below which the row-table build costs more
+/// than the scalar probes it replaces.
+const BITSET_MIN_CELLS: f64 = 4096.0;
 
 #[derive(Default)]
 /// Exact per-cluster density over the raw tuple set (the reference
-///  the sampled and compiled engines are validated against).
+/// the sampled and compiled engines are validated against). Dispatches
+/// to the bitset kernel when profitable; the result is identical either
+/// way.
 pub struct ExactEngine;
 
-impl DensityEngine for ExactEngine {
-    fn name(&self) -> &'static str {
-        "exact"
-    }
+/// The scalar reference: one hash membership probe per cuboid cell.
+pub fn densities_scalar(ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+    clusters
+        .iter()
+        .map(|c| {
+            let vol = c.volume();
+            if vol == 0.0 {
+                return 0.0;
+            }
+            let mut hit = 0u64;
+            for &g in &c.components[0] {
+                for &m in &c.components[1] {
+                    for &b in &c.components[2] {
+                        if ctx.contains(g, m, b) {
+                            hit += 1;
+                        }
+                    }
+                }
+            }
+            hit as f64 / vol
+        })
+        .collect()
+}
 
-    fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+/// The bitset kernel: build the per-(g, m) row table once, then count
+/// every cluster with word-AND + popcount. Returns `None` when the table
+/// would exceed `max_bytes` (the caller falls back to
+/// [`densities_scalar`]). Exact — equal to the scalar oracle bit for
+/// bit.
+pub fn densities_bitset(
+    ctx: &TriContext,
+    clusters: &[Cluster],
+    max_bytes: usize,
+) -> Option<Vec<f64>> {
+    let rows = BitRows::build(ctx, max_bytes)?;
+    let words = rows.words();
+    let mut mask: Vec<u64> = Vec::new();
+    Some(
         clusters
             .iter()
             .map(|c| {
@@ -22,19 +78,36 @@ impl DensityEngine for ExactEngine {
                 if vol == 0.0 {
                     return 0.0;
                 }
+                bit_mask(&c.components[2], words, &mut mask);
                 let mut hit = 0u64;
                 for &g in &c.components[0] {
                     for &m in &c.components[1] {
-                        for &b in &c.components[2] {
-                            if ctx.contains(g, m, b) {
-                                hit += 1;
+                        if let Some(row) = rows.row(g, m) {
+                            for (w, &bits) in row.iter().enumerate() {
+                                hit += (bits & mask[w]).count_ones() as u64;
                             }
                         }
                     }
                 }
                 hit as f64 / vol
             })
-            .collect()
+            .collect(),
+    )
+}
+
+impl DensityEngine for ExactEngine {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+        let cells: f64 = clusters.iter().map(Cluster::volume).sum();
+        if cells >= BITSET_MIN_CELLS {
+            if let Some(out) = densities_bitset(ctx, clusters, BITSET_MAX_BYTES) {
+                return out;
+            }
+        }
+        densities_scalar(ctx, clusters)
     }
 }
 
@@ -42,7 +115,7 @@ impl DensityEngine for ExactEngine {
 mod tests {
     use super::*;
     use crate::core::pattern::tricluster;
-    use crate::datasets::synthetic::k2;
+    use crate::datasets::synthetic::{k1, k2};
 
     #[test]
     fn dense_block_is_one() {
@@ -65,5 +138,30 @@ mod tests {
         );
         let d = e.densities(&ctx, &[c])[0];
         assert!((d - 54.0 / 216.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bitset_matches_scalar_oracle() {
+        use crate::oac::{mine_online, Constraints};
+        for ctx in [k1(7), k2(5)] {
+            let mut clusters = mine_online(&ctx.inner, &Constraints::none());
+            // a cluster reaching past every extent: rows must treat the
+            // missing (g, m) pairs and high b bits as empty, not panic
+            clusters.push(tricluster(vec![0, 90], vec![1, 80], vec![0, 63, 200]));
+            clusters.push(tricluster(vec![], vec![0], vec![0])); // zero volume
+            let scalar = densities_scalar(&ctx, &clusters);
+            let bits = densities_bitset(&ctx, &clusters, usize::MAX)
+                .expect("small contexts always fit");
+            assert_eq!(scalar, bits);
+        }
+    }
+
+    #[test]
+    fn byte_cap_falls_back_to_scalar() {
+        let ctx = k2(3);
+        let c = tricluster(vec![0, 1, 2], vec![0, 1, 2], vec![0, 1, 2]);
+        assert!(densities_bitset(&ctx, &[c.clone()], 8).is_none());
+        // the engine still answers (scalar fallback)
+        assert_eq!(ExactEngine.densities(&ctx, &[c]), vec![1.0]);
     }
 }

@@ -5,7 +5,10 @@
 //! problems of the method (§7). This module provides three engines with
 //! one interface and an ablation bench comparing them (A2):
 //!
-//! * [`ExactEngine`]   — hash-membership counting, `O(volume)`/cluster;
+//! * [`ExactEngine`]   — exact counting: per-(g, m) `u64` bitset rows +
+//!   popcount (64 cells per word-AND, built once per call) with the
+//!   scalar hash-membership probe (`O(volume)`/cluster) as oracle and
+//!   fallback;
 //! * [`XlaEngine`]     — the AOT JAX/Pallas kernel: dense 64³ tiles ×
 //!                       batched cluster masks on the MXU (via PJRT);
 //! * [`MonteCarloEngine`] — unbiased sampling, `O(samples)`/cluster,
@@ -16,9 +19,9 @@ pub mod monte_carlo;
 pub mod tiling;
 pub mod xla_engine;
 
-pub use exact::ExactEngine;
+pub use exact::{densities_bitset, densities_scalar, ExactEngine};
 pub use monte_carlo::MonteCarloEngine;
-pub use tiling::DenseTiles;
+pub use tiling::{bit_mask, BitRows, DenseTiles};
 pub use xla_engine::XlaEngine;
 
 use crate::core::context::TriContext;

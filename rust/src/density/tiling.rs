@@ -62,6 +62,85 @@ impl DenseTiles {
     }
 }
 
+/// Per-(g, m) bitset rows over the third modality: row `(g, m)` holds
+/// one bit per `b`, packed into `u64` words — the exact engine's
+/// vectorised membership table. Where [`DenseTiles`] is the f32 HBM→VMEM
+/// schedule of the compiled kernel, `BitRows` is its host-side integer
+/// twin: a cluster's density numerator becomes
+/// `popcount(row[g][m] & modus_mask)` summed over the (g, m) grid — 64
+/// membership probes per word-AND instead of one hash probe per cell.
+pub struct BitRows {
+    /// `u64` words per row (= ⌈|B| / 64⌉).
+    words: usize,
+    /// Row-major `(g · m_extent + m) · words` table.
+    rows: Vec<u64>,
+    /// Modality extents the table was built for.
+    extent: (usize, usize, usize),
+}
+
+impl BitRows {
+    /// Build the row table for a context, or `None` when it would exceed
+    /// `max_bytes` (the caller falls back to scalar counting). Extents
+    /// are the interner sizes widened by the actual triples, exactly
+    /// like [`DenseTiles::build`].
+    pub fn build(ctx: &TriContext, max_bytes: usize) -> Option<Self> {
+        let (mut g, mut m, mut b) = ctx.sizes();
+        for tr in ctx.triples() {
+            g = g.max(tr.get(0) as usize + 1);
+            m = m.max(tr.get(1) as usize + 1);
+            b = b.max(tr.get(2) as usize + 1);
+        }
+        let words = b.div_ceil(64).max(1);
+        let total = g.checked_mul(m)?.checked_mul(words)?;
+        if total == 0 || total.checked_mul(8)? > max_bytes {
+            return None;
+        }
+        let mut rows = vec![0u64; total];
+        for tr in ctx.triples() {
+            let (gg, mm, bb) =
+                (tr.get(0) as usize, tr.get(1) as usize, tr.get(2) as usize);
+            rows[(gg * m + mm) * words + bb / 64] |= 1u64 << (bb % 64);
+        }
+        Some(Self { words, rows, extent: (g, m, b) })
+    }
+
+    /// Words per row.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Bytes held by the row table.
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * 8
+    }
+
+    /// The bit row of `(g, m)`, or `None` when either id lies outside
+    /// the built extents (no triple there — zero hits by definition).
+    #[inline]
+    pub fn row(&self, g: u32, m: u32) -> Option<&[u64]> {
+        let (ge, me, _) = self.extent;
+        let (g, m) = (g as usize, m as usize);
+        if g >= ge || m >= me {
+            return None;
+        }
+        let at = (g * me + m) * self.words;
+        Some(&self.rows[at..at + self.words])
+    }
+}
+
+/// Slice a sorted id set into a `u64` bit mask over `[0, words·64)`
+/// (ids past the word window are dropped — they cannot hit any row).
+pub fn bit_mask(ids: &[u32], words: usize, out: &mut Vec<u64>) {
+    out.clear();
+    out.resize(words, 0);
+    for &id in ids {
+        let w = id as usize / 64;
+        if w < words {
+            out[w] |= 1u64 << (id % 64);
+        }
+    }
+}
+
 /// Slice a global id set into a per-tile 0/1 mask of width `t` for tile
 /// index `ti` (ids in `[ti·t, (ti+1)·t)`).
 pub fn tile_mask(ids: &[u32], ti: usize, t: usize, out: &mut [f32]) {
@@ -105,6 +184,45 @@ mod tests {
         let t = tiles.tile(1, 1, 1);
         assert_eq!(t[(1 * 4 + 2) * 4 + 3], 1.0);
         assert_eq!(t.iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn bit_rows_membership() {
+        let mut ctx = TriContext::new();
+        ctx.add(5, 6, 7);
+        ctx.add(5, 6, 70); // second word of the same row
+        ctx.add(0, 0, 0);
+        let rows = BitRows::build(&ctx, usize::MAX).expect("fits");
+        assert_eq!(rows.words(), 2); // b extent 71 → 2 words
+        let r = rows.row(5, 6).expect("in extent");
+        assert_eq!(r[0], 1u64 << 7);
+        assert_eq!(r[1], 1u64 << (70 - 64));
+        assert_eq!(rows.row(0, 0).unwrap()[0], 1);
+        // out-of-extent ids resolve to no row, not a panic
+        assert!(rows.row(99, 0).is_none());
+        assert!(rows.row(0, 99).is_none());
+    }
+
+    #[test]
+    fn bit_rows_respect_byte_cap() {
+        let mut ctx = TriContext::new();
+        ctx.add(1000, 1000, 0);
+        // 1001×1001 rows × 1 word × 8 B ≈ 8 MB > 1 KB cap
+        assert!(BitRows::build(&ctx, 1024).is_none());
+        assert!(BitRows::build(&ctx, usize::MAX).is_some());
+    }
+
+    #[test]
+    fn bit_mask_windows() {
+        let ids = vec![0u32, 3, 64, 70, 200];
+        let mut m = Vec::new();
+        bit_mask(&ids, 2, &mut m);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], (1u64 << 0) | (1u64 << 3));
+        assert_eq!(m[1], (1u64 << 0) | (1u64 << 6));
+        // id 200 is outside the window: dropped
+        bit_mask(&[1], 1, &mut m);
+        assert_eq!(m, vec![2u64]);
     }
 
     #[test]

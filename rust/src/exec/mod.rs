@@ -56,7 +56,8 @@ pub use pooled::Pooled;
 pub use sequential::Sequential;
 pub use spark_sim::SparkSim;
 pub use stages::{
-    run_pipeline, stage1_cumuli, stage2_assembly, stage3_dedup_density, Components,
+    run_pipeline, run_pipeline_ingest, stage1_cumuli, stage1_cumuli_ingest,
+    stage2_assembly, stage3_dedup_density, Components,
 };
 
 use anyhow::Result;
@@ -119,6 +120,13 @@ pub struct ExecTuning {
     pub churn_prob: f64,
     /// ClusterSim: downtime of a killed node before restart, ms.
     pub churn_restart_ms: f64,
+    /// In-process backends (`seq`, `pool`): run stage 1 via the
+    /// allocation-free merge-based ingest kernel
+    /// ([`stages::stage1_cumuli_ingest`]) instead of a generic
+    /// map→shuffle→reduce round. Output-equivalent (property-tested);
+    /// the simulated engines keep their shuffle — modelling it is their
+    /// job. `seq` uses one worker, `pool` uses `workers`.
+    pub parallel_ingest: bool,
 }
 
 impl Default for ExecTuning {
@@ -142,6 +150,7 @@ impl Default for ExecTuning {
             shuffle_ms_per_mib: 0.0,
             churn_prob: 0.0,
             churn_restart_ms: 50.0,
+            parallel_ingest: true,
         }
     }
 }
@@ -205,7 +214,14 @@ pub fn run_named(
 ) -> Result<PipelineRun> {
     let timer = Timer::start();
     let (backend, clusters) = match name {
+        "seq" if tune.parallel_ingest => {
+            ("seq", run_pipeline_ingest(&Sequential, ctx, theta, 1)?)
+        }
         "seq" => ("seq", run_pipeline(&Sequential, ctx, theta, false)?),
+        "pool" if tune.parallel_ingest => (
+            "pool",
+            run_pipeline_ingest(&Pooled::new(tune.workers), ctx, theta, tune.workers)?,
+        ),
         "pool" => ("pool", run_pipeline(&Pooled::new(tune.workers), ctx, theta, false)?),
         "hadoop" => {
             let backend = HadoopSim::new(

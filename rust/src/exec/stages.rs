@@ -101,6 +101,25 @@ pub fn stage1_cumuli<B: Backend>(
     backend.map_reduce("s1", tuples, s1_map, combine, s1_reduce)
 }
 
+/// Stage 1 computed by the shared-memory ingest kernel instead of a
+/// map→shuffle→reduce round: [`crate::oac::primes::PrimeStore::par_add_batch`]
+/// (merge-based parallel ingest over `util::pool`) builds the cumulus
+/// dictionaries with zero per-tuple allocation, then exports them as the
+/// exact ⟨subrelation, cumulus⟩ pairs [`stage1_cumuli`] produces on any
+/// backend, canonically ordered by key (unit-tested equal). This is the
+/// §Perf path for the in-process backends (`seq`, `pool`) — the
+/// simulated engines (`hadoop`, `spark`, `cluster`) keep their shuffle,
+/// because modelling that shuffle is what they are for.
+pub fn stage1_cumuli_ingest(
+    tuples: &[NTuple],
+    arity: usize,
+    workers: usize,
+) -> Vec<(SubRelation, Vec<u32>)> {
+    let mut store = crate::oac::primes::PrimeStore::new(arity);
+    store.par_add_batch(tuples, workers);
+    store.cumuli()
+}
+
 /// Stage 2 on any backend: cumuli → one ⟨components, generating tuple⟩
 /// per generating tuple.
 pub fn stage2_assembly<B: Backend>(
@@ -126,7 +145,9 @@ pub fn stage3_dedup_density<B: Backend>(
         move |comps: &Components, mut gens: Vec<NTuple>| {
             gens.sort_unstable();
             gens.dedup();
-            let mut c = Cluster::new(comps.clone());
+            // stage-1 cumuli arrive sorted + deduped (s1_reduce / the
+            // ingest kernel), so the components need no re-sort
+            let mut c = Cluster::from_sorted(comps.clone());
             c.support = gens.len();
             let vol = c.volume();
             if vol > 0.0 && c.support as f64 / vol >= theta {
@@ -148,6 +169,23 @@ pub fn run_pipeline<B: Backend>(
     combiner: bool,
 ) -> Result<Vec<Cluster>> {
     let cumuli = stage1_cumuli(backend, ctx.tuples().to_vec(), combiner)?;
+    let assembled = stage2_assembly(backend, cumuli)?;
+    let mut clusters = stage3_dedup_density(backend, assembled, theta)?;
+    crate::core::pattern::sort_clusters(&mut clusters);
+    Ok(clusters)
+}
+
+/// [`run_pipeline`] with stage 1 on the parallel ingest kernel
+/// ([`stage1_cumuli_ingest`], `workers` threads) and stages 2–3 on the
+/// given backend — the [`crate::exec::ExecTuning::parallel_ingest`]
+/// fast path for the in-process backends.
+pub fn run_pipeline_ingest<B: Backend>(
+    backend: &B,
+    ctx: &PolyContext,
+    theta: f64,
+    workers: usize,
+) -> Result<Vec<Cluster>> {
+    let cumuli = stage1_cumuli_ingest(ctx.tuples(), ctx.arity(), workers);
     let assembled = stage2_assembly(backend, cumuli)?;
     let mut clusters = stage3_dedup_density(backend, assembled, theta)?;
     crate::core::pattern::sort_clusters(&mut clusters);
@@ -216,6 +254,38 @@ mod tests {
         // θ = 1.1 rejects everything
         let none = stage3_dedup_density(&Sequential, assembled, 1.1).unwrap();
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn ingest_kernel_stage1_equals_backend_stage1() {
+        let mut ctx = crate::core::context::PolyContext::new(3);
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..600 {
+            let t =
+                [rng.below(7) as u32, rng.below(7) as u32, rng.below(7) as u32];
+            ctx.add_ids(&t);
+        }
+        let mut reference =
+            stage1_cumuli(&Sequential, ctx.tuples().to_vec(), false).unwrap();
+        reference.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        for workers in [1, 4] {
+            let fast = stage1_cumuli_ingest(ctx.tuples(), 3, workers);
+            assert_eq!(fast, reference, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn ingest_pipeline_equals_map_reduce_pipeline() {
+        let ctx = crate::datasets::synthetic::k1(5).inner;
+        for theta in [0.0, 0.9] {
+            let mr = run_pipeline(&Sequential, &ctx, theta, false).unwrap();
+            let fast = run_pipeline_ingest(&Sequential, &ctx, theta, 4).unwrap();
+            assert_eq!(mr.len(), fast.len(), "theta={theta}");
+            for (a, b) in mr.iter().zip(&fast) {
+                assert_eq!(a.components, b.components);
+                assert_eq!(a.support, b.support);
+            }
+        }
     }
 
     #[test]

@@ -212,6 +212,13 @@ fn mr(args: &Args) -> Result<()> {
         let tune = tricluster::exec::ExecTuning {
             workers: args.parse_or("workers", tricluster::util::pool::default_workers()),
             tasks: (nodes * 4).max(8),
+            // --ingest kernel|mr: stage 1 via the merge-based parallel
+            // ingest kernel (seq/pool only) or the generic M/R round
+            parallel_ingest: match args.get_or("ingest", "kernel") {
+                "kernel" => true,
+                "mr" => false,
+                other => anyhow::bail!("--ingest {other:?} (expected kernel|mr)"),
+            },
             ..tricluster::exec::ExecTuning::default()
         };
         let run = tricluster::exec::run_named(

@@ -2,8 +2,9 @@
 //! §2): precompute all prime sets, generate one tricluster per triple,
 //! hash-dedup, optionally check an exact minimal-density threshold.
 //!
-//! Phase 1 is the backend-generic stage 1 of [`crate::exec::stages`]
-//! (Algs. 2/3) on the [`Sequential`] backend. Phase 2 applies the
+//! Phase 1 is the stage-1 ingest kernel of [`crate::exec::stages`]
+//! (Algs. 2/3 by shared-memory cumulus ingest — output-identical to the
+//! backend-generic `stage1_cumuli`, unit-tested there). Phase 2 applies the
 //! stage-2 assembly kernel per generating triple — looking its N cumuli
 //! up instead of shuffling them, so the wall-clock budget can interrupt
 //! between triples — fused with the dedup and the exact density check
@@ -21,7 +22,7 @@ use std::time::Duration;
 use crate::core::context::TriContext;
 use crate::core::pattern::{combine_set_fingerprints, Cluster};
 use crate::core::tuple::SubRelation;
-use crate::exec::{stage1_cumuli, Sequential};
+use crate::exec::stage1_cumuli_ingest;
 use crate::util::hash::{set_fingerprint, FxHashMap, FxHashSet};
 use crate::util::stats::Timer;
 
@@ -74,8 +75,9 @@ pub fn mine_basic(
     let timer = Timer::start();
     // Phase 1 = stage 1 (Algs. 2/3): cumuli per subrelation key, one
     // linear pass (no budget risk — the expensive part comes next).
-    let cumuli = stage1_cumuli(&Sequential, ctx.triples().to_vec(), false)
-        .expect("the sequential backend is infallible");
+    // Sequential kernel: the basic algorithm is the paper's single-thread
+    // baseline, so no parallel workers here.
+    let cumuli = stage1_cumuli_ingest(ctx.triples(), 3, 1);
     if timer.elapsed() > budget {
         return BasicOutcome::TimedOut { processed_triples: 0, elapsed_ms: timer.elapsed_ms() };
     }
@@ -108,7 +110,8 @@ pub fn mine_basic(
         }
         let comps: Vec<Vec<u32>> =
             comp_at.iter().map(|&ci| cumuli[ci].1.clone()).collect();
-        let mut c = Cluster::new(comps);
+        // stage-1 cumuli are sorted + deduped: skip the re-sort
+        let mut c = Cluster::from_sorted(comps);
         if min_density > 0.0 {
             // the expensive exact check — the basic algorithm's downfall
             if exact_density(ctx, &c) < min_density {

@@ -9,14 +9,15 @@
 
 use crate::core::pattern::Cluster;
 use crate::core::tuple::NTuple;
-use crate::oac::primes::{PrimeStore, SetArena, SetId};
+use crate::oac::primes::{PrimeStore, SetArena, SetIds};
 
 /// A generated (not yet materialised) cluster: the N set ids plus the
-/// generating tuple.
-#[derive(Debug, Clone)]
+/// generating tuple. Both halves are inline/`Copy` — the per-tuple hot
+/// path records a generated cluster without touching the heap.
+#[derive(Debug, Clone, Copy)]
 pub struct Generated {
     /// The N cumulus-set ids, one per dropped modality.
-    pub set_ids: Vec<SetId>,
+    pub set_ids: SetIds,
     /// The tuple that generated this cluster.
     pub tuple: NTuple,
 }
@@ -41,6 +42,20 @@ impl OnlineMiner {
             let set_ids = self.primes.add(t);
             self.generated.push(Generated { set_ids, tuple: *t });
         }
+    }
+
+    /// [`Self::add_batch`] on `workers` threads via the merge-based
+    /// [`PrimeStore::par_add_batch`]; the resulting state — set ids,
+    /// dictionaries, arena contents, generated order — is bit-for-bit
+    /// identical to the sequential ingest for any worker count.
+    pub fn par_add_batch(&mut self, batch: &[NTuple], workers: usize) {
+        let ids = self.primes.par_add_batch(batch, workers);
+        self.generated.reserve(batch.len());
+        self.generated.extend(
+            ids.into_iter()
+                .zip(batch)
+                .map(|(set_ids, &tuple)| Generated { set_ids, tuple }),
+        );
     }
 
     /// Generated clusters so far (= tuples processed).
@@ -75,7 +90,8 @@ impl OnlineMiner {
                     .iter()
                     .map(|&id| self.primes.arena.materialize(id))
                     .collect();
-                (Cluster::new(comps), g.tuple)
+                // arena materialisation is already sorted + deduped
+                (Cluster::from_sorted(comps), g.tuple)
             })
             .collect()
     }
@@ -89,9 +105,13 @@ impl OnlineMiner {
     /// optimisation; equivalence with `materialize_all` + post-processing
     /// is covered by tests and the M/R cross-checks.
     pub fn dedup_and_filter(
-        &self,
+        &mut self,
         constraints: &crate::oac::post::Constraints,
     ) -> Vec<Cluster> {
+        // seal first: the dedup touches every shared set twice
+        // (fingerprint pass + representative materialisation), and every
+        // later call over unchanged state becomes pure memcpys
+        self.primes.arena.ensure_sorted_all();
         dedup_generated(&self.primes.arena, &self.generated, constraints)
     }
 }
@@ -117,7 +137,7 @@ pub fn dedup_generated(
     // per-triple loop allocates nothing per lookup)
     let mut scratch: Vec<u32> = Vec::new();
     // group index → (representative set ids, generating tuples)
-    let mut groups: Vec<(Vec<u32>, Vec<NTuple>)> = Vec::new();
+    let mut groups: Vec<(crate::oac::primes::SetIds, Vec<NTuple>)> = Vec::new();
     for g in generated {
         let fp = combine_set_fingerprints(
             g.set_ids.len(),
@@ -135,7 +155,7 @@ pub fn dedup_generated(
             Some(&gi) => groups[gi].1.push(g.tuple),
             None => {
                 by_fp.insert(fp, groups.len());
-                groups.push((g.set_ids.clone(), vec![g.tuple]));
+                groups.push((g.set_ids, vec![g.tuple]));
             }
         }
     }
@@ -146,7 +166,7 @@ pub fn dedup_generated(
             gens.dedup();
             let comps: Vec<Vec<u32>> =
                 set_ids.iter().map(|&id| arena.materialize(id)).collect();
-            let mut c = Cluster::new(comps);
+            let mut c = Cluster::from_sorted(comps);
             c.support = gens.len();
             constraints.satisfied_by(&c).then_some(c)
         })
@@ -239,6 +259,37 @@ mod tests {
                 assert_eq!(a.components, b.components);
                 assert_eq!(a.support, b.support);
             }
+        }
+    }
+
+    #[test]
+    fn parallel_ingest_state_equals_sequential() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        let data: Vec<NTuple> = (0..6000)
+            .map(|_| {
+                NTuple::triple(
+                    rng.below(12) as u32,
+                    rng.below(12) as u32,
+                    rng.below(12) as u32,
+                )
+            })
+            .collect();
+        let mut seq = OnlineMiner::new(3);
+        seq.add_batch(&data);
+        let mut par = OnlineMiner::new(3);
+        par.par_add_batch(&data, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.generated().iter().zip(par.generated()) {
+            assert_eq!(a.set_ids, b.set_ids);
+            assert_eq!(a.tuple, b.tuple);
+        }
+        let cons = crate::oac::post::Constraints::none();
+        let (sa, pa) = (seq.dedup_and_filter(&cons), par.dedup_and_filter(&cons));
+        assert_eq!(sa.len(), pa.len());
+        for (a, b) in sa.iter().zip(&pa) {
+            assert_eq!(a.components, b.components);
+            assert_eq!(a.support, b.support);
         }
     }
 

@@ -8,34 +8,191 @@
 //!
 //! Here "pointer" = arena index (`SetId`); the arena owns the sets and
 //! materialisation resolves ids → sorted contents once, at the end.
+//!
+//! §Perf (the Layer-3 hot path — see docs/ARCHITECTURE.md):
+//!
+//! * [`SetIds`] stores the N per-tuple pointers inline (`[SetId; MAX_ARITY]`)
+//!   — `PrimeStore::add` allocates NOTHING per tuple;
+//! * all N packed subrelation keys of a tuple are built in one
+//!   prefix/suffix pass ([`pack_keys_into`]) instead of re-packing the
+//!   element buffer once per modality;
+//! * [`SetArena`] is a flat paged arena (one shared `u32` pool, fixed-size
+//!   pages chained per set, freed pages recycled) with a per-set cached
+//!   sorted/deduped view: `ensure_sorted_all` folds the unsorted page tail
+//!   into the cache (a sorted merge, not a full re-sort), after which
+//!   `materialize`/`materialize_into` are a memcpy — the dedup, the serve
+//!   compactor, and the query path all re-materialise the same cumuli
+//!   repeatedly and hit this cache;
+//! * [`PrimeStore::par_add_batch`] ingests a batch on `util::pool`
+//!   workers into thread-local stores and merges them deterministically
+//!   (set-id remap in first-touch order), bit-for-bit equal to
+//!   sequential ingest — the paper's "triples are processed
+//!   independently" claim applied to the single-node engine.
 
 use crate::core::tuple::{NTuple, SubRelation, MAX_ARITY};
 use crate::util::hash::FxHashMap;
+use crate::util::pool;
 
 /// Index of a prime set / cumulus in the arena.
 pub type SetId = u32;
 
+/// The N cumulus-set ids of one generated cluster, stored inline —
+/// no per-tuple heap allocation on the ingest hot path (arity ≤
+/// [`MAX_ARITY`] by construction).
+#[derive(Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct SetIds {
+    ids: [SetId; MAX_ARITY],
+    len: u8,
+}
+
+impl SetIds {
+    /// Append the next modality's set id (panics past [`MAX_ARITY`]).
+    #[inline]
+    pub fn push(&mut self, id: SetId) {
+        self.ids[self.len as usize] = id;
+        self.len += 1;
+    }
+
+    /// The ids as a slice, one per modality.
+    #[inline]
+    pub fn as_slice(&self) -> &[SetId] {
+        &self.ids[..self.len as usize]
+    }
+
+    /// Number of modalities.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// True before the first `push`.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Iterator over the ids.
+    pub fn iter(&self) -> std::slice::Iter<'_, SetId> {
+        self.as_slice().iter()
+    }
+
+    /// Map every id through a local→global remap table (the parallel
+    /// ingest merge).
+    #[inline]
+    fn remapped(&self, remap: &[SetId]) -> SetIds {
+        let mut out = SetIds::default();
+        for &id in self.as_slice() {
+            out.push(remap[id as usize]);
+        }
+        out
+    }
+}
+
+impl std::ops::Index<usize> for SetIds {
+    type Output = SetId;
+
+    fn index(&self, i: usize) -> &SetId {
+        &self.as_slice()[i]
+    }
+}
+
+impl<'a> IntoIterator for &'a SetIds {
+    type Item = &'a SetId;
+    type IntoIter = std::slice::Iter<'a, SetId>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl std::fmt::Debug for SetIds {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SetIds{:?}", self.as_slice())
+    }
+}
+
+/// Elements per arena page (`u32` slots).
+const PAGE: usize = 8;
+/// Null page index.
+const NO_PAGE: u32 = u32::MAX;
+
+/// Per-set bookkeeping inside the arena.
+#[derive(Debug, Clone)]
+struct SetMeta {
+    /// First page of the unsorted append tail (`NO_PAGE` when empty).
+    head: u32,
+    /// Last page of the tail (undefined when `head == NO_PAGE`).
+    tail: u32,
+    /// Elements in the tail — appended since the last `ensure_sorted`.
+    pending: u32,
+    /// Cached sorted + deduplicated view of everything sealed so far.
+    sorted: Vec<u32>,
+}
+
+impl SetMeta {
+    fn new() -> Self {
+        Self { head: NO_PAGE, tail: NO_PAGE, pending: 0, sorted: Vec::new() }
+    }
+}
+
 /// Arena of grow-only entity-id sets, addressed by `SetId`.
 ///
 /// Appends may contain duplicates when the input stream replays tuples
-/// (M/R task retries); `materialize` sorts + dedups, preserving set
-/// semantics without paying a per-insert hash probe on the hot path.
+/// (M/R task retries); materialisation dedups, preserving set semantics
+/// without paying a per-insert hash probe on the hot path.
+///
+/// Storage is a flat paged pool: every set's appends land in fixed-size
+/// pages carved from ONE shared `u32` vector (no per-set `Vec` growth on
+/// the hot path), chained per set. `ensure_sorted` folds a set's page
+/// tail into its cached sorted view and recycles the pages through a
+/// free list, so a long-lived arena (the serve compactor) converges to
+/// compact sorted storage between compactions.
 #[derive(Debug, Default, Clone)]
 pub struct SetArena {
-    sets: Vec<Vec<u32>>,
+    /// The page pool; page `p` occupies `pool[p*PAGE .. (p+1)*PAGE]`.
+    pool: Vec<u32>,
+    /// Per-page link to the next page of the same set (`NO_PAGE` at tail).
+    next: Vec<u32>,
+    /// Recycled pages, reused before the pool grows.
+    free: Vec<u32>,
+    sets: Vec<SetMeta>,
 }
 
 impl SetArena {
     /// Allocate a fresh empty set, returning its id.
     pub fn alloc(&mut self) -> SetId {
-        self.sets.push(Vec::new());
+        self.sets.push(SetMeta::new());
         (self.sets.len() - 1) as SetId
+    }
+
+    fn alloc_page(&mut self) -> u32 {
+        if let Some(p) = self.free.pop() {
+            self.next[p as usize] = NO_PAGE;
+            return p;
+        }
+        let p = (self.pool.len() / PAGE) as u32;
+        self.pool.resize(self.pool.len() + PAGE, 0);
+        self.next.push(NO_PAGE);
+        p
     }
 
     #[inline]
     /// Append `value` to set `id` (duplicates dedup on materialise).
     pub fn push(&mut self, id: SetId, value: u32) {
-        self.sets[id as usize].push(value);
+        let slot = self.sets[id as usize].pending as usize % PAGE;
+        if slot == 0 {
+            let page = self.alloc_page();
+            let m = &mut self.sets[id as usize];
+            if m.head == NO_PAGE {
+                m.head = page;
+            } else {
+                self.next[m.tail as usize] = page;
+            }
+            m.tail = page;
+        }
+        let m = &mut self.sets[id as usize];
+        self.pool[m.tail as usize * PAGE + slot] = value;
+        m.pending += 1;
     }
 
     /// Number of allocated sets.
@@ -48,33 +205,168 @@ impl SetArena {
         self.sets.is_empty()
     }
 
-    /// Raw (possibly duplicated, unsorted) contents.
-    pub fn raw(&self, id: SetId) -> &[u32] {
-        &self.sets[id as usize]
+    /// Upper bound on set `id`'s cardinality (sealed uniques + possibly
+    /// duplicated tail appends) — the capacity hint for materialisation.
+    pub fn set_len_bound(&self, id: SetId) -> usize {
+        let m = &self.sets[id as usize];
+        m.sorted.len() + m.pending as usize
+    }
+
+    /// Copy the unsorted page tail of `m` into `out`, in append order.
+    fn gather_pending(&self, m: &SetMeta, out: &mut Vec<u32>) {
+        let mut page = m.head;
+        let mut remaining = m.pending as usize;
+        while remaining > 0 {
+            let take = remaining.min(PAGE);
+            let base = page as usize * PAGE;
+            out.extend_from_slice(&self.pool[base..base + take]);
+            remaining -= take;
+            page = self.next[page as usize];
+        }
     }
 
     /// Sorted, deduplicated contents.
     pub fn materialize(&self, id: SetId) -> Vec<u32> {
-        let mut v = Vec::new();
+        let mut v = Vec::with_capacity(self.set_len_bound(id));
         self.materialize_into(id, &mut v);
         v
     }
 
-    /// [`Self::materialize`] into a caller-owned buffer (clear + fill +
-    /// sort + dedup). Hot per-triple loops (the online dedup, the basic
-    /// algorithm) reuse one buffer across lookups instead of allocating a
-    /// fresh `Vec` per set.
+    /// [`Self::materialize`] into a caller-owned buffer (clear + fill).
+    /// When the set's sorted cache is current (no appends since the last
+    /// [`Self::ensure_sorted`]) this is a straight memcpy; otherwise the
+    /// tail is gathered and sorted in the buffer. Hot per-triple loops
+    /// (the online dedup, the basic algorithm) reuse one buffer across
+    /// lookups instead of allocating a fresh `Vec` per set.
     pub fn materialize_into(&self, id: SetId, out: &mut Vec<u32>) {
         out.clear();
-        out.extend_from_slice(&self.sets[id as usize]);
+        let m = &self.sets[id as usize];
+        out.reserve(m.sorted.len() + m.pending as usize);
+        out.extend_from_slice(&m.sorted);
+        if m.pending == 0 {
+            return; // §Perf fast path: the cached sorted view is current
+        }
+        self.gather_pending(m, out);
         out.sort_unstable();
         out.dedup();
     }
+
+    /// Fold set `id`'s unsorted tail into its cached sorted view (a
+    /// sorted merge of cache + sorted tail, NOT a full re-sort) and
+    /// recycle the tail pages. After this, materialisation of `id` is a
+    /// memcpy until the next `push`.
+    pub fn ensure_sorted(&mut self, id: SetId) {
+        if self.sets[id as usize].pending == 0 {
+            return;
+        }
+        let mut tail = Vec::with_capacity(self.sets[id as usize].pending as usize);
+        self.gather_pending(&self.sets[id as usize], &mut tail);
+        tail.sort_unstable();
+        tail.dedup();
+        let mut page = {
+            let m = &mut self.sets[id as usize];
+            if m.sorted.is_empty() {
+                m.sorted = tail;
+            } else {
+                m.sorted = merge_sorted(&m.sorted, &tail);
+            }
+            let head = m.head;
+            m.head = NO_PAGE;
+            m.tail = NO_PAGE;
+            m.pending = 0;
+            head
+        };
+        while page != NO_PAGE {
+            let nxt = self.next[page as usize];
+            self.free.push(page);
+            page = nxt;
+        }
+    }
+
+    /// [`Self::ensure_sorted`] for every set — the seal step dedup /
+    /// compaction runs once per call site, so the double materialisation
+    /// inside the dedup (fingerprint pass + representative pass) and
+    /// every later query-path materialisation are memcpys.
+    pub fn ensure_sorted_all(&mut self) {
+        for id in 0..self.sets.len() {
+            self.ensure_sorted(id as SetId);
+        }
+    }
+
+    /// Append a whole slice to set `id`, copying page-sized runs instead
+    /// of one element at a time — the parallel-ingest merge's hot loop
+    /// (the merge is the sequential part of `par_add_batch`, so its
+    /// per-element overhead directly caps the parallel speedup).
+    fn push_slice(&mut self, id: SetId, mut vals: &[u32]) {
+        while !vals.is_empty() {
+            let slot = self.sets[id as usize].pending as usize % PAGE;
+            if slot == 0 {
+                let page = self.alloc_page();
+                let m = &mut self.sets[id as usize];
+                if m.head == NO_PAGE {
+                    m.head = page;
+                } else {
+                    self.next[m.tail as usize] = page;
+                }
+                m.tail = page;
+            }
+            let take = vals.len().min(PAGE - slot);
+            let m = &mut self.sets[id as usize];
+            let base = m.tail as usize * PAGE + slot;
+            self.pool[base..base + take].copy_from_slice(&vals[..take]);
+            m.pending += take as u32;
+            vals = &vals[take..];
+        }
+    }
+
+    /// Append the (unsealed) raw contents of `src_id` in `src` onto
+    /// `dst`, preserving append order — the parallel-ingest merge.
+    pub(crate) fn extend_raw_from(&mut self, dst: SetId, src: &SetArena, src_id: SetId) {
+        let m = &src.sets[src_id as usize];
+        debug_assert!(m.sorted.is_empty(), "merge sources are never sealed");
+        let mut page = m.head;
+        let mut remaining = m.pending as usize;
+        while remaining > 0 {
+            let take = remaining.min(PAGE);
+            let base = page as usize * PAGE;
+            self.push_slice(dst, &src.pool[base..base + take]);
+            remaining -= take;
+            page = src.next[page as usize];
+        }
+    }
+}
+
+/// Merge two sorted, deduplicated slices into one sorted, deduplicated
+/// vector.
+fn merge_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
 }
 
 /// Pack up to 4 entity ids into a `u128` key, 32 bits each, low-to-high.
-/// The ONE packing rule shared by the tuple-side fast path ([`pack_key`])
-/// and the subrelation-side lookup ([`PrimeStore::get`]).
+/// The ONE packing rule shared by the tuple-side fast path
+/// ([`pack_keys_into`]) and the subrelation-side lookup
+/// ([`PrimeStore::get`]).
 #[inline]
 fn pack_elems(elems: &[u32]) -> u128 {
     debug_assert!(elems.len() <= 4, "packed keys hold ≤ 4 elements");
@@ -87,21 +379,37 @@ fn pack_elems(elems: &[u32]) -> u128 {
     key
 }
 
-/// Packed key of the subrelation of `t` with position `k` dropped —
-/// valid for original arity ≤ 5 (4 × 32-bit elements); the dict index
-/// already encodes the dropped position, so only the elements matter.
+/// Pack ALL N k-dropped subrelation keys of `t` in one prefix/suffix
+/// pass — §Perf: the old per-modality repacking rebuilt an element
+/// buffer per k (`O(N²)` writes per tuple); this is `O(N)`. Valid for
+/// original arity ≤ 5 (≤ 4 packed 32-bit elements per key); key `k`
+/// equals `pack_elems` of the tuple with position `k` dropped.
 #[inline]
-fn pack_key(t: &NTuple, k: usize) -> u128 {
-    let mut buf = [0u32; MAX_ARITY];
-    let mut j = 0;
-    for (i, &e) in t.as_slice().iter().enumerate() {
-        if i != k {
-            buf[j] = e;
-            j += 1;
+fn pack_keys_into(t: &NTuple, keys: &mut [u128; MAX_ARITY]) {
+    let s = t.as_slice();
+    let n = s.len();
+    debug_assert!(n <= 5, "packed keys hold ≤ 4 elements");
+    // prefix: elements 0..k stay at slots 0..k
+    let mut prefix: u128 = 0;
+    for k in 0..n {
+        keys[k] = prefix;
+        if k + 1 < n {
+            prefix |= (s[k] as u128) << (32 * k);
         }
     }
-    pack_elems(&buf[..j])
+    // suffix: elements k+1..n shift down one slot to k..n-1
+    let mut suffix: u128 = 0;
+    for k in (0..n).rev() {
+        keys[k] |= suffix;
+        if k > 0 {
+            suffix |= (s[k] as u128) << (32 * (k - 1));
+        }
+    }
 }
+
+/// Tuples per parallel-ingest chunk below which spawning workers costs
+/// more than it saves.
+const PAR_MIN_CHUNK: usize = 2048;
 
 /// The cumulus dictionaries for an N-ary context: one map per modality,
 /// keyed by the subrelation with that modality dropped.
@@ -148,25 +456,13 @@ impl PrimeStore {
     /// Process one tuple (Alg. 1 lines 2–4 generalised): for each
     /// modality k, append `e_k` to the cumulus of the k-dropped
     /// subrelation. Returns the N set ids — the "pointers" stored in the
-    /// generated cluster.
-    pub fn add(&mut self, t: &NTuple) -> Vec<SetId> {
+    /// generated cluster — inline, with no per-tuple allocation.
+    pub fn add(&mut self, t: &NTuple) -> SetIds {
         debug_assert_eq!(t.arity(), self.arity);
-        let mut ids = Vec::with_capacity(self.arity);
         if !self.packed.is_empty() {
-            for k in 0..self.arity {
-                let key = pack_key(t, k);
-                let id = match self.packed[k].get(&key) {
-                    Some(&id) => id,
-                    None => {
-                        let id = self.arena.alloc();
-                        self.packed[k].insert(key, id);
-                        id
-                    }
-                };
-                self.arena.push(id, t.get(k));
-                ids.push(id);
-            }
+            self.add_fast(t, |_, _| {})
         } else {
+            let mut ids = SetIds::default();
             for k in 0..self.arity {
                 let sub = t.subrelation(k);
                 let id = match self.general[k].get(&sub) {
@@ -180,8 +476,105 @@ impl PrimeStore {
                 self.arena.push(id, t.get(k));
                 ids.push(id);
             }
+            ids
+        }
+    }
+
+    /// The packed-key `add`, reporting each freshly allocated key to
+    /// `on_alloc` — the creation log the parallel-ingest merge replays
+    /// to renumber local ids in deterministic first-touch order. The
+    /// sequential `add` passes a no-op closure (inlined away).
+    #[inline]
+    fn add_fast(&mut self, t: &NTuple, mut on_alloc: impl FnMut(u8, u128)) -> SetIds {
+        let mut keys = [0u128; MAX_ARITY];
+        pack_keys_into(t, &mut keys);
+        let mut ids = SetIds::default();
+        for k in 0..self.arity {
+            let id = match self.packed[k].get(&keys[k]) {
+                Some(&id) => id,
+                None => {
+                    let id = self.arena.alloc();
+                    self.packed[k].insert(keys[k], id);
+                    on_alloc(k as u8, keys[k]);
+                    id
+                }
+            };
+            self.arena.push(id, t.get(k));
+            ids.push(id);
         }
         ids
+    }
+
+    /// [`Self::add`] for a whole batch on `workers` threads, with an
+    /// auto-sized chunk (≥ [`PAR_MIN_CHUNK`], ~4 chunks per worker).
+    ///
+    /// The batch is cut into contiguous chunks ingested into thread-local
+    /// stores, then merged in chunk order: each local store's creation
+    /// log replays against the global dictionaries (first-touch order —
+    /// chunk 0's new keys precede chunk 1's, exactly as a sequential scan
+    /// would allocate them) and local arena contents append in chunk
+    /// order. The result — per-tuple [`SetIds`], dictionaries, arena
+    /// contents — is bit-for-bit identical to calling [`Self::add`] on
+    /// every tuple in order, for ANY worker count and chunk size
+    /// (property-tested in `rust/tests/proptests.rs`).
+    ///
+    /// The merge is cheap when cumuli are shared (distinct keys ≪
+    /// tuples — the paper's dense K1/K2 regime); on near-unique streams
+    /// it degrades toward a second sequential pass, which is why the
+    /// caller-facing knob ([`crate::exec::ExecTuning::parallel_ingest`])
+    /// exists.
+    pub fn par_add_batch(&mut self, batch: &[NTuple], workers: usize) -> Vec<SetIds> {
+        let chunk = batch.len().div_ceil(workers.max(1) * 4).max(PAR_MIN_CHUNK);
+        self.par_add_batch_chunked(batch, workers, chunk)
+    }
+
+    /// [`Self::par_add_batch`] with an explicit chunk size (exposed so
+    /// the equivalence property tests can sweep degenerate chunkings).
+    /// Falls back to sequential `add` when there is nothing to win:
+    /// one worker, a single chunk, or the general (arity > 5) key path.
+    pub fn par_add_batch_chunked(
+        &mut self,
+        batch: &[NTuple],
+        workers: usize,
+        chunk: usize,
+    ) -> Vec<SetIds> {
+        let chunk = chunk.max(1);
+        if self.packed.is_empty() || workers <= 1 || batch.len() <= chunk {
+            return batch.iter().map(|t| self.add(t)).collect();
+        }
+        let arity = self.arity;
+        let chunks: Vec<&[NTuple]> = batch.chunks(chunk).collect();
+        let locals = pool::parallel_map(chunks.len(), workers, 1, |ci| {
+            let mut store = PrimeStore::new(arity);
+            let mut log: Vec<(u8, u128)> = Vec::new();
+            let mut ids = Vec::with_capacity(chunks[ci].len());
+            for t in chunks[ci] {
+                ids.push(store.add_fast(t, |k, key| log.push((k, key))));
+            }
+            (store, log, ids)
+        });
+        // Deterministic merge, chunk-index order (parallel_map returns
+        // results in index order regardless of scheduling).
+        let mut out = Vec::with_capacity(batch.len());
+        for (local, log, ids) in locals {
+            let mut remap: Vec<SetId> = Vec::with_capacity(log.len());
+            for (k, key) in log {
+                let id = match self.packed[k as usize].get(&key) {
+                    Some(&id) => id,
+                    None => {
+                        let id = self.arena.alloc();
+                        self.packed[k as usize].insert(key, id);
+                        id
+                    }
+                };
+                remap.push(id);
+            }
+            for (local_id, &global_id) in remap.iter().enumerate() {
+                self.arena.extend_raw_from(global_id, &local.arena, local_id as SetId);
+            }
+            out.extend(ids.iter().map(|sid| sid.remapped(&remap)));
+        }
+        out
     }
 
     /// Look up the cumulus id for a subrelation (None if never touched).
@@ -201,6 +594,40 @@ impl PrimeStore {
         } else {
             self.general.iter().map(FxHashMap::len).sum()
         }
+    }
+
+    /// Export every cumulus as `⟨subrelation, sorted deduped contents⟩`,
+    /// canonically ordered by key — exactly the stage-1 output of
+    /// [`crate::exec::stages::stage1_cumuli`], so the merge-based
+    /// parallel ingest doubles as a stage-1 kernel
+    /// ([`crate::exec::stages::stage1_cumuli_ingest`]). Seals the arena
+    /// first, so every materialisation is a memcpy.
+    pub fn cumuli(&mut self) -> Vec<(SubRelation, Vec<u32>)> {
+        self.arena.ensure_sorted_all();
+        let arity = self.arity;
+        let mut out = Vec::with_capacity(self.total_keys());
+        if !self.packed.is_empty() {
+            for (k, dict) in self.packed.iter().enumerate() {
+                for (&key, &id) in dict.iter() {
+                    let mut kept = [0u32; MAX_ARITY];
+                    for (i, slot) in kept[..arity - 1].iter_mut().enumerate() {
+                        *slot = (key >> (32 * i)) as u32;
+                    }
+                    out.push((
+                        SubRelation::from_parts(&kept[..arity - 1], k),
+                        self.arena.materialize(id),
+                    ));
+                }
+            }
+        } else {
+            for dict in &self.general {
+                for (&sub, &id) in dict.iter() {
+                    out.push((sub, self.arena.materialize(id)));
+                }
+            }
+        }
+        out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 }
 
@@ -265,5 +692,136 @@ mod tests {
         let ids = ps.add(&t);
         assert_eq!(ps.get(&t.subrelation(1)), Some(ids[1]));
         assert_eq!(ps.get(&NTuple::triple(9, 9, 9).subrelation(0)), None);
+    }
+
+    #[test]
+    fn packed_keys_match_the_subrelation_packing_rule() {
+        // pack_keys_into must agree with pack_elems over the subrelation
+        // slice for EVERY modality — this is the add/get key contract.
+        for t in [
+            NTuple::triple(7, 8, 9),
+            NTuple::triple(0, 0, 0),
+            NTuple::new(&[1, 2, 3, 4]),
+            NTuple::new(&[9, 0, 7, 0, 5]),
+        ] {
+            let mut keys = [0u128; MAX_ARITY];
+            pack_keys_into(&t, &mut keys);
+            for k in 0..t.arity() {
+                assert_eq!(
+                    keys[k],
+                    pack_elems(t.subrelation(k).as_slice()),
+                    "key mismatch at k={k} for {t:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paged_sets_survive_page_boundaries_and_sealing() {
+        let mut a = SetArena::default();
+        let s = a.alloc();
+        // 3 pages' worth, descending, with duplicates
+        for v in (0..20u32).rev() {
+            a.push(s, v);
+            a.push(s, v);
+        }
+        assert_eq!(a.materialize(s), (0..20).collect::<Vec<u32>>());
+        a.ensure_sorted(s);
+        // sealed: memcpy fast path returns the same contents
+        assert_eq!(a.materialize(s), (0..20).collect::<Vec<u32>>());
+        // appends after sealing re-enter the tail and merge on demand
+        a.push(s, 5); // duplicate of sealed content
+        a.push(s, 100);
+        assert_eq!(a.materialize(s), {
+            let mut v: Vec<u32> = (0..20).collect();
+            v.push(100);
+            v
+        });
+        a.ensure_sorted_all();
+        assert_eq!(a.set_len_bound(s), 21);
+    }
+
+    #[test]
+    fn freed_pages_are_recycled() {
+        let mut a = SetArena::default();
+        let s1 = a.alloc();
+        for v in 0..(3 * PAGE as u32) {
+            a.push(s1, v);
+        }
+        let pool_pages = a.pool.len() / PAGE;
+        a.ensure_sorted(s1); // releases 3 pages
+        let s2 = a.alloc();
+        for v in 0..(2 * PAGE as u32) {
+            a.push(s2, v);
+        }
+        // the new set reuses freed pages: the pool did not grow
+        assert_eq!(a.pool.len() / PAGE, pool_pages);
+        assert_eq!(a.materialize(s2), (0..(2 * PAGE as u32)).collect::<Vec<u32>>());
+        assert_eq!(a.materialize(s1), (0..(3 * PAGE as u32)).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn par_add_batch_equals_sequential_small() {
+        let data: Vec<NTuple> = (0..300u32)
+            .map(|i| NTuple::triple(i % 5, i % 3, i % 7))
+            .collect();
+        let mut seq = PrimeStore::new(3);
+        let seq_ids: Vec<SetIds> = data.iter().map(|t| seq.add(t)).collect();
+        for workers in [2, 3, 4] {
+            for chunk in [1, 7, 64, 300] {
+                let mut par = PrimeStore::new(3);
+                let par_ids = par.par_add_batch_chunked(&data, workers, chunk);
+                assert_eq!(par_ids, seq_ids, "w={workers} c={chunk}");
+                assert_eq!(par.total_keys(), seq.total_keys());
+                assert_eq!(par.arena.len(), seq.arena.len());
+                for id in 0..seq.arena.len() {
+                    assert_eq!(
+                        par.arena.materialize(id as SetId),
+                        seq.arena.materialize(id as SetId),
+                        "set {id} w={workers} c={chunk}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_add_batch_general_arity_falls_back() {
+        // arity 6 uses SubRelation keys: parallel ingest degrades to the
+        // sequential path but must stay correct
+        let data: Vec<NTuple> = (0..64u32)
+            .map(|i| NTuple::new(&[i % 2, i % 3, i % 2, i % 3, i % 2, i % 3]))
+            .collect();
+        let mut seq = PrimeStore::new(6);
+        let seq_ids: Vec<SetIds> = data.iter().map(|t| seq.add(t)).collect();
+        let mut par = PrimeStore::new(6);
+        let par_ids = par.par_add_batch_chunked(&data, 4, 8);
+        assert_eq!(par_ids, seq_ids);
+        assert_eq!(par.total_keys(), seq.total_keys());
+    }
+
+    #[test]
+    fn cumuli_export_reconstructs_subrelations() {
+        let mut ps = PrimeStore::new(3);
+        let data = [
+            NTuple::triple(0, 0, 0),
+            NTuple::triple(0, 1, 0),
+            NTuple::triple(2, 1, 0),
+        ];
+        for t in &data {
+            ps.add(t);
+        }
+        let cumuli = ps.cumuli();
+        assert_eq!(cumuli.len(), ps.total_keys());
+        // every exported key must resolve back through `get` to a set
+        // with exactly the exported contents
+        for (sub, contents) in &cumuli {
+            let id = ps.get(sub).expect("exported key resolves");
+            assert_eq!(&ps.arena.materialize(id), contents);
+        }
+        // and the cumulus of the shared dropped-2 key (0,*,0)... spot-check
+        let sub = NTuple::triple(0, 1, 0).subrelation(0);
+        let (_, c) = cumuli.iter().find(|(s, _)| *s == sub).expect("key present");
+        assert_eq!(*c, vec![0, 2]);
     }
 }

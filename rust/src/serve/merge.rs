@@ -22,7 +22,7 @@ use crate::core::pattern::Cluster;
 use crate::core::tuple::SubRelation;
 use crate::oac::online::{dedup_generated, Generated};
 use crate::oac::post::Constraints;
-use crate::oac::primes::{SetArena, SetId};
+use crate::oac::primes::{SetArena, SetId, SetIds};
 use crate::util::hash::FxHashMap;
 
 use super::shard::{Shard, ShardDelta};
@@ -84,9 +84,10 @@ impl Compactor {
             local.insert(*sub, id);
         }
         for &t in &delta.tuples {
-            let set_ids: Vec<SetId> = (0..t.arity())
-                .map(|k| local[&t.subrelation(k)])
-                .collect();
+            let mut set_ids = SetIds::default();
+            for k in 0..t.arity() {
+                set_ids.push(local[&t.subrelation(k)]);
+            }
             self.generated.push(Generated { set_ids, tuple: t });
         }
         self.cache = None;
@@ -106,6 +107,11 @@ impl Compactor {
         let key = (constraints.min_density, constraints.min_support);
         let fresh = self.cache.is_some() && self.cached_for == Some(key);
         if !fresh {
+            // seal the arena: cumuli untouched since the previous
+            // compaction keep their cached sorted view, so an
+            // incremental re-compaction only re-sorts the sets the new
+            // deltas actually appended to (§Perf watermark)
+            self.arena.ensure_sorted_all();
             self.cache =
                 Some(dedup_generated(&self.arena, &self.generated, constraints));
             self.cached_for = Some(key);

@@ -37,6 +37,15 @@ impl<'a> QueryEngine<'a> {
     /// Build the inverted membership index over one snapshot.
     pub fn new(clusters: &'a [Cluster]) -> Self {
         let mut member: FxHashMap<(u8, u32), Vec<u32>> = FxHashMap::default();
+        // upper bound on distinct (modality, entity) pairs — a pair is
+        // counted once per containing cluster, so overlapping snapshots
+        // over-reserve; this trades transient memory for zero rehashes
+        member.reserve(
+            clusters
+                .iter()
+                .map(|c| c.components.iter().map(Vec::len).sum::<usize>())
+                .sum(),
+        );
         for (i, c) in clusters.iter().enumerate() {
             for (m, comp) in c.components.iter().enumerate() {
                 for &e in comp {
@@ -98,24 +107,26 @@ impl<'a> QueryEngine<'a> {
         if hits.is_empty() {
             None
         } else {
-            Some(stats_of(&hits))
+            Some(stats_of(hits.iter().copied()))
         }
     }
 
-    /// Aggregate stats over the whole snapshot.
+    /// Aggregate stats over the whole snapshot (no intermediate
+    /// collection — the stats fold streams over the clusters).
     pub fn stats(&self) -> IndexStats {
-        let all: Vec<&Cluster> = self.clusters.iter().collect();
-        stats_of(&all)
+        stats_of(self.clusters.iter())
     }
 }
 
-fn stats_of(clusters: &[&Cluster]) -> IndexStats {
-    let n = clusters.len();
-    let total_support: usize = clusters.iter().map(|c| c.support).sum();
+fn stats_of<'c>(clusters: impl Iterator<Item = &'c Cluster>) -> IndexStats {
+    let mut n = 0usize;
+    let mut total_support = 0usize;
     let mut mean_density = 0.0;
     let mut max_density = 0.0f64;
     let mut max_component = 0usize;
     for c in clusters {
+        n += 1;
+        total_support += c.support;
         let d = c.support_density();
         mean_density += d;
         max_density = max_density.max(d);

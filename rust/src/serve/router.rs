@@ -208,8 +208,13 @@ impl Router {
 }
 
 /// One mining task per shard over one wave's queues (each task owns its
-/// shard for the wave).
+/// shard for the wave). Workers left over after one-per-shard are split
+/// across the shards and parallelise ingest INSIDE each shard
+/// ([`Shard::ingest_par`] — the merge-based kernel), so a deployment
+/// with fewer shards than cores still saturates the pool; with shards ≥
+/// workers each shard mines sequentially, exactly as before.
 fn mine_wave(shards: &mut [Shard], queues: Vec<Vec<NTuple>>, workers: usize) {
+    let per_shard = (workers / shards.len().max(1)).max(1);
     let jobs: Vec<std::sync::Mutex<Option<(&mut Shard, Vec<NTuple>)>>> = shards
         .iter_mut()
         .zip(queues)
@@ -217,7 +222,7 @@ fn mine_wave(shards: &mut [Shard], queues: Vec<Vec<NTuple>>, workers: usize) {
         .collect();
     pool::parallel_map(jobs.len(), workers, 1, |i| {
         let (shard, queue) = jobs[i].lock().unwrap().take().expect("taken once");
-        shard.ingest(&queue);
+        shard.ingest_par(&queue, per_shard);
     });
 }
 

@@ -92,6 +92,19 @@ impl Shard {
         self.epoch += 1;
     }
 
+    /// [`Self::ingest`] via the merge-based parallel ingest kernel
+    /// ([`crate::oac::primes::PrimeStore::par_add_batch`]) — the router's
+    /// drain waves hand each shard its share of the worker pool, so a
+    /// deployment with few shards and many cores still saturates. The
+    /// resulting shard state is bit-identical to sequential `ingest`.
+    pub fn ingest_par(&mut self, batch: &[NTuple], workers: usize) {
+        if batch.is_empty() {
+            return;
+        }
+        self.miner.par_add_batch(batch, workers);
+        self.epoch += 1;
+    }
+
     /// Export the epoch-tagged delta since the last pull and advance the
     /// watermark. Appends are grouped per subrelation key (map-side
     /// combine) so the compactor probes its global key dictionary once
@@ -116,7 +129,7 @@ impl Shard {
     /// Shard-local view: clusters over THIS partition only (partial —
     /// cumuli here miss contributions routed to sibling shards; the
     /// compactor's output is the globally-correct index).
-    pub fn local_clusters(&self, constraints: &Constraints) -> Vec<Cluster> {
+    pub fn local_clusters(&mut self, constraints: &Constraints) -> Vec<Cluster> {
         self.miner.dedup_and_filter(constraints)
     }
 
@@ -172,6 +185,25 @@ mod tests {
         assert_eq!(d2.epoch, 2);
         // nothing new → empty delta
         assert!(s.take_delta().is_empty());
+    }
+
+    #[test]
+    fn parallel_ingest_matches_sequential_shard() {
+        let data: Vec<NTuple> = (0..5000u32)
+            .map(|i| NTuple::triple(i % 9, i % 7, i % 5))
+            .collect();
+        let mut seq = Shard::new(0, 3);
+        seq.ingest(&data);
+        let mut par = Shard::new(0, 3);
+        par.ingest_par(&data, 4);
+        assert_eq!(seq.epoch(), par.epoch());
+        assert_eq!(seq.len(), par.len());
+        let (ds, dp) = (seq.take_delta(), par.take_delta());
+        assert_eq!(ds.tuples, dp.tuples);
+        assert_eq!(ds.appends, dp.appends);
+        // empty batches do not advance the epoch on either path
+        par.ingest_par(&[], 4);
+        assert_eq!(par.epoch(), 1);
     }
 
     #[test]

@@ -61,6 +61,9 @@ fn prop_all_backends_equal_online() {
             placement: ["rr", "locality", "least"][g.usize_below(3)].to_string(),
             adaptive_tasks: g.bool(0.5),
             cost_ms_per_record: if g.bool(0.5) { Some(0.01) } else { None },
+            // seq/pool stage 1 via the merge-based ingest kernel or the
+            // generic map_reduce round — both must match the reference
+            parallel_ingest: g.bool(0.5),
             ..ExecTuning::default()
         };
         for backend in BACKENDS {
@@ -74,6 +77,37 @@ fn prop_all_backends_equal_online() {
         }
         Ok(())
     });
+}
+
+/// All 5 backends with parallel ingest enabled must equal `mine_online`
+/// — the seq/pool paths actually run the merge-based stage-1 kernel,
+/// the simulated engines keep their shuffle; either way the output is
+/// the reference.
+#[test]
+fn all_backends_equal_online_with_parallel_ingest() {
+    for ctx in [
+        tricluster::datasets::synthetic::k1(6).inner,
+        tricluster::datasets::synthetic::k2(4).inner,
+    ] {
+        let reference = sorted(mine_online(&ctx, &Constraints::none()));
+        for workers in [2, 4] {
+            let tune = ExecTuning {
+                workers,
+                tasks: 4,
+                parallel_ingest: true,
+                ..ExecTuning::default()
+            };
+            for backend in BACKENDS {
+                let run = run_named(backend, &ctx, 0.0, &tune).unwrap();
+                assert_same(
+                    &reference,
+                    &run.clusters,
+                    &format!("{backend} x{workers} (parallel ingest)"),
+                )
+                .unwrap();
+            }
+        }
+    }
 }
 
 /// ClusterSim under an adversarial schedule — every first attempt

@@ -5,7 +5,9 @@
 
 use tricluster::core::context::PolyContext;
 use tricluster::core::pattern::Cluster;
+use tricluster::core::tuple::NTuple;
 use tricluster::mmc::{run_mmc, MmcConfig};
+use tricluster::oac::primes::{PrimeStore, SetIds};
 use tricluster::oac::{mine_online, Constraints, OnlineMiner};
 use tricluster::util::proptest_lite::{assert_prop, Gen};
 
@@ -142,6 +144,120 @@ fn prop_constraints_are_monotone() {
         );
         if tight.len() > loose.len() {
             return Err(format!("{} > {}", tight.len(), loose.len()));
+        }
+        Ok(())
+    });
+}
+
+/// The parallel-ingest contract: for ANY arity-3/4 batch, worker count,
+/// chunk size, and split into consecutive par-ingested sub-batches, the
+/// merged store is bit-for-bit the sequential store — identical per-tuple
+/// set ids, identical dictionaries, identical cumuli.
+#[test]
+fn prop_par_add_batch_equals_sequential_bit_for_bit() {
+    assert_prop(32, |g| {
+        let arity = 3 + g.usize_below(2);
+        let universe = 2 + g.u32_below(10);
+        let n = 1 + g.len() * 16;
+        let tuples: Vec<NTuple> = (0..n)
+            .map(|_| {
+                let ids: Vec<u32> =
+                    (0..arity).map(|_| g.u32_below(universe)).collect();
+                NTuple::new(&ids)
+            })
+            .collect();
+        let mut seq = PrimeStore::new(arity);
+        let seq_ids: Vec<SetIds> = tuples.iter().map(|t| seq.add(t)).collect();
+
+        let workers = 1 + g.usize_below(5);
+        let chunk = 1 + g.usize_below(48);
+        // split into two consecutive parallel batches: the merge must
+        // also be correct INCREMENTALLY, against a non-empty store
+        let split = g.usize_below(n + 1);
+        let mut par = PrimeStore::new(arity);
+        let mut par_ids =
+            par.par_add_batch_chunked(&tuples[..split], workers, chunk);
+        par_ids.extend(par.par_add_batch_chunked(&tuples[split..], workers, chunk));
+
+        if par_ids != seq_ids {
+            return Err(format!(
+                "set ids diverged (arity={arity} n={n} w={workers} c={chunk} \
+                 split={split})"
+            ));
+        }
+        if par.total_keys() != seq.total_keys() {
+            return Err("distinct key counts diverged".into());
+        }
+        if par.cumuli() != seq.cumuli() {
+            return Err("exported cumuli diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a miner fed through parallel ingest yields the identical
+/// deduplicated, constraint-filtered cluster set.
+#[test]
+fn prop_parallel_miner_equals_sequential_clusters() {
+    assert_prop(24, |g| {
+        let ctx = gen_context(g, 3, 9);
+        let workers = 2 + g.usize_below(4);
+        let cons = Constraints {
+            min_density: if g.bool(0.5) { 0.0 } else { g.f64() * 0.5 },
+            min_support: g.usize_below(3),
+        };
+        let mut seq = OnlineMiner::new(3);
+        seq.add_batch(ctx.tuples());
+        let mut par = OnlineMiner::new(3);
+        par.par_add_batch(ctx.tuples(), workers);
+        let (a, b) = (seq.dedup_and_filter(&cons), par.dedup_and_filter(&cons));
+        if a.len() != b.len() {
+            return Err(format!("counts differ: {} vs {}", a.len(), b.len()));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.components != y.components || x.support != y.support {
+                return Err(format!("cluster mismatch: {x:?} vs {y:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The bitset density kernel is exact: equal to the scalar hash-probe
+/// oracle on random contexts and clusters, including clusters whose ids
+/// reach past the context extents.
+#[test]
+fn prop_bitset_density_equals_scalar_oracle() {
+    use tricluster::core::context::TriContext;
+    use tricluster::density::{densities_bitset, densities_scalar};
+    assert_prop(24, |g| {
+        let mut ctx = TriContext::new();
+        let universe = 2 + g.u32_below(90); // up to 2 words over modality B
+        for _ in 0..(1 + g.len() * 8) {
+            ctx.add(
+                g.u32_below(universe),
+                g.u32_below(universe),
+                g.u32_below(universe),
+            );
+        }
+        let mut clusters = mine_online(&ctx.inner, &Constraints::none());
+        // adversarial extras: out-of-extent ids and an empty component
+        clusters.push(tricluster::core::pattern::tricluster(
+            g.id_set(universe + 100),
+            g.id_set(universe + 100),
+            g.id_set(universe + 100),
+        ));
+        clusters.push(tricluster::core::pattern::tricluster(
+            vec![],
+            vec![0],
+            vec![universe],
+        ));
+        let scalar = densities_scalar(&ctx, &clusters);
+        let Some(bits) = densities_bitset(&ctx, &clusters, 1 << 30) else {
+            return Err("row table unexpectedly over the cap".into());
+        };
+        if scalar != bits {
+            return Err(format!("densities diverged: {scalar:?} vs {bits:?}"));
         }
         Ok(())
     });
