@@ -41,6 +41,13 @@
 //!    noise), and the in-bench equivalence verdicts
 //!    (`parallel_matches_sequential`, `bitset_matches_scalar`) must be
 //!    true.
+//! 6. **Observability overhead** — when `BENCH_hotpath.json` carries the
+//!    obs section: ingest with telemetry DISABLED must stay within
+//!    `hotpath.min_obs_disabled_ratio` of the no-telemetry build of the
+//!    same kernel (0.97 by policy — the "one relaxed load per batch"
+//!    promise of `obs::enabled()`), and with telemetry ENABLED within
+//!    `hotpath.min_obs_enabled_ratio` (0.5 — spans are per batch, never
+//!    per tuple, so full tracing may not halve ingest throughput).
 //!
 //! `--pin` rewrites the baseline from the current `BENCH_cluster.json`
 //! (max makespans = observed, speedup floors = 80% of observed) and,
@@ -323,6 +330,30 @@ fn main() {
                 ));
             }
         }
+        // 6. observability overhead vs the no-telemetry build
+        for (field, floor_key) in [
+            ("obs_disabled_vs_baseline", "min_obs_disabled_ratio"),
+            ("obs_enabled_vs_baseline", "min_obs_enabled_ratio"),
+        ] {
+            let Some(min) = hot_base
+                .and_then(|h| h.get(floor_key))
+                .and_then(Json::as_f64)
+            else {
+                continue;
+            };
+            let ratio = f(&hot, field);
+            if ratio.is_nan() {
+                eprintln!(
+                    "check_bench: hotpath has no {field} — obs section did not \
+                     run; skipping the {floor_key} floor"
+                );
+            } else if ratio < min {
+                failures.push(format!(
+                    "hotpath {field} {ratio:.3} fell below the baseline floor \
+                     {min:.3} (telemetry overhead regression)"
+                ));
+            }
+        }
     } else {
         eprintln!("check_bench: {hotpath_path} absent — skipping hot-path gate");
     }
@@ -404,6 +435,10 @@ fn pin(
             );
             // policy, not measurement: parallel ingest must never lose
             hp.insert("min_parallel_vs_sequential".to_string(), Json::Num(1.0));
+            // policy floors for the obs overhead too: disabled telemetry
+            // stays within 3% of the no-telemetry build, enabled within 2x
+            hp.insert("min_obs_disabled_ratio".to_string(), Json::Num(0.97));
+            hp.insert("min_obs_enabled_ratio".to_string(), Json::Num(0.5));
             doc.insert("hotpath".to_string(), Json::Obj(hp));
         }
         _ => {

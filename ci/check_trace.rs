@@ -1,0 +1,300 @@
+//! CI gate: the telemetry artefacts must stay loadable. Smoke-runs the
+//! CLI with `--trace-out`/`--metrics-out` and schema-validates what it
+//! writes (exit 1 on any violation):
+//!
+//! 1. `mr --backend cluster --nodes 4` — the Chrome-trace JSONL must
+//!    parse line by line with the `trace_event` keys
+//!    (`name`/`ph`/`ts`/`pid`/`tid`), every `ph` must be `B` or `E`,
+//!    and per-`tid` the `B`/`E` events must balance with matching names
+//!    (the Perfetto duration-event contract); the metrics snapshot must
+//!    carry `schema: tricluster-metrics-v1` and the `exec.cluster.*`
+//!    counters the simulated cluster publishes.
+//! 2. `serve-sim` — the serve plane's metrics must cover both the
+//!    router (`serve.*`) and the ingest kernel underneath it (`oac.*`).
+//! 3. `density --engine exact` — the bitset-vs-scalar dispatch counters
+//!    (`density.dispatch.*`) must land.
+//!
+//! Declared as a bench target (harness = false) like `check_bench`, so
+//! it shares the library build; it drives the CLI through `$CARGO run`
+//! (nested cargo invocations are fine — the build lock is released
+//! while a bench runs) and writes everything under `target/check_trace/`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{exit, Command};
+
+use tricluster::obs::export::METRICS_SCHEMA;
+use tricluster::util::json::Json;
+
+fn run_cli(cargo: &str, args: &[&str]) {
+    println!("check_trace: tricluster {}", args.join(" "));
+    let status = Command::new(cargo)
+        .args(["run", "-q", "--release", "--locked", "--bin", "tricluster", "--"])
+        .args(args)
+        .status()
+        .unwrap_or_else(|e| {
+            eprintln!("check_trace: failed to spawn {cargo} run: {e}");
+            exit(1);
+        });
+    if !status.success() {
+        eprintln!("check_trace: CLI exited with {status}");
+        exit(1);
+    }
+}
+
+/// Parse + validate one Chrome-trace JSONL file; returns every event's
+/// name so callers can assert taxonomy coverage.
+fn check_trace_file(path: &Path, failures: &mut Vec<String>) -> Vec<String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            failures.push(format!("{}: unreadable: {e}", path.display()));
+            return Vec::new();
+        }
+    };
+    let mut names = Vec::new();
+    // per-tid stacks: B pushes its name, E must match its thread's top
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        let ev = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(format!("{}:{ln}: not JSON: {e}", path.display()));
+                continue;
+            }
+        };
+        let Some(name) = ev.get("name").and_then(Json::as_str) else {
+            failures.push(format!("{}:{ln}: missing name", path.display()));
+            continue;
+        };
+        for key in ["ts", "pid", "tid"] {
+            if ev.get(key).and_then(Json::as_f64).is_none() {
+                failures.push(format!(
+                    "{}:{ln}: missing numeric {key}",
+                    path.display()
+                ));
+            }
+        }
+        let tid = ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        match ev.get("ph").and_then(Json::as_str) {
+            Some("B") => stacks.entry(tid).or_default().push(name.to_string()),
+            Some("E") => match stacks.entry(tid).or_default().pop() {
+                Some(top) if top == name => {}
+                Some(top) => failures.push(format!(
+                    "{}:{ln}: E {name:?} closes {top:?} on tid {tid}",
+                    path.display()
+                )),
+                None => failures.push(format!(
+                    "{}:{ln}: E {name:?} without a B on tid {tid}",
+                    path.display()
+                )),
+            },
+            other => failures.push(format!(
+                "{}:{ln}: ph {other:?} is not B/E",
+                path.display()
+            )),
+        }
+        names.push(name.to_string());
+    }
+    if names.is_empty() {
+        failures.push(format!("{}: no events", path.display()));
+    }
+    for (tid, stack) in stacks {
+        if !stack.is_empty() {
+            failures.push(format!(
+                "{}: tid {tid} left unbalanced spans: {stack:?}",
+                path.display()
+            ));
+        }
+    }
+    names
+}
+
+/// Parse + schema-validate one metrics snapshot; returns the counter map.
+fn check_metrics_file(
+    path: &Path,
+    failures: &mut Vec<String>,
+) -> BTreeMap<String, f64> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            failures.push(format!("{}: unreadable: {e}", path.display()));
+            return BTreeMap::new();
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            failures.push(format!("{}: not JSON: {e}", path.display()));
+            return BTreeMap::new();
+        }
+    };
+    if doc.get("schema").and_then(Json::as_str) != Some(METRICS_SCHEMA) {
+        failures.push(format!(
+            "{}: schema is not {METRICS_SCHEMA:?}",
+            path.display()
+        ));
+    }
+    let mut counters = BTreeMap::new();
+    match doc.get("counters") {
+        Some(Json::Obj(map)) => {
+            for (k, v) in map {
+                match v.as_f64() {
+                    Some(n) => {
+                        counters.insert(k.clone(), n);
+                    }
+                    None => failures.push(format!(
+                        "{}: counter {k:?} is not numeric",
+                        path.display()
+                    )),
+                }
+            }
+        }
+        _ => failures.push(format!("{}: missing counters object", path.display())),
+    }
+    match doc.get("gauges") {
+        Some(Json::Obj(_)) => {}
+        _ => failures.push(format!("{}: missing gauges object", path.display())),
+    }
+    match doc.get("histograms") {
+        Some(Json::Obj(hists)) => {
+            for (k, h) in hists {
+                let ok = h.get("count").and_then(Json::as_f64).is_some()
+                    && h.get("sum").and_then(Json::as_f64).is_some()
+                    && h.get("p50").and_then(Json::as_f64).is_some()
+                    && h.get("p95").and_then(Json::as_f64).is_some()
+                    && h.get("buckets")
+                        .and_then(Json::as_arr)
+                        .is_some_and(|b| !b.is_empty());
+                if !ok {
+                    failures.push(format!(
+                        "{}: histogram {k:?} missing count/sum/p50/p95/buckets",
+                        path.display()
+                    ));
+                }
+            }
+        }
+        _ => failures.push(format!("{}: missing histograms object", path.display())),
+    }
+    counters
+}
+
+fn require_counter_prefix(
+    counters: &BTreeMap<String, f64>,
+    prefix: &str,
+    what: &str,
+    failures: &mut Vec<String>,
+) {
+    if !counters.keys().any(|k| k.starts_with(prefix)) {
+        failures.push(format!(
+            "{what}: no counter with prefix {prefix:?} (got {:?})",
+            counters.keys().take(12).collect::<Vec<_>>()
+        ));
+    }
+}
+
+fn main() {
+    let cargo = std::env::var("CARGO").unwrap_or_else(|_| "cargo".to_string());
+    let out_dir = PathBuf::from("target/check_trace");
+    std::fs::create_dir_all(&out_dir).expect("create target/check_trace");
+    let mut failures: Vec<String> = Vec::new();
+
+    // 1. the simulated cluster run: nested exec spans + cluster counters
+    let mr_trace = out_dir.join("mr_trace.jsonl");
+    let mr_metrics = out_dir.join("mr_metrics.json");
+    run_cli(
+        &cargo,
+        &[
+            "mr",
+            "--dataset",
+            "imdb",
+            "--backend",
+            "cluster",
+            "--nodes",
+            "4",
+            "--stragglers",
+            "0.2",
+            "--trace-out",
+            mr_trace.to_str().unwrap(),
+            "--metrics-out",
+            mr_metrics.to_str().unwrap(),
+        ],
+    );
+    let names = check_trace_file(&mr_trace, &mut failures);
+    if !names.iter().any(|n| n.starts_with("exec.pipeline.")) {
+        failures.push("mr trace: no exec.pipeline.* span".to_string());
+    }
+    if !names.iter().any(|n| n.starts_with("exec.cluster.") && n.ends_with(".task")) {
+        failures.push("mr trace: no per-task exec.cluster.*.task spans".to_string());
+    }
+    let counters = check_metrics_file(&mr_metrics, &mut failures);
+    for key in ["exec.cluster.phases", "exec.cluster.tasks"] {
+        if counters.get(key).copied().unwrap_or(0.0) < 1.0 {
+            failures.push(format!("mr metrics: counter {key:?} missing or zero"));
+        }
+    }
+
+    // 2. the serve plane: router + shard spans over the ingest kernel
+    let serve_trace = out_dir.join("serve_trace.jsonl");
+    let serve_metrics = out_dir.join("serve_metrics.json");
+    run_cli(
+        &cargo,
+        &[
+            "serve-sim",
+            "--datasets",
+            "imdb",
+            "--shards",
+            "4",
+            "--batch",
+            "512",
+            "--trace-out",
+            serve_trace.to_str().unwrap(),
+            "--metrics-out",
+            serve_metrics.to_str().unwrap(),
+        ],
+    );
+    let serve_names = check_trace_file(&serve_trace, &mut failures);
+    if !serve_names.iter().any(|n| n.starts_with("serve.")) {
+        failures.push("serve trace: no serve.* spans".to_string());
+    }
+    let serve_counters = check_metrics_file(&serve_metrics, &mut failures);
+    require_counter_prefix(&serve_counters, "serve.", "serve metrics", &mut failures);
+    require_counter_prefix(&serve_counters, "oac.", "serve metrics", &mut failures);
+
+    // 3. the density engine dispatch counters
+    let dens_metrics = out_dir.join("density_metrics.json");
+    run_cli(
+        &cargo,
+        &[
+            "density",
+            "--edge",
+            "16",
+            "--engine",
+            "exact",
+            "--metrics-out",
+            dens_metrics.to_str().unwrap(),
+        ],
+    );
+    let dens_counters = check_metrics_file(&dens_metrics, &mut failures);
+    require_counter_prefix(
+        &dens_counters,
+        "density.dispatch.",
+        "density metrics",
+        &mut failures,
+    );
+
+    if failures.is_empty() {
+        println!(
+            "check_trace: OK — {} mr events + {} serve events schema-valid, \
+             B/E balanced per tid, metrics cover exec/serve/oac/density",
+            names.len(),
+            serve_names.len()
+        );
+    } else {
+        for fail in &failures {
+            eprintln!("check_trace: FAIL: {fail}");
+        }
+        exit(1);
+    }
+}

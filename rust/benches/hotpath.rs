@@ -9,7 +9,11 @@
 //!     path);
 //!   * exact density, scalar hash-probe oracle vs the bitset
 //!     (`density::densities_bitset`) kernel;
-//!   * record codec + shuffle sort/group (reported, not gated).
+//!   * record codec + shuffle sort/group (reported, not gated);
+//!   * observability overhead: the instrumented ingest with telemetry
+//!     disabled vs a hand-inlined no-telemetry build of the same kernel
+//!     (gate: within `min_obs_disabled_ratio`, 3% by policy), and with
+//!     telemetry enabled (gate: `min_obs_enabled_ratio`).
 //!
 //! Doubles as an equivalence gate, enforced at the source: the parallel
 //! ingest must export cumuli identical to sequential ingest, and the
@@ -23,7 +27,7 @@ use tricluster::datasets::synthetic::k1;
 use tricluster::datasets::{movielens, MovielensParams};
 use tricluster::density::{densities_bitset, densities_scalar};
 use tricluster::hadoop::record::Record;
-use tricluster::oac::primes::PrimeStore;
+use tricluster::oac::primes::{PrimeStore, SetIds};
 use tricluster::oac::{mine_online, Constraints, OnlineMiner};
 use tricluster::util::json::Json;
 use tricluster::util::pool;
@@ -183,6 +187,67 @@ fn main() {
     });
     let shuffle_rate = report("shuffle sort+group", mn as f64, "pairs", &shuffle_samples);
     doc.insert("shuffle_pairs_per_s".to_string(), Json::Num(shuffle_rate));
+
+    // ── observability overhead: no-telemetry vs disabled vs enabled ──
+    // All three modes chunk the same K1 stream into `obs_chunk`-tuple
+    // batches, so the telemetry builds pay their per-batch span exactly
+    // as often as the serve layer would. The baseline hand-inlines
+    // `add_batch` WITHOUT its span — the never-calls-the-recorder build
+    // of the identical kernel (PrimeStore::add + generated push).
+    use tricluster::obs;
+    let obs_chunk = 1024usize;
+    println!("\nobs overhead: K1({k1_n}) ingest in {obs_chunk}-tuple batches");
+    assert!(!obs::enabled(), "recorder must start disabled");
+    let base_samples = measure_ms(1, 7, || {
+        let mut primes = PrimeStore::new(3);
+        let mut generated: Vec<(SetIds, NTuple)> = Vec::new();
+        for chunk in tuples.chunks(obs_chunk) {
+            generated.reserve(chunk.len());
+            for t in chunk {
+                generated.push((primes.add(t), *t));
+            }
+        }
+        std::hint::black_box(generated.len());
+    });
+    let base_rate =
+        report("ingest no-telemetry build", n as f64, "tuples", &base_samples);
+
+    let off_samples = measure_ms(1, 7, || {
+        let mut miner = OnlineMiner::new(3);
+        for chunk in tuples.chunks(obs_chunk) {
+            miner.add_batch(chunk);
+        }
+        std::hint::black_box(miner.len());
+    });
+    let off_rate =
+        report("ingest telemetry disabled", n as f64, "tuples", &off_samples);
+
+    obs::reset();
+    obs::enable();
+    let on_samples = measure_ms(1, 7, || {
+        let mut miner = OnlineMiner::new(3);
+        for chunk in tuples.chunks(obs_chunk) {
+            miner.add_batch(chunk);
+        }
+        std::hint::black_box(miner.len());
+        // drop this run's spans so the trace buffer stays bounded — the
+        // reset cost is part of what "telemetry on" charges
+        obs::reset();
+    });
+    obs::disable();
+    obs::reset();
+    let on_rate =
+        report("ingest telemetry enabled", n as f64, "tuples", &on_samples);
+    let off_ratio = off_rate / base_rate;
+    let on_ratio = on_rate / base_rate;
+    println!(
+        "{:<30} disabled {off_ratio:.3}x / enabled {on_ratio:.3}x of no-telemetry",
+        "obs overhead"
+    );
+    doc.insert("obs_disabled_tuples_per_s".to_string(), Json::Num(off_rate));
+    doc.insert("obs_enabled_tuples_per_s".to_string(), Json::Num(on_rate));
+    doc.insert("obs_disabled_vs_baseline".to_string(), Json::Num(off_ratio));
+    doc.insert("obs_enabled_vs_baseline".to_string(), Json::Num(on_ratio));
 
     std::fs::write("BENCH_hotpath.json", Json::Obj(doc).to_string())
         .expect("write BENCH_hotpath.json");

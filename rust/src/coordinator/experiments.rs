@@ -14,8 +14,8 @@ use crate::exec::{run_named, run_pipeline, ExecTuning, BACKENDS};
 use crate::mmc::{run_mmc, MmcConfig, MmcResult};
 use crate::noac::{mine_noac, NoacParams};
 use crate::oac::{mine_online, Constraints};
+use crate::obs::time_ms;
 use crate::row;
-use crate::util::stats::Timer;
 use crate::util::table::fmt_ms;
 
 /// Experiment scaling + cluster-simulation knobs.
@@ -114,12 +114,15 @@ pub fn measure_both(ctx: &PolyContext, cfg: &ExpConfig) -> Result<Measured> {
     let mut online_ms = 0.0;
     let mut online_clusters = 0;
     for _ in 0..cfg.runs.max(1) {
-        let t = Timer::start();
-        let out = mine_online(
-            ctx,
-            &Constraints { min_density: cfg.theta, min_support: 0 },
-        );
-        online_ms += t.elapsed_ms();
+        // time_ms measures with or without the recorder; with telemetry
+        // on, each repetition also lands as an `exp.online` span
+        let (out, ms) = time_ms("exp.online", || {
+            mine_online(
+                ctx,
+                &Constraints { min_density: cfg.theta, min_support: 0 },
+            )
+        });
+        online_ms += ms;
         online_clusters = out.len();
     }
     online_ms /= cfg.runs.max(1) as f64;
@@ -270,12 +273,10 @@ pub fn table5(cfg: &ExpConfig, workers: usize) -> Result<Report> {
             {
                 continue; // the paper reports 4 sizes for the loose setting
             }
-            let t = Timer::start();
-            let out_seq = mine_noac(&ctx, &params, n, 1);
-            let seq_ms = t.elapsed_ms();
-            let t = Timer::start();
-            let out_par = mine_noac(&ctx, &params, n, workers);
-            let par_ms = t.elapsed_ms();
+            let (out_seq, seq_ms) =
+                time_ms("exp.noac.seq", || mine_noac(&ctx, &params, n, 1));
+            let (out_par, par_ms) =
+                time_ms("exp.noac.par", || mine_noac(&ctx, &params, n, workers));
             assert_eq!(out_seq.len(), out_par.len(), "parallel must match");
             r.push(row![
                 format!("{label} {}k", n / 1000),

@@ -104,8 +104,14 @@ impl DensityEngine for ExactEngine {
         let cells: f64 = clusters.iter().map(Cluster::volume).sum();
         if cells >= BITSET_MIN_CELLS {
             if let Some(out) = densities_bitset(ctx, clusters, BITSET_MAX_BYTES) {
+                crate::obs::counter("density.dispatch.bitset", 1);
                 return out;
             }
+            // the row table would not fit BITSET_MAX_BYTES
+            crate::obs::counter("density.dispatch.scalar_fallback", 1);
+        } else {
+            // too few cuboid cells to amortise the row-table build
+            crate::obs::counter("density.dispatch.scalar_small", 1);
         }
         densities_scalar(ctx, clusters)
     }

@@ -177,9 +177,29 @@ pub trait Backend {
         RF: Fn(&K, Vec<V>) -> Vec<O> + Sync,
     {
         let _ = combine;
-        let pairs = self.map_partitions(&format!("{label}-map"), input, map)?;
-        let groups = self.group_by_key(&format!("{label}-shuffle"), pairs)?;
-        self.reduce(&format!("{label}-reduce"), groups, reduce)
+        let mut round = crate::span!("exec.{}.{label}", self.name());
+        round.records_in(input.len() as u64);
+        let pairs = {
+            let mut s = crate::span!("exec.{}.{label}-map", self.name());
+            s.records_in(input.len() as u64);
+            let pairs = self.map_partitions(&format!("{label}-map"), input, map)?;
+            s.records_out(pairs.len() as u64);
+            pairs
+        };
+        let groups = {
+            let mut s = crate::span!("exec.{}.{label}-shuffle", self.name());
+            s.records_in(pairs.len() as u64);
+            let groups = self.group_by_key(&format!("{label}-shuffle"), pairs)?;
+            s.records_out(groups.len() as u64);
+            groups
+        };
+        let mut s = crate::span!("exec.{}.{label}-reduce", self.name());
+        s.records_in(groups.len() as u64);
+        let out = self.reduce(&format!("{label}-reduce"), groups, reduce)?;
+        s.records_out(out.len() as u64);
+        drop(s);
+        round.records_out(out.len() as u64);
+        Ok(out)
     }
 
     /// A shuffle → reduce round over PRE-KEYED pairs (no map phase): the
@@ -201,12 +221,27 @@ pub trait Backend {
         O: Data,
         RF: Fn(&K, Vec<V>) -> Vec<O> + Sync,
     {
-        let groups = if sorted_by_key(&pairs) {
-            group_pairs_presorted(pairs)
-        } else {
-            self.group_by_key(&format!("{label}-shuffle"), pairs)?
+        let mut round = crate::span!("exec.{}.{label}", self.name());
+        round.records_in(pairs.len() as u64);
+        let groups = {
+            let mut s = crate::span!("exec.{}.{label}-shuffle", self.name());
+            s.records_in(pairs.len() as u64);
+            let groups = if sorted_by_key(&pairs) {
+                crate::obs::counter("exec.shuffle.presorted_fast_path", 1);
+                group_pairs_presorted(pairs)
+            } else {
+                self.group_by_key(&format!("{label}-shuffle"), pairs)?
+            };
+            s.records_out(groups.len() as u64);
+            groups
         };
-        self.reduce(&format!("{label}-reduce"), groups, reduce)
+        let mut s = crate::span!("exec.{}.{label}-reduce", self.name());
+        s.records_in(groups.len() as u64);
+        let out = self.reduce(&format!("{label}-reduce"), groups, reduce)?;
+        s.records_out(out.len() as u64);
+        drop(s);
+        round.records_out(out.len() as u64);
+        Ok(out)
     }
 }
 

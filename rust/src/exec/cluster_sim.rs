@@ -646,6 +646,32 @@ impl ClusterSim {
         let mean = total / tasks.len() as f64;
         stats.skew = if mean > 0.0 { max / mean } else { 1.0 };
         stats.sim_phase_ms = phase_end;
+        // materialised view: the telemetry plane receives the SAME
+        // per-phase figures the drained [`ClusterStats`] carry (the
+        // struct stays the programmatic API and works with obs off;
+        // `--metrics-out` sees the simulation without a second ledger)
+        if crate::obs::enabled() {
+            use crate::obs::{counter, gauge, observe};
+            counter("exec.cluster.phases", 1);
+            counter("exec.cluster.tasks", stats.tasks as u64);
+            counter("exec.cluster.stragglers", stats.stragglers as u64);
+            counter("exec.cluster.spec_launched", stats.spec_launched as u64);
+            counter("exec.cluster.spec_wins", stats.spec_wins as u64);
+            counter("exec.cluster.failures", stats.failures as u64);
+            counter("exec.cluster.churn_kills", stats.churn_kills as u64);
+            counter(
+                "exec.cluster.shuffle_kib",
+                (stats.shuffle_mib * 1024.0).round() as u64,
+            );
+            observe("exec.cluster.phase_sim_ms", stats.sim_phase_ms.round() as u64);
+            gauge("exec.cluster.sim_makespan_ms", state.makespan_ms + phase_end);
+            gauge("exec.cluster.phase_skew", stats.skew);
+            for (n, &recs) in out_node.iter().enumerate() {
+                if recs > 0.0 {
+                    counter(&format!("exec.cluster.node{n}.out_records"), recs as u64);
+                }
+            }
+        }
         state.prev_skew = stats.skew;
         state.prev_out = out_node;
         state.makespan_ms += phase_end; // barrier: next phase starts here
@@ -697,12 +723,16 @@ impl Backend for ClusterSim {
         let splits: Vec<&[I]> = input.chunks(per).collect();
         let outs: Vec<(Vec<O>, f64)> =
             pool::parallel_map(splits.len(), self.cfg.workers, 1, |t| {
+                let mut tspan = crate::span!("exec.cluster.{label}.task");
+                tspan.records_in(splits[t].len() as u64);
                 let timer = Timer::start();
                 let mut out = Vec::new();
                 for item in splits[t] {
                     out.extend(f(item));
                 }
-                (out, timer.elapsed_ms())
+                let ms = timer.elapsed_ms();
+                tspan.records_out(out.len() as u64);
+                (out, ms)
             });
         let tasks: Vec<SimTask> = outs
             .iter()
@@ -768,12 +798,16 @@ impl Backend for ClusterSim {
         let outs: Vec<(Vec<O>, f64)> =
             pool::parallel_map(slots.len(), self.cfg.workers, 1, |t| {
                 let bucket = slots[t].lock().unwrap().take().expect("taken once");
+                let mut tspan = crate::span!("exec.cluster.{label}.task");
+                tspan.records_in(bucket.iter().map(|(_, vs)| vs.len() as u64).sum());
                 let timer = Timer::start();
                 let mut out = Vec::new();
                 for (k, vs) in bucket {
                     out.extend(f(&k, vs));
                 }
-                (out, timer.elapsed_ms())
+                let ms = timer.elapsed_ms();
+                tspan.records_out(out.len() as u64);
+                (out, ms)
             });
         let total_records: usize = metas.iter().map(|&(_, r)| r).sum();
         let tasks: Vec<SimTask> = outs

@@ -222,6 +222,10 @@ impl Backend for HadoopSim {
             name: format!("{}-{label}", self.cfg.name),
             ..self.cfg.clone()
         };
+        // the fused engine replaces the default trait's per-phase spans
+        // with ONE job span carrying the shuffle volume
+        let mut span = crate::span!("exec.hadoop.{label}");
+        span.records_in(input.len() as u64);
         let input: Vec<((), I)> = input.into_iter().map(|v| ((), v)).collect();
         let mapper = FnMapper { f: map, _types: PhantomData };
         let reducer = FnReducer { f: reduce, _types: PhantomData };
@@ -232,6 +236,9 @@ impl Backend for HadoopSim {
             }
             None => run_job(&cfg, &mapper, &reducer, input, &self.dfs)?,
         };
+        span.records_out(out.len() as u64);
+        span.bytes(stats.shuffle_bytes);
+        crate::obs::counter("exec.hadoop.jobs", 1);
         self.stats.lock().unwrap().push(stats);
         Ok(out.into_iter().map(|(o, _unit)| o).collect())
     }
@@ -255,10 +262,15 @@ impl Backend for HadoopSim {
             name: format!("{}-{label}", self.cfg.name),
             ..self.cfg.clone()
         };
+        let mut span = crate::span!("exec.hadoop.{label}");
+        span.records_in(pairs.len() as u64);
         let input: Vec<((), (K, V))> = pairs.into_iter().map(|p| ((), p)).collect();
         let mapper = PairMapper { _types: PhantomData };
         let reducer = FnReducer { f: reduce, _types: PhantomData };
         let (out, stats) = run_job(&cfg, &mapper, &reducer, input, &self.dfs)?;
+        span.records_out(out.len() as u64);
+        span.bytes(stats.shuffle_bytes);
+        crate::obs::counter("exec.hadoop.jobs", 1);
         self.stats.lock().unwrap().push(stats);
         Ok(out.into_iter().map(|(o, _unit)| o).collect())
     }

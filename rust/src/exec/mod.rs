@@ -213,6 +213,8 @@ pub fn run_named(
     tune: &ExecTuning,
 ) -> Result<PipelineRun> {
     let timer = Timer::start();
+    let mut span = crate::span!("exec.run.{}", name);
+    span.records_in(ctx.tuples().len() as u64);
     let (backend, clusters) = match name {
         "seq" if tune.parallel_ingest => {
             ("seq", run_pipeline_ingest(&Sequential, ctx, theta, 1)?)
@@ -250,6 +252,8 @@ pub fn run_named(
             "unknown backend {other:?} (expected seq|pool|hadoop|spark|cluster)"
         ),
     };
+    span.records_out(clusters.len() as u64);
+    drop(span);
     Ok(PipelineRun { backend, clusters, wall_ms: timer.elapsed_ms() })
 }
 

@@ -115,9 +115,13 @@ pub fn stage1_cumuli_ingest(
     arity: usize,
     workers: usize,
 ) -> Vec<(SubRelation, Vec<u32>)> {
+    let mut span = crate::span!("exec.ingest.s1");
+    span.records_in(tuples.len() as u64);
     let mut store = crate::oac::primes::PrimeStore::new(arity);
     store.par_add_batch(tuples, workers);
-    store.cumuli()
+    let cumuli = store.cumuli();
+    span.records_out(cumuli.len() as u64);
+    cumuli
 }
 
 /// Stage 2 on any backend: cumuli → one ⟨components, generating tuple⟩
@@ -168,10 +172,13 @@ pub fn run_pipeline<B: Backend>(
     theta: f64,
     combiner: bool,
 ) -> Result<Vec<Cluster>> {
+    let mut span = crate::span!("exec.pipeline.{}", backend.name());
+    span.records_in(ctx.tuples().len() as u64);
     let cumuli = stage1_cumuli(backend, ctx.tuples().to_vec(), combiner)?;
     let assembled = stage2_assembly(backend, cumuli)?;
     let mut clusters = stage3_dedup_density(backend, assembled, theta)?;
     crate::core::pattern::sort_clusters(&mut clusters);
+    span.records_out(clusters.len() as u64);
     Ok(clusters)
 }
 
@@ -185,10 +192,13 @@ pub fn run_pipeline_ingest<B: Backend>(
     theta: f64,
     workers: usize,
 ) -> Result<Vec<Cluster>> {
+    let mut span = crate::span!("exec.pipeline.{}-ingest", backend.name());
+    span.records_in(ctx.tuples().len() as u64);
     let cumuli = stage1_cumuli_ingest(ctx.tuples(), ctx.arity(), workers);
     let assembled = stage2_assembly(backend, cumuli)?;
     let mut clusters = stage3_dedup_density(backend, assembled, theta)?;
     crate::core::pattern::sort_clusters(&mut clusters);
+    span.records_out(clusters.len() as u64);
     Ok(clusters)
 }
 

@@ -43,6 +43,13 @@
 //! cluster via [`exec::Placement`], with shuffle-cost accounting and
 //! node churn + snapshot replay.
 //!
+//! Every layer reports through the zero-dependency [`obs`] telemetry
+//! plane — counters, gauges, log2 histograms, and hierarchical spans
+//! behind a no-op-by-default global handle, exported as a JSON metrics
+//! snapshot and a Chrome-trace (`trace_event`) JSONL that loads in
+//! Perfetto (CLI: `--metrics-out` / `--trace-out`; schema gated by
+//! `ci/check_trace.rs`, overhead gated by `ci/check_bench.rs`).
+//!
 //! docs/PAPER_MAP.md maps every algorithm, complexity claim, and
 //! experiment in the paper to the module implementing it and the
 //! invariant guarding it (CI path-checks the map via `ci/check_docs.rs`).
@@ -56,6 +63,7 @@ pub mod hadoop;
 pub mod mmc;
 pub mod noac;
 pub mod oac;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod spark;

@@ -38,24 +38,38 @@ COMMANDS
              [--placement rr|locality|least] [--node-slots N]
              [--churn P] [--restart-ms MS]
              [--shuffle-ms-per-mib MS] [--shuffle-bytes B]
+             [--metrics-out f.json] [--trace-out f.jsonl]
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
   density    [--edge N] [--engine exact|xla|mc]
   serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
              [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
              [--nodes N] [--placement rr|locality|least] [--churn P]
              [--node-slots S] [--source-skew A] [--restart-ms MS]
-             [--pipeline on|off]   (--nodes places shards on a simulated
-                                    cluster: shuffle costs, churn, replay)
+             [--pipeline on|off] [--metrics-out f.json] [--trace-out f.jsonl]
+             (--nodes places shards on a simulated cluster: shuffle costs,
+              churn, replay)
   experiment --id table3|table4|fig2|table5|backends|cluster-scaling|
                   serve-cluster|skew|faults|engines|memory
              [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
+             [--metrics-out f.json] [--trace-out f.jsonl]
+
+TELEMETRY: --metrics-out writes a JSON metrics snapshot, --trace-out a
+Chrome-trace JSONL (chrome://tracing / ui.perfetto.dev). Either flag turns
+the recorder on and prints a metrics table to stderr. Works on any command.
 
 DATASETS: imdb k1 k2 k3 ml100k ml250k ml500k ml1m bibsonomy
 ";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    match args.command.as_deref() {
+    // --metrics-out / --trace-out turn the telemetry plane on for the
+    // whole run; the export happens even when the command errors, so a
+    // failed run still leaves its trace behind
+    let telemetry = args.get("metrics-out").is_some() || args.get("trace-out").is_some();
+    if telemetry {
+        tricluster::obs::enable();
+    }
+    let result = match args.command.as_deref() {
         Some("info") => info(),
         Some("generate") => generate(&args),
         Some("online") => online(&args),
@@ -68,7 +82,32 @@ fn main() -> Result<()> {
             print!("{USAGE}");
             Ok(())
         }
+    };
+    if telemetry {
+        obs_export(&args)?;
     }
+    result
+}
+
+/// Write the `--trace-out` / `--metrics-out` artefacts and print the
+/// metrics table to stderr (stdout stays clean for the command output).
+fn obs_export(args: &Args) -> Result<()> {
+    use tricluster::obs::{self, export};
+    let snap = obs::snapshot();
+    if let Some(path) = args.get("trace-out") {
+        let events = obs::take_trace();
+        export::write_trace(std::path::Path::new(path), &events)?;
+        eprintln!(
+            "trace: {path} ({} events; load in chrome://tracing or ui.perfetto.dev)",
+            events.len()
+        );
+    }
+    if let Some(path) = args.get("metrics-out") {
+        export::write_metrics(std::path::Path::new(path), &snap)?;
+        eprintln!("metrics: {path}");
+    }
+    eprint!("{}", export::render_table(&snap));
+    Ok(())
 }
 
 fn load(args: &Args) -> Result<tricluster::core::context::PolyContext> {

@@ -35,8 +35,13 @@ impl OnlineMiner {
         Self { primes: PrimeStore::new(arity), generated: Vec::new() }
     }
 
-    /// Alg. 1 `Add`: process a batch `J ⊆ I`.
+    /// Alg. 1 `Add`: process a batch `J ⊆ I`. The span is per BATCH —
+    /// the per-tuple loop never touches the telemetry plane (the
+    /// `obs_overhead` bench gate holds the disabled cost to one atomic
+    /// load per batch).
     pub fn add_batch(&mut self, batch: &[NTuple]) {
+        let mut span = crate::span!("oac.ingest.batch");
+        span.records_in(batch.len() as u64);
         self.generated.reserve(batch.len());
         for t in batch {
             let set_ids = self.primes.add(t);
@@ -111,8 +116,12 @@ impl OnlineMiner {
         // seal first: the dedup touches every shared set twice
         // (fingerprint pass + representative materialisation), and every
         // later call over unchanged state becomes pure memcpys
+        let mut span = crate::span!("oac.dedup");
+        span.records_in(self.generated.len() as u64);
         self.primes.arena.ensure_sorted_all();
-        dedup_generated(&self.primes.arena, &self.generated, constraints)
+        let out = dedup_generated(&self.primes.arena, &self.generated, constraints);
+        span.records_out(out.len() as u64);
+        out
     }
 }
 

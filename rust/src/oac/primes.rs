@@ -200,6 +200,18 @@ impl SetArena {
         self.sets.len()
     }
 
+    /// Pages ever carved from the shared pool (monotone; freed pages are
+    /// recycled, not returned) — telemetry reads this at batch
+    /// granularity so the per-push hot path stays recorder-free.
+    pub fn pages(&self) -> usize {
+        self.pool.len() / PAGE
+    }
+
+    /// Pages currently parked on the free list.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
     /// True before the first allocation.
     pub fn is_empty(&self) -> bool {
         self.sets.is_empty()
@@ -244,8 +256,11 @@ impl SetArena {
         out.reserve(m.sorted.len() + m.pending as usize);
         out.extend_from_slice(&m.sorted);
         if m.pending == 0 {
-            return; // §Perf fast path: the cached sorted view is current
+            // §Perf fast path: the cached sorted view is current
+            crate::obs::counter("oac.arena.cache_hit", 1);
+            return;
         }
+        crate::obs::counter("oac.arena.cache_miss", 1);
         self.gather_pending(m, out);
         out.sort_unstable();
         out.dedup();
@@ -288,8 +303,22 @@ impl SetArena {
     /// inside the dedup (fingerprint pass + representative pass) and
     /// every later query-path materialisation are memcpys.
     pub fn ensure_sorted_all(&mut self) {
+        let track = crate::obs::enabled();
+        let free_before = self.free.len();
+        let dirty = if track {
+            self.sets.iter().filter(|m| m.pending > 0).count()
+        } else {
+            0
+        };
         for id in 0..self.sets.len() {
             self.ensure_sorted(id as SetId);
+        }
+        if track {
+            crate::obs::counter("oac.arena.sort_merge", dirty as u64);
+            crate::obs::counter(
+                "oac.arena.page_recycle",
+                (self.free.len() - free_before) as u64,
+            );
         }
     }
 
@@ -539,12 +568,26 @@ impl PrimeStore {
         chunk: usize,
     ) -> Vec<SetIds> {
         let chunk = chunk.max(1);
+        // telemetry is batch/chunk-granularity ONLY: the per-tuple `add`
+        // loop below never touches the recorder, which is what the
+        // `obs_overhead` bench gate measures against
+        let mut span = crate::span!("oac.ingest.par_batch");
+        span.records_in(batch.len() as u64);
+        let pages_before = self.arena.pages();
         if self.packed.is_empty() || workers <= 1 || batch.len() <= chunk {
-            return batch.iter().map(|t| self.add(t)).collect();
+            let out: Vec<SetIds> = batch.iter().map(|t| self.add(t)).collect();
+            crate::obs::counter(
+                "oac.arena.page_alloc",
+                (self.arena.pages() - pages_before) as u64,
+            );
+            return out;
         }
         let arity = self.arity;
         let chunks: Vec<&[NTuple]> = batch.chunks(chunk).collect();
+        crate::obs::counter("oac.ingest.chunks", chunks.len() as u64);
         let locals = pool::parallel_map(chunks.len(), workers, 1, |ci| {
+            let mut cspan = crate::span!("oac.ingest.chunk");
+            cspan.records_in(chunks[ci].len() as u64);
             let mut store = PrimeStore::new(arity);
             let mut log: Vec<(u8, u128)> = Vec::new();
             let mut ids = Vec::with_capacity(chunks[ci].len());
@@ -574,6 +617,11 @@ impl PrimeStore {
             }
             out.extend(ids.iter().map(|sid| sid.remapped(&remap)));
         }
+        crate::obs::counter(
+            "oac.arena.page_alloc",
+            (self.arena.pages() - pages_before) as u64,
+        );
+        span.records_out(out.len() as u64);
         out
     }
 

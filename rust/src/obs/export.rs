@@ -1,0 +1,221 @@
+//! Surfacing: Chrome-trace JSONL, the JSON metrics snapshot, and the
+//! stderr text table.
+//!
+//! * [`write_trace`] — one `trace_event` JSON object per line
+//!   (`name`/`ph`/`ts`/`pid`/`tid`, `E` lines carry
+//!   `args.{records_in,records_out,bytes}`). Load it in
+//!   `chrome://tracing` or <https://ui.perfetto.dev> ("Open trace
+//!   file"); both accept newline-delimited event objects.
+//! * [`write_metrics`] — `{"schema":"tricluster-metrics-v1", counters,
+//!   gauges, histograms}` on a single line via [`crate::util::json`].
+//! * [`render_table`] — the `MetricsReport` text table `main.rs`
+//!   prints to stderr when telemetry is on.
+//!
+//! Schema validity of both files is CI-gated by `ci/check_trace.rs`.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::recorder::Snapshot;
+use super::span::TraceEvent;
+
+/// Schema tag stamped into every metrics snapshot.
+pub const METRICS_SCHEMA: &str = "tricluster-metrics-v1";
+
+/// All events in one simulated process for the trace viewer.
+pub const TRACE_PID: u64 = 1;
+
+/// Render one event as a compact Chrome `trace_event` JSON object.
+pub fn event_json(ev: &TraceEvent) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("name".into(), Json::Str(ev.name.clone()));
+    obj.insert("ph".into(), Json::Str(if ev.begin { "B" } else { "E" }.into()));
+    obj.insert("ts".into(), Json::Num(ev.ts_us as f64));
+    obj.insert("pid".into(), Json::Num(TRACE_PID as f64));
+    obj.insert("tid".into(), Json::Num(ev.tid as f64));
+    if !ev.begin && (ev.records_in | ev.records_out | ev.bytes) != 0 {
+        let mut args = BTreeMap::new();
+        args.insert("records_in".into(), Json::Num(ev.records_in as f64));
+        args.insert("records_out".into(), Json::Num(ev.records_out as f64));
+        args.insert("bytes".into(), Json::Num(ev.bytes as f64));
+        obj.insert("args".into(), Json::Obj(args));
+    }
+    Json::Obj(obj)
+}
+
+/// Write `events` as Chrome-trace JSONL (one event object per line).
+pub fn write_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+/// The JSON form of a metrics snapshot
+/// (`schema = `[`METRICS_SCHEMA`]).
+pub fn snapshot_json(snap: &Snapshot) -> Json {
+    let counters: BTreeMap<String, Json> = snap
+        .counters
+        .iter()
+        .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+        .collect();
+    let gauges: BTreeMap<String, Json> =
+        snap.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+    let hists: BTreeMap<String, Json> = snap
+        .hists
+        .iter()
+        .map(|(k, h)| {
+            let mut o = BTreeMap::new();
+            o.insert("count".into(), Json::Num(h.count as f64));
+            o.insert("sum".into(), Json::Num(h.sum as f64));
+            o.insert(
+                "min".into(),
+                Json::Num(if h.count == 0 { 0.0 } else { h.min as f64 }),
+            );
+            o.insert("max".into(), Json::Num(h.max as f64));
+            o.insert("p50".into(), Json::Num(h.quantile(0.5) as f64));
+            o.insert("p95".into(), Json::Num(h.quantile(0.95) as f64));
+            o.insert(
+                "buckets".into(),
+                Json::Arr(h.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            );
+            (k.clone(), Json::Obj(o))
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str(METRICS_SCHEMA.into()));
+    root.insert("counters".into(), Json::Obj(counters));
+    root.insert("gauges".into(), Json::Obj(gauges));
+    root.insert("histograms".into(), Json::Obj(hists));
+    Json::Obj(root)
+}
+
+/// Write the metrics snapshot JSON to `path`.
+pub fn write_metrics(path: &Path, snap: &Snapshot) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", snapshot_json(snap)))
+}
+
+/// The `MetricsReport` text table: counters, gauges, and histogram
+/// summaries, aligned, one section each — printed to stderr by the CLI
+/// when telemetry is on.
+pub fn render_table(snap: &Snapshot) -> String {
+    let mut out = String::from("== metrics report ==\n");
+    if snap.is_empty() {
+        out.push_str("(nothing recorded)\n");
+        return out;
+    }
+    let key_w = snap
+        .counters
+        .keys()
+        .chain(snap.gauges.keys())
+        .chain(snap.hists.keys())
+        .map(String::len)
+        .max()
+        .unwrap_or(0);
+    if !snap.counters.is_empty() {
+        out.push_str("counters:\n");
+        for (k, v) in &snap.counters {
+            out.push_str(&format!("  {k:<key_w$}  {v}\n"));
+        }
+    }
+    if !snap.gauges.is_empty() {
+        out.push_str("gauges:\n");
+        for (k, v) in &snap.gauges {
+            out.push_str(&format!("  {k:<key_w$}  {v:.3}\n"));
+        }
+    }
+    if !snap.hists.is_empty() {
+        out.push_str("histograms:            count        mean         p50         p95         max\n");
+        for (k, h) in &snap.hists {
+            out.push_str(&format!(
+                "  {k:<key_w$}  {:>7}  {:>10.1}  {:>10}  {:>10}  {:>10}\n",
+                h.count,
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.95),
+                h.max
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn trace_jsonl_lines_parse_and_balance() {
+        let _g = obs::tests::lock();
+        obs::reset();
+        obs::enable();
+        {
+            let _a = crate::span!("t.exp.outer");
+            let mut b = crate::span!("t.exp.inner");
+            b.records_in(2);
+            b.bytes(128);
+        }
+        let events = obs::take_trace();
+        obs::disable();
+        obs::reset();
+        let mut depth = 0i64;
+        for ev in &events {
+            let j = Json::parse(&event_json(ev).to_string()).unwrap();
+            assert!(j.get("name").unwrap().as_str().is_some());
+            let ph = j.get("ph").unwrap().as_str().unwrap();
+            assert!(ph == "B" || ph == "E");
+            assert!(j.get("ts").unwrap().as_f64().is_some());
+            assert_eq!(j.get("pid").unwrap().as_usize(), Some(TRACE_PID as usize));
+            assert!(j.get("tid").unwrap().as_f64().is_some());
+            depth += if ph == "B" { 1 } else { -1 };
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0, "B/E balanced");
+        // the inner E carries its args
+        let inner_end = events
+            .iter()
+            .find(|e| !e.begin && e.name == "t.exp.inner")
+            .unwrap();
+        let j = Json::parse(&event_json(inner_end).to_string()).unwrap();
+        let args = j.get("args").unwrap();
+        assert_eq!(args.get("records_in").unwrap().as_usize(), Some(2));
+        assert_eq!(args.get("bytes").unwrap().as_usize(), Some(128));
+    }
+
+    #[test]
+    fn snapshot_json_schema_and_table() {
+        let _g = obs::tests::lock();
+        obs::reset();
+        obs::enable();
+        obs::counter("t.exp.count", 9);
+        obs::gauge("t.exp.gauge", 2.5);
+        obs::observe("t.exp.lat.us", 300);
+        let snap = obs::snapshot();
+        obs::disable();
+        obs::reset();
+        let j = Json::parse(&snapshot_json(&snap).to_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
+        assert_eq!(
+            j.get("counters").unwrap().get("t.exp.count").unwrap().as_usize(),
+            Some(9)
+        );
+        let h = j.get("histograms").unwrap().get("t.exp.lat.us").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            h.get("buckets").unwrap().as_arr().unwrap().len(),
+            crate::obs::recorder::HIST_BUCKETS
+        );
+        let table = render_table(&snap);
+        assert!(table.contains("t.exp.count"));
+        assert!(table.contains("t.exp.gauge"));
+        assert!(table.contains("t.exp.lat.us"));
+        assert!(render_table(&Snapshot::default()).contains("nothing recorded"));
+    }
+}

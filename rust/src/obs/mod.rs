@@ -1,0 +1,319 @@
+//! Zero-dependency observability plane: counters, gauges, log2
+//! histograms, and hierarchical spans behind a global no-op-by-default
+//! handle.
+//!
+//! The paper's core claims are measurements — per-stage M/R cost,
+//! scalability under distribution — so the stack needs to SEE where a
+//! makespan went. This module is the single telemetry substrate every
+//! layer reports through:
+//!
+//! * **Recorder** ([`recorder`]): counters, gauges, and log2-bucketed
+//!   histograms accumulated in per-thread shards (one uncontended mutex
+//!   per thread, merged deterministically at snapshot time — the same
+//!   shard-then-merge discipline as [`crate::util::pool::parallel_fold`];
+//!   counter addition commutes, so totals are identical for any thread
+//!   interleaving).
+//! * **Spans** ([`span`]): RAII guards capturing wall time, records
+//!   in/out, and bytes, with parent/child nesting per thread. Every
+//!   span emits a `B`/`E` pair in Chrome `trace_event` format
+//!   (`chrome://tracing` / Perfetto loadable — see
+//!   docs/ARCHITECTURE.md §Observability) plus a call counter and a
+//!   duration histogram in the metrics snapshot.
+//! * **Export** ([`export`]): JSON metrics snapshot
+//!   (`schema: tricluster-metrics-v1`), Chrome-trace JSONL, and a
+//!   stderr text table ([`export::render_table`]).
+//!
+//! # Cost discipline
+//!
+//! When disabled (the default), every entry point is ONE relaxed atomic
+//! load and a branch — [`enabled`] — and the [`span!`] macro skips even
+//! the name formatting. Instrumentation is placed at batch/chunk/task
+//! granularity, never per tuple, so the hot ingest kernel is untouched
+//! either way; `benches/hotpath.rs` measures both modes and
+//! `ci/check_bench.rs` gates the disabled-mode overhead at ≤ 3%.
+//!
+//! # Determinism
+//!
+//! Enabling telemetry never changes results (property-tested in
+//! `rust/tests/obs_equivalence.rs`): the recorder only observes. For a
+//! fixed seed the span MULTISET — names, per-thread nesting, counts —
+//! is deterministic too; only timestamps and durations vary run to run.
+//!
+//! # Example
+//!
+//! ```
+//! use tricluster::obs;
+//! obs::reset();
+//! obs::enable();
+//! {
+//!     let mut s = tricluster::span!("demo.work");
+//!     s.records_in(3);
+//!     obs::counter("demo.widgets", 3);
+//! }
+//! let snap = obs::snapshot();
+//! assert_eq!(snap.counters["demo.widgets"], 3);
+//! assert_eq!(snap.counters["demo.work.calls"], 1);
+//! assert_eq!(obs::take_trace().len(), 2); // balanced B + E
+//! obs::disable();
+//! obs::reset();
+//! ```
+
+pub mod export;
+pub mod recorder;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+pub use recorder::{Hist, Snapshot};
+pub use span::{Span, TraceEvent};
+
+/// The one global switch. Relaxed is enough: telemetry has no ordering
+/// relationship with the data it observes.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// True when the global recorder is on. This is the single branch the
+/// instrumented hot paths pay when telemetry is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the global recorder on (also pins the trace-timestamp epoch on
+/// first use).
+pub fn enable() {
+    recorder::recorder().touch_epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn the global recorder off. Already-open spans still close their
+/// `B`/`E` pairs, so traces stay balanced.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Clear every counter, gauge, histogram, and buffered trace event.
+/// Do not call while spans are open (their `E` events would orphan).
+pub fn reset() {
+    recorder::recorder().reset();
+}
+
+/// Add `delta` to counter `name` (no-op when disabled).
+#[inline]
+pub fn counter(name: &str, delta: u64) {
+    if enabled() {
+        recorder::recorder().counter(name, delta);
+    }
+}
+
+/// Set gauge `name` to `value` for this thread; the snapshot keeps the
+/// MAX across threads, so gauges are high-water marks (no-op when
+/// disabled).
+#[inline]
+pub fn gauge(name: &str, value: f64) {
+    if enabled() {
+        recorder::recorder().gauge(name, value);
+    }
+}
+
+/// Record `value` into the log2-bucketed histogram `name` (no-op when
+/// disabled). Durations go in as microseconds by convention (`*.us`).
+#[inline]
+pub fn observe(name: &str, value: u64) {
+    if enabled() {
+        recorder::recorder().observe(name, value);
+    }
+}
+
+/// Microseconds since the recorder epoch — the trace timestamp clock.
+#[inline]
+pub fn now_us() -> u64 {
+    recorder::recorder().now_us()
+}
+
+/// Merged view of every shard's counters/gauges/histograms.
+pub fn snapshot() -> Snapshot {
+    recorder::recorder().snapshot()
+}
+
+/// Drain every buffered trace event (grouped by thread, per-thread
+/// order preserved — `B`/`E` pairs stay balanced per `tid`).
+pub fn take_trace() -> Vec<TraceEvent> {
+    recorder::recorder().take_trace()
+}
+
+/// Wall-clock stopwatch — THE clock primitive of the crate (spans,
+/// benches, and the experiment harness all time through it;
+/// `util::stats` re-exports it for its older call sites).
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Time since `start`.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Time since `start`, ms.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` under a span named `name`, returning its result and the
+/// elapsed milliseconds. The milliseconds are measured whether or not
+/// the recorder is enabled — this is the one-off-timer replacement for
+/// the experiment harness (`let t = Timer::start(); ...; t.elapsed_ms()`
+/// blocks fold onto it), with the span riding along for free when
+/// telemetry is on.
+pub fn time_ms<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let span =
+        if enabled() { Span::begin(name.to_string()) } else { Span::disabled() };
+    let t = Timer::start();
+    let out = f();
+    let ms = t.elapsed_ms();
+    drop(span);
+    (out, ms)
+}
+
+/// Open a [`Span`](crate::obs::Span) guard: `let mut s =
+/// span!("exec.{}-map", label);`. When the recorder is disabled this is
+/// one branch — the format arguments are never evaluated.
+#[macro_export]
+macro_rules! span {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        if $crate::obs::enabled() {
+            $crate::obs::Span::begin(format!($fmt $(, $arg)*))
+        } else {
+            $crate::obs::Span::disabled()
+        }
+    };
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Tests that enable the GLOBAL recorder must serialise; everything
+    /// obs-touching in this crate's unit tests goes through this lock.
+    pub(crate) fn lock() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        let m = LOCK.get_or_init(|| Mutex::new(()));
+        m.lock().unwrap_or_else(|poison| poison.into_inner())
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = lock();
+        disable();
+        reset();
+        counter("t.never", 5);
+        observe("t.never.us", 10);
+        gauge("t.never.g", 1.0);
+        let _s = crate::span!("t.never.span");
+        drop(_s);
+        let snap = snapshot();
+        assert!(snap.counters.is_empty());
+        assert!(snap.gauges.is_empty());
+        assert!(snap.hists.is_empty());
+        assert!(take_trace().is_empty());
+    }
+
+    #[test]
+    fn counters_merge_across_threads() {
+        let _g = lock();
+        reset();
+        enable();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        counter("t.merge", 2);
+                    }
+                });
+            }
+        });
+        counter("t.merge", 1);
+        let snap = snapshot();
+        assert_eq!(snap.counters["t.merge"], 801);
+        disable();
+        reset();
+    }
+
+    #[test]
+    fn gauge_keeps_max_and_hist_buckets() {
+        let _g = lock();
+        reset();
+        enable();
+        gauge("t.queue", 3.0);
+        gauge("t.queue", 7.0);
+        gauge("t.queue", 5.0);
+        for v in [0u64, 1, 2, 3, 1024] {
+            observe("t.vals", v);
+        }
+        let snap = snapshot();
+        assert_eq!(snap.gauges["t.queue"], 7.0);
+        let h = &snap.hists["t.vals"];
+        assert_eq!(h.count, 5);
+        assert_eq!(h.sum, 1030);
+        assert_eq!(h.min, 0);
+        assert_eq!(h.max, 1024);
+        // 0→bucket 0, 1→1, 2..3→2, 1024→11
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(h.buckets[11], 1);
+        disable();
+        reset();
+    }
+
+    #[test]
+    fn spans_nest_and_balance() {
+        let _g = lock();
+        reset();
+        enable();
+        {
+            let mut outer = crate::span!("t.outer");
+            outer.records_in(10);
+            {
+                let mut inner = crate::span!("t.inner");
+                inner.records_out(4);
+                inner.bytes(64);
+            }
+        }
+        let events = take_trace();
+        assert_eq!(events.len(), 4);
+        // same thread: B(outer) B(inner) E(inner) E(outer)
+        assert!(events[0].begin && events[0].name == "t.outer");
+        assert!(events[1].begin && events[1].name == "t.inner");
+        assert!(!events[2].begin && events[2].name == "t.inner");
+        assert!(!events[3].begin && events[3].name == "t.outer");
+        assert_eq!(events[2].records_out, 4);
+        assert_eq!(events[2].bytes, 64);
+        assert_eq!(events[3].records_in, 10);
+        assert!(events[3].ts_us >= events[0].ts_us);
+        let snap = snapshot();
+        assert_eq!(snap.counters["t.outer.calls"], 1);
+        assert_eq!(snap.hists["t.inner.us"].count, 1);
+        disable();
+        reset();
+    }
+
+    #[test]
+    fn time_ms_measures_even_when_disabled() {
+        let _g = lock();
+        disable();
+        reset();
+        let (out, ms) = time_ms("t.timed", || 41 + 1);
+        assert_eq!(out, 42);
+        assert!(ms >= 0.0);
+        assert!(snapshot().counters.is_empty());
+    }
+}

@@ -1,0 +1,390 @@
+//! The global [`Recorder`]: per-thread metric shards and their
+//! deterministic merge.
+//!
+//! Every recording thread owns ONE shard (counters + gauges +
+//! histograms + trace-event buffer) behind a mutex only that thread
+//! locks on the hot path — contention exists solely against snapshot /
+//! trace readers, which are rare. Dead threads' shards (the scoped
+//! `util::pool` workers live only for one parallel call) are garbage
+//! collected into a `retired` accumulator on the next read, so a long
+//! run with thousands of short-lived workers never scans thousands of
+//! shards.
+//!
+//! Merge rules (deterministic for any thread interleaving): counters
+//! and histogram buckets ADD (commutative), gauges take the MAX
+//! (gauges are high-water marks — e.g. the router's peak queue depth).
+
+use std::cell::OnceCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::hash::FxHashMap;
+
+use super::span::TraceEvent;
+
+/// Log2 histogram bucket count: bucket 0 holds value 0, bucket `b ≥ 1`
+/// holds values in `[2^(b-1), 2^b)`, up to `b = 64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Bucket index of `v` in a log2 histogram.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// A log2-bucketed histogram (counts per power-of-two bucket, plus
+/// exact count/sum/min/max).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    /// Observations recorded.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: u64,
+    /// Smallest observed value (`u64::MAX` while empty).
+    pub min: u64,
+    /// Largest observed value.
+    pub max: u64,
+    /// Per-bucket counts, `HIST_BUCKETS` long (see [`bucket_of`]).
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { count: 0, sum: 0, min: u64::MAX, max: 0, buckets: vec![0; HIST_BUCKETS] }
+    }
+}
+
+impl Hist {
+    fn observe(&mut self, v: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    fn merge(&mut self, other: &Hist) {
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Mean observed value (0 while empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in 0..=1): the UPPER bound of the
+    /// bucket holding the q-th observation — log2-resolution, good
+    /// enough for latency reporting.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return if b == 0 { 0 } else { (1u64 << b).saturating_sub(1).min(self.max) };
+            }
+        }
+        self.max
+    }
+}
+
+/// One thread's private slice of the recorder.
+#[derive(Debug, Default)]
+struct Shard {
+    counters: FxHashMap<String, u64>,
+    gauges: FxHashMap<String, f64>,
+    hists: FxHashMap<String, Hist>,
+    events: Vec<TraceEvent>,
+}
+
+impl Shard {
+    fn clear(&mut self) {
+        self.counters.clear();
+        self.gauges.clear();
+        self.hists.clear();
+        self.events.clear();
+    }
+
+    fn merge_from(&mut self, other: &mut Shard) {
+        for (k, v) in other.counters.drain() {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in other.gauges.drain() {
+            let g = self.gauges.entry(k).or_insert(f64::MIN);
+            if v > *g {
+                *g = v;
+            }
+        }
+        for (k, h) in other.hists.drain() {
+            self.hists.entry(k).or_default().merge(&h);
+        }
+        self.events.append(&mut other.events);
+    }
+}
+
+/// Merged, key-sorted view of every shard at one instant.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Monotonic counters, summed across threads.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauges (per-thread last-write, max across threads).
+    pub gauges: BTreeMap<String, f64>,
+    /// Log2 histograms, bucket-wise summed across threads.
+    pub hists: BTreeMap<String, Hist>,
+}
+
+impl Snapshot {
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+}
+
+/// The global sink behind [`crate::obs`]'s free functions: thread-local
+/// shards, a retired-shard accumulator, and the trace epoch.
+pub struct Recorder {
+    next_tid: AtomicU32,
+    epoch: OnceLock<Instant>,
+    shards: Mutex<Vec<(u32, Arc<Mutex<Shard>>)>>,
+    /// Data of threads that have exited, merged on gc.
+    retired: Mutex<Shard>,
+}
+
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-wide recorder instance.
+pub fn recorder() -> &'static Recorder {
+    RECORDER.get_or_init(|| Recorder {
+        next_tid: AtomicU32::new(0),
+        epoch: OnceLock::new(),
+        shards: Mutex::new(Vec::new()),
+        retired: Mutex::new(Shard::default()),
+    })
+}
+
+thread_local! {
+    /// This thread's shard handle (`tid`, shard), registered globally on
+    /// first use and kept alive by the registry after the thread dies.
+    static LOCAL: OnceCell<(u32, Arc<Mutex<Shard>>)> = const { OnceCell::new() };
+}
+
+impl Recorder {
+    /// Pin the trace-timestamp epoch (idempotent).
+    pub fn touch_epoch(&self) {
+        self.epoch.get_or_init(Instant::now);
+    }
+
+    /// Microseconds since the epoch.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.get_or_init(Instant::now).elapsed().as_micros() as u64
+    }
+
+    fn with_local<R>(&self, f: impl FnOnce(u32, &mut Shard) -> R) -> R {
+        LOCAL.with(|cell| {
+            let (tid, shard) = cell.get_or_init(|| {
+                let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
+                let shard = Arc::new(Mutex::new(Shard::default()));
+                self.shards.lock().unwrap().push((tid, Arc::clone(&shard)));
+                (tid, shard)
+            });
+            f(*tid, &mut shard.lock().unwrap())
+        })
+    }
+
+    pub(super) fn counter(&self, name: &str, delta: u64) {
+        self.with_local(|_, s| match s.counters.get_mut(name) {
+            Some(v) => *v += delta,
+            None => {
+                s.counters.insert(name.to_string(), delta);
+            }
+        });
+    }
+
+    pub(super) fn gauge(&self, name: &str, value: f64) {
+        self.with_local(|_, s| match s.gauges.get_mut(name) {
+            Some(v) => *v = value,
+            None => {
+                s.gauges.insert(name.to_string(), value);
+            }
+        });
+    }
+
+    pub(super) fn observe(&self, name: &str, value: u64) {
+        self.with_local(|_, s| match s.hists.get_mut(name) {
+            Some(h) => h.observe(value),
+            None => {
+                s.hists.entry(name.to_string()).or_default().observe(value);
+            }
+        });
+    }
+
+    /// Buffer one trace event on the calling thread's shard, returning
+    /// the thread's stable `tid`.
+    pub(super) fn push_event(&self, mut ev: TraceEvent) -> u32 {
+        self.with_local(|tid, s| {
+            ev.tid = tid;
+            s.events.push(ev);
+            tid
+        })
+    }
+
+    /// Fold shards of dead threads (registry holds the only Arc) into
+    /// `retired`, under the registry lock the caller already holds.
+    fn gc(&self, shards: &mut Vec<(u32, Arc<Mutex<Shard>>)>) {
+        let mut retired = self.retired.lock().unwrap();
+        shards.retain(|(_, arc)| {
+            if Arc::strong_count(arc) > 1 {
+                return true;
+            }
+            retired.merge_from(&mut arc.lock().unwrap());
+            false
+        });
+    }
+
+    /// Merged snapshot of every shard (live + retired).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut shards = self.shards.lock().unwrap();
+        self.gc(&mut shards);
+        let mut snap = Snapshot::default();
+        let retired = self.retired.lock().unwrap();
+        let mut fold = |s: &Shard| {
+            for (k, v) in &s.counters {
+                *snap.counters.entry(k.clone()).or_insert(0) += v;
+            }
+            for (k, v) in &s.gauges {
+                let g = snap.gauges.entry(k.clone()).or_insert(f64::MIN);
+                if *v > *g {
+                    *g = *v;
+                }
+            }
+            for (k, h) in &s.hists {
+                snap.hists.entry(k.clone()).or_default().merge(h);
+            }
+        };
+        fold(&retired);
+        drop(retired);
+        for (_, arc) in shards.iter() {
+            fold(&arc.lock().unwrap());
+        }
+        snap
+    }
+
+    /// Drain buffered trace events: retired threads first, then live
+    /// shards in ascending `tid` order (per-thread event order — and so
+    /// per-`tid` `B`/`E` balance — is preserved).
+    pub fn take_trace(&self) -> Vec<TraceEvent> {
+        let mut shards = self.shards.lock().unwrap();
+        self.gc(&mut shards);
+        let mut out: Vec<TraceEvent> =
+            std::mem::take(&mut self.retired.lock().unwrap().events);
+        let mut live: Vec<_> = shards.iter().collect();
+        live.sort_by_key(|(tid, _)| *tid);
+        for (_, arc) in live {
+            out.append(&mut arc.lock().unwrap().events);
+        }
+        out
+    }
+
+    /// Clear every shard (live + retired). Counters, gauges,
+    /// histograms, and buffered events all drop; `tid`s and the epoch
+    /// persist.
+    pub fn reset(&self) {
+        let mut shards = self.shards.lock().unwrap();
+        self.gc(&mut shards);
+        self.retired.lock().unwrap().clear();
+        for (_, arc) in shards.iter() {
+            arc.lock().unwrap().clear();
+        }
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("shards", &self.shards.lock().unwrap().len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 64);
+    }
+
+    #[test]
+    fn hist_merge_and_quantile() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        for v in [1u64, 2, 3] {
+            a.observe(v);
+        }
+        for v in [100u64, 200] {
+            b.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, 5);
+        assert_eq!(a.sum, 306);
+        assert_eq!(a.min, 1);
+        assert_eq!(a.max, 200);
+        assert!((a.mean() - 61.2).abs() < 1e-9);
+        // p50 lands in bucket 2 ([2,4)) → upper bound 3
+        assert_eq!(a.quantile(0.5), 3);
+        // p100 is clamped to the exact max
+        assert_eq!(a.quantile(1.0), 200);
+        let empty = Hist::default();
+        assert_eq!(empty.quantile(0.5), 0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn dead_thread_shards_are_gc_ed_not_lost() {
+        let _g = crate::obs::tests::lock();
+        crate::obs::reset();
+        crate::obs::enable();
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| crate::obs::counter("t.gc", 7));
+            }
+        });
+        // the three worker threads are dead; their shards must survive
+        // the gc as retired data
+        let snap = crate::obs::snapshot();
+        assert_eq!(snap.counters["t.gc"], 21);
+        // and a second snapshot (post-gc) still sees them
+        let snap2 = crate::obs::snapshot();
+        assert_eq!(snap2.counters["t.gc"], 21);
+        crate::obs::disable();
+        crate::obs::reset();
+    }
+}

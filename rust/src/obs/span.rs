@@ -1,0 +1,168 @@
+//! Hierarchical span guards and their Chrome-trace events.
+//!
+//! A [`Span`] is an RAII guard: construction pushes a `B`(egin) event
+//! on the calling thread's shard, drop pushes the matching `E`(nd)
+//! event carrying the accumulated records-in/out and bytes, plus a
+//! `{name}.calls` counter and a `{name}.us` duration histogram into
+//! the metrics plane. Nesting is per thread and purely positional —
+//! exactly the Chrome `trace_event` duration-event model, so the JSONL
+//! written by [`super::export::write_trace`] loads directly in
+//! `chrome://tracing` / Perfetto.
+//!
+//! Spans opened inside `util::pool` worker closures land on the
+//! worker's own `tid` as root spans; for a fixed seed the span
+//! multiset (names, per-thread nesting, counts) is deterministic even
+//! though `tid` assignment is not (asserted by
+//! `rust/tests/obs_equivalence.rs`).
+
+use super::recorder::recorder;
+
+/// One Chrome-trace duration event (`ph: B` or `ph: E`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Span name (dotted taxonomy, e.g. `exec.cluster.task`).
+    pub name: String,
+    /// `true` = `B` (begin), `false` = `E` (end).
+    pub begin: bool,
+    /// Microseconds since the recorder epoch.
+    pub ts_us: u64,
+    /// Recording thread's stable id.
+    pub tid: u32,
+    /// Records entering the span (carried on the `E` event).
+    pub records_in: u64,
+    /// Records leaving the span (carried on the `E` event).
+    pub records_out: u64,
+    /// Bytes moved/processed by the span (carried on the `E` event).
+    pub bytes: u64,
+}
+
+impl TraceEvent {
+    fn begin(name: String, ts_us: u64) -> Self {
+        Self {
+            name,
+            begin: true,
+            ts_us,
+            tid: 0,
+            records_in: 0,
+            records_out: 0,
+            bytes: 0,
+        }
+    }
+}
+
+/// The live half of an enabled span.
+#[derive(Debug)]
+struct Active {
+    name: String,
+    start_us: u64,
+    records_in: u64,
+    records_out: u64,
+    bytes: u64,
+}
+
+/// RAII span guard — see the [module docs](self). Build one with the
+/// [`span!`](crate::span) macro (zero-cost when the recorder is off) or
+/// [`Span::begin`] directly.
+#[derive(Debug)]
+pub struct Span {
+    inner: Option<Active>,
+}
+
+impl Span {
+    /// Open a span NOW: pushes the `B` event. Callers should normally
+    /// go through [`span!`](crate::span), which skips name formatting
+    /// when the recorder is disabled.
+    pub fn begin(name: String) -> Span {
+        let r = recorder();
+        let start_us = r.now_us();
+        r.push_event(TraceEvent::begin(name.clone(), start_us));
+        Span {
+            inner: Some(Active {
+                name,
+                start_us,
+                records_in: 0,
+                records_out: 0,
+                bytes: 0,
+            }),
+        }
+    }
+
+    /// A span that records nothing (the disabled arm of
+    /// [`span!`](crate::span)).
+    pub fn disabled() -> Span {
+        Span { inner: None }
+    }
+
+    /// Add `n` to the span's records-in tally.
+    #[inline]
+    pub fn records_in(&mut self, n: u64) {
+        if let Some(a) = &mut self.inner {
+            a.records_in += n;
+        }
+    }
+
+    /// Add `n` to the span's records-out tally.
+    #[inline]
+    pub fn records_out(&mut self, n: u64) {
+        if let Some(a) = &mut self.inner {
+            a.records_out += n;
+        }
+    }
+
+    /// Add `n` to the span's bytes tally.
+    #[inline]
+    pub fn bytes(&mut self, n: u64) {
+        if let Some(a) = &mut self.inner {
+            a.bytes += n;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        // An opened span ALWAYS closes (even if the recorder was
+        // disabled mid-span), so per-tid B/E pairs stay balanced.
+        let Some(a) = self.inner.take() else { return };
+        let r = recorder();
+        let end_us = r.now_us();
+        r.push_event(TraceEvent {
+            name: a.name.clone(),
+            begin: false,
+            ts_us: end_us.max(a.start_us),
+            tid: 0,
+            records_in: a.records_in,
+            records_out: a.records_out,
+            bytes: a.bytes,
+        });
+        r.counter(&format!("{}.calls", a.name), 1);
+        r.observe(&format!("{}.us", a.name), end_us.saturating_sub(a.start_us));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let mut s = Span::disabled();
+        s.records_in(5);
+        s.records_out(5);
+        s.bytes(5);
+        drop(s); // must not touch the recorder
+    }
+
+    #[test]
+    fn open_span_closes_even_after_disable() {
+        let _g = crate::obs::tests::lock();
+        crate::obs::reset();
+        crate::obs::enable();
+        let s = crate::span!("t.cross");
+        crate::obs::disable();
+        drop(s);
+        let events = crate::obs::take_trace();
+        assert_eq!(events.len(), 2);
+        assert!(events[0].begin && !events[1].begin);
+        crate::obs::reset();
+    }
+}

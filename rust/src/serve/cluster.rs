@@ -322,6 +322,8 @@ impl ServeSim {
         if wave.is_empty() {
             return;
         }
+        let mut span = crate::span!("serve.sim.ingest");
+        span.records_in(wave.len() as u64);
         self.stats.waves += 1;
         self.stats.tuples += wave.len();
         let nodes = self.lanes.len();
@@ -407,11 +409,30 @@ impl ServeSim {
     /// shards by the policy — a migration ships the compacted snapshot
     /// and rebuilds the miner on the destination.
     pub fn compact(&mut self) {
+        let _span = crate::span!("serve.sim.compact");
         self.compactor.pull(&mut self.shards);
         self.stats.compactions += 1;
         for s in 0..self.shards.len() {
             self.compacted_len[s] = self.shards[s].len();
             self.epoch_at_compact[s] = self.shards[s].epoch();
+        }
+        // materialised view of [`ServeSimStats`]: cumulative totals are
+        // republished as max-gauges each compaction, so the final metrics
+        // snapshot carries the run's totals without a second ledger
+        if crate::obs::enabled() {
+            use crate::obs::gauge;
+            let st = &self.stats;
+            gauge("serve.sim.waves", st.waves as f64);
+            gauge("serve.sim.tuples", st.tuples as f64);
+            gauge("serve.sim.compactions", st.compactions as f64);
+            gauge("serve.sim.shuffle_mib", st.shuffle_mib);
+            gauge("serve.sim.recovery_mib", st.recovery_mib);
+            gauge("serve.sim.kills", st.kills as f64);
+            gauge("serve.sim.replayed_tuples", st.replayed_tuples as f64);
+            gauge("serve.sim.migrations", st.migrations as f64);
+            for (n, &r) in st.per_node_records.iter().enumerate() {
+                gauge(&format!("serve.sim.node{n}.records"), r as f64);
+            }
         }
         if !self.cfg.rebalance {
             for r in &mut self.recent_records {

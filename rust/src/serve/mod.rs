@@ -146,8 +146,10 @@ impl TriclusterService {
     /// index. After `compact`, `clusters`/`query` reflect every ingested
     /// tuple.
     pub fn compact(&mut self) {
+        let mut span = crate::span!("serve.compact");
         self.router.drain();
         self.compactor.pull(self.router.shards_mut());
+        span.records_out(self.compactor.generated_len() as u64);
     }
 
     /// The compacted cluster index under the configured constraints.

@@ -36,6 +36,8 @@ pub struct QueryEngine<'a> {
 impl<'a> QueryEngine<'a> {
     /// Build the inverted membership index over one snapshot.
     pub fn new(clusters: &'a [Cluster]) -> Self {
+        let mut span = crate::span!("serve.query.build");
+        span.records_in(clusters.len() as u64);
         let mut member: FxHashMap<(u8, u32), Vec<u32>> = FxHashMap::default();
         // upper bound on distinct (modality, entity) pairs — a pair is
         // counted once per containing cluster, so overlapping snapshots
@@ -70,6 +72,7 @@ impl<'a> QueryEngine<'a> {
     /// then components, so the ranking is total and deterministic).
     /// Selects the top k in O(n) before sorting only those k.
     pub fn top_k_by_density(&self, k: usize) -> Vec<&'a Cluster> {
+        let _span = crate::span!("serve.query.top_k");
         let cs = self.clusters;
         let mut idx: Vec<usize> = (0..cs.len()).collect();
         let k = k.min(idx.len());
@@ -93,6 +96,7 @@ impl<'a> QueryEngine<'a> {
     /// Every cluster whose modality-`m` component contains `entity`, in
     /// index order.
     pub fn containing(&self, modality: usize, entity: u32) -> Vec<&'a Cluster> {
+        let _span = crate::span!("serve.query.containing");
         let cs = self.clusters;
         match self.member.get(&(modality as u8, entity)) {
             Some(ids) => ids.iter().map(|&i| &cs[i as usize]).collect(),

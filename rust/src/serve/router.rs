@@ -137,7 +137,10 @@ impl Router {
         if self.staged.is_empty() {
             return;
         }
+        let mut dspan = crate::span!("serve.drain");
+        dspan.records_in(self.staged.len() as u64);
         self.stats.drains += 1;
+        crate::obs::counter("serve.drains", 1);
         let staged = std::mem::take(&mut self.staged);
         let n = self.shards.len();
         // disjoint field borrows: the route-split closure reads the
@@ -156,6 +159,8 @@ impl Router {
         // default `Backend::group_reduce` applies for sorted pair
         // streams (no hash map, no O(n log n) key sort).
         let route_split = |wave: &[NTuple]| -> Vec<Vec<NTuple>> {
+            let mut rspan = crate::span!("serve.route_split");
+            rspan.records_in(wave.len() as u64);
             let n_chunks = wave.len().div_ceil(SPLIT_CHUNK) as u32;
             let routed: Vec<(u32, Vec<NTuple>)> = backend
                 .map_partitions("route-split", (0..n_chunks).collect(), |&ci: &u32| {
@@ -177,6 +182,7 @@ impl Router {
             for (s, bin) in routed {
                 queues[s as usize].extend_from_slice(&bin);
             }
+            rspan.records_out(wave.len() as u64);
             queues
         };
         // wave size: big enough that one wave's route-split saturates
@@ -187,9 +193,11 @@ impl Router {
         let mut current = route_split(waves[0]);
         for next_idx in 1..=waves.len() {
             stats.waves += 1;
+            crate::obs::counter("serve.waves", 1);
             for q in &current {
                 stats.max_queue = stats.max_queue.max(q.len());
             }
+            crate::obs::gauge("serve.router.max_queue", stats.max_queue as f64);
             // overlap: the NEXT wave routes on a scoped thread while the
             // CURRENT wave mines here (waves stay ordered — wave w+1 is
             // never mined before wave w finished)
@@ -214,6 +222,8 @@ impl Router {
 /// with fewer shards than cores still saturates the pool; with shards ≥
 /// workers each shard mines sequentially, exactly as before.
 fn mine_wave(shards: &mut [Shard], queues: Vec<Vec<NTuple>>, workers: usize) {
+    let mut wspan = crate::span!("serve.mine_wave");
+    wspan.records_in(queues.iter().map(|q| q.len() as u64).sum());
     let per_shard = (workers / shards.len().max(1)).max(1);
     let jobs: Vec<std::sync::Mutex<Option<(&mut Shard, Vec<NTuple>)>>> = shards
         .iter_mut()
@@ -222,6 +232,14 @@ fn mine_wave(shards: &mut [Shard], queues: Vec<Vec<NTuple>>, workers: usize) {
         .collect();
     pool::parallel_map(jobs.len(), workers, 1, |i| {
         let (shard, queue) = jobs[i].lock().unwrap().take().expect("taken once");
+        let mut sspan = crate::span!("serve.shard.ingest");
+        sspan.records_in(queue.len() as u64);
+        if crate::obs::enabled() && !queue.is_empty() {
+            crate::obs::counter(
+                &format!("serve.shard{}.tuples", shard.id()),
+                queue.len() as u64,
+            );
+        }
         shard.ingest_par(&queue, per_shard);
     });
 }

@@ -1,28 +1,10 @@
-//! Timing and summary statistics for the experiment harness and benches.
+//! Summary statistics for the experiment harness and benches.
+//!
+//! The crate's single wall-clock primitive lives in [`crate::obs`]
+//! (spans and benches share it); `Timer` is re-exported here for the
+//! older call sites.
 
-use std::time::{Duration, Instant};
-
-/// Wall-clock stopwatch.
-pub struct Timer {
-    start: Instant,
-}
-
-impl Timer {
-    /// Start timing now.
-    pub fn start() -> Self {
-        Self { start: Instant::now() }
-    }
-
-    /// Time since `start`.
-    pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
-    }
-
-    /// Time since `start`, ms.
-    pub fn elapsed_ms(&self) -> f64 {
-        self.start.elapsed().as_secs_f64() * 1e3
-    }
-}
+pub use crate::obs::Timer;
 
 /// Summary of a sample of measurements (times in ms, counts, ...).
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,184 @@
+//! The observability invariant, tested end to end: telemetry only
+//! OBSERVES. For any random polyadic context, enabling the recorder
+//! changes nothing about what `oac::mine_online` or any of the five
+//! `exec::` backends mine — components, supports, densities are
+//! bit-identical with tracing on or off. And for a fixed seed the span
+//! MULTISET (names, per-thread nesting, counts) is deterministic run to
+//! run, so traces are diffable artefacts, not noise.
+//!
+//! The recorder is a process-global, so every test here serialises on
+//! one lock and restores the disabled state through an RAII guard.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use tricluster::core::context::PolyContext;
+use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::exec::{run_named, ExecTuning, BACKENDS};
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::obs;
+use tricluster::util::proptest_lite::{assert_prop, Gen};
+
+/// Tests that touch the global recorder must not interleave.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// However a test exits (including by panic), leave the recorder
+/// disabled and empty for whoever runs next.
+struct ObsOff;
+impl Drop for ObsOff {
+    fn drop(&mut self) {
+        obs::disable();
+        obs::reset();
+    }
+}
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    sort_clusters(&mut cs);
+    cs
+}
+
+fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) -> Result<(), String> {
+    match diff_cluster_sets(a, b) {
+        Some(diff) => Err(format!("{label}: telemetry changed the output: {diff}")),
+        None => Ok(()),
+    }
+}
+
+/// Random context → mine with the recorder off, then again with it on
+/// (online miner + all five backends) → exact cluster-set equality.
+#[test]
+fn prop_results_identical_with_telemetry_on() {
+    let _g = lock();
+    let _off = ObsOff;
+    assert_prop(16, |g: &mut Gen| {
+        let arity = 3 + g.usize_below(2);
+        let universe = 2 + g.u32_below(6);
+        let n_tuples = 1 + g.usize_below(150);
+        let mut ctx = PolyContext::new(arity);
+        for _ in 0..n_tuples {
+            let ids: Vec<u32> = (0..arity).map(|_| g.u32_below(universe)).collect();
+            ctx.add_ids(&ids);
+        }
+        let theta = if g.bool(0.5) { 0.0 } else { g.f64() * 0.5 };
+        let cons = Constraints { min_density: theta, min_support: 0 };
+        let tune = ExecTuning {
+            workers: 1 + g.usize_below(3),
+            tasks: 1 + g.usize_below(6),
+            nodes: 1 + g.usize_below(4),
+            node_slots: 1 + g.usize_below(3),
+            straggler_prob: if g.bool(0.5) { g.f64() } else { 0.0 },
+            speculation: g.bool(0.5),
+            cost_ms_per_record: if g.bool(0.5) { Some(0.01) } else { None },
+            parallel_ingest: g.bool(0.5),
+            seed: 0x0B5 ^ n_tuples as u64,
+            ..ExecTuning::default()
+        };
+
+        obs::disable();
+        obs::reset();
+        let ref_online = sorted(mine_online(&ctx, &cons));
+        let mut ref_backends: Vec<Vec<Cluster>> = Vec::new();
+        for backend in BACKENDS {
+            let run = run_named(backend, &ctx, theta, &tune)
+                .map_err(|e| format!("{backend} (off): {e}"))?;
+            ref_backends.push(sorted(run.clusters));
+        }
+
+        obs::enable();
+        let on_online = sorted(mine_online(&ctx, &cons));
+        assert_same(&ref_online, &on_online, "mine_online")?;
+        for (i, backend) in BACKENDS.iter().enumerate() {
+            let run = run_named(backend, &ctx, theta, &tune)
+                .map_err(|e| format!("{backend} (on): {e}"))?;
+            assert_same(
+                &ref_backends[i],
+                &sorted(run.clusters),
+                &format!("{backend} (arity {arity}, {n_tuples} tuples, θ={theta:.3})"),
+            )?;
+        }
+        // the enabled arm must actually have recorded something
+        if obs::snapshot().counters.is_empty() {
+            return Err("recorder enabled but no counters landed".to_string());
+        }
+        obs::disable();
+        obs::reset();
+        Ok(())
+    });
+}
+
+/// Reconstruct the span-path multiset from the raw B/E stream: per-tid
+/// stacks give each `B` its nesting path (`outer/inner`), and every `E`
+/// must match its thread's top of stack. Tids are deliberately dropped
+/// from the key — pool workers get fresh tids per run; only the path
+/// content is stable.
+fn span_paths(events: &[obs::TraceEvent]) -> BTreeMap<String, usize> {
+    let mut stacks: BTreeMap<u32, Vec<String>> = BTreeMap::new();
+    let mut paths: BTreeMap<String, usize> = BTreeMap::new();
+    for ev in events {
+        let stack = stacks.entry(ev.tid).or_default();
+        if ev.begin {
+            stack.push(ev.name.clone());
+            *paths.entry(stack.join("/")).or_insert(0) += 1;
+        } else {
+            let top = stack.pop().unwrap_or_else(|| {
+                panic!("E {:?} without a B on tid {}", ev.name, ev.tid)
+            });
+            assert_eq!(top, ev.name, "unbalanced span nesting on tid {}", ev.tid);
+        }
+    }
+    for (tid, stack) in stacks {
+        assert!(stack.is_empty(), "tid {tid} left open spans: {stack:?}");
+    }
+    paths
+}
+
+/// Fixed seed + the per-record cost model → two ClusterSim runs produce
+/// the identical span-path multiset (timestamps differ, structure does
+/// not), with the expected taxonomy present and B/E balanced per tid.
+#[test]
+fn span_tree_deterministic_for_fixed_seed() {
+    let _g = lock();
+    let _off = ObsOff;
+    let ctx = tricluster::datasets::synthetic::k1(6).inner;
+    let tune = ExecTuning {
+        workers: 3,
+        tasks: 5,
+        nodes: 3,
+        node_slots: 2,
+        straggler_prob: 0.3,
+        speculation: true,
+        cost_ms_per_record: Some(0.01),
+        seed: 0xDE7,
+        ..ExecTuning::default()
+    };
+    let runs: Vec<BTreeMap<String, usize>> = (0..2)
+        .map(|_| {
+            obs::reset();
+            obs::enable();
+            let run = run_named("cluster", &ctx, 0.0, &tune).unwrap();
+            assert!(!run.clusters.is_empty());
+            let events = obs::take_trace();
+            obs::disable();
+            span_paths(&events)
+        })
+        .collect();
+    assert_eq!(
+        runs[0], runs[1],
+        "span multiset must be deterministic for a fixed seed"
+    );
+    assert!(
+        runs[0].keys().any(|p| p.starts_with("exec.run.cluster")),
+        "missing the exec.run root span: {:?}",
+        runs[0].keys().collect::<Vec<_>>()
+    );
+    assert!(
+        runs[0].keys().any(|p| p.contains(".task")),
+        "missing per-task spans: {:?}",
+        runs[0].keys().collect::<Vec<_>>()
+    );
+}
