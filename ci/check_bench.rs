@@ -38,8 +38,12 @@
 //!    sequential rate (the "parallel ≥ sequential" acceptance gate —
 //!    skipped when the bench machine had fewer than 2 workers, where
 //!    the parallel path IS the sequential fallback and the ratio is
-//!    noise), and the in-bench equivalence verdicts
-//!    (`parallel_matches_sequential`, `bitset_matches_scalar`) must be
+//!    noise), the partitioned parallel dedup must be at least
+//!    `hotpath.min_dedup_parallel_ratio` × the sequential dedup oracle
+//!    (same <2-worker skip), and the in-bench equivalence verdicts
+//!    (`parallel_matches_sequential`, `bitset_matches_scalar`,
+//!    `batched_matches_scalar`, `dedup_parallel_matches_sequential`,
+//!    `compressed_matches_scalar`, `dense_over_bitset_cap`) must be
 //!    true.
 //! 6. **Observability overhead** — when `BENCH_hotpath.json` carries the
 //!    obs section: ingest with telemetry DISABLED must stay within
@@ -54,9 +58,9 @@
 //! when present, `BENCH_serve_cluster.json` (locality-vs-rr floor = 90%
 //! of observed) and `BENCH_hotpath.json` (ingest floor = 30% of
 //! observed — wall-clock rates are machine-dependent, unlike the
-//! simulated makespans; the parallel-vs-sequential floor stays pinned
-//! at 1.0 by policy), so a session with a toolchain can tighten the
-//! committed baseline.
+//! simulated makespans; the parallel-vs-sequential and
+//! dedup-parallel floors stay pinned at 1.0 by policy), so a session
+//! with a toolchain can tighten the committed baseline.
 
 use std::collections::BTreeMap;
 use std::process::exit;
@@ -291,7 +295,16 @@ fn main() {
 
     // 5. hot-path kernel floors (when the hotpath bench ran)
     if let Some(hot) = load(hotpath_path) {
-        for verdict in ["parallel_matches_sequential", "bitset_matches_scalar"] {
+        // absent keys pass (older bench JSONs predate the newer verdicts);
+        // a key that is present and false always fails
+        for verdict in [
+            "parallel_matches_sequential",
+            "bitset_matches_scalar",
+            "batched_matches_scalar",
+            "dedup_parallel_matches_sequential",
+            "compressed_matches_scalar",
+            "dense_over_bitset_cap",
+        ] {
             if hot.get(verdict).and_then(Json::as_bool) == Some(false) {
                 failures.push(format!("hotpath equivalence verdict {verdict} is false"));
             }
@@ -327,6 +340,28 @@ fn main() {
                 failures.push(format!(
                     "hotpath parallel ingest at {ratio:.3}x sequential fell below \
                      the baseline floor {min:.3}x"
+                ));
+            }
+        }
+        let dedup_ratio = f(&hot, "dedup_par_vs_seq");
+        if let Some(min) = hot_base
+            .and_then(|h| h.get("min_dedup_parallel_ratio"))
+            .and_then(Json::as_f64)
+        {
+            if bench_workers < 2.0 {
+                eprintln!(
+                    "check_bench: hotpath ran with {bench_workers} worker(s) — \
+                     skipping the dedup-parallel floor"
+                );
+            } else if dedup_ratio.is_nan() {
+                eprintln!(
+                    "check_bench: hotpath has no dedup_par_vs_seq — older bench \
+                     JSON; skipping the dedup-parallel floor"
+                );
+            } else if dedup_ratio < min {
+                failures.push(format!(
+                    "hotpath parallel dedup at {dedup_ratio:.3}x sequential fell \
+                     below the baseline floor {min:.3}x"
                 ));
             }
         }
@@ -435,6 +470,8 @@ fn pin(
             );
             // policy, not measurement: parallel ingest must never lose
             hp.insert("min_parallel_vs_sequential".to_string(), Json::Num(1.0));
+            // same policy for the partitioned parallel dedup
+            hp.insert("min_dedup_parallel_ratio".to_string(), Json::Num(1.0));
             // policy floors for the obs overhead too: disabled telemetry
             // stays within 3% of the no-telemetry build, enabled within 2x
             hp.insert("min_obs_disabled_ratio".to_string(), Json::Num(0.97));

@@ -10,9 +10,14 @@
 //!    carry `schema: tricluster-metrics-v1` and the `exec.cluster.*`
 //!    counters the simulated cluster publishes.
 //! 2. `serve-sim` — the serve plane's metrics must cover both the
-//!    router (`serve.*`) and the ingest kernel underneath it (`oac.*`).
+//!    router (`serve.*`) and the ingest kernel underneath it (`oac.*`),
+//!    including the partitioned-dedup counters (`oac.dedup.partitions`,
+//!    `oac.dedup.groups`) the compactor publishes.
 //! 3. `density --engine exact` — the bitset-vs-scalar dispatch counters
 //!    (`density.dispatch.*`) must land.
+//! 4. `density --engine exact --bitset-cap 1` — with the row-table byte
+//!    cap forced to 1, the engine must take the compressed rung and
+//!    prove it via `density.dispatch.compressed`.
 //!
 //! Declared as a bench target (harness = false) like `check_bench`, so
 //! it shares the library build; it drives the CLI through `$CARGO run`
@@ -261,6 +266,12 @@ fn main() {
     let serve_counters = check_metrics_file(&serve_metrics, &mut failures);
     require_counter_prefix(&serve_counters, "serve.", "serve metrics", &mut failures);
     require_counter_prefix(&serve_counters, "oac.", "serve metrics", &mut failures);
+    // the compactor's partitioned dedup always records how it was split
+    for key in ["oac.dedup.partitions", "oac.dedup.groups"] {
+        if serve_counters.get(key).copied().unwrap_or(0.0) < 1.0 {
+            failures.push(format!("serve metrics: counter {key:?} missing or zero"));
+        }
+    }
 
     // 3. the density engine dispatch counters
     let dens_metrics = out_dir.join("density_metrics.json");
@@ -284,10 +295,37 @@ fn main() {
         &mut failures,
     );
 
+    // 4. a 1-byte row-table cap forces the compressed rung: the ladder
+    // must degrade bitset -> compressed (not scalar) and say so
+    let comp_metrics = out_dir.join("density_compressed_metrics.json");
+    run_cli(
+        &cargo,
+        &[
+            "density",
+            "--edge",
+            "16",
+            "--engine",
+            "exact",
+            "--bitset-cap",
+            "1",
+            "--metrics-out",
+            comp_metrics.to_str().unwrap(),
+        ],
+    );
+    let comp_counters = check_metrics_file(&comp_metrics, &mut failures);
+    if comp_counters.get("density.dispatch.compressed").copied().unwrap_or(0.0) < 1.0 {
+        failures.push(
+            "capped density metrics: counter \"density.dispatch.compressed\" \
+             missing or zero — the byte cap did not route to the compressed kernel"
+                .to_string(),
+        );
+    }
+
     if failures.is_empty() {
         println!(
             "check_trace: OK — {} mr events + {} serve events schema-valid, \
-             B/E balanced per tid, metrics cover exec/serve/oac/density",
+             B/E balanced per tid, metrics cover exec/serve/oac/density \
+             (incl. partitioned dedup + compressed dispatch)",
             names.len(),
             serve_names.len()
         );

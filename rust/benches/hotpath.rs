@@ -4,11 +4,18 @@
 //!
 //!   * online OAC ingest, sequential vs merge-based parallel
 //!     (`PrimeStore::par_add_batch`) on the dense K1 context — the gate
-//!     enforces an absolute sequential floor AND parallel ≥ sequential;
-//!   * fingerprint dedup over the ingested state (cached-sorted-cumuli
-//!     path);
+//!     enforces an absolute sequential floor AND parallel ≥ sequential
+//!     (the sequential path itself runs the SIMD-width batched probe
+//!     pipeline, verified against the scalar `add` loop);
+//!   * fingerprint dedup over the ingested state: the auto path, then
+//!     the sequential oracle vs the partitioned parallel dedup
+//!     (`dedup_generated_parallel`) — gate: parallel ≥
+//!     `min_dedup_parallel_ratio` × sequential, bit-equal required;
 //!   * exact density, scalar hash-probe oracle vs the bitset
-//!     (`density::densities_bitset`) kernel;
+//!     (`density::densities_bitset`) kernel, plus the compressed
+//!     (array/bitmap/run) kernel on a context whose flat row table
+//!     EXCEEDS `BITSET_MAX_BYTES` — with an obs-counter proof that the
+//!     exact engine actually dispatches to the compressed rung there;
 //!   * record codec + shuffle sort/group (reported, not gated);
 //!   * observability overhead: the instrumented ingest with telemetry
 //!     disabled vs a hand-inlined no-telemetry build of the same kernel
@@ -63,13 +70,19 @@ fn main() {
     let n = tuples.len();
     println!("ingest context: K1({k1_n}) = {n} triples, {workers} workers\n");
 
-    // equivalence gate before timing: parallel ingest must export the
-    // exact cumuli sequential ingest builds
+    // equivalence gate before timing: the batched probe pipeline and the
+    // parallel ingest must both export the exact cumuli (and per-tuple
+    // set ids) the scalar `add` loop builds
     {
         let mut seq = PrimeStore::new(3);
-        for t in &tuples {
-            seq.add(t);
-        }
+        let seq_ids: Vec<SetIds> = tuples.iter().map(|t| seq.add(t)).collect();
+        let mut batched = PrimeStore::new(3);
+        let batched_ids = batched.add_batch(&tuples);
+        assert_eq!(
+            batched_ids, seq_ids,
+            "batched probing diverged from the scalar add loop"
+        );
+        assert_eq!(batched.cumuli(), seq.cumuli(), "batched cumuli diverged");
         let mut par = PrimeStore::new(3);
         par.par_add_batch(&tuples, workers.max(2));
         assert_eq!(
@@ -78,6 +91,8 @@ fn main() {
             "parallel ingest diverged from sequential"
         );
     }
+    // keys only survive to the JSON when the asserts above did not abort
+    doc.insert("batched_matches_scalar".to_string(), Json::Bool(true));
 
     let seq_samples = measure_ms(1, 7, || {
         let mut miner = OnlineMiner::new(3);
@@ -111,6 +126,49 @@ fn main() {
     let dedup_rate = report("dedup (memoized sets)", n as f64, "tuples", &dedup_samples);
     doc.insert("dedup_tuples_per_s".to_string(), Json::Num(dedup_rate));
 
+    // ── dedup: sequential oracle vs partitioned parallel, same state ──
+    // (the arena is sealed by the dedup_and_filter runs above)
+    use tricluster::oac::{dedup_generated, dedup_generated_parallel};
+    let arena = &miner.primes().arena;
+    let generated = miner.generated();
+    let cons = Constraints::none();
+    let dedup_workers = workers.max(2);
+    let dedup_partitions = dedup_workers.min(16);
+    {
+        let seq = dedup_generated(arena, generated, &cons);
+        let par = dedup_generated_parallel(
+            arena,
+            generated,
+            &cons,
+            dedup_workers,
+            dedup_partitions,
+        );
+        assert_eq!(seq.len(), par.len(), "parallel dedup changed the cluster count");
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.components, b.components, "parallel dedup reordered/changed");
+            assert_eq!(a.support, b.support, "parallel dedup changed a support");
+        }
+    }
+    doc.insert("dedup_parallel_matches_sequential".to_string(), Json::Bool(true));
+    let dedup_seq_samples = measure_ms(1, 5, || {
+        std::hint::black_box(dedup_generated(arena, generated, &cons).len());
+    });
+    let dedup_seq_rate =
+        report("dedup sequential oracle", n as f64, "tuples", &dedup_seq_samples);
+    let dedup_par_samples = measure_ms(1, 5, || {
+        std::hint::black_box(
+            dedup_generated_parallel(arena, generated, &cons, dedup_workers, dedup_partitions)
+                .len(),
+        );
+    });
+    let dedup_par_rate =
+        report("dedup parallel (partitioned)", n as f64, "tuples", &dedup_par_samples);
+    let dedup_ratio = median_ms(&dedup_seq_samples) / median_ms(&dedup_par_samples);
+    println!("{:<30} {dedup_ratio:>32.2}x vs sequential", "dedup parallel speedup");
+    doc.insert("dedup_seq_tuples_per_s".to_string(), Json::Num(dedup_seq_rate));
+    doc.insert("dedup_par_tuples_per_s".to_string(), Json::Num(dedup_par_rate));
+    doc.insert("dedup_par_vs_seq".to_string(), Json::Num(dedup_ratio));
+
     // ── exact density: scalar oracle vs bitset kernel ──
     let d_n = if full { 56 } else { 32 };
     let dctx = k1(d_n);
@@ -143,6 +201,87 @@ fn main() {
         Json::Num(median_ms(&scalar_samples) / median_ms(&bitset_samples)),
     );
     doc.insert("bitset_matches_scalar".to_string(), Json::Bool(true));
+
+    // warm-vs-cold engine: the revision-keyed row-table cache should make
+    // repeated calls against an unchanged context cheaper than rebuilding
+    // every call (reported, not gated — small contexts amortise fast)
+    {
+        use tricluster::density::{DensityEngine, ExactEngine};
+        let cold_samples = measure_ms(1, 5, || {
+            let mut e = ExactEngine::default();
+            std::hint::black_box(e.densities(&dctx, &clusters).len());
+        });
+        let mut warm_engine = ExactEngine::default();
+        warm_engine.densities(&dctx, &clusters); // prime the cache
+        let warm_samples = measure_ms(1, 5, || {
+            std::hint::black_box(warm_engine.densities(&dctx, &clusters).len());
+        });
+        let warm_ratio = median_ms(&cold_samples) / median_ms(&warm_samples);
+        println!("{:<30} {warm_ratio:>32.2}x vs cold rebuild", "row-cache warm speedup");
+        doc.insert("density_engine_warm_vs_cold".to_string(), Json::Num(warm_ratio));
+    }
+
+    // ── compressed kernel: a context DENSER than the flat-table cap ──
+    // One far-flung (g, m) pair inflates the flat grid to ~1 GB —
+    // BitRows::build must refuse it, and the exact engine must serve the
+    // context through the compressed rows, not the O(volume) scalar loop.
+    use tricluster::density::exact::BITSET_MAX_BYTES;
+    use tricluster::density::{densities_compressed, BitRows};
+    let mut dense = k1(24);
+    dense.add(11_000, 11_000, 0);
+    assert!(
+        BitRows::build(&dense, BITSET_MAX_BYTES).is_none(),
+        "dense context unexpectedly fits the flat-table cap"
+    );
+    doc.insert("dense_over_bitset_cap".to_string(), Json::Bool(true));
+    let dclusters = mine_online(&dense.inner, &Constraints::none());
+    let dense_cells: f64 = dclusters.iter().map(|c| c.volume()).sum();
+    println!(
+        "\ndense context: K1(24) + stray (11000, 11000, 0): {} clusters, \
+         {dense_cells:.0} cells, flat table over the {BITSET_MAX_BYTES}-byte cap",
+        dclusters.len()
+    );
+    let dense_scalar = densities_scalar(&dense, &dclusters);
+    assert_eq!(
+        densities_compressed(&dense, &dclusters),
+        dense_scalar,
+        "compressed densities diverged from the scalar oracle"
+    );
+    doc.insert("compressed_matches_scalar".to_string(), Json::Bool(true));
+    // dispatch proof: with telemetry on, the engine must take the
+    // compressed rung on this context (and still answer exactly)
+    {
+        use tricluster::density::{DensityEngine, ExactEngine};
+        use tricluster::obs;
+        obs::reset();
+        obs::enable();
+        let engine_out = ExactEngine::default().densities(&dense, &dclusters);
+        let snap = obs::snapshot();
+        obs::disable();
+        obs::reset();
+        assert_eq!(engine_out, dense_scalar, "engine diverged on the dense context");
+        let compressed_hits = snap
+            .counters
+            .get("density.dispatch.compressed")
+            .copied()
+            .unwrap_or(0);
+        assert!(
+            compressed_hits >= 1,
+            "exact engine did not dispatch to the compressed kernel \
+             (counters: {:?})",
+            snap.counters
+        );
+    }
+    let compressed_samples = measure_ms(1, 5, || {
+        std::hint::black_box(densities_compressed(&dense, &dclusters).len());
+    });
+    let compressed_rate = report(
+        "density compressed kernel",
+        dense_cells,
+        "cells",
+        &compressed_samples,
+    );
+    doc.insert("density_compressed_cells_per_s".to_string(), Json::Num(compressed_rate));
 
     // ── record codec + shuffle sort/group (reported only) ──
     let mcount = if full { 500_000 } else { 200_000 };
@@ -252,9 +391,10 @@ fn main() {
     std::fs::write("BENCH_hotpath.json", Json::Obj(doc).to_string())
         .expect("write BENCH_hotpath.json");
     println!(
-        "\nwrote BENCH_hotpath.json (parallel ingest and bitset density verified \
-         against their sequential/scalar oracles; parallel speedup {ratio:.2}x, \
-         bitset speedup {b:.1}x)",
+        "\nwrote BENCH_hotpath.json (batched probe, parallel ingest, parallel \
+         dedup, bitset and compressed density all verified against their \
+         sequential/scalar oracles; ingest speedup {ratio:.2}x, dedup speedup \
+         {dedup_ratio:.2}x, bitset speedup {b:.1}x)",
         b = median_ms(&scalar_samples) / median_ms(&bitset_samples)
     );
 }

@@ -246,7 +246,7 @@ pub fn density_engines() -> Result<Report> {
         (d, t.elapsed_ms())
     };
 
-    let mut exact = ExactEngine;
+    let mut exact = ExactEngine::default();
     let (d_exact, t_exact) = run(&mut exact, ctx, &clusters);
     report.push(row!["exact", clusters.len(), fmt_ms(t_exact), "0"]);
 

@@ -4,9 +4,18 @@
 //! `K_N = (A_1, …, A_N, I)` (§3.1), and the many-valued triadic context
 //! `K_V = (G, M, B, W, I, V)` (§3.2).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::core::interner::Interner;
 use crate::core::tuple::NTuple;
 use crate::util::hash::{FxHashMap, FxHashSet};
+
+/// Process-wide revision source for [`PolyContext::revision`]. Every
+/// successful insert into ANY context draws a fresh stamp, so two
+/// contexts can only share a stamp by cloning — which makes "equal
+/// revision ⇒ identical incidence relation" hold globally, the property
+/// the density engine's row-table cache relies on.
+static REVISION: AtomicU64 = AtomicU64::new(1);
 
 /// An N-ary formal context over interned entities.
 #[derive(Debug, Clone)]
@@ -16,6 +25,11 @@ pub struct PolyContext {
     /// The incidence relation I (deduplicated, insertion order kept).
     tuples: Vec<NTuple>,
     seen: FxHashSet<NTuple>,
+    /// Globally-unique stamp of the last mutation (0 = never mutated).
+    /// Interner growth without a tuple insert cannot affect derived row
+    /// tables (extents are widened by actual tuples), so stamping on
+    /// tuple insert alone is sufficient for cache invalidation.
+    revision: u64,
 }
 
 impl PolyContext {
@@ -25,6 +39,7 @@ impl PolyContext {
             interners: (0..arity).map(|_| Interner::new()).collect(),
             tuples: Vec::new(),
             seen: FxHashSet::default(),
+            revision: 0,
         }
     }
 
@@ -37,7 +52,18 @@ impl PolyContext {
             interners: (0..arity).map(|_| Interner::with_capacity(per_modality)).collect(),
             tuples: Vec::with_capacity(tuples),
             seen: FxHashSet::with_capacity_and_hasher(tuples, Default::default()),
+            revision: 0,
         }
+    }
+
+    /// Revision stamp of the incidence relation: 0 for a context that
+    /// never saw an insert, otherwise a globally-unique value refreshed
+    /// on every successful [`PolyContext::add_ids`]. Equal stamps imply
+    /// identical relations (see [`REVISION`]); consumers key derived
+    /// structures (the exact density engine's row tables) on it to skip
+    /// rebuilds on unchanged contexts.
+    pub fn revision(&self) -> u64 {
+        self.revision
     }
 
     /// Number of modalities (3 = triadic).
@@ -77,6 +103,7 @@ impl PolyContext {
         let t = NTuple::new(ids);
         if self.seen.insert(t) {
             self.tuples.push(t);
+            self.revision = REVISION.fetch_add(1, Ordering::Relaxed);
             true
         } else {
             false
@@ -158,6 +185,11 @@ impl TriContext {
     /// True when `(g, m, b)` is in the relation.
     pub fn contains(&self, g: u32, m: u32, b: u32) -> bool {
         self.inner.contains(&NTuple::triple(g, m, b))
+    }
+
+    /// Revision stamp of the relation (see [`PolyContext::revision`]).
+    pub fn revision(&self) -> u64 {
+        self.inner.revision()
     }
 
     /// Modality cardinalities `(|G|, |M|, |B|)`.
@@ -263,6 +295,24 @@ mod tests {
         assert!(!k.add(0, 0, 0, 9.0)); // duplicate triple
         assert_eq!(k.value(0, 0, 0), Some(5.0));
         assert_eq!(k.value(1, 0, 0), None);
+    }
+
+    #[test]
+    fn revision_stamps_only_successful_inserts() {
+        let mut k = TriContext::new();
+        assert_eq!(k.revision(), 0, "fresh context is revision 0");
+        k.add(1, 2, 3);
+        let r1 = k.revision();
+        assert_ne!(r1, 0);
+        k.add(1, 2, 3); // duplicate: relation unchanged, stamp kept
+        assert_eq!(k.revision(), r1);
+        k.add(4, 5, 6);
+        assert_ne!(k.revision(), r1, "new triple must bump the stamp");
+        // clones share content AND stamp; diverging mutations diverge it
+        let mut other = k.clone();
+        assert_eq!(other.revision(), k.revision());
+        other.add(7, 8, 9);
+        assert_ne!(other.revision(), k.revision());
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Compressed per-(g, m) rows — the roaring-style array/bitmap/run
+//! hybrid that keeps dense contexts on an exact vectorised kernel after
+//! the flat [`crate::density::tiling::BitRows`] table trips its byte cap
+//! ([`crate::density::exact::BITSET_MAX_BYTES`]).
+//!
+//! `BitRows` spends `|G|·|M|·⌈|B|/64⌉·8` bytes whether or not a `(g, m)`
+//! pair has any triple — on wide-id contexts (MovieLens-scale) that grid
+//! explodes while the relation itself stays modest. `CompressedRows`
+//! stores one container per NON-EMPTY `(g, m)` row, each encoded in
+//! whichever of three shapes is smallest for its contents:
+//!
+//! * **Array**  — sorted `b` ids, 4 B each (sparse scattered rows);
+//! * **Bitmap** — packed `u64` words up to the row's own max `b`
+//!   (dense scattered rows);
+//! * **Runs**   — sorted `(start, len)` ranges (dense contiguous rows —
+//!   the paper's K1/K2 block regime collapses to ONE run per row).
+//!
+//! Build memory is `O(|I|)` (one sortable record per triple), so unlike
+//! the flat table the build cannot be rejected: the exact engine's
+//! dispatch ladder is bitset → compressed → scalar and a dense context
+//! never regresses to the `O(volume)` scalar probe loop. Counting stays
+//! exact — every container arm computes the same integer hit count, so
+//! densities are bit-identical to [`densities_scalar`]
+//! (property-tested in `rust/tests/proptests.rs`).
+//!
+//! [`densities_scalar`]: crate::density::exact::densities_scalar
+
+use crate::core::context::TriContext;
+use crate::core::pattern::Cluster;
+use crate::density::tiling::{bit_mask, bit_mask_count_range};
+use crate::util::hash::FxHashMap;
+
+/// One compressed row: the `b` memberships of a single `(g, m)` pair.
+#[derive(Debug, Clone)]
+enum Container {
+    /// Sorted distinct `b` ids.
+    Array(Vec<u32>),
+    /// Packed bit words over `[0, words·64)` of the row's own span.
+    Bitmap(Vec<u64>),
+    /// Sorted disjoint `(start, len)` runs of consecutive ids, `len ≥ 1`.
+    Runs(Vec<(u32, u32)>),
+}
+
+impl Container {
+    /// Encode a sorted, deduplicated, non-empty id slice as whichever
+    /// container costs the fewest bytes (ties prefer runs, then array —
+    /// the shapes with the cheapest count loops).
+    fn choose(bs: &[u32]) -> Container {
+        debug_assert!(!bs.is_empty() && bs.windows(2).all(|w| w[0] < w[1]));
+        let span_words = bs[bs.len() - 1] as usize / 64 + 1;
+        let n_runs = 1 + bs.windows(2).filter(|w| w[1] != w[0] + 1).count();
+        let run_bytes = 8 * n_runs;
+        let array_bytes = 4 * bs.len();
+        let bitmap_bytes = 8 * span_words;
+        if run_bytes <= array_bytes && run_bytes <= bitmap_bytes {
+            let mut runs = Vec::with_capacity(n_runs);
+            let (mut start, mut len) = (bs[0], 1u32);
+            for w in bs.windows(2) {
+                if w[1] == w[0] + 1 {
+                    len += 1;
+                } else {
+                    runs.push((start, len));
+                    start = w[1];
+                    len = 1;
+                }
+            }
+            runs.push((start, len));
+            Container::Runs(runs)
+        } else if array_bytes <= bitmap_bytes {
+            Container::Array(bs.to_vec())
+        } else {
+            let mut words = vec![0u64; span_words];
+            for &b in bs {
+                words[b as usize / 64] |= 1u64 << (b % 64);
+            }
+            Container::Bitmap(words)
+        }
+    }
+
+    /// Hits of this row against a modus bit mask wide enough for every
+    /// `b` in the table ([`CompressedRows::words`] words). Each arm is an
+    /// exact integer count.
+    fn count(&self, mask: &[u64]) -> u64 {
+        match self {
+            Container::Array(bs) => bs
+                .iter()
+                .map(|&b| (mask[b as usize / 64] >> (b % 64)) & 1)
+                .sum(),
+            Container::Bitmap(words) => words
+                .iter()
+                .zip(mask)
+                .map(|(w, m)| (w & m).count_ones() as u64)
+                .sum(),
+            Container::Runs(runs) => runs
+                .iter()
+                .map(|&(start, len)| bit_mask_count_range(mask, start, len))
+                .sum(),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Container::Array(bs) => 4 * bs.len(),
+            Container::Bitmap(words) => 8 * words.len(),
+            Container::Runs(runs) => 8 * runs.len(),
+        }
+    }
+}
+
+/// Compressed row table of a whole context: one [`Container`] per
+/// non-empty `(g, m)` pair, grouped by `g` so a cluster probes the map
+/// once per extent id and binary-searches the (sorted) row list per
+/// intent id — the same probe discipline as the scalar oracle, so
+/// duplicate or unsorted cluster components count identically.
+#[derive(Debug)]
+pub struct CompressedRows {
+    /// `g` → index range `[lo, hi)` into `row_ms` / `containers`.
+    by_g: FxHashMap<u32, (u32, u32)>,
+    /// Sorted distinct `m` of each g's rows, grouped contiguously by g.
+    row_ms: Vec<u32>,
+    /// Parallel to `row_ms`.
+    containers: Vec<Container>,
+    /// Mask words covering the widest `b` in the table.
+    words: usize,
+}
+
+impl CompressedRows {
+    /// Build from a context. `O(|I| log |I|)` time, `O(|I|)` memory —
+    /// never rejected, unlike the flat row table.
+    pub fn build(ctx: &TriContext) -> Self {
+        // one sortable record per triple: (g, m) packed high, b low —
+        // after the sort, rows are contiguous and their bs ascend
+        let mut recs: Vec<(u64, u32)> = ctx
+            .triples()
+            .iter()
+            .map(|t| (((t.get(0) as u64) << 32) | t.get(1) as u64, t.get(2)))
+            .collect();
+        recs.sort_unstable();
+        let mut by_g: FxHashMap<u32, (u32, u32)> = FxHashMap::default();
+        let mut row_ms: Vec<u32> = Vec::new();
+        let mut containers: Vec<Container> = Vec::new();
+        let mut max_b = 0u32;
+        let mut bs: Vec<u32> = Vec::new();
+        let mut i = 0usize;
+        while i < recs.len() {
+            let gm = recs[i].0;
+            bs.clear();
+            while i < recs.len() && recs[i].0 == gm {
+                bs.push(recs[i].1);
+                i += 1;
+            }
+            // context tuples are deduplicated, so bs is sorted + distinct
+            max_b = max_b.max(bs[bs.len() - 1]);
+            let g = (gm >> 32) as u32;
+            let m = gm as u32;
+            let at = row_ms.len() as u32;
+            by_g
+                .entry(g)
+                .and_modify(|range| range.1 = at + 1)
+                .or_insert((at, at + 1));
+            row_ms.push(m);
+            containers.push(Container::choose(&bs));
+        }
+        let words = if containers.is_empty() { 1 } else { max_b as usize / 64 + 1 };
+        Self { by_g, row_ms, containers, words }
+    }
+
+    /// Mask words wide enough for every `b` in the table.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Non-empty `(g, m)` rows.
+    pub fn n_rows(&self) -> usize {
+        self.containers.len()
+    }
+
+    /// Payload bytes across all containers (telemetry; excludes the
+    /// per-row index).
+    pub fn bytes(&self) -> usize {
+        self.containers.iter().map(Container::bytes).sum()
+    }
+
+    /// Exact densities of `clusters` against this table — bit-identical
+    /// to the scalar oracle (integer hit count over the same cells,
+    /// identical final division).
+    pub fn densities(&self, clusters: &[Cluster]) -> Vec<f64> {
+        let mut mask: Vec<u64> = Vec::new();
+        clusters
+            .iter()
+            .map(|c| {
+                let vol = c.volume();
+                if vol == 0.0 {
+                    return 0.0;
+                }
+                bit_mask(&c.components[2], self.words, &mut mask);
+                let mut hit = 0u64;
+                for &g in &c.components[0] {
+                    let Some(&(lo, hi)) = self.by_g.get(&g) else {
+                        continue;
+                    };
+                    let ms = &self.row_ms[lo as usize..hi as usize];
+                    let cs = &self.containers[lo as usize..hi as usize];
+                    for &m in &c.components[1] {
+                        if let Ok(at) = ms.binary_search(&m) {
+                            hit += cs[at].count(&mask);
+                        }
+                    }
+                }
+                hit as f64 / vol
+            })
+            .collect()
+    }
+}
+
+/// Build + count in one call — the engine's compressed dispatch arm and
+/// the bench's standalone kernel entry.
+pub fn densities_compressed(ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
+    CompressedRows::build(ctx).densities(clusters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+    use crate::datasets::synthetic::{k1, k2};
+    use crate::density::exact::densities_scalar;
+
+    #[test]
+    fn container_choice_and_counts() {
+        // one solid run
+        let run = Container::choose(&(10..90).collect::<Vec<u32>>());
+        assert!(matches!(run, Container::Runs(ref r) if r == &vec![(10, 80)]));
+        // scattered sparse ids over a wide span → array
+        let arr = Container::choose(&[1, 500, 9000]);
+        assert!(matches!(arr, Container::Array(_)));
+        // dense scattered (every other id) → bitmap beats 32 runs/ids
+        let alt: Vec<u32> = (0..64).map(|i| i * 2).collect();
+        let bmp = Container::choose(&alt);
+        assert!(matches!(bmp, Container::Bitmap(_)));
+        // all three count identically against the same mask
+        let ids: Vec<u32> = vec![3, 4, 5, 6, 64, 66, 130];
+        let mut mask = Vec::new();
+        bit_mask(&[4, 5, 66, 129, 130], 3, &mut mask);
+        for c in [
+            Container::Array(ids.clone()),
+            Container::choose(&ids),
+        ] {
+            assert_eq!(c.count(&mask), 4, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn compressed_matches_scalar_on_blocks() {
+        use crate::oac::{mine_online, Constraints};
+        for ctx in [k1(6), k2(4)] {
+            let mut clusters = mine_online(&ctx.inner, &Constraints::none());
+            // out-of-extent ids and a zero-volume cluster must behave
+            // exactly like the oracle (zero hits, 0.0)
+            clusters.push(tricluster(vec![0, 90], vec![1, 80], vec![0, 63, 200]));
+            clusters.push(tricluster(vec![], vec![0], vec![0]));
+            assert_eq!(
+                densities_compressed(&ctx, &clusters),
+                densities_scalar(&ctx, &clusters)
+            );
+        }
+    }
+
+    #[test]
+    fn wide_ids_stay_cheap() {
+        // a far-flung (g, m) pair explodes the flat grid but costs one
+        // row here
+        let mut ctx = TriContext::new();
+        ctx.add(0, 0, 0);
+        ctx.add(2_000_000, 3_000_000, 5);
+        let rows = CompressedRows::build(&ctx);
+        assert_eq!(rows.n_rows(), 2);
+        assert!(rows.bytes() < 64);
+        let c = tricluster(vec![0, 2_000_000], vec![0, 3_000_000], vec![0, 5]);
+        assert_eq!(
+            rows.densities(std::slice::from_ref(&c)),
+            densities_scalar(&ctx, std::slice::from_ref(&c))
+        );
+    }
+
+    #[test]
+    fn empty_context_counts_zero() {
+        let ctx = TriContext::new();
+        let c = tricluster(vec![0], vec![0], vec![0]);
+        assert_eq!(densities_compressed(&ctx, &[c]), vec![0.0]);
+    }
+}

@@ -1,37 +1,84 @@
-//! Exact density: the scalar hash-membership oracle and the bitset
-//! kernel that replaces it on the hot path.
+//! Exact density: the scalar hash-membership oracle and the row-table
+//! kernels that replace it on the hot path.
 //!
 //! The scalar path probes the context's tuple hash set once per cuboid
 //! cell — `O(volume)` probes per cluster, each a full tuple hash. The
-//! bitset kernel ([`densities_bitset`]) instead builds per-(g, m) `u64`
-//! rows over the third modality ONCE per call ([`BitRows`]) and reduces
-//! each cluster to `popcount(row & modus_mask)` sums — 64 cells per
-//! word-AND, no hashing, sequential row reads. Both count exactly, so
-//! they return bit-identical densities (property-tested in
-//! `rust/tests/proptests.rs`); the scalar path remains the reference
-//! oracle and the fallback when the row table would not fit
-//! [`BITSET_MAX_BYTES`] or the workload is too small to amortise the
-//! build.
+//! flat bitset kernel ([`densities_bitset`]) instead builds per-(g, m)
+//! `u64` rows over the third modality ([`BitRows`]) and reduces each
+//! cluster to `popcount(row & modus_mask)` sums — 64 cells per word-AND,
+//! no hashing, sequential row reads. When the flat table would exceed
+//! its byte cap (dense, wide-id contexts), the engine drops to the
+//! compressed row table ([`CompressedRows`]) — `O(|I|)` memory, same
+//! word-AND counting per non-empty row — instead of regressing to the
+//! scalar loop. All three count exactly, so they return bit-identical
+//! densities (property-tested in `rust/tests/proptests.rs`); the scalar
+//! path remains the reference oracle and still serves workloads too
+//! small to amortise any build.
+//!
+//! The engine is stateful (§Perf round 2): the row table it builds is
+//! cached and keyed by the context's mutation revision
+//! ([`crate::core::context::PolyContext::revision`]), so repeated
+//! density calls against an unchanged context — the serve loop's steady
+//! state — skip the rebuild entirely.
 
 use crate::core::context::TriContext;
 use crate::core::pattern::Cluster;
+use crate::density::compressed::CompressedRows;
 use crate::density::tiling::{bit_mask, BitRows};
 use crate::density::DensityEngine;
 
-/// Byte cap on the bitset row table (|G|·|M|·⌈|B|/64⌉·8); above it the
-/// engine falls back to scalar counting.
+/// Byte cap on the flat bitset row table (|G|·|M|·⌈|B|/64⌉·8); above it
+/// the engine switches to the compressed row table.
 pub const BITSET_MAX_BYTES: usize = 64 << 20;
 
-/// Minimum total cuboid cells below which the row-table build costs more
+/// Minimum total cuboid cells below which a row-table build costs more
 /// than the scalar probes it replaces.
 const BITSET_MIN_CELLS: f64 = 4096.0;
 
+/// Exact per-cluster density over the raw tuple set (the reference the
+/// sampled and compiled engines are validated against). Dispatch ladder:
+/// tiny workloads count scalar; otherwise the flat bitset table when it
+/// fits the byte cap, else the compressed table — identical results on
+/// every rung. The built table is cached across calls and invalidated by
+/// the context's revision stamp.
 #[derive(Default)]
-/// Exact per-cluster density over the raw tuple set (the reference
-/// the sampled and compiled engines are validated against). Dispatches
-/// to the bitset kernel when profitable; the result is identical either
-/// way.
-pub struct ExactEngine;
+pub struct ExactEngine {
+    /// Flat-table byte cap override (None → [`BITSET_MAX_BYTES`]).
+    max_bitset_bytes: Option<usize>,
+    /// Row table of the last counted context, revision-stamped.
+    cache: Option<RowCache>,
+}
+
+/// A built row table plus the context revision it reflects.
+struct RowCache {
+    revision: u64,
+    rows: Rows,
+}
+
+/// Which rung of the ladder the cached table lives on.
+enum Rows {
+    Bit(BitRows),
+    Compressed(CompressedRows),
+}
+
+impl ExactEngine {
+    /// Engine with a custom flat-table byte cap — `ExactEngine::default()`
+    /// uses [`BITSET_MAX_BYTES`]. A tiny cap forces the compressed rung
+    /// (the `--bitset-cap` CLI knob and the CI trace check use this).
+    pub fn with_bitset_cap(max_bytes: usize) -> Self {
+        Self { max_bitset_bytes: Some(max_bytes), cache: None }
+    }
+
+    /// Revision stamp of the cached row table, if any (test hook for the
+    /// reuse/invalidation contract).
+    pub fn cached_revision(&self) -> Option<u64> {
+        self.cache.as_ref().map(|c| c.revision)
+    }
+
+    fn cap(&self) -> usize {
+        self.max_bitset_bytes.unwrap_or(BITSET_MAX_BYTES)
+    }
+}
 
 /// The scalar reference: one hash membership probe per cuboid cell.
 pub fn densities_scalar(ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
@@ -57,42 +104,44 @@ pub fn densities_scalar(ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
         .collect()
 }
 
-/// The bitset kernel: build the per-(g, m) row table once, then count
-/// every cluster with word-AND + popcount. Returns `None` when the table
-/// would exceed `max_bytes` (the caller falls back to
-/// [`densities_scalar`]). Exact — equal to the scalar oracle bit for
-/// bit.
+/// Count `clusters` against a built flat row table with word-AND +
+/// popcount. Exact — equal to the scalar oracle bit for bit.
+pub fn count_bitset(rows: &BitRows, clusters: &[Cluster]) -> Vec<f64> {
+    let words = rows.words();
+    let mut mask: Vec<u64> = Vec::new();
+    clusters
+        .iter()
+        .map(|c| {
+            let vol = c.volume();
+            if vol == 0.0 {
+                return 0.0;
+            }
+            bit_mask(&c.components[2], words, &mut mask);
+            let mut hit = 0u64;
+            for &g in &c.components[0] {
+                for &m in &c.components[1] {
+                    if let Some(row) = rows.row(g, m) {
+                        for (w, &bits) in row.iter().enumerate() {
+                            hit += (bits & mask[w]).count_ones() as u64;
+                        }
+                    }
+                }
+            }
+            hit as f64 / vol
+        })
+        .collect()
+}
+
+/// The flat bitset kernel: build the per-(g, m) row table once, then
+/// count every cluster. Returns `None` when the table would exceed
+/// `max_bytes` (callers fall through to [`CompressedRows`] or
+/// [`densities_scalar`]).
 pub fn densities_bitset(
     ctx: &TriContext,
     clusters: &[Cluster],
     max_bytes: usize,
 ) -> Option<Vec<f64>> {
-    let rows = BitRows::build(ctx, max_bytes)?;
-    let words = rows.words();
-    let mut mask: Vec<u64> = Vec::new();
-    Some(
-        clusters
-            .iter()
-            .map(|c| {
-                let vol = c.volume();
-                if vol == 0.0 {
-                    return 0.0;
-                }
-                bit_mask(&c.components[2], words, &mut mask);
-                let mut hit = 0u64;
-                for &g in &c.components[0] {
-                    for &m in &c.components[1] {
-                        if let Some(row) = rows.row(g, m) {
-                            for (w, &bits) in row.iter().enumerate() {
-                                hit += (bits & mask[w]).count_ones() as u64;
-                            }
-                        }
-                    }
-                }
-                hit as f64 / vol
-            })
-            .collect(),
-    )
+    Some(count_bitset(&BitRows::build(ctx, max_bytes)?, clusters))
 }
 
 impl DensityEngine for ExactEngine {
@@ -102,18 +151,37 @@ impl DensityEngine for ExactEngine {
 
     fn densities(&mut self, ctx: &TriContext, clusters: &[Cluster]) -> Vec<f64> {
         let cells: f64 = clusters.iter().map(Cluster::volume).sum();
-        if cells >= BITSET_MIN_CELLS {
-            if let Some(out) = densities_bitset(ctx, clusters, BITSET_MAX_BYTES) {
-                crate::obs::counter("density.dispatch.bitset", 1);
-                return out;
-            }
-            // the row table would not fit BITSET_MAX_BYTES
-            crate::obs::counter("density.dispatch.scalar_fallback", 1);
-        } else {
-            // too few cuboid cells to amortise the row-table build
+        if cells < BITSET_MIN_CELLS {
+            // too few cuboid cells to amortise any row-table build (and
+            // not worth caching one either)
             crate::obs::counter("density.dispatch.scalar_small", 1);
+            return densities_scalar(ctx, clusters);
         }
-        densities_scalar(ctx, clusters)
+        let revision = ctx.revision();
+        let hit = self.cache.as_ref().is_some_and(|c| c.revision == revision);
+        if hit {
+            crate::obs::counter("density.rows.cache_hit", 1);
+        } else {
+            let rows = match BitRows::build(ctx, self.cap()) {
+                Some(bits) => Rows::Bit(bits),
+                // flat table over the byte cap: compressed rows, not the
+                // O(volume) scalar loop
+                None => Rows::Compressed(CompressedRows::build(ctx)),
+            };
+            crate::obs::counter("density.rows.build", 1);
+            self.cache = Some(RowCache { revision, rows });
+        }
+        let cache = self.cache.as_ref().expect("cache just ensured");
+        match &cache.rows {
+            Rows::Bit(rows) => {
+                crate::obs::counter("density.dispatch.bitset", 1);
+                count_bitset(rows, clusters)
+            }
+            Rows::Compressed(rows) => {
+                crate::obs::counter("density.dispatch.compressed", 1);
+                rows.densities(clusters)
+            }
+        }
     }
 }
 
@@ -126,7 +194,7 @@ mod tests {
     #[test]
     fn dense_block_is_one() {
         let ctx = k2(3);
-        let mut e = ExactEngine;
+        let mut e = ExactEngine::default();
         let c = tricluster(vec![0, 1, 2], vec![0, 1, 2], vec![0, 1, 2]);
         assert_eq!(e.densities(&ctx, &[c]), vec![1.0]);
     }
@@ -134,7 +202,7 @@ mod tests {
     #[test]
     fn cross_block_is_sparse() {
         let ctx = k2(3);
-        let mut e = ExactEngine;
+        let mut e = ExactEngine::default();
         // spanning two blocks: only the two diagonal blocks hit → 2·27 of
         // 6³ = 216 cells
         let c = tricluster(
@@ -163,11 +231,41 @@ mod tests {
     }
 
     #[test]
-    fn byte_cap_falls_back_to_scalar() {
-        let ctx = k2(3);
-        let c = tricluster(vec![0, 1, 2], vec![0, 1, 2], vec![0, 1, 2]);
-        assert!(densities_bitset(&ctx, &[c.clone()], 8).is_none());
-        // the engine still answers (scalar fallback)
-        assert_eq!(ExactEngine.densities(&ctx, &[c]), vec![1.0]);
+    fn byte_cap_routes_to_compressed_not_scalar() {
+        let ctx = k1(16); // 16³ = 4096 cells/cluster ≥ BITSET_MIN_CELLS
+        let c = tricluster(
+            (0..16).collect(),
+            (0..16).collect(),
+            (0..16).collect(),
+        );
+        // the flat kernel refuses the 1-byte cap...
+        assert!(densities_bitset(&ctx, std::slice::from_ref(&c), 1).is_none());
+        // ...but the capped engine still answers, via compressed rows,
+        // and exactly
+        let mut capped = ExactEngine::with_bitset_cap(1);
+        let got = capped.densities(&ctx, std::slice::from_ref(&c));
+        assert_eq!(got, densities_scalar(&ctx, std::slice::from_ref(&c)));
+        assert!(capped.cached_revision().is_some());
+    }
+
+    #[test]
+    fn row_cache_reused_until_context_mutates() {
+        let mut ctx = k1(16);
+        let c = tricluster(
+            (0..16).collect(),
+            (0..16).collect(),
+            (0..16).collect(),
+        );
+        let mut e = ExactEngine::default();
+        let d1 = e.densities(&ctx, std::slice::from_ref(&c));
+        let rev = e.cached_revision().expect("table cached");
+        let d2 = e.densities(&ctx, std::slice::from_ref(&c));
+        assert_eq!(d1, d2);
+        assert_eq!(e.cached_revision(), Some(rev)); // reused, not rebuilt
+        // mutation bumps the revision → next call rebuilds and stays exact
+        ctx.add(0, 0, 0);
+        let d3 = e.densities(&ctx, std::slice::from_ref(&c));
+        assert_ne!(e.cached_revision(), Some(rev));
+        assert_eq!(d3, densities_scalar(&ctx, std::slice::from_ref(&c)));
     }
 }

@@ -6,22 +6,26 @@
 //! one interface and an ablation bench comparing them (A2):
 //!
 //! * [`ExactEngine`]   — exact counting: per-(g, m) `u64` bitset rows +
-//!   popcount (64 cells per word-AND, built once per call) with the
-//!   scalar hash-membership probe (`O(volume)`/cluster) as oracle and
-//!   fallback;
+//!   popcount (64 cells per word-AND), degrading to roaring-style
+//!   compressed rows ([`CompressedRows`], `O(|I|)` memory) when the flat
+//!   table trips its byte cap, with the scalar hash-membership probe
+//!   (`O(volume)`/cluster) as oracle and small-workload path; the built
+//!   row table is cached across calls, keyed by the context revision;
 //! * [`XlaEngine`]     — the AOT JAX/Pallas kernel: dense 64³ tiles ×
 //!                       batched cluster masks on the MXU (via PJRT);
 //! * [`MonteCarloEngine`] — unbiased sampling, `O(samples)`/cluster,
 //!                       optionally through the AOT mc artifact.
 
+pub mod compressed;
 pub mod exact;
 pub mod monte_carlo;
 pub mod tiling;
 pub mod xla_engine;
 
-pub use exact::{densities_bitset, densities_scalar, ExactEngine};
+pub use compressed::{densities_compressed, CompressedRows};
+pub use exact::{count_bitset, densities_bitset, densities_scalar, ExactEngine};
 pub use monte_carlo::MonteCarloEngine;
-pub use tiling::{bit_mask, BitRows, DenseTiles};
+pub use tiling::{bit_mask, bit_mask_count_range, BitRows, DenseTiles};
 pub use xla_engine::XlaEngine;
 
 use crate::core::context::TriContext;

@@ -141,6 +141,31 @@ pub fn bit_mask(ids: &[u32], words: usize, out: &mut Vec<u64>) {
     }
 }
 
+/// Popcount of `mask` restricted to the id range `[start, start + len)`
+/// — the run-container count loop of
+/// [`crate::density::compressed::CompressedRows`]. Ids past the mask
+/// window contribute nothing (same drop rule as [`bit_mask`]).
+pub fn bit_mask_count_range(mask: &[u64], start: u32, len: u32) -> u64 {
+    let s = start as usize;
+    let e = s + len as usize; // usize: cannot overflow for u32 inputs
+    let first = s / 64;
+    let last = e.div_ceil(64).min(mask.len());
+    let mut hit = 0u64;
+    for w in first..last {
+        let mut word = mask[w];
+        let lo = w * 64;
+        let hi = lo + 64;
+        if lo < s {
+            word &= !0u64 << (s - lo); // s - lo < 64: only the first word
+        }
+        if hi > e {
+            word &= !0u64 >> (hi - e); // hi - e < 64: only the last word
+        }
+        hit += word.count_ones() as u64;
+    }
+    hit
+}
+
 /// Slice a global id set into a per-tile 0/1 mask of width `t` for tile
 /// index `ti` (ids in `[ti·t, (ti+1)·t)`).
 pub fn tile_mask(ids: &[u32], ti: usize, t: usize, out: &mut [f32]) {
@@ -223,6 +248,30 @@ mod tests {
         // id 200 is outside the window: dropped
         bit_mask(&[1], 1, &mut m);
         assert_eq!(m, vec![2u64]);
+    }
+
+    #[test]
+    fn count_range_matches_per_bit_scan() {
+        let ids = vec![0u32, 3, 63, 64, 70, 127, 128, 190];
+        let mut mask = Vec::new();
+        bit_mask(&ids, 3, &mut mask);
+        let oracle = |start: u32, len: u32| -> u64 {
+            (start..start.saturating_add(len))
+                .filter(|&b| (b as usize) < 192 && ids.contains(&b))
+                .count() as u64
+        };
+        for start in [0u32, 1, 3, 62, 64, 100, 128, 191, 192, 500] {
+            for len in [0u32, 1, 2, 63, 64, 65, 128, 1000] {
+                assert_eq!(
+                    bit_mask_count_range(&mask, start, len),
+                    oracle(start, len),
+                    "start={start} len={len}"
+                );
+            }
+        }
+        // u32::MAX range must not overflow
+        assert_eq!(bit_mask_count_range(&mask, 0, u32::MAX), 8);
+        assert_eq!(bit_mask_count_range(&mask, u32::MAX, u32::MAX), 0);
     }
 
     #[test]

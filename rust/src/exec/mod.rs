@@ -56,8 +56,9 @@ pub use pooled::Pooled;
 pub use sequential::Sequential;
 pub use spark_sim::SparkSim;
 pub use stages::{
-    run_pipeline, run_pipeline_ingest, stage1_cumuli, stage1_cumuli_ingest,
-    stage2_assembly, stage3_dedup_density, Components,
+    run_pipeline, run_pipeline_ingest, run_pipeline_ingest_tuned, stage1_cumuli,
+    stage1_cumuli_ingest, stage2_assembly, stage3_dedup_density,
+    stage3_dedup_density_par, Components,
 };
 
 use anyhow::Result;
@@ -127,6 +128,12 @@ pub struct ExecTuning {
     /// the simulated engines keep their shuffle — modelling it is their
     /// job. `seq` uses one worker, `pool` uses `workers`.
     pub parallel_ingest: bool,
+    /// In-process backends with `parallel_ingest`: hash partitions for
+    /// the in-process stage-3 grouper
+    /// ([`stages::stage3_dedup_density_par`]); `0` keeps stage 3 as a
+    /// backend `group_reduce` round. Output-equivalent either way
+    /// (property-tested across random values).
+    pub dedup_partitions: usize,
 }
 
 impl Default for ExecTuning {
@@ -151,6 +158,7 @@ impl Default for ExecTuning {
             churn_prob: 0.0,
             churn_restart_ms: 50.0,
             parallel_ingest: true,
+            dedup_partitions: workers.min(16),
         }
     }
 }
@@ -216,13 +224,20 @@ pub fn run_named(
     let mut span = crate::span!("exec.run.{}", name);
     span.records_in(ctx.tuples().len() as u64);
     let (backend, clusters) = match name {
-        "seq" if tune.parallel_ingest => {
-            ("seq", run_pipeline_ingest(&Sequential, ctx, theta, 1)?)
-        }
+        "seq" if tune.parallel_ingest => (
+            "seq",
+            run_pipeline_ingest_tuned(&Sequential, ctx, theta, 1, tune.dedup_partitions)?,
+        ),
         "seq" => ("seq", run_pipeline(&Sequential, ctx, theta, false)?),
         "pool" if tune.parallel_ingest => (
             "pool",
-            run_pipeline_ingest(&Pooled::new(tune.workers), ctx, theta, tune.workers)?,
+            run_pipeline_ingest_tuned(
+                &Pooled::new(tune.workers),
+                ctx,
+                theta,
+                tune.workers,
+                tune.dedup_partitions,
+            )?,
         ),
         "pool" => ("pool", run_pipeline(&Pooled::new(tune.workers), ctx, theta, false)?),
         "hadoop" => {

@@ -163,6 +163,43 @@ pub fn stage3_dedup_density<B: Backend>(
     )
 }
 
+/// Stage 3 computed by the shared-memory partitioned grouper instead of
+/// a backend `group_reduce` round: [`crate::util::pool::group_indices`]
+/// hash-partitions the component keys across `workers` threads, then
+/// each group's distinct-support count and θ filter run in parallel.
+/// Same contract as [`stage3_dedup_density`] up to group order (the
+/// pipeline canonicalises with `sort_clusters` anyway) — unit-tested
+/// equal, and the backend round stays the reference.
+pub fn stage3_dedup_density_par(
+    assembled: Vec<(Components, NTuple)>,
+    theta: f64,
+    workers: usize,
+    partitions: usize,
+) -> Vec<Cluster> {
+    use crate::util::pool;
+    let mut span = crate::span!("exec.dedup.s3");
+    span.records_in(assembled.len() as u64);
+    let (comps, gens): (Vec<Components>, Vec<NTuple>) =
+        assembled.into_iter().unzip();
+    let groups = pool::group_indices(&comps, partitions.max(1), workers.max(1));
+    let out: Vec<Option<Cluster>> =
+        pool::parallel_map(groups.len(), workers.max(1), 1, |gi| {
+            let (first, members) = &groups[gi];
+            let mut g: Vec<NTuple> = members.iter().map(|&i| gens[i]).collect();
+            g.sort_unstable();
+            g.dedup();
+            // stage-1 cumuli arrive sorted + deduped, as in the backend
+            // round
+            let mut c = Cluster::from_sorted(comps[*first].clone());
+            c.support = g.len();
+            let vol = c.volume();
+            (vol > 0.0 && c.support as f64 / vol >= theta).then_some(c)
+        });
+    let clusters: Vec<Cluster> = out.into_iter().flatten().collect();
+    span.records_out(clusters.len() as u64);
+    clusters
+}
+
 /// The full pipeline: cumuli → assembly → dedup+density, with the output
 /// canonicalised by component order (reduce partition/group order is
 /// backend-dependent).
@@ -192,11 +229,29 @@ pub fn run_pipeline_ingest<B: Backend>(
     theta: f64,
     workers: usize,
 ) -> Result<Vec<Cluster>> {
+    run_pipeline_ingest_tuned(backend, ctx, theta, workers, 0)
+}
+
+/// [`run_pipeline_ingest`] with stage 3 also lifted off the backend:
+/// `dedup_partitions ≥ 1` runs the partitioned in-process grouper
+/// ([`stage3_dedup_density_par`]) instead of a `group_reduce` round;
+/// `0` keeps the backend round ([`crate::exec::ExecTuning::dedup_partitions`]).
+pub fn run_pipeline_ingest_tuned<B: Backend>(
+    backend: &B,
+    ctx: &PolyContext,
+    theta: f64,
+    workers: usize,
+    dedup_partitions: usize,
+) -> Result<Vec<Cluster>> {
     let mut span = crate::span!("exec.pipeline.{}-ingest", backend.name());
     span.records_in(ctx.tuples().len() as u64);
     let cumuli = stage1_cumuli_ingest(ctx.tuples(), ctx.arity(), workers);
     let assembled = stage2_assembly(backend, cumuli)?;
-    let mut clusters = stage3_dedup_density(backend, assembled, theta)?;
+    let mut clusters = if dedup_partitions > 0 {
+        stage3_dedup_density_par(assembled, theta, workers, dedup_partitions)
+    } else {
+        stage3_dedup_density(backend, assembled, theta)?
+    };
     crate::core::pattern::sort_clusters(&mut clusters);
     span.records_out(clusters.len() as u64);
     Ok(clusters)
@@ -294,6 +349,32 @@ mod tests {
             for (a, b) in mr.iter().zip(&fast) {
                 assert_eq!(a.components, b.components);
                 assert_eq!(a.support, b.support);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_stage3_equals_backend_round() {
+        let ctx = crate::datasets::synthetic::k1(5).inner;
+        let cumuli = stage1_cumuli_ingest(ctx.tuples(), 3, 2);
+        let assembled = stage2_assembly(&Sequential, cumuli).unwrap();
+        for theta in [0.0, 0.9] {
+            let mut reference =
+                stage3_dedup_density(&Sequential, assembled.clone(), theta).unwrap();
+            crate::core::pattern::sort_clusters(&mut reference);
+            for (workers, partitions) in [(1, 1), (4, 3), (2, 16)] {
+                let mut got = stage3_dedup_density_par(
+                    assembled.clone(),
+                    theta,
+                    workers,
+                    partitions,
+                );
+                crate::core::pattern::sort_clusters(&mut got);
+                assert_eq!(reference.len(), got.len(), "theta={theta}");
+                for (a, b) in reference.iter().zip(&got) {
+                    assert_eq!(a.components, b.components);
+                    assert_eq!(a.support, b.support);
+                }
             }
         }
     }

@@ -40,7 +40,7 @@ COMMANDS
              [--shuffle-ms-per-mib MS] [--shuffle-bytes B]
              [--metrics-out f.json] [--trace-out f.jsonl]
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
-  density    [--edge N] [--engine exact|xla|mc]
+  density    [--edge N] [--engine exact|xla|mc] [--bitset-cap BYTES]
   serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
              [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
              [--nodes N] [--placement rr|locality|least] [--churn P]
@@ -335,7 +335,15 @@ fn density(args: &Args) -> Result<()> {
     let engine = args.get_or("engine", "exact");
     let t = Timer::start();
     let d = match engine {
-        "exact" => ExactEngine.densities(&tri, &clusters),
+        "exact" => {
+            // --bitset-cap N overrides the flat row-table byte cap; a
+            // tiny cap forces the compressed rung (CI trace check)
+            let mut e = match args.get("bitset-cap") {
+                Some(_) => ExactEngine::with_bitset_cap(args.parse_or("bitset-cap", 0)),
+                None => ExactEngine::default(),
+            };
+            e.densities(&tri, &clusters)
+        }
         "mc" => MonteCarloEngine::host(1024, 7).densities(&tri, &clusters),
         "xla" => {
             let rt = tricluster::runtime::Runtime::load(

@@ -43,10 +43,13 @@ impl OnlineMiner {
         let mut span = crate::span!("oac.ingest.batch");
         span.records_in(batch.len() as u64);
         self.generated.reserve(batch.len());
-        for t in batch {
-            let set_ids = self.primes.add(t);
-            self.generated.push(Generated { set_ids, tuple: *t });
-        }
+        // batched probe pipeline; bit-identical to per-tuple `add`
+        let ids = self.primes.add_batch(batch);
+        self.generated.extend(
+            ids.into_iter()
+                .zip(batch)
+                .map(|(set_ids, &tuple)| Generated { set_ids, tuple }),
+        );
     }
 
     /// [`Self::add_batch`] on `workers` threads via the merge-based
@@ -119,9 +122,34 @@ impl OnlineMiner {
         let mut span = crate::span!("oac.dedup");
         span.records_in(self.generated.len() as u64);
         self.primes.arena.ensure_sorted_all();
-        let out = dedup_generated(&self.primes.arena, &self.generated, constraints);
+        let (workers, partitions) = dedup_degree(self.generated.len());
+        let out = dedup_generated_parallel(
+            &self.primes.arena,
+            &self.generated,
+            constraints,
+            workers,
+            partitions,
+        );
         span.records_out(out.len() as u64);
         out
+    }
+}
+
+/// Generated-cluster count below which [`dedup_degree`] stays sequential:
+/// four pool fan-outs (set fps, cluster fps, grouping, materialisation)
+/// cost more than the dedup itself on small batches.
+const PAR_DEDUP_MIN: usize = 4096;
+
+/// Auto-sized `(workers, partitions)` for [`dedup_generated_parallel`]:
+/// `(1, 1)` under [`PAR_DEDUP_MIN`] generated clusters, otherwise the
+/// machine's parallelism with the partition count capped (partitions
+/// beyond the worker count only add routing traffic).
+pub fn dedup_degree(n_generated: usize) -> (usize, usize) {
+    if n_generated < PAR_DEDUP_MIN {
+        (1, 1)
+    } else {
+        let workers = crate::util::pool::default_workers();
+        (workers, workers.min(16))
     }
 }
 
@@ -180,6 +208,105 @@ pub fn dedup_generated(
             constraints.satisfied_by(&c).then_some(c)
         })
         .collect()
+}
+
+/// [`dedup_generated`] fanned out on `util::pool` — the §Perf round-2
+/// dedup. Four chunked phases: (1) per-set content fingerprints over the
+/// whole arena (lane-batched
+/// [`crate::util::hash::set_fingerprint_batched`]; `materialize_into`
+/// takes `&self`, so workers share the arena read-only); (2) per-cluster
+/// fingerprints; (3) hash-partitioned first-seen grouping
+/// ([`crate::util::pool::group_indices`] — equal fingerprints land in
+/// one partition, the merge orders groups by unique first index);
+/// (4) one representative materialised + filtered per group, in group
+/// order.
+///
+/// Determinism contract: output is bit-for-bit identical to the
+/// sequential [`dedup_generated`] — which stays as the oracle — for ANY
+/// `workers`/`partitions` combination (property-tested in
+/// `rust/tests/proptests.rs`). Each phase either reproduces the
+/// sequential scan order exactly (groups by first occurrence, members in
+/// ingest order) or computes order-independent values.
+pub fn dedup_generated_parallel(
+    arena: &SetArena,
+    generated: &[Generated],
+    constraints: &crate::oac::post::Constraints,
+    workers: usize,
+    partitions: usize,
+) -> Vec<Cluster> {
+    use crate::core::pattern::combine_set_fingerprints;
+    use crate::util::hash::set_fingerprint_batched;
+    use crate::util::pool;
+    let workers = workers.max(1);
+    let partitions = partitions.max(1);
+    crate::obs::counter("oac.dedup.partitions", partitions as u64);
+    if generated.is_empty() {
+        return Vec::new();
+    }
+    let mut span = crate::span!("oac.dedup.group");
+    span.records_in(generated.len() as u64);
+    // (1) content fingerprint of every arena set. The sequential oracle
+    // fingerprints only first-touched sets; computing all of them is the
+    // same work here (every set is referenced by the tuple that
+    // allocated it) and turns the memoization into a flat indexed pass.
+    let n_sets = arena.len();
+    let set_chunk = n_sets.div_ceil(workers * 4).max(64);
+    let set_chunks = n_sets.div_ceil(set_chunk);
+    let set_fp: Vec<u64> = pool::parallel_map(set_chunks, workers, 1, |ci| {
+        let lo = ci * set_chunk;
+        let hi = ((ci + 1) * set_chunk).min(n_sets);
+        let mut scratch: Vec<u32> = Vec::new();
+        (lo..hi)
+            .map(|id| {
+                arena.materialize_into(id as crate::oac::primes::SetId, &mut scratch);
+                set_fingerprint_batched(&scratch)
+            })
+            .collect::<Vec<u64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    // (2) cluster fingerprints, chunked over the generated stream
+    let gen_chunk = generated.len().div_ceil(workers * 4).max(1024);
+    let gen_chunks = generated.len().div_ceil(gen_chunk);
+    let cluster_fp: Vec<u64> = pool::parallel_map(gen_chunks, workers, 1, |ci| {
+        let lo = ci * gen_chunk;
+        let hi = ((ci + 1) * gen_chunk).min(generated.len());
+        generated[lo..hi]
+            .iter()
+            .map(|g| {
+                combine_set_fingerprints(
+                    g.set_ids.len(),
+                    g.set_ids.iter().map(|&id| set_fp[id as usize]),
+                )
+            })
+            .collect::<Vec<u64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    // (3) first-seen fingerprint groups, hash-partitioned
+    let groups = pool::group_indices(&cluster_fp, partitions, workers);
+    crate::obs::counter("oac.dedup.groups", groups.len() as u64);
+    // (4) materialise + filter one representative per group; group order
+    // equals the sequential first-seen order, members the ingest order
+    let out: Vec<Option<Cluster>> = pool::parallel_map(groups.len(), workers, 1, |gi| {
+        let (first, members) = &groups[gi];
+        let mut gens: Vec<NTuple> = members.iter().map(|&i| generated[i].tuple).collect();
+        gens.sort_unstable();
+        gens.dedup();
+        let comps: Vec<Vec<u32>> = generated[*first]
+            .set_ids
+            .iter()
+            .map(|&id| arena.materialize(id))
+            .collect();
+        let mut c = Cluster::from_sorted(comps);
+        c.support = gens.len();
+        constraints.satisfied_by(&c).then_some(c)
+    });
+    let out: Vec<Cluster> = out.into_iter().flatten().collect();
+    span.records_out(out.len() as u64);
+    out
 }
 
 #[cfg(test)]
@@ -299,6 +426,40 @@ mod tests {
         for (a, b) in sa.iter().zip(&pa) {
             assert_eq!(a.components, b.components);
             assert_eq!(a.support, b.support);
+        }
+    }
+
+    #[test]
+    fn parallel_dedup_equals_sequential_oracle() {
+        use crate::oac::post::Constraints;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let data: Vec<NTuple> = (0..800)
+            .map(|_| {
+                NTuple::triple(
+                    rng.below(6) as u32,
+                    rng.below(6) as u32,
+                    rng.below(6) as u32,
+                )
+            })
+            .collect();
+        let mut miner = OnlineMiner::new(3);
+        miner.add_batch(&data);
+        let cons = Constraints { min_density: 0.0, min_support: 2 };
+        let seq = dedup_generated(&miner.primes.arena, &miner.generated, &cons);
+        for (workers, partitions) in [(1, 1), (1, 4), (3, 1), (4, 4), (2, 16)] {
+            let par = dedup_generated_parallel(
+                &miner.primes.arena,
+                &miner.generated,
+                &cons,
+                workers,
+                partitions,
+            );
+            assert_eq!(seq.len(), par.len(), "w={workers} p={partitions}");
+            for (a, b) in seq.iter().zip(&par) {
+                assert_eq!(a.components, b.components, "w={workers} p={partitions}");
+                assert_eq!(a.support, b.support);
+            }
         }
     }
 

@@ -42,7 +42,10 @@ impl Constraints {
 /// Merge duplicate clusters (same components, different generating
 /// tuples), accumulate support = number of DISTINCT generating tuples,
 /// then filter by `constraints`. Returns deduplicated clusters in
-/// first-seen order.
+/// first-seen order — the order contract every dedup in the repo
+/// shares, including the memoized
+/// [`crate::oac::online::dedup_generated`] oracle and its partitioned
+/// [`crate::oac::online::dedup_generated_parallel`] twin.
 pub fn dedup_and_filter(
     materialized: Vec<(Cluster, NTuple)>,
     constraints: &Constraints,

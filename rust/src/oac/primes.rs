@@ -27,10 +27,17 @@
 //!   workers into thread-local stores and merges them deterministically
 //!   (set-id remap in first-touch order), bit-for-bit equal to
 //!   sequential ingest — the paper's "triples are processed
-//!   independently" claim applied to the single-node engine.
+//!   independently" claim applied to the single-node engine;
+//! * round 2: the packed dictionaries are open-addressing [`ProbeDict`]s
+//!   and [`PrimeStore::add_batch`] stages [`PROBE_WIDTH`] tuples at a
+//!   time — key packing and hashing run as branch-free loops over flat
+//!   `u128`/`u64` slices (autovectorisable), and only the final probe /
+//!   allocate pass walks sequentially, preserving first-touch order.
+//!   The scalar [`PrimeStore::add`] loop is kept as the property-test
+//!   oracle.
 
 use crate::core::tuple::{NTuple, SubRelation, MAX_ARITY};
-use crate::util::hash::FxHashMap;
+use crate::util::hash::{mix64, FxHashMap};
 use crate::util::pool;
 
 /// Index of a prime set / cumulus in the arena.
@@ -436,6 +443,126 @@ fn pack_keys_into(t: &NTuple, keys: &mut [u128; MAX_ARITY]) {
     }
 }
 
+/// Tuples per probe batch in [`PrimeStore::add_batch`]: keys and hashes
+/// for this many tuples are staged in flat fixed-width buffers so the
+/// pack and hash loops have no per-iteration branching (8 tuples × up to
+/// 5 keys each fills the SIMD pipeline without spilling L1).
+const PROBE_WIDTH: usize = 8;
+
+/// Sentinel value marking an empty [`ProbeDict`] slot. A real arena can
+/// never hand out `u32::MAX` set ids (the pool would exceed address
+/// space long before), so values double as occupancy flags and the probe
+/// loop needs no separate control bytes.
+const EMPTY_SLOT: SetId = SetId::MAX;
+
+/// Open-addressing dictionary from packed subrelation keys (`u128`) to
+/// set ids — the probe structure behind the §Perf batch ingest.
+///
+/// Linear probing over power-of-two capacity, grown at ¾ load. Compared
+/// to the previous `FxHashMap<u128, SetId>` the win is not the probe
+/// itself but the *batched* entry: hashes for a whole
+/// [`PROBE_WIDTH`]-tuple block are precomputed in one flat branch-free
+/// loop ([`ProbeDict::hash`] is pure arithmetic), so the dependent
+/// hash→probe chain of the map API disappears from the hot loop.
+#[derive(Debug, Clone)]
+struct ProbeDict {
+    /// Keys, parallel to `vals`; meaningful only where `vals` is occupied.
+    keys: Vec<u128>,
+    /// Set ids, `EMPTY_SLOT` = free.
+    vals: Vec<SetId>,
+    /// Capacity − 1 (capacity is a power of two).
+    mask: usize,
+    /// Occupied slots.
+    len: usize,
+}
+
+impl ProbeDict {
+    fn new() -> Self {
+        let cap = 64;
+        Self { keys: vec![0; cap], vals: vec![EMPTY_SLOT; cap], mask: cap - 1, len: 0 }
+    }
+
+    /// Hash a packed key: both 64-bit halves through the SplitMix64
+    /// finalizer. Branch-free — the batched ingest hashes whole key
+    /// blocks with this in a vectorisable loop.
+    #[inline]
+    fn hash(key: u128) -> u64 {
+        mix64(key as u64 ^ mix64((key >> 64) as u64).rotate_left(1))
+    }
+
+    /// Probe for `key` with its precomputed hash.
+    #[inline]
+    fn get_hashed(&self, h: u64, key: u128) -> Option<SetId> {
+        let mut i = h as usize & self.mask;
+        loop {
+            let v = self.vals[i];
+            if v == EMPTY_SLOT {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(v);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert a key known to be absent (callers probe first), growing at
+    /// ¾ load. `h` must be `Self::hash(key)`.
+    #[inline]
+    fn insert_hashed(&mut self, h: u64, key: u128, val: SetId) {
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = h as usize & self.mask;
+        while self.vals[i] != EMPTY_SLOT {
+            debug_assert_ne!(self.keys[i], key, "insert of a present key");
+            i = (i + 1) & self.mask;
+        }
+        self.keys[i] = key;
+        self.vals[i] = val;
+        self.len += 1;
+    }
+
+    fn grow(&mut self) {
+        let cap = self.keys.len() * 2;
+        let old_keys = std::mem::replace(&mut self.keys, vec![0; cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![EMPTY_SLOT; cap]);
+        self.mask = cap - 1;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if v != EMPTY_SLOT {
+                let mut i = Self::hash(k) as usize & self.mask;
+                while self.vals[i] != EMPTY_SLOT {
+                    i = (i + 1) & self.mask;
+                }
+                self.keys[i] = k;
+                self.vals[i] = v;
+            }
+        }
+    }
+
+    fn get(&self, key: u128) -> Option<SetId> {
+        self.get_hashed(Self::hash(key), key)
+    }
+
+    fn insert(&mut self, key: u128, val: SetId) {
+        self.insert_hashed(Self::hash(key), key, val);
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Iterate occupied `(key, id)` entries (arbitrary order — the one
+    /// consumer, `cumuli`, sorts its output canonically).
+    fn iter(&self) -> impl Iterator<Item = (u128, SetId)> + '_ {
+        self.keys
+            .iter()
+            .zip(&self.vals)
+            .filter(|&(_, &v)| v != EMPTY_SLOT)
+            .map(|(&k, &v)| (k, v))
+    }
+}
+
 /// Tuples per parallel-ingest chunk below which spawning workers costs
 /// more than it saves.
 const PAR_MIN_CHUNK: usize = 2048;
@@ -450,7 +577,7 @@ const PAR_MIN_CHUNK: usize = 2048;
 pub struct PrimeStore {
     arity: usize,
     /// fast path (arity ≤ 5): dicts[k]: packed subrelation → set id
-    packed: Vec<FxHashMap<u128, SetId>>,
+    packed: Vec<ProbeDict>,
     /// general path: dicts[k]: subrelation → set id
     general: Vec<FxHashMap<SubRelation, SetId>>,
     /// The arena holding every prime set's contents.
@@ -464,7 +591,7 @@ impl PrimeStore {
         Self {
             arity,
             packed: if fast {
-                (0..arity).map(|_| FxHashMap::default()).collect()
+                (0..arity).map(|_| ProbeDict::new()).collect()
             } else {
                 Vec::new()
             },
@@ -519,11 +646,12 @@ impl PrimeStore {
         pack_keys_into(t, &mut keys);
         let mut ids = SetIds::default();
         for k in 0..self.arity {
-            let id = match self.packed[k].get(&keys[k]) {
-                Some(&id) => id,
+            let h = ProbeDict::hash(keys[k]);
+            let id = match self.packed[k].get_hashed(h, keys[k]) {
+                Some(id) => id,
                 None => {
                     let id = self.arena.alloc();
-                    self.packed[k].insert(keys[k], id);
+                    self.packed[k].insert_hashed(h, keys[k], id);
                     on_alloc(k as u8, keys[k]);
                     id
                 }
@@ -532,6 +660,69 @@ impl PrimeStore {
             ids.push(id);
         }
         ids
+    }
+
+    /// [`Self::add`] over a whole batch through the batched probe
+    /// pipeline. Per [`PROBE_WIDTH`]-tuple block: (1) pack every
+    /// subrelation key into one flat `u128` buffer ([`pack_keys_into`]
+    /// per tuple, no branching on dictionary state); (2) hash the whole
+    /// buffer in one branch-free arithmetic loop (the autovectorisable
+    /// part); (3) resolve sequentially against the dictionaries with the
+    /// precomputed hashes, preserving allocation order. Bit-for-bit
+    /// identical to calling [`Self::add`] per tuple (the scalar loop is
+    /// the property-test oracle in `rust/tests/proptests.rs`).
+    pub fn add_batch(&mut self, batch: &[NTuple]) -> Vec<SetIds> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.add_batch_into(batch, &mut out, |_, _| {});
+        out
+    }
+
+    /// [`Self::add_batch`] appending into a caller buffer and reporting
+    /// fresh allocations to `on_alloc` (the parallel-ingest creation
+    /// log). Falls back to the scalar loop on the general key path.
+    fn add_batch_into(
+        &mut self,
+        batch: &[NTuple],
+        out: &mut Vec<SetIds>,
+        mut on_alloc: impl FnMut(u8, u128),
+    ) {
+        if self.packed.is_empty() {
+            out.extend(batch.iter().map(|t| self.add(t)));
+            return;
+        }
+        let arity = self.arity;
+        let mut keys = [0u128; PROBE_WIDTH * MAX_ARITY];
+        let mut hashes = [0u64; PROBE_WIDTH * MAX_ARITY];
+        for block in batch.chunks(PROBE_WIDTH) {
+            for (t, tuple) in block.iter().enumerate() {
+                let slot = &mut keys[t * MAX_ARITY..(t + 1) * MAX_ARITY];
+                pack_keys_into(tuple, slot.try_into().expect("MAX_ARITY window"));
+            }
+            // stale entries past `block.len() * MAX_ARITY` (or past the
+            // tuple arity within a window) are hashed too — harmless,
+            // and keeping the loop bound flat is what lets it vectorise
+            for (h, &key) in hashes.iter_mut().zip(keys.iter()) {
+                *h = ProbeDict::hash(key);
+            }
+            for (t, tuple) in block.iter().enumerate() {
+                let mut ids = SetIds::default();
+                for k in 0..arity {
+                    let at = t * MAX_ARITY + k;
+                    let id = match self.packed[k].get_hashed(hashes[at], keys[at]) {
+                        Some(id) => id,
+                        None => {
+                            let id = self.arena.alloc();
+                            self.packed[k].insert_hashed(hashes[at], keys[at], id);
+                            on_alloc(k as u8, keys[at]);
+                            id
+                        }
+                    };
+                    self.arena.push(id, tuple.get(k));
+                    ids.push(id);
+                }
+                out.push(ids);
+            }
+        }
     }
 
     /// [`Self::add`] for a whole batch on `workers` threads, with an
@@ -575,7 +766,8 @@ impl PrimeStore {
         span.records_in(batch.len() as u64);
         let pages_before = self.arena.pages();
         if self.packed.is_empty() || workers <= 1 || batch.len() <= chunk {
-            let out: Vec<SetIds> = batch.iter().map(|t| self.add(t)).collect();
+            let mut out: Vec<SetIds> = Vec::with_capacity(batch.len());
+            self.add_batch_into(batch, &mut out, |_, _| {});
             crate::obs::counter(
                 "oac.arena.page_alloc",
                 (self.arena.pages() - pages_before) as u64,
@@ -591,9 +783,7 @@ impl PrimeStore {
             let mut store = PrimeStore::new(arity);
             let mut log: Vec<(u8, u128)> = Vec::new();
             let mut ids = Vec::with_capacity(chunks[ci].len());
-            for t in chunks[ci] {
-                ids.push(store.add_fast(t, |k, key| log.push((k, key))));
-            }
+            store.add_batch_into(chunks[ci], &mut ids, |k, key| log.push((k, key)));
             (store, log, ids)
         });
         // Deterministic merge, chunk-index order (parallel_map returns
@@ -602,8 +792,8 @@ impl PrimeStore {
         for (local, log, ids) in locals {
             let mut remap: Vec<SetId> = Vec::with_capacity(log.len());
             for (k, key) in log {
-                let id = match self.packed[k as usize].get(&key) {
-                    Some(&id) => id,
+                let id = match self.packed[k as usize].get(key) {
+                    Some(id) => id,
                     None => {
                         let id = self.arena.alloc();
                         self.packed[k as usize].insert(key, id);
@@ -629,7 +819,7 @@ impl PrimeStore {
     pub fn get(&self, sub: &SubRelation) -> Option<SetId> {
         let k = sub.dropped();
         if !self.packed.is_empty() {
-            self.packed[k].get(&pack_elems(sub.as_slice())).copied()
+            self.packed[k].get(pack_elems(sub.as_slice()))
         } else {
             self.general[k].get(sub).copied()
         }
@@ -638,7 +828,7 @@ impl PrimeStore {
     /// Number of distinct subrelation keys across all modalities.
     pub fn total_keys(&self) -> usize {
         if !self.packed.is_empty() {
-            self.packed.iter().map(FxHashMap::len).sum()
+            self.packed.iter().map(ProbeDict::len).sum()
         } else {
             self.general.iter().map(FxHashMap::len).sum()
         }
@@ -656,7 +846,7 @@ impl PrimeStore {
         let mut out = Vec::with_capacity(self.total_keys());
         if !self.packed.is_empty() {
             for (k, dict) in self.packed.iter().enumerate() {
-                for (&key, &id) in dict.iter() {
+                for (key, id) in dict.iter() {
                     let mut kept = [0u32; MAX_ARITY];
                     for (i, slot) in kept[..arity - 1].iter_mut().enumerate() {
                         *slot = (key >> (32 * i)) as u32;
@@ -806,6 +996,47 @@ mod tests {
         assert_eq!(a.pool.len() / PAGE, pool_pages);
         assert_eq!(a.materialize(s2), (0..(2 * PAGE as u32)).collect::<Vec<u32>>());
         assert_eq!(a.materialize(s1), (0..(3 * PAGE as u32)).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn probe_dict_survives_growth_and_collisions() {
+        let mut d = ProbeDict::new();
+        // enough keys to force several grows; adjacent keys collide in
+        // the low bits before mixing, exercising linear probing
+        for i in 0..500u128 {
+            assert_eq!(d.get(i), None);
+            d.insert(i, i as SetId);
+        }
+        assert_eq!(d.len(), 500);
+        for i in 0..500u128 {
+            assert_eq!(d.get(i), Some(i as SetId), "key {i}");
+        }
+        assert_eq!(d.get(1000), None);
+        let mut entries: Vec<(u128, SetId)> = d.iter().collect();
+        entries.sort_unstable();
+        assert_eq!(entries.len(), 500);
+        assert!(entries.iter().enumerate().all(|(i, &(k, v))| k == i as u128 && v == i as SetId));
+    }
+
+    #[test]
+    fn add_batch_equals_scalar_add_loop() {
+        // block remainders (len % PROBE_WIDTH ≠ 0), shared keys, and a
+        // 4-ary store all must match the scalar oracle exactly
+        for arity in [3usize, 4] {
+            let data: Vec<NTuple> = (0..203u32)
+                .map(|i| {
+                    let e = [i % 5, i % 3, i % 7, i % 2];
+                    NTuple::new(&e[..arity])
+                })
+                .collect();
+            let mut seq = PrimeStore::new(arity);
+            let seq_ids: Vec<SetIds> = data.iter().map(|t| seq.add(t)).collect();
+            let mut bat = PrimeStore::new(arity);
+            let bat_ids = bat.add_batch(&data);
+            assert_eq!(bat_ids, seq_ids, "arity {arity}");
+            assert_eq!(bat.total_keys(), seq.total_keys());
+            assert_eq!(bat.cumuli(), seq.cumuli(), "arity {arity}");
+        }
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! cumuli by `(dropped modality, subrelation)` key into one global
 //! [`SetArena`], and records every generating tuple as N pointers into
 //! that arena — the exact state a single global [`crate::oac::OnlineMiner`]
-//! would have built, so deduplication can reuse
-//! [`crate::oac::online::dedup_generated`] verbatim and sharded output
+//! would have built, so deduplication can reuse the miner's dedup
+//! verbatim ([`crate::oac::online::dedup_generated_parallel`], bit-equal
+//! to the sequential `dedup_generated` oracle) and sharded output
 //! provably equals `mine_online`.
 //!
 //! Deltas arrive map-side-combined (one `(key, values)` group per
@@ -20,7 +21,7 @@
 
 use crate::core::pattern::Cluster;
 use crate::core::tuple::SubRelation;
-use crate::oac::online::{dedup_generated, Generated};
+use crate::oac::online::{dedup_degree, dedup_generated_parallel, Generated};
 use crate::oac::post::Constraints;
 use crate::oac::primes::{SetArena, SetId, SetIds};
 use crate::util::hash::FxHashMap;
@@ -102,7 +103,8 @@ impl Compactor {
     }
 
     /// The compacted cluster index under `constraints` — rebuilt lazily
-    /// via the same [`dedup_generated`] the online miner uses.
+    /// via the same dedup the online miner uses
+    /// ([`dedup_generated_parallel`], auto-sized by [`dedup_degree`]).
     pub fn clusters(&mut self, constraints: &Constraints) -> &[Cluster] {
         let key = (constraints.min_density, constraints.min_support);
         let fresh = self.cache.is_some() && self.cached_for == Some(key);
@@ -112,8 +114,14 @@ impl Compactor {
             // incremental re-compaction only re-sorts the sets the new
             // deltas actually appended to (§Perf watermark)
             self.arena.ensure_sorted_all();
-            self.cache =
-                Some(dedup_generated(&self.arena, &self.generated, constraints));
+            let (workers, partitions) = dedup_degree(self.generated.len());
+            self.cache = Some(dedup_generated_parallel(
+                &self.arena,
+                &self.generated,
+                constraints,
+                workers,
+                partitions,
+            ));
             self.cached_for = Some(key);
         }
         self.cache.as_deref().expect("cache just built")

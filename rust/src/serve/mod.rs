@@ -13,8 +13,10 @@
 //!   over its partition and exposes epoch-tagged deltas;
 //! * [`merge`] — the compactor unions per-shard partial cumuli by
 //!   subrelation key (the §4.1 first reduce, made incremental) into a
-//!   globally-correct index, deduplicated with the exact
-//!   [`crate::oac::online::dedup_generated`] the online miner uses;
+//!   globally-correct index, deduplicated with the partitioned-parallel
+//!   [`crate::oac::online::dedup_generated_parallel`] (bit-for-bit
+//!   equal to the sequential [`crate::oac::online::dedup_generated`]
+//!   the online miner keeps as its oracle);
 //! * [`query`] — top-k by density, membership lookup, aggregate stats;
 //! * [`snapshot`] — JSON snapshot/restore for restart recovery;
 //! * [`cluster`] — the service placed on a simulated N-node cluster:

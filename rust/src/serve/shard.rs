@@ -128,7 +128,9 @@ impl Shard {
 
     /// Shard-local view: clusters over THIS partition only (partial —
     /// cumuli here miss contributions routed to sibling shards; the
-    /// compactor's output is the globally-correct index).
+    /// compactor's output is the globally-correct index). Runs the
+    /// miner's dedup, which auto-parallelises past
+    /// [`crate::oac::online::dedup_degree`]'s threshold.
     pub fn local_clusters(&mut self, constraints: &Constraints) -> Vec<Cluster> {
         self.miner.dedup_and_filter(constraints)
     }

@@ -137,6 +137,77 @@ where
     partials.into_iter().fold(make_acc(), |acc, (_, p)| merge(acc, p))
 }
 
+/// Deterministic partitioned grouping — the merge shape shared by the
+/// parallel fingerprint dedup (`oac::online`) and the in-process exec
+/// stage 3.
+///
+/// Groups the indices `0..keys.len()` by key equality: each returned
+/// entry is `(first_index, members)` for one distinct key, members in
+/// ascending index order, entries ordered by first occurrence — exactly
+/// what a sequential first-seen scan produces.
+///
+/// Determinism contract: equal keys hash equally, so a key's whole group
+/// lands in one hash partition; partitions build their groups
+/// independently on the pool and the merge sorts by `first_index`, which
+/// is unique. The output is therefore bit-identical for ANY
+/// `workers`/`partitions` combination, including `(1, 1)`.
+pub fn group_indices<K: std::hash::Hash + Eq + Sync>(
+    keys: &[K],
+    partitions: usize,
+    workers: usize,
+) -> Vec<(usize, Vec<usize>)> {
+    use crate::util::hash::{fxhash, FxHashMap};
+    let n = keys.len();
+    let partitions = partitions.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    // first-seen scan over one partition's indices (the whole range for
+    // the single-partition fast path)
+    let scan = |take: &dyn Fn(usize) -> bool| {
+        let mut by_key: FxHashMap<&K, usize> = FxHashMap::default();
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, k) in keys.iter().enumerate() {
+            if !take(i) {
+                continue;
+            }
+            match by_key.get(k) {
+                Some(&g) => groups[g].1.push(i),
+                None => {
+                    by_key.insert(k, groups.len());
+                    groups.push((i, vec![i]));
+                }
+            }
+        }
+        groups
+    };
+    if partitions == 1 {
+        return scan(&|_| true);
+    }
+    // route pass: one hash per key, chunked across the pool
+    let chunk = n.div_ceil(workers.max(1) * 4).max(1024);
+    let chunks = n.div_ceil(chunk);
+    let route: Vec<u32> = parallel_map(chunks, workers, 1, |c| {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(n);
+        keys[lo..hi]
+            .iter()
+            .map(|k| (fxhash(k) % partitions as u64) as u32)
+            .collect::<Vec<u32>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    // per-partition grouping, then the unique-first-index merge
+    let mut merged: Vec<(usize, Vec<usize>)> =
+        parallel_map(partitions, workers, 1, |p| scan(&|i| route[i] as usize == p))
+            .into_iter()
+            .flatten()
+            .collect();
+    merged.sort_unstable_by_key(|&(first, _)| first);
+    merged
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +280,36 @@ mod tests {
             },
         );
         assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn group_indices_matches_sequential_scan_for_any_split() {
+        // skewed keys: heavy duplicates plus singletons
+        let keys: Vec<u32> = (0..997u32).map(|i| (i * i) % 37).collect();
+        let baseline = group_indices(&keys, 1, 1);
+        // baseline sanity: first-seen order, members ascending
+        assert!(baseline.windows(2).all(|w| w[0].0 < w[1].0));
+        for &(first, ref members) in &baseline {
+            assert_eq!(members[0], first);
+            assert!(members.windows(2).all(|w| w[0] < w[1]));
+        }
+        for partitions in [1, 2, 3, 7, 64] {
+            for workers in [1, 2, 5] {
+                assert_eq!(
+                    group_indices(&keys, partitions, workers),
+                    baseline,
+                    "partitions={partitions} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn group_indices_empty_and_distinct() {
+        assert!(group_indices::<u32>(&[], 4, 4).is_empty());
+        let keys = [10u32, 20, 30];
+        let groups = group_indices(&keys, 2, 2);
+        assert_eq!(groups, vec![(0, vec![0]), (1, vec![1]), (2, vec![2])]);
     }
 
     #[test]

@@ -64,6 +64,9 @@ fn prop_all_backends_equal_online() {
             // seq/pool stage 1 via the merge-based ingest kernel or the
             // generic map_reduce round — both must match the reference
             parallel_ingest: g.bool(0.5),
+            // seq/pool stage 3 via the partitioned in-process grouper
+            // (any partition count) or the backend group_reduce round
+            dedup_partitions: g.usize_below(5),
             ..ExecTuning::default()
         };
         for backend in BACKENDS {

@@ -263,6 +263,153 @@ fn prop_bitset_density_equals_scalar_oracle() {
     });
 }
 
+/// The batched probe pipeline is exact: for ANY arity-3/4 tuple stream
+/// (including a split across two batches, so the second probes a warm
+/// dictionary), `add_batch` returns the same per-tuple set ids and
+/// builds the same store as the scalar `add` loop.
+#[test]
+fn prop_batched_probe_equals_scalar_add() {
+    assert_prop(24, |g| {
+        let arity = 3 + g.usize_below(2);
+        let universe = 2 + g.u32_below(10);
+        let n = 1 + g.len() * 16;
+        let tuples: Vec<NTuple> = (0..n)
+            .map(|_| {
+                let ids: Vec<u32> =
+                    (0..arity).map(|_| g.u32_below(universe)).collect();
+                NTuple::new(&ids)
+            })
+            .collect();
+        let mut scalar = PrimeStore::new(arity);
+        let scalar_ids: Vec<SetIds> = tuples.iter().map(|t| scalar.add(t)).collect();
+        let split = g.usize_below(n + 1);
+        let mut batched = PrimeStore::new(arity);
+        let mut ids = batched.add_batch(&tuples[..split]);
+        ids.extend(batched.add_batch(&tuples[split..]));
+        if ids != scalar_ids {
+            return Err(format!("set ids diverged (arity={arity} split={split})"));
+        }
+        if batched.total_keys() != scalar.total_keys() {
+            return Err("distinct key counts diverged".into());
+        }
+        if batched.cumuli() != scalar.cumuli() {
+            return Err("exported cumuli diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// The partitioned parallel dedup is bit-for-bit the sequential oracle —
+/// same clusters, same supports, same ORDER — for any worker count and
+/// partition split, over random arities and constraints.
+#[test]
+fn prop_parallel_dedup_equals_sequential_bit_for_bit() {
+    use tricluster::oac::{dedup_generated, dedup_generated_parallel};
+    assert_prop(24, |g| {
+        let arity = 3 + g.usize_below(2);
+        let ctx = gen_context(g, arity, 2 + g.u32_below(8));
+        let cons = Constraints {
+            min_density: if g.bool(0.5) { 0.0 } else { g.f64() * 0.5 },
+            min_support: g.usize_below(3),
+        };
+        let mut miner = OnlineMiner::new(arity);
+        miner.add_batch(ctx.tuples());
+        // seals the arena and runs the auto-sized parallel path
+        let auto = miner.dedup_and_filter(&cons);
+        let arena = &miner.primes().arena;
+        let oracle = dedup_generated(arena, miner.generated(), &cons);
+        let workers = 1 + g.usize_below(5);
+        let partitions = 1 + g.usize_below(8);
+        let par = dedup_generated_parallel(
+            arena,
+            miner.generated(),
+            &cons,
+            workers,
+            partitions,
+        );
+        for (label, got) in [("auto", &auto), ("par", &par)] {
+            if got.len() != oracle.len() {
+                return Err(format!(
+                    "{label}: counts differ {} vs {} (w={workers} p={partitions})",
+                    got.len(),
+                    oracle.len()
+                ));
+            }
+            for (a, b) in got.iter().zip(&oracle) {
+                if a.components != b.components || a.support != b.support {
+                    return Err(format!(
+                        "{label}: cluster/order mismatch (w={workers} p={partitions}): \
+                         {a:?} vs {b:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The compressed (array/bitmap/run) density kernel is exact: equal to
+/// the scalar hash-probe oracle on random contexts and clusters,
+/// including clusters whose ids reach past the context extents.
+#[test]
+fn prop_compressed_density_equals_scalar_oracle() {
+    use tricluster::core::context::TriContext;
+    use tricluster::density::{densities_compressed, densities_scalar};
+    assert_prop(24, |g| {
+        let mut ctx = TriContext::new();
+        let universe = 2 + g.u32_below(90);
+        for _ in 0..(1 + g.len() * 8) {
+            ctx.add(
+                g.u32_below(universe),
+                g.u32_below(universe),
+                g.u32_below(universe),
+            );
+        }
+        let mut clusters = mine_online(&ctx.inner, &Constraints::none());
+        // adversarial extras: out-of-extent ids and an empty component
+        clusters.push(tricluster::core::pattern::tricluster(
+            g.id_set(universe + 100),
+            g.id_set(universe + 100),
+            g.id_set(universe + 100),
+        ));
+        clusters.push(tricluster::core::pattern::tricluster(
+            vec![],
+            vec![0],
+            vec![universe],
+        ));
+        let scalar = densities_scalar(&ctx, &clusters);
+        let compressed = densities_compressed(&ctx, &clusters);
+        if scalar != compressed {
+            return Err(format!(
+                "densities diverged: {scalar:?} vs {compressed:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The exact engine's cached row table is reused while the context
+/// revision is unchanged and rebuilt (still exact) after a mutation.
+#[test]
+fn exact_engine_row_cache_tracks_context_revision() {
+    use tricluster::datasets::synthetic::k1;
+    use tricluster::density::{densities_scalar, DensityEngine, ExactEngine};
+    let mut ctx = k1(16);
+    let clusters = mine_online(&ctx.inner, &Constraints::none());
+    let mut e = ExactEngine::default();
+    let d1 = e.densities(&ctx, &clusters);
+    let rev = e.cached_revision().expect("row table cached");
+    let d2 = e.densities(&ctx, &clusters);
+    assert_eq!(d1, d2);
+    assert_eq!(e.cached_revision(), Some(rev), "unchanged context reuses the table");
+    // a successful insert bumps the revision: the stale table must not
+    // serve the grown relation
+    ctx.add(0, 0, 0);
+    let d3 = e.densities(&ctx, &clusters);
+    assert_ne!(e.cached_revision(), Some(rev), "mutation invalidates the cache");
+    assert_eq!(d3, densities_scalar(&ctx, &clusters));
+}
+
 #[test]
 fn prop_mr_insensitive_to_task_granularity() {
     // routing invariant: any (map_tasks, reduce_tasks) split produces the
