@@ -30,7 +30,14 @@
 //!    same cluster count (equivalence held under churn + re-placement),
 //!    locality moved strictly fewer drain-path MiB than round-robin,
 //!    and `locality_speedup_vs_rr` is at least the baseline's
-//!    `serve_cluster.min_locality_speedup_vs_rr` floor.
+//!    `serve_cluster.min_locality_speedup_vs_rr` floor. The query-plane
+//!    section of the same JSON is gated too: `cache_matches_uncached`
+//!    must not be present-and-false (the result cache answered
+//!    bit-identically to the uncached backend), and
+//!    `cached_query_speedup` must clear
+//!    `serve_cluster.min_cached_query_speedup` (wall-clock ratio, so
+//!    the floor is deliberately loose; skipped on older JSONs that
+//!    predate the query-plane section).
 //! 5. **Hot-path kernels** — when `BENCH_hotpath.json` is present:
 //!    sequential ingest throughput must not fall below
 //!    `hotpath.min_ingest_tuples_per_s`, merge-based parallel ingest
@@ -287,6 +294,34 @@ fn main() {
                 ));
             }
         }
+        // query plane: the cache must be transparent and must pay for
+        // itself
+        if serve.get("cache_matches_uncached").and_then(Json::as_bool) == Some(false)
+        {
+            failures.push(
+                "serve-cluster cache_matches_uncached is false: the result \
+                 cache changed a query answer"
+                    .to_string(),
+            );
+        }
+        let cq = f(&serve, "cached_query_speedup");
+        if let Some(min) = baseline
+            .get("serve_cluster")
+            .and_then(|s| s.get("min_cached_query_speedup"))
+            .and_then(Json::as_f64)
+        {
+            if cq.is_nan() {
+                eprintln!(
+                    "check_bench: serve-cluster has no cached_query_speedup — \
+                     older bench JSON; skipping the cached-query floor"
+                );
+            } else if cq < min {
+                failures.push(format!(
+                    "cached_query_speedup {cq:.3} fell below the baseline \
+                     floor {min:.3}"
+                ));
+            }
+        }
     } else {
         eprintln!(
             "check_bench: {serve_cluster_path} absent — skipping serve-cluster gate"
@@ -446,6 +481,29 @@ fn pin(
                 "min_locality_speedup_vs_rr".to_string(),
                 Json::Num((ratio * 0.9 * 1000.0).floor() / 1000.0),
             );
+            // wall-clock ratio: pin at 90% of observed when the
+            // query-plane section ran, else carry the committed floor
+            let cq = serve_cluster.map(|s| f(s, "cached_query_speedup"));
+            match cq {
+                Some(cq) if cq.is_finite() => {
+                    sc.insert(
+                        "min_cached_query_speedup".to_string(),
+                        Json::Num((cq * 0.9 * 1000.0).floor() / 1000.0),
+                    );
+                }
+                _ => {
+                    if let Some(old) = load(baseline_path)
+                        .as_ref()
+                        .and_then(|b| b.get("serve_cluster"))
+                        .and_then(|s| s.get("min_cached_query_speedup"))
+                    {
+                        sc.insert(
+                            "min_cached_query_speedup".to_string(),
+                            old.clone(),
+                        );
+                    }
+                }
+            }
             doc.insert("serve_cluster".to_string(), Json::Obj(sc));
         }
         _ => {

@@ -18,6 +18,13 @@
 //! 4. `density --engine exact --bitset-cap 1` — with the row-table byte
 //!    cap forced to 1, the engine must take the compressed rung and
 //!    prove it via `density.dispatch.compressed`.
+//! 5. `serve-sim --nodes 3 --replicas 2 --query-mix 64` — the epoch
+//!    query plane on the simulated cluster: the metrics must carry the
+//!    snapshot-publication counter (`serve.epoch.published`), both
+//!    result-cache counters (`serve.cache.hit` / `serve.cache.miss` —
+//!    the 64-query mix repeats keys, so both paths must fire), and the
+//!    replica-streaming counter (`serve.replica.publishes`); the trace
+//!    must contain the `serve.snapshot.build` span.
 //!
 //! Declared as a bench target (harness = false) like `check_bench`, so
 //! it shares the library build; it drives the CLI through `$CARGO run`
@@ -321,13 +328,55 @@ fn main() {
         );
     }
 
+    // 5. the epoch query plane: replicas + result cache on the cluster
+    let query_trace = out_dir.join("query_trace.jsonl");
+    let query_metrics = out_dir.join("query_metrics.json");
+    run_cli(
+        &cargo,
+        &[
+            "serve-sim",
+            "--datasets",
+            "imdb",
+            "--shards",
+            "4",
+            "--batch",
+            "512",
+            "--nodes",
+            "3",
+            "--replicas",
+            "2",
+            "--query-mix",
+            "64",
+            "--trace-out",
+            query_trace.to_str().unwrap(),
+            "--metrics-out",
+            query_metrics.to_str().unwrap(),
+        ],
+    );
+    let query_names = check_trace_file(&query_trace, &mut failures);
+    if !query_names.iter().any(|n| n == "serve.snapshot.build") {
+        failures.push("query trace: no serve.snapshot.build span".to_string());
+    }
+    let query_counters = check_metrics_file(&query_metrics, &mut failures);
+    for key in [
+        "serve.epoch.published",
+        "serve.cache.hit",
+        "serve.cache.miss",
+        "serve.replica.publishes",
+    ] {
+        if query_counters.get(key).copied().unwrap_or(0.0) < 1.0 {
+            failures.push(format!("query metrics: counter {key:?} missing or zero"));
+        }
+    }
+
     if failures.is_empty() {
         println!(
-            "check_trace: OK — {} mr events + {} serve events schema-valid, \
-             B/E balanced per tid, metrics cover exec/serve/oac/density \
-             (incl. partitioned dedup + compressed dispatch)",
+            "check_trace: OK — {} mr events + {} serve events + {} query-plane \
+             events schema-valid, B/E balanced per tid, metrics cover \
+             exec/serve/oac/density and the epoch/cache/replica counters",
             names.len(),
-            serve_names.len()
+            serve_names.len(),
+            query_names.len()
         );
     } else {
         for fail in &failures {

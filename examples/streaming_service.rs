@@ -1,13 +1,14 @@
 //! Walkthrough of the serving layer: stream a MovieLens-like rating feed
 //! into a sharded `TriclusterService`, compact mid-stream, answer
-//! queries, and survive a restart via snapshot/restore.
+//! queries through the epoch query plane, and survive a restart via
+//! snapshot/restore.
 //!
 //! Run: `cargo run --release --example streaming_service`
 
 use tricluster::core::io::format_cluster;
 use tricluster::datasets::{movielens, MovielensParams};
 use tricluster::oac::{mine_online, Constraints};
-use tricluster::serve::{ServeConfig, TriclusterService};
+use tricluster::serve::{QueryBackend, ServeConfig, TriclusterService};
 
 fn main() -> anyhow::Result<()> {
     // A 20k-tuple prefix of the deterministic MovieLens stream:
@@ -20,11 +21,14 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- ingest: batches hash-route to 4 shards, drains are automatic ---
-    let mut svc = TriclusterService::new(ServeConfig::new(ctx.arity(), 4));
+    let mut svc = TriclusterService::new(
+        ServeConfig::builder().arity(ctx.arity()).shards(4).build(),
+    );
     for (i, chunk) in ctx.tuples().chunks(2_048).enumerate() {
         svc.ingest(chunk);
-        // compact every 4 batches: the service stays queryable WHILE the
-        // stream keeps arriving
+        // compact every 4 batches: each compaction PUBLISHES an immutable
+        // epoch snapshot, so the service stays queryable WHILE the stream
+        // keeps arriving
         if (i + 1) % 4 == 0 {
             svc.compact();
             let s = svc.stats();
@@ -39,10 +43,12 @@ fn main() -> anyhow::Result<()> {
     }
     svc.compact();
 
-    // --- query: top-k by density + membership lookup -------------------
-    let q = svc.query();
-    println!("\nindex holds {} clusters; densest 3:", q.len());
-    for c in q.top_k_by_density(3) {
+    // --- query: an owned snapshot + a cached backend --------------------
+    // The snapshot is epoch-stamped and immutable: hold it as long as
+    // needed, later compactions never touch it.
+    let snap = svc.snapshot();
+    println!("\nepoch {} holds {} clusters; densest 3:", snap.epoch(), snap.len());
+    for c in snap.top_k_by_density(3) {
         println!(
             "  {}  (support {}, rho {:.3})",
             format_cluster(&ctx, c),
@@ -50,17 +56,27 @@ fn main() -> anyhow::Result<()> {
             c.support_density()
         );
     }
+    // membership is allocation-free: ids into the snapshot's index,
+    // resolved on demand
     let hot_user = 0; // zipf makes user0 the most active
-    let hits = q.containing(0, hot_user);
+    let hits = snap.containing(0, hot_user);
     println!(
-        "\nuser {:?} appears in {} clusters",
+        "\nuser {:?} appears in {} clusters (first: support {})",
         ctx.interners[0].name(hot_user),
-        hits.len()
+        hits.len(),
+        snap.resolve(hits[0]).support
     );
+    // the backend caches repeated queries; the cache drops itself when a
+    // new epoch is published
+    let mut backend = svc.backend();
+    let _ = backend.top_k(3);
+    let _ = backend.top_k(3);
+    let (cache_hits, cache_misses) = backend.cache_stats();
+    println!("backend cache: {cache_hits} hits / {cache_misses} misses");
 
     // --- the invariant the whole layer rests on ------------------------
     let reference = mine_online(&ctx, &Constraints::none());
-    assert_eq!(svc.clusters().len(), reference.len());
+    assert_eq!(snap.len(), reference.len());
     println!(
         "\nsharded index == sequential mine_online: {} clusters both ways",
         reference.len()
@@ -69,8 +85,8 @@ fn main() -> anyhow::Result<()> {
     // --- restart recovery ----------------------------------------------
     let path = std::env::temp_dir().join("streaming_service_snapshot.json");
     svc.snapshot_to(&path)?;
-    let mut restored = TriclusterService::restore_from(&path)?;
-    assert_eq!(restored.clusters().len(), reference.len());
+    let restored = TriclusterService::restore_from(&path)?;
+    assert_eq!(restored.snapshot().len(), reference.len());
     println!("snapshot -> restore verified at {}", path.display());
     std::fs::remove_file(&path).ok();
     Ok(())

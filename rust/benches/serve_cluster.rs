@@ -21,13 +21,17 @@
 //! `TRICLUSTER_BENCH_FULL=1` for the paper-sized stream.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
+use tricluster::core::context::PolyContext;
 use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
 use tricluster::datasets::{movielens, MovielensParams};
 use tricluster::exec::cluster_sim::{ChurnConfig, ShuffleModel};
 use tricluster::oac::{mine_online, Constraints};
 use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
+use tricluster::serve::{LocalBackend, QueryBackend, ServeConfig, TriclusterService};
 use tricluster::util::json::Json;
+use tricluster::util::rng::Rng;
 
 const NODES: usize = 4;
 const SHARDS: usize = 16;
@@ -54,6 +58,87 @@ fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
 
 fn num(n: f64) -> Json {
     Json::Num(n)
+}
+
+/// The same seeded query rotation the CLI's `--query-mix` drives:
+/// top-k, membership, entity-stats, and whole-index stats. The digest
+/// folds every answer, so two backends over the same epoch produce the
+/// SAME bits iff their answers agree — cache transparency, measured.
+fn query_mix(backend: &mut dyn QueryBackend, queries: usize, seed: u64, arity: usize) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut digest = 0.0f64;
+    for _ in 0..queries {
+        match rng.below(4) {
+            0 => digest += backend.top_k(1 + rng.usize_below(8)).len() as f64,
+            1 => {
+                digest += backend
+                    .containing(rng.usize_below(arity), rng.below(16) as u32)
+                    .len() as f64;
+            }
+            2 => {
+                digest += backend
+                    .entity_stats(rng.usize_below(arity), rng.below(16) as u32)
+                    .map_or(0.0, |s| s.mean_density);
+            }
+            _ => digest += backend.stats().mean_density,
+        }
+    }
+    digest
+}
+
+/// Wall-clock a query mix, best-of-`rounds`, returning (ms, digest).
+/// The cache is rebuilt per round (fresh backend) so every round pays
+/// the same cold misses — we measure steady behaviour, not luck.
+fn time_query_mix(
+    svc: &TriclusterService,
+    cache: bool,
+    queries: usize,
+    seed: u64,
+    arity: usize,
+    rounds: usize,
+) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut digest = 0.0;
+    for _ in 0..rounds {
+        let mut backend = LocalBackend::with_cache(svc.snapshot_cell(), cache);
+        let t = Instant::now();
+        digest = query_mix(&mut backend, queries, seed, arity);
+        best = best.min(t.elapsed().as_secs_f64() * 1e3);
+    }
+    (best, digest)
+}
+
+/// Query-plane throughput: one compacted epoch served through
+/// [`LocalBackend`] with the result cache on vs off. The cached run
+/// must answer bit-identically (digest equality — epoch-keyed cache
+/// entries are clones of the uncached computation) and faster: the
+/// `cached_query_speedup` ratio is gated by `ci/check_bench.rs`
+/// against `serve_cluster.min_cached_query_speedup`.
+fn bench_query_plane(ctx: &PolyContext, queries: usize, doc: &mut BTreeMap<String, Json>) {
+    let mut svc = TriclusterService::new(
+        ServeConfig::builder().arity(ctx.arity()).shards(8).build(),
+    );
+    svc.ingest(ctx.tuples());
+    svc.compact();
+    let arity = ctx.arity();
+    let (uncached_ms, uncached_digest) =
+        time_query_mix(&svc, false, queries, SEED, arity, 3);
+    let (cached_ms, cached_digest) = time_query_mix(&svc, true, queries, SEED, arity, 3);
+    let matches = cached_digest.to_bits() == uncached_digest.to_bits();
+    assert!(
+        matches,
+        "cached digest {cached_digest} != uncached {uncached_digest}: \
+         the cache changed an answer"
+    );
+    let speedup = uncached_ms / cached_ms;
+    eprintln!(
+        "  query-plane: {queries} queries over {} clusters — uncached {uncached_ms:.2} ms, \
+         cached {cached_ms:.2} ms ({speedup:.2}x), digests agree",
+        svc.snapshot().len()
+    );
+    doc.insert("query_mix_queries".to_string(), num(queries as f64));
+    doc.insert("cache_matches_uncached".to_string(), Json::Bool(matches));
+    doc.insert("cached_query_speedup".to_string(), num(speedup));
 }
 
 fn main() {
@@ -139,6 +224,7 @@ fn main() {
     );
 
     let mut doc = BTreeMap::new();
+    bench_query_plane(&ctx, if full { 8_192 } else { 2_048 }, &mut doc);
     doc.insert("bench".to_string(), Json::Str("serve_cluster".into()));
     doc.insert("full".to_string(), Json::Bool(full));
     doc.insert("tuples".to_string(), num(ctx.len() as f64));

@@ -138,6 +138,48 @@ pub fn by_name(name: &str) -> Result<Box<dyn Placement>> {
     }
 }
 
+/// Place `replicas` read replicas on a `nodes`-node cluster with the
+/// same pluggable `policy` that places shards and M/R tasks.
+///
+/// `node_load` is the per-node primary-shard count (or any comparable
+/// load measure): replicas are steered AWAY from the hottest node —
+/// the one already doing the most primary work — by offsetting the
+/// task index/partition past it, and each chosen node's virtual load
+/// is bumped by the maximum observed load so greedy policies spread
+/// replicas across distinct nodes instead of stacking them.
+///
+/// Like [`Placement::place`], this is a pure function of its inputs —
+/// the same policy, loads, and replica count always yield the same
+/// placement (the determinism contract of the simulation).
+pub fn place_replicas(
+    policy: &dyn Placement,
+    nodes: usize,
+    replicas: usize,
+    node_load: &[usize],
+) -> Vec<usize> {
+    let n = nodes.max(1);
+    let hottest = (0..node_load.len().min(n))
+        .max_by_key(|&i| (node_load[i], std::cmp::Reverse(i)))
+        .unwrap_or(0);
+    let spread = node_load.iter().copied().max().unwrap_or(0).max(1) as f64;
+    let mut virt: Vec<f64> =
+        (0..n).map(|i| node_load.get(i).copied().unwrap_or(0) as f64).collect();
+    let mut placed = Vec::with_capacity(replicas);
+    for r in 0..replicas {
+        let views: Vec<NodeView> = virt
+            .iter()
+            .enumerate()
+            .map(|(id, &b)| NodeView { id, free_at_ms: b, busy_ms: b })
+            .collect();
+        let slot = hottest + 1 + r;
+        let meta = TaskMeta::new(slot, slot as u64, 1.0);
+        let node = policy.place(&meta, &views).min(n - 1);
+        virt[node] += spread;
+        placed.push(node);
+    }
+    placed
+}
+
 /// Per-stage adaptive task count: enough tasks to keep every worker slot
 /// busy for ~2 waves, scaled up (smaller tasks) when the previous stage
 /// measured high skew — a skewed stage means per-item costs vary, and
@@ -219,6 +261,24 @@ mod tests {
             assert_eq!(by_name(name).unwrap().name(), want);
         }
         assert!(by_name("yarn").is_err());
+    }
+
+    #[test]
+    fn replica_placement_avoids_the_hottest_node_and_spreads() {
+        // node 0 hosts 5 primary shards — the hot node to steer around
+        let load = [5usize, 0, 1];
+        assert_eq!(place_replicas(&RoundRobin, 3, 2, &load), vec![1, 2]);
+        assert_eq!(place_replicas(&LeastLoaded, 3, 2, &load), vec![1, 2]);
+        // locality keys off the offset partition hash when no affinity
+        assert_eq!(place_replicas(&LocalityAware, 3, 3, &load), vec![1, 2, 0]);
+        // more replicas than nodes wraps but stays in range
+        for node in place_replicas(&RoundRobin, 3, 7, &load) {
+            assert!(node < 3);
+        }
+        // degenerate inputs: no replicas, single node, empty loads
+        assert!(place_replicas(&LeastLoaded, 3, 0, &load).is_empty());
+        assert_eq!(place_replicas(&LeastLoaded, 1, 2, &load), vec![0, 0]);
+        assert_eq!(place_replicas(&RoundRobin, 2, 1, &[]), vec![1]);
     }
 
     #[test]

@@ -45,9 +45,14 @@ COMMANDS
              [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
              [--nodes N] [--placement rr|locality|least] [--churn P]
              [--node-slots S] [--source-skew A] [--restart-ms MS]
-             [--pipeline on|off] [--metrics-out f.json] [--trace-out f.jsonl]
+             [--pipeline on|off] [--replicas N] [--retained N]
+             [--query-mix N] [--cache on|off] [--client-node N]
+             [--metrics-out f.json] [--trace-out f.jsonl]
              (--nodes places shards on a simulated cluster: shuffle costs,
-              churn, replay)
+              churn, replay; --replicas adds read replicas fed by delta
+              streaming, staleness bounded by --retained; --query-mix N
+              drives N seeded queries through the epoch-snapshot query
+              plane, --cache toggling the (epoch, query) result cache)
   experiment --id table3|table4|fig2|table5|backends|cluster-scaling|
                   serve-cluster|skew|faults|engines|memory
              [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
@@ -363,20 +368,116 @@ fn density(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse every serve-related flag into the ONE shared
+/// [`tricluster::serve::ServeConfigBuilder`]: the in-process path
+/// finishes it with `.build()`, the cluster path with `.build_sim()`,
+/// so flag → config wiring lives in exactly one place.
+fn serve_builder(
+    args: &Args,
+    arity: usize,
+    default_compact_every: usize,
+) -> Result<tricluster::serve::ServeConfigBuilder> {
+    use tricluster::exec::cluster_sim::ChurnConfig;
+    let pipeline = match args.get_or("pipeline", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--pipeline {other:?} (expected on|off)"),
+    };
+    Ok(tricluster::serve::ServeConfig::builder()
+        .arity(arity)
+        .shards(args.parse_or("shards", 4))
+        .constraints(Constraints {
+            min_density: args.parse_or("min-density", 0.0),
+            min_support: args.parse_or("min-support", 0),
+        })
+        .nodes(args.parse_or("nodes", 4))
+        .slots_per_node(args.parse_or("node-slots", 2))
+        .placement(args.get_or("placement", "least"))
+        .batch(args.parse_or::<usize>("batch", 4096).max(1))
+        .compact_every(args.parse_or("compact-every", default_compact_every))
+        .source_skew(args.parse_or("source-skew", 1.5))
+        .churn(ChurnConfig {
+            kill_prob: args.parse_or("churn", 0.0),
+            restart_ms: args.parse_or("restart-ms", 50.0),
+        })
+        .pipeline(pipeline)
+        .replicas(args.parse_or("replicas", 0))
+        .retained(args.parse_or("retained", 2))
+        .seed(args.parse_or("seed", 0x5EED)))
+}
+
+/// `--cache on|off` (default on): toggles the `(epoch, query)` result
+/// cache on the query backends the mix runs through.
+fn cache_flag(args: &Args) -> Result<bool> {
+    match args.get_or("cache", "on") {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => anyhow::bail!("--cache {other:?} (expected on|off)"),
+    }
+}
+
+/// Drive a seeded query mix through one backend: top-k, membership,
+/// entity-stats, and whole-index stats in rotation. The digest folds
+/// every answer, so two backends at the same epoch print the same
+/// value — a quick CLI-level equivalence check.
+fn run_query_mix(
+    backend: &mut dyn tricluster::serve::QueryBackend,
+    queries: usize,
+    seed: u64,
+    arity: usize,
+) -> f64 {
+    let mut rng = tricluster::util::rng::Rng::new(seed);
+    let mut digest = 0.0f64;
+    for _ in 0..queries {
+        match rng.below(4) {
+            0 => digest += backend.top_k(1 + rng.usize_below(8)).len() as f64,
+            1 => {
+                let hits =
+                    backend.containing(rng.usize_below(arity), rng.below(16) as u32);
+                digest += hits.len() as f64;
+            }
+            2 => {
+                digest += backend
+                    .entity_stats(rng.usize_below(arity), rng.below(16) as u32)
+                    .map_or(0.0, |s| s.mean_density);
+            }
+            _ => digest += backend.stats().mean_density,
+        }
+    }
+    digest
+}
+
+/// Print one backend's query-mix result line (digest, epoch, cache
+/// hit rate).
+fn report_query_mix(
+    label: &str,
+    backend: &mut dyn tricluster::serve::QueryBackend,
+    queries: usize,
+    seed: u64,
+    arity: usize,
+) {
+    let t = Timer::start();
+    let digest = run_query_mix(backend, queries, seed, arity);
+    let ms = t.elapsed_ms();
+    let (hits, misses) = backend.cache_stats();
+    println!(
+        "  query-mix [{label}]: {queries} queries in {} ms at epoch {} \
+         (digest {digest:.4}; cache {hits} hits / {misses} misses)",
+        fmt_ms(ms),
+        backend.epoch()
+    );
+}
+
 fn serve_sim(args: &Args) -> Result<()> {
-    use tricluster::serve::{ServeConfig, TriclusterService};
+    use tricluster::serve::TriclusterService;
 
     let names = args.get("dataset").unwrap_or_else(|| args.get_or("datasets", "k1,ml100k"));
     let shards: usize = args.parse_or("shards", 4);
     let batch: usize = args.parse_or::<usize>("batch", 4096).max(1);
     let compact_every: usize = args.parse_or("compact-every", 16);
     let top: usize = args.parse_or("top", 5);
-    let cons = Constraints {
-        min_density: args.parse_or("min-density", 0.0),
-        min_support: args.parse_or("min-support", 0),
-    };
     if args.get("nodes").is_some() {
-        return serve_sim_cluster(args, names, shards, batch, &cons);
+        return serve_sim_cluster(args, names);
     }
 
     for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -387,9 +488,8 @@ fn serve_sim(args: &Args) -> Result<()> {
             ctx.len(),
             ctx.arity()
         );
-        let mut svc = TriclusterService::new(
-            ServeConfig::new(ctx.arity(), shards).with_constraints(cons.clone()),
-        );
+        let mut svc =
+            TriclusterService::new(serve_builder(args, ctx.arity(), 16)?.build());
         let t = Timer::start();
         let mut compactions = 0usize;
         for (i, chunk) in ctx.tuples().chunks(batch).enumerate() {
@@ -434,6 +534,20 @@ fn serve_sim(args: &Args) -> Result<()> {
                 );
             }
         }
+        let query_mix: usize = args.parse_or("query-mix", 0);
+        if query_mix > 0 {
+            let mut backend = tricluster::serve::LocalBackend::with_cache(
+                svc.snapshot_cell(),
+                cache_flag(args)?,
+            );
+            report_query_mix(
+                "local",
+                &mut backend,
+                query_mix,
+                args.parse_or("seed", 0x5EED),
+                ctx.arity(),
+            );
+        }
         if let Some(path) = args.get("snapshot") {
             let path = std::path::PathBuf::from(path);
             svc.snapshot_to(&path)?;
@@ -451,19 +565,12 @@ fn serve_sim(args: &Args) -> Result<()> {
 
 /// `serve-sim --nodes N`: the serving layer placed on a simulated
 /// cluster — shard placement policies, shuffle costs, seeded churn with
-/// snapshot replay (`serve::cluster::ServeSim`).
-fn serve_sim_cluster(
-    args: &Args,
-    names: &str,
-    shards: usize,
-    batch: usize,
-    cons: &Constraints,
-) -> Result<()> {
-    use tricluster::exec::cluster_sim::ChurnConfig;
-    use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
+/// snapshot replay (`serve::cluster::ServeSim`) — plus the epoch-
+/// snapshot query plane (`--replicas` / `--query-mix` / `--cache`).
+fn serve_sim_cluster(args: &Args, names: &str) -> Result<()> {
+    use tricluster::serve::cluster::ServeSim;
+    use tricluster::serve::{LocalBackend, QueryEngine, SimRemoteBackend};
 
-    let nodes: usize = args.parse_or("nodes", 4);
-    let placement = args.get_or("placement", "least");
     let top: usize = args.parse_or("top", 5);
     if args.get("snapshot").is_some() {
         eprintln!(
@@ -475,23 +582,9 @@ fn serve_sim_cluster(
     for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let ctx = datasets::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}; see `tricluster info`"))?;
-        let mut cfg = ServeSimConfig::new(ctx.arity(), shards, nodes);
-        cfg.placement = placement.to_string();
-        cfg.batch = batch;
-        cfg.slots_per_node = args.parse_or("node-slots", 2);
-        cfg.compact_every = args.parse_or("compact-every", 4);
-        cfg.source_skew = args.parse_or("source-skew", 1.5);
-        cfg.churn = ChurnConfig {
-            kill_prob: args.parse_or("churn", 0.0),
-            restart_ms: args.parse_or("restart-ms", 50.0),
-        };
-        cfg.pipeline = match args.get_or("pipeline", "on") {
-            "on" | "true" | "1" => true,
-            "off" | "false" | "0" => false,
-            other => anyhow::bail!("--pipeline {other:?} (expected on|off)"),
-        };
-        cfg.seed = args.parse_or("seed", 0x5EED);
-        cfg.constraints = cons.clone();
+        let cfg = serve_builder(args, ctx.arity(), 4)?.build_sim();
+        let (nodes, shards, placement) =
+            (cfg.nodes, cfg.shards, cfg.placement.clone());
         let mut sim = ServeSim::new(cfg)?;
         let t = Timer::start();
         sim.run(ctx.tuples());
@@ -519,10 +612,40 @@ fn serve_sim_cluster(
             sim.assignment(),
             stats.per_node_records
         );
-        let q = tricluster::serve::QueryEngine::new(sim.clusters());
-        println!("  top-{top} by density:");
+        if let Some(set) = sim.replica_set() {
+            let set = set.read().expect("replica set poisoned");
+            println!(
+                "  replicas: {:?} (retained window {}; {} publishes, {:.2} MiB \
+                 streamed, max staleness {} epochs)",
+                set.nodes(),
+                set.retained(),
+                stats.replica_publishes,
+                stats.replica_mib,
+                stats.replica_max_staleness
+            );
+        }
+        let snap = sim.snapshot();
+        let q = QueryEngine::from_snapshot(snap);
+        println!("  top-{top} by density (epoch {}):", q.epoch());
         for c in q.top_k_by_density(top) {
             println!("    {}", io::format_cluster(&ctx, c));
+        }
+        let query_mix: usize = args.parse_or("query-mix", 0);
+        if query_mix > 0 {
+            let cache = cache_flag(args)?;
+            let seed: u64 = args.parse_or("seed", 0x5EED);
+            let mut local = LocalBackend::with_cache(sim.snapshot_cell(), cache);
+            report_query_mix("local", &mut local, query_mix, seed, ctx.arity());
+            let client: usize = args.parse_or("client-node", 0);
+            if let Some(set) = sim.replica_set() {
+                let mut remote = SimRemoteBackend::with_cache(set, client, cache)
+                    .expect("replica_set is Some, so replicas exist");
+                let label = format!(
+                    "replica@node{} for client {client}",
+                    remote.replica_node()
+                );
+                report_query_mix(&label, &mut remote, query_mix, seed, ctx.arity());
+            }
         }
         println!();
     }

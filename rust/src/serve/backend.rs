@@ -1,0 +1,292 @@
+//! The `QueryBackend` trait: one read API over the epoch snapshot
+//! plane, with in-process and simulated-remote implementations.
+//!
+//! Mirrors the worker-backend shape the exec layer uses (one trait, a
+//! local and a simulated-remote impl, equivalence property-tested):
+//! every backend answers the same four queries — `top_k`, `containing`,
+//! `entity_stats`, `stats` — and reports the epoch it answered at.
+//! [`LocalBackend`] loads the primary's [`SnapshotCell`];
+//! [`crate::serve::SimRemoteBackend`] reads a replica node's applied
+//! snapshot, so its epoch may trail the primary by at most the retained
+//! window (see [`crate::serve::replica`]).
+//!
+//! Both share a [`QueryCache`]: results keyed by `(epoch, query)`,
+//! invalidated wholesale when the observed epoch bumps (the snapshot is
+//! immutable within an epoch, so a cached answer can never go stale
+//! before the epoch does). Hits/misses are counted as
+//! `serve.cache.hit` / `serve.cache.miss`.
+
+use std::sync::Arc;
+
+use crate::core::pattern::Cluster;
+use crate::serve::epoch::{EpochSnapshot, IndexStats, SnapshotCell};
+use crate::util::hash::FxHashMap;
+
+/// A cacheable query, as issued against one epoch.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum QueryKey {
+    /// `top_k(k)`.
+    TopK(usize),
+    /// `containing(modality, entity)`.
+    Containing(u8, u32),
+    /// `entity_stats(modality, entity)`.
+    EntityStats(u8, u32),
+    /// Whole-index `stats()`.
+    Stats,
+}
+
+/// A cached answer (owned, so a hit is a clone — no snapshot borrow
+/// outlives the cache entry).
+#[derive(Debug, Clone)]
+pub(crate) enum Answer {
+    Clusters(Vec<Cluster>),
+    Ids(Vec<u32>),
+    Stats(Option<IndexStats>),
+}
+
+/// `(epoch, query)`-keyed result cache with epoch-bump invalidation.
+///
+/// The epoch is not part of the map key: [`Self::roll`] clears the map
+/// whenever the observed epoch changes, so every entry in the map is
+/// for the current epoch by construction (and the map never accumulates
+/// dead epochs).
+#[derive(Debug)]
+pub struct QueryCache {
+    enabled: bool,
+    epoch: u64,
+    map: FxHashMap<QueryKey, Answer>,
+    hits: u64,
+    misses: u64,
+}
+
+impl QueryCache {
+    pub(crate) fn new(enabled: bool) -> Self {
+        Self { enabled, epoch: 0, map: FxHashMap::default(), hits: 0, misses: 0 }
+    }
+
+    /// Point the cache at `epoch`, dropping every entry if it changed.
+    fn roll(&mut self, epoch: u64) {
+        if self.epoch != epoch {
+            self.epoch = epoch;
+            self.map.clear();
+        }
+    }
+
+    fn lookup(&mut self, key: &QueryKey) -> Option<Answer> {
+        if !self.enabled {
+            return None;
+        }
+        match self.map.get(key) {
+            Some(a) => {
+                self.hits += 1;
+                crate::obs::counter("serve.cache.hit", 1);
+                Some(a.clone())
+            }
+            None => {
+                self.misses += 1;
+                crate::obs::counter("serve.cache.miss", 1);
+                None
+            }
+        }
+    }
+
+    fn store(&mut self, key: QueryKey, answer: &Answer) {
+        if self.enabled {
+            self.map.insert(key, answer.clone());
+        }
+    }
+
+    /// `(hits, misses)` since construction.
+    pub(crate) fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+/// Answer `key` from `snap`, through `cache` (roll → lookup → compute →
+/// store). One code path for every backend, so cache-on, cache-off,
+/// local, and remote answers are computed identically.
+fn answer(snap: &EpochSnapshot, cache: &mut QueryCache, key: QueryKey) -> Answer {
+    cache.roll(snap.epoch());
+    if let Some(hit) = cache.lookup(&key) {
+        return hit;
+    }
+    let fresh = match key {
+        QueryKey::TopK(k) => {
+            Answer::Clusters(snap.top_k_by_density(k).into_iter().cloned().collect())
+        }
+        QueryKey::Containing(m, e) => Answer::Ids(snap.containing(m as usize, e).to_vec()),
+        QueryKey::EntityStats(m, e) => Answer::Stats(snap.entity_stats(m as usize, e)),
+        QueryKey::Stats => Answer::Stats(Some(snap.stats())),
+    };
+    cache.store(key, &fresh);
+    fresh
+}
+
+/// The uniform read API over the query plane.
+///
+/// `&mut self` on the query methods is for the backend's own cache and
+/// routing state — backends never mutate the snapshot, and many
+/// backends can read one [`SnapshotCell`] concurrently.
+pub trait QueryBackend {
+    /// Human-readable backend name (for logs and test labels).
+    fn name(&self) -> &'static str;
+
+    /// The snapshot this backend currently answers from.
+    fn snapshot(&self) -> Arc<EpochSnapshot>;
+
+    /// The epoch this backend currently answers at.
+    fn epoch(&self) -> u64 {
+        self.snapshot().epoch()
+    }
+
+    /// The k densest clusters (owned; see
+    /// [`EpochSnapshot::top_k_by_density`] for the ranking).
+    fn top_k(&mut self, k: usize) -> Vec<Cluster>;
+
+    /// Ids of clusters containing `(modality, entity)`, resolvable
+    /// against [`Self::snapshot`] at the same epoch.
+    fn containing(&mut self, modality: usize, entity: u32) -> Vec<u32>;
+
+    /// Per-entity serving stats (None if the entity is in no cluster).
+    fn entity_stats(&mut self, modality: usize, entity: u32) -> Option<IndexStats>;
+
+    /// Aggregate stats over the backend's current snapshot.
+    fn stats(&mut self) -> IndexStats;
+
+    /// `(cache hits, cache misses)` this backend has served.
+    fn cache_stats(&self) -> (u64, u64);
+}
+
+/// In-process backend: answers straight from the primary's
+/// [`SnapshotCell`] — epoch always equals the last published one.
+#[derive(Debug)]
+pub struct LocalBackend {
+    cell: Arc<SnapshotCell>,
+    cache: QueryCache,
+}
+
+impl LocalBackend {
+    /// Backend over `cell` with the result cache enabled.
+    pub fn new(cell: Arc<SnapshotCell>) -> Self {
+        Self::with_cache(cell, true)
+    }
+
+    /// Backend over `cell` with the cache explicitly on or off.
+    pub fn with_cache(cell: Arc<SnapshotCell>, cache: bool) -> Self {
+        Self { cell, cache: QueryCache::new(cache) }
+    }
+
+    fn answer(&mut self, key: QueryKey) -> Answer {
+        let snap = self.cell.load();
+        answer(&snap, &mut self.cache, key)
+    }
+}
+
+impl QueryBackend for LocalBackend {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn snapshot(&self) -> Arc<EpochSnapshot> {
+        self.cell.load()
+    }
+
+    fn top_k(&mut self, k: usize) -> Vec<Cluster> {
+        match self.answer(QueryKey::TopK(k)) {
+            Answer::Clusters(cs) => cs,
+            _ => unreachable!("top_k answers are clusters"),
+        }
+    }
+
+    fn containing(&mut self, modality: usize, entity: u32) -> Vec<u32> {
+        match self.answer(QueryKey::Containing(modality as u8, entity)) {
+            Answer::Ids(ids) => ids,
+            _ => unreachable!("containing answers are ids"),
+        }
+    }
+
+    fn entity_stats(&mut self, modality: usize, entity: u32) -> Option<IndexStats> {
+        match self.answer(QueryKey::EntityStats(modality as u8, entity)) {
+            Answer::Stats(s) => s,
+            _ => unreachable!("entity_stats answers are stats"),
+        }
+    }
+
+    fn stats(&mut self) -> IndexStats {
+        match self.answer(QueryKey::Stats) {
+            Answer::Stats(Some(s)) => s,
+            _ => unreachable!("stats answers are stats"),
+        }
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+}
+
+/// Shared with [`crate::serve::replica`]: the remote backend reuses the
+/// same answer path over its replica's applied snapshot.
+pub(crate) fn answer_via(
+    snap: &EpochSnapshot,
+    cache: &mut QueryCache,
+    key: QueryKey,
+) -> Answer {
+    answer(snap, cache, key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+
+    fn cell_with(clusters: Vec<Cluster>, epoch: u64) -> Arc<SnapshotCell> {
+        let cell = Arc::new(SnapshotCell::new());
+        cell.publish(EpochSnapshot::build(epoch, clusters, 0));
+        cell
+    }
+
+    fn fixture() -> Vec<Cluster> {
+        let mut a = tricluster(vec![0], vec![0, 1], vec![0, 1]);
+        a.support = 4;
+        let mut b = tricluster(vec![1, 2], vec![0], vec![0, 1]);
+        b.support = 2;
+        vec![a, b]
+    }
+
+    #[test]
+    fn local_backend_answers_match_snapshot() {
+        let cell = cell_with(fixture(), 1);
+        let mut be = LocalBackend::new(Arc::clone(&cell));
+        assert_eq!(be.epoch(), 1);
+        let top = be.top_k(1);
+        assert_eq!(top[0].support, 4);
+        assert_eq!(be.containing(1, 0), vec![0, 1]);
+        assert_eq!(be.stats().total_support, 6);
+        assert!(be.entity_stats(0, 9).is_none());
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_and_invalidates_on_epoch_bump() {
+        let cell = cell_with(fixture(), 1);
+        let mut be = LocalBackend::new(Arc::clone(&cell));
+        let first = be.top_k(2);
+        let second = be.top_k(2);
+        assert_eq!(first, second, "hit must be bit-equal to miss");
+        assert_eq!(be.cache_stats(), (1, 1));
+        // new epoch: the cached entry must not survive
+        cell.publish(EpochSnapshot::build(2, fixture()[..1].to_vec(), 0));
+        let third = be.top_k(2);
+        assert_eq!(third.len(), 1);
+        assert_eq!(be.cache_stats(), (1, 2));
+    }
+
+    #[test]
+    fn cache_off_backend_answers_identically() {
+        let cell = cell_with(fixture(), 1);
+        let mut on = LocalBackend::new(Arc::clone(&cell));
+        let mut off = LocalBackend::with_cache(cell, false);
+        assert_eq!(on.top_k(2), off.top_k(2));
+        assert_eq!(on.containing(2, 1), off.containing(2, 1));
+        assert_eq!(off.cache_stats(), (0, 0), "disabled cache counts nothing");
+    }
+}

@@ -44,17 +44,22 @@
 //! splits the difference. `benches/serve_cluster.rs` sweeps the three
 //! policies × churn and gates the trajectory in CI.
 
+use std::sync::{Arc, RwLock};
+
 use anyhow::Result;
 
 use crate::core::pattern::Cluster;
 use crate::core::tuple::NTuple;
 use crate::exec::cluster_sim::{ChurnConfig, ShuffleModel};
-use crate::exec::placement::{by_name, NodeView, Placement, TaskMeta};
+use crate::exec::placement::{by_name, place_replicas, NodeView, Placement, TaskMeta};
 use crate::oac::post::Constraints;
 use crate::util::hash::fxhash;
 use crate::util::rng::Rng;
 
+use super::backend::LocalBackend;
+use super::epoch::{EpochSnapshot, SnapshotCell};
 use super::merge::Compactor;
+use super::replica::{ReplicaSet, SharedReplicas, SimRemoteBackend};
 use super::shard::Shard;
 
 /// Configuration of a [`ServeSim`].
@@ -99,13 +104,27 @@ pub struct ServeSimConfig {
     pub rebalance: bool,
     /// Constraints applied when materialising the cluster index.
     pub constraints: Constraints,
+    /// Read replicas fed by delta streaming from the primary (0 = the
+    /// query plane is primary-only). Placed by the same [`Placement`]
+    /// policy, avoiding the node hosting the most shards.
+    pub replicas: usize,
+    /// Retained window, in epochs: the maximum delivery lag a replica
+    /// may accumulate before queued snapshots are force-applied — the
+    /// staleness bound (see [`crate::serve::replica::ReplicaSet`]).
+    pub retained: u64,
     /// Seed for source-arrival and churn draws.
     pub seed: u64,
 }
 
 impl ServeSimConfig {
     /// Defaults tuned for the quick CLI/bench paths: homogeneous costs,
-    /// shuffle model on with commodity-network latency, churn off.
+    /// shuffle model on with commodity-network latency, churn off, no
+    /// replicas.
+    ///
+    /// Prefer [`crate::serve::ServeConfig::builder`] for new code — it
+    /// is the one construction path the CLI and benches share (see the
+    /// ARCHITECTURE.md migration map); this constructor remains as the
+    /// defaults source the builder itself delegates to.
     pub fn new(arity: usize, shards: usize, nodes: usize) -> Self {
         Self {
             arity,
@@ -124,6 +143,8 @@ impl ServeSimConfig {
             pipeline: true,
             rebalance: true,
             constraints: Constraints::none(),
+            replicas: 0,
+            retained: 2,
             seed: 0x5EED,
         }
     }
@@ -152,6 +173,14 @@ pub struct ServeSimStats {
     pub replayed_tuples: usize,
     /// Shards moved to a different node by a compaction rebalance.
     pub migrations: usize,
+    /// Epoch snapshots published to the replica set.
+    pub replica_publishes: u64,
+    /// MiB of compacted-delta traffic streamed to replicas (charged on
+    /// the replica nodes, off the drain critical path).
+    pub replica_mib: f64,
+    /// Largest primary−replica epoch gap observed at any publication
+    /// (must stay ≤ the configured retained window).
+    pub replica_max_staleness: u64,
     /// Tuples mined per node (the winning assignment's node) — the
     /// compute-balance picture a placement policy produced.
     pub per_node_records: Vec<usize>,
@@ -210,6 +239,14 @@ pub struct ServeSim {
     /// perturbs the source-arrival schedule (same design as
     /// [`crate::exec::ClusterSim`]'s churn stream).
     churn_rng: Rng,
+    /// The primary's publication point: every compaction publishes the
+    /// compacted index here as an immutable epoch snapshot.
+    cell: Arc<SnapshotCell>,
+    /// Replica shards (None when `cfg.replicas == 0`).
+    replicas: Option<SharedReplicas>,
+    /// Generated tuples already streamed to replicas (delta watermark:
+    /// each publication charges only the new tuples since the last).
+    published_generated: usize,
     stats: ServeSimStats,
 }
 
@@ -242,6 +279,9 @@ impl ServeSim {
             source_cum,
             rng: Rng::new(cfg.seed),
             churn_rng: Rng::new(cfg.seed ^ 0x4348_5552_4E21),
+            cell: Arc::new(SnapshotCell::new()),
+            replicas: None,
+            published_generated: 0,
             stats: ServeSimStats {
                 per_node_records: vec![0; nodes],
                 ..ServeSimStats::default()
@@ -263,6 +303,26 @@ impl ServeSim {
             let node = sim.placement.place(&meta, &views).min(nodes - 1);
             sim.assignment[s] = node;
             virt[node] += 1.0;
+        }
+        // replica placement: same policy, fed the per-node shard counts
+        // so replicas avoid the primary-heavy node where the policy can
+        if sim.cfg.replicas > 0 {
+            let mut load = vec![0usize; nodes];
+            for &node in &sim.assignment {
+                load[node] += 1;
+            }
+            let replica_nodes = place_replicas(
+                sim.placement.as_ref(),
+                nodes,
+                sim.cfg.replicas,
+                &load,
+            );
+            sim.replicas = Some(Arc::new(RwLock::new(ReplicaSet::new(
+                replica_nodes,
+                nodes,
+                sim.cfg.retained,
+                sim.cfg.seed,
+            ))));
         }
         Ok(sim)
     }
@@ -292,6 +352,34 @@ impl ServeSim {
     /// (call after [`Self::compact`] / [`Self::run`]).
     pub fn clusters(&mut self) -> &[Cluster] {
         self.compactor.clusters(&self.cfg.constraints)
+    }
+
+    /// The primary's current epoch snapshot (epoch 0 and empty before
+    /// the first compaction).
+    pub fn snapshot(&self) -> Arc<EpochSnapshot> {
+        self.cell.load()
+    }
+
+    /// The primary's publication cell — share it with query threads;
+    /// they keep loading consistent snapshots while the sim ingests.
+    pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.cell)
+    }
+
+    /// An in-process query backend over the primary's cell (cache on).
+    pub fn local_backend(&self) -> LocalBackend {
+        LocalBackend::new(self.snapshot_cell())
+    }
+
+    /// A query backend for a client on `client_node`, routed to the
+    /// nearest replica. None when the sim runs without replicas.
+    pub fn remote_backend(&self, client_node: usize) -> Option<SimRemoteBackend> {
+        SimRemoteBackend::new(self.replicas.clone()?, client_node)
+    }
+
+    /// The replica set (None when `cfg.replicas == 0`).
+    pub fn replica_set(&self) -> Option<SharedReplicas> {
+        self.replicas.clone()
     }
 
     /// Drive a whole stream: waves of `batch` tuples, compacting every
@@ -416,6 +504,7 @@ impl ServeSim {
             self.compacted_len[s] = self.shards[s].len();
             self.epoch_at_compact[s] = self.shards[s].epoch();
         }
+        self.publish_epoch();
         // materialised view of [`ServeSimStats`]: cumulative totals are
         // republished as max-gauges each compaction, so the final metrics
         // snapshot carries the run's totals without a second ledger
@@ -430,6 +519,7 @@ impl ServeSim {
             gauge("serve.sim.kills", st.kills as f64);
             gauge("serve.sim.replayed_tuples", st.replayed_tuples as f64);
             gauge("serve.sim.migrations", st.migrations as f64);
+            gauge("serve.sim.replica_mib", st.replica_mib);
             for (n, &r) in st.per_node_records.iter().enumerate() {
                 gauge(&format!("serve.sim.node{n}.records"), r as f64);
             }
@@ -491,6 +581,40 @@ impl ServeSim {
         for r in &mut self.recent_records {
             *r = 0;
         }
+    }
+
+    /// Publish the freshly compacted index as an immutable epoch
+    /// snapshot: swap it into the primary's [`SnapshotCell`], then
+    /// stream it to the replica set. The delta traffic (generated
+    /// tuples merged since the last publication) is charged on the
+    /// replica nodes OFF the drain critical path — replication is
+    /// asynchronous, which is exactly why replicas can trail the
+    /// primary by up to the retained window.
+    fn publish_epoch(&mut self) {
+        let epoch = self.stats.compactions as u64;
+        let snap = self.compactor.snapshot(&self.cfg.constraints, epoch);
+        self.cell.publish(Arc::clone(&snap));
+        let Some(replicas) = self.replicas.clone() else {
+            self.published_generated = self.compactor.generated_len();
+            return;
+        };
+        let delta = self.compactor.generated_len() - self.published_generated;
+        self.published_generated = self.compactor.generated_len();
+        let mib = self.cfg.shuffle.mib(delta);
+        let ready = self.prev_wave_end;
+        let mut set = replicas.write().expect("replica set poisoned");
+        for r in 0..set.len() {
+            let node = set.nodes()[r];
+            // async apply: occupies a slot on the replica's node but
+            // never extends `prev_wave_end` — queries may meanwhile be
+            // answered from the replica's previous epoch
+            self.schedule(node, ready, mib * self.cfg.shuffle.ms_per_mib);
+            self.stats.replica_mib += mib;
+        }
+        set.publish(snap);
+        self.stats.replica_publishes = set.publishes();
+        self.stats.replica_max_staleness =
+            self.stats.replica_max_staleness.max(set.max_staleness());
     }
 
     /// Node holding the largest measured share of shard `s`'s input so
@@ -744,6 +868,46 @@ mod tests {
         assert_eq!(a_ms.to_bits(), b_ms.to_bits());
         assert_eq!(a_mib.to_bits(), b_mib.to_bits());
         assert_eq!(a_kills, b_kills);
+    }
+
+    #[test]
+    fn replicas_track_the_primary_within_the_retained_window() {
+        use crate::serve::backend::QueryBackend;
+        let ctx = stream(600, 10);
+        let mut cfg = ServeSimConfig::new(3, 4, 3);
+        cfg.batch = 64;
+        cfg.compact_every = 2;
+        cfg.replicas = 2;
+        cfg.retained = 2;
+        let mut sim = ServeSim::new(cfg).unwrap();
+        sim.run(ctx.tuples());
+        let stats = sim.stats().clone();
+        assert!(stats.replica_publishes >= 4, "several compactions published");
+        assert!(stats.replica_max_staleness <= 2, "staleness bound");
+        assert!(stats.replica_mib > 0.0, "delta streaming costs bytes");
+        // primary snapshot equals the compacted index at the last epoch
+        assert_eq!(sim.snapshot().epoch(), stats.compactions as u64);
+        assert_eq!(sim.snapshot().len(), sim.clusters().len());
+        let mut remote = sim.remote_backend(0).expect("replicas configured");
+        assert!(remote.epoch() + 2 >= stats.compactions as u64);
+        assert!(remote.stats().clusters > 0, "replica serves a real index");
+    }
+
+    #[test]
+    fn retained_zero_replicas_answer_identically_to_the_primary() {
+        use crate::serve::backend::QueryBackend;
+        let ctx = stream(400, 8);
+        let mut cfg = ServeSimConfig::new(3, 3, 2);
+        cfg.batch = 97;
+        cfg.replicas = 1;
+        cfg.retained = 0; // synchronous replication: always fresh
+        let mut sim = ServeSim::new(cfg).unwrap();
+        sim.run(ctx.tuples());
+        let mut local = sim.local_backend();
+        let mut remote = sim.remote_backend(1).expect("one replica");
+        assert_eq!(local.epoch(), remote.epoch());
+        assert_eq!(local.top_k(5), remote.top_k(5));
+        assert_eq!(local.stats(), remote.stats());
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Epoch snapshots: the immutable, owned read view the concurrent query
+//! plane is built on.
+//!
+//! The compactor's output was always an immutable compacted index — but
+//! until PR 8 readers borrowed it through `&mut TriclusterService`, so a
+//! query blocked ingest and vice versa. An [`EpochSnapshot`] instead
+//! OWNS one compacted index (epoch id, clusters, and the prebuilt
+//! `(modality, entity) → cluster ids` membership index) and is published
+//! through a [`SnapshotCell`] as an `Arc` swap: any number of query
+//! threads `load()` the current snapshot and keep reading it while the
+//! next wave mines and the next compaction publishes a newer epoch.
+//!
+//! Consistency contract (property-tested in
+//! `rust/tests/query_plane_equivalence.rs`): a loaded snapshot is
+//! internally consistent — its epoch, cluster vector, membership index,
+//! and [`EpochSnapshot::merged_tuples`] watermark all come from the same
+//! publication, so readers never observe a torn mix of two compactions,
+//! and epochs observed through one cell are monotone.
+
+use std::sync::{Arc, RwLock};
+
+use crate::core::pattern::Cluster;
+use crate::util::hash::FxHashMap;
+
+/// Aggregate statistics of a compacted index (whole-snapshot or
+/// per-entity — see [`EpochSnapshot::stats`] /
+/// [`EpochSnapshot::entity_stats`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexStats {
+    /// Clusters in the snapshot.
+    pub clusters: usize,
+    /// Σ support (= tuples ingested, when no constraints filter).
+    pub total_support: usize,
+    /// Mean support-density.
+    pub mean_density: f64,
+    /// Largest support-density.
+    pub max_density: f64,
+    /// Largest single-modality component cardinality.
+    pub max_component: usize,
+}
+
+/// Stats fold over any cluster iterator (shared by the snapshot- and
+/// entity-scoped stats paths; streams, no intermediate collection).
+pub(crate) fn stats_of<'c>(clusters: impl Iterator<Item = &'c Cluster>) -> IndexStats {
+    let mut n = 0usize;
+    let mut total_support = 0usize;
+    let mut mean_density = 0.0;
+    let mut max_density = 0.0f64;
+    let mut max_component = 0usize;
+    for c in clusters {
+        n += 1;
+        total_support += c.support;
+        let d = c.support_density();
+        mean_density += d;
+        max_density = max_density.max(d);
+        max_component =
+            max_component.max(c.components.iter().map(Vec::len).max().unwrap_or(0));
+    }
+    if n > 0 {
+        mean_density /= n as f64;
+    }
+    IndexStats { clusters: n, total_support, mean_density, max_density, max_component }
+}
+
+/// One immutable published read view: a compacted cluster index at one
+/// epoch, with the membership inverted index prebuilt so the hot lookup
+/// ("clusters containing entity e in modality m") is a single
+/// allocation-free hash probe ([`Self::containing`] returns borrowed
+/// `&[u32]` ids; [`Self::resolve`] turns an id into its cluster).
+#[derive(Debug)]
+pub struct EpochSnapshot {
+    epoch: u64,
+    /// Generating tuples merged into the index when this snapshot was
+    /// published — the torn-read canary: with no constraints, Σ support
+    /// over `clusters` equals this exactly, for EVERY published epoch.
+    merged_tuples: usize,
+    clusters: Vec<Cluster>,
+    /// (modality, entity id) → indices into `clusters`.
+    member: FxHashMap<(u8, u32), Vec<u32>>,
+}
+
+/// The empty slice `containing` returns for unknown entities.
+const NO_IDS: &[u32] = &[];
+
+impl EpochSnapshot {
+    /// Build a snapshot over an owned cluster index: constructs the
+    /// inverted membership index once, then the snapshot is immutable.
+    pub fn build(epoch: u64, clusters: Vec<Cluster>, merged_tuples: usize) -> Arc<Self> {
+        let mut span = crate::span!("serve.snapshot.build");
+        span.records_in(clusters.len() as u64);
+        let mut member: FxHashMap<(u8, u32), Vec<u32>> = FxHashMap::default();
+        // upper bound on distinct (modality, entity) pairs — a pair is
+        // counted once per containing cluster, so overlapping snapshots
+        // over-reserve; this trades transient memory for zero rehashes
+        member.reserve(
+            clusters
+                .iter()
+                .map(|c| c.components.iter().map(Vec::len).sum::<usize>())
+                .sum(),
+        );
+        for (i, c) in clusters.iter().enumerate() {
+            for (m, comp) in c.components.iter().enumerate() {
+                for &e in comp {
+                    member.entry((m as u8, e)).or_default().push(i as u32);
+                }
+            }
+        }
+        Arc::new(Self { epoch, merged_tuples, clusters, member })
+    }
+
+    /// The empty epoch-0 snapshot every [`SnapshotCell`] starts from.
+    pub fn empty() -> Arc<Self> {
+        Arc::new(Self {
+            epoch: 0,
+            merged_tuples: 0,
+            clusters: Vec::new(),
+            member: FxHashMap::default(),
+        })
+    }
+
+    /// The epoch this snapshot was published at (0 = never compacted).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Generating tuples merged into the index at publication time.
+    pub fn merged_tuples(&self) -> usize {
+        self.merged_tuples
+    }
+
+    /// Clusters in the snapshot.
+    pub fn len(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// True when the snapshot has no clusters.
+    pub fn is_empty(&self) -> bool {
+        self.clusters.is_empty()
+    }
+
+    /// The full cluster index.
+    pub fn clusters(&self) -> &[Cluster] {
+        &self.clusters
+    }
+
+    /// The cluster behind an id returned by [`Self::containing`].
+    ///
+    /// # Panics
+    /// On an id not issued by this snapshot (ids are never valid across
+    /// epochs — resolve against the same snapshot that issued them).
+    pub fn resolve(&self, id: u32) -> &Cluster {
+        &self.clusters[id as usize]
+    }
+
+    /// Ids of every cluster whose modality-`m` component contains
+    /// `entity`, in index order — allocation-free (borrows the inverted
+    /// index; resolve ids via [`Self::resolve`]).
+    pub fn containing(&self, modality: usize, entity: u32) -> &[u32] {
+        let _span = crate::span!("serve.query.containing");
+        match self.member.get(&(modality as u8, entity)) {
+            Some(ids) => ids,
+            None => NO_IDS,
+        }
+    }
+
+    /// The k densest clusters (support-density, ties broken by support
+    /// then components, so the ranking is total and deterministic).
+    /// Selects the top k in O(n) before sorting only those k.
+    pub fn top_k_by_density(&self, k: usize) -> Vec<&Cluster> {
+        let _span = crate::span!("serve.query.top_k");
+        let cs = &self.clusters;
+        let mut idx: Vec<usize> = (0..cs.len()).collect();
+        let k = k.min(idx.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut rank = |&a: &usize, &b: &usize| {
+            cs[b].support_density()
+                .total_cmp(&cs[a].support_density())
+                .then(cs[b].support.cmp(&cs[a].support))
+                .then(cs[a].components.cmp(&cs[b].components))
+        };
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, &mut rank);
+            idx.truncate(k);
+        }
+        idx.sort_unstable_by(&mut rank);
+        idx.into_iter().map(|i| &cs[i]).collect()
+    }
+
+    /// Support and density of the clusters containing `(modality,
+    /// entity)` — the per-entity serving stats.
+    pub fn entity_stats(&self, modality: usize, entity: u32) -> Option<IndexStats> {
+        let ids = self.containing(modality, entity);
+        if ids.is_empty() {
+            None
+        } else {
+            Some(stats_of(ids.iter().map(|&i| &self.clusters[i as usize])))
+        }
+    }
+
+    /// Aggregate stats over the whole snapshot.
+    pub fn stats(&self) -> IndexStats {
+        stats_of(self.clusters.iter())
+    }
+}
+
+/// The publication point: holds the current [`EpochSnapshot`] `Arc` and
+/// swaps it atomically on each compaction.
+///
+/// `load` is a brief read-lock plus an `Arc` clone — readers never wait
+/// on mining or compaction, only on the pointer-sized swap itself, and
+/// the returned `Arc` stays valid (and immutable) for as long as the
+/// reader holds it, however many epochs are published meanwhile.
+/// `publish` emits `serve.epoch.published` / `serve.epoch.current`.
+#[derive(Debug)]
+pub struct SnapshotCell {
+    slot: RwLock<Arc<EpochSnapshot>>,
+}
+
+impl Default for SnapshotCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotCell {
+    /// A cell holding the empty epoch-0 snapshot.
+    pub fn new() -> Self {
+        Self { slot: RwLock::new(EpochSnapshot::empty()) }
+    }
+
+    /// The current snapshot (cheap: read-lock + `Arc` clone).
+    pub fn load(&self) -> Arc<EpochSnapshot> {
+        Arc::clone(&self.slot.read().expect("snapshot cell poisoned"))
+    }
+
+    /// Swap in a newer snapshot. Epochs must be non-decreasing — the
+    /// monotonicity readers rely on to order what they observed.
+    pub fn publish(&self, snap: Arc<EpochSnapshot>) {
+        crate::obs::counter("serve.epoch.published", 1);
+        crate::obs::gauge("serve.epoch.current", snap.epoch() as f64);
+        let mut slot = self.slot.write().expect("snapshot cell poisoned");
+        debug_assert!(
+            snap.epoch() >= slot.epoch(),
+            "epoch went backwards: {} -> {}",
+            slot.epoch(),
+            snap.epoch()
+        );
+        *slot = snap;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+
+    fn fixture() -> Vec<Cluster> {
+        // densities: a = 1.0 (support 4 / volume 4), b = 0.5 (2/4),
+        // c = 1.0 (1/1)
+        let mut a = tricluster(vec![0], vec![0, 1], vec![0, 1]);
+        a.support = 4;
+        let mut b = tricluster(vec![1, 2], vec![0], vec![0, 1]);
+        b.support = 2;
+        let mut c = tricluster(vec![5], vec![5], vec![5]);
+        c.support = 1;
+        vec![a, b, c]
+    }
+
+    #[test]
+    fn snapshot_queries_cover_topk_membership_stats() {
+        let snap = EpochSnapshot::build(3, fixture(), 7);
+        assert_eq!(snap.epoch(), 3);
+        assert_eq!(snap.len(), 3);
+        let top = snap.top_k_by_density(2);
+        assert_eq!(top[0].components[0], vec![0]);
+        assert_eq!(top[1].components[0], vec![5]);
+        // membership returns borrowed ids; resolve maps them back
+        let hits = snap.containing(1, 0);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(snap.resolve(hits[1]).support, 2);
+        assert!(snap.containing(2, 99).is_empty());
+        let s = snap.stats();
+        assert_eq!(s.total_support, 7);
+        assert_eq!(s.max_component, 2);
+        let es = snap.entity_stats(0, 5).unwrap();
+        assert_eq!(es.clusters, 1);
+    }
+
+    #[test]
+    fn cell_swaps_epochs_and_old_readers_keep_their_view() {
+        let cell = SnapshotCell::new();
+        assert_eq!(cell.load().epoch(), 0);
+        cell.publish(EpochSnapshot::build(1, fixture(), 7));
+        let old = cell.load();
+        cell.publish(EpochSnapshot::build(2, Vec::new(), 7));
+        // the epoch-1 reader still sees epoch-1 contents after the swap
+        assert_eq!(old.epoch(), 1);
+        assert_eq!(old.len(), 3);
+        assert_eq!(cell.load().epoch(), 2);
+        assert!(cell.load().is_empty());
+    }
+
+    #[test]
+    fn concurrent_loads_see_consistent_snapshots() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let cell = Arc::new(SnapshotCell::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let (cell, stop) = (Arc::clone(&cell), Arc::clone(&stop));
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let s = cell.load();
+                        // the publication invariant: epoch e carries
+                        // exactly e fixture copies — any mix of two
+                        // publications would break it
+                        assert_eq!(s.len(), s.epoch() as usize * 3);
+                        assert!(s.epoch() >= last, "epoch went backwards");
+                        last = s.epoch();
+                    }
+                })
+            })
+            .collect();
+        for e in 1..=50u64 {
+            let mut cs = Vec::new();
+            for _ in 0..e {
+                cs.extend(fixture());
+            }
+            cell.publish(EpochSnapshot::build(e, cs, 0));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().expect("reader observed a torn snapshot");
+        }
+    }
+}

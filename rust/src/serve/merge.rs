@@ -133,6 +133,23 @@ impl Compactor {
         self.cache.as_ref().map(Vec::len)
     }
 
+    /// Materialise the compacted index under `constraints` and package
+    /// it as an immutable epoch snapshot ready to publish to a
+    /// [`crate::serve::SnapshotCell`]. The clusters are copied out of
+    /// the compactor's lazy cache — the snapshot must own them so
+    /// readers survive later compactions — and `merged_tuples` records
+    /// the generating-tuple watermark at this epoch (the torn-read
+    /// canary the equivalence suite checks).
+    pub fn snapshot(
+        &mut self,
+        constraints: &Constraints,
+        epoch: u64,
+    ) -> std::sync::Arc<crate::serve::EpochSnapshot> {
+        let merged = self.generated.len();
+        let clusters = self.clusters(constraints).to_vec();
+        crate::serve::EpochSnapshot::build(epoch, clusters, merged)
+    }
+
     /// Distinct subrelation keys across all modalities (global cumuli).
     pub fn distinct_keys(&self) -> usize {
         self.keys.len()

@@ -1,5 +1,5 @@
 //! The serving layer: a sharded, incrementally-updatable, queryable
-//! triclustering index — ingest → shard → merge → query.
+//! triclustering index — ingest → shard → merge → publish → query.
 //!
 //! The paper's central observation is that OAC tuples are processed
 //! independently: Alg. 1 is one-pass and embarrassingly partitionable.
@@ -17,31 +17,54 @@
 //!   [`crate::oac::online::dedup_generated_parallel`] (bit-for-bit
 //!   equal to the sequential [`crate::oac::online::dedup_generated`]
 //!   the online miner keeps as its oracle);
-//! * [`query`] — top-k by density, membership lookup, aggregate stats;
+//! * [`epoch`] — every compaction is published as an immutable
+//!   [`EpochSnapshot`] through a [`SnapshotCell`] `Arc` swap, so any
+//!   number of query threads read a consistent epoch while the next
+//!   wave mines (reads never block writes);
+//! * [`backend`] — one [`QueryBackend`] trait over the snapshot plane
+//!   (`top_k` / `containing` / `entity_stats` / `stats` / `epoch`)
+//!   with an `(epoch, query)`-keyed result cache; [`LocalBackend`]
+//!   answers from the primary's cell;
+//! * [`replica`] — read replicas on other sim nodes fed by delta
+//!   streaming, staleness bounded by the retained window;
+//!   [`SimRemoteBackend`] is the remote arm of the trait;
+//! * [`query`] — the direct, zero-policy engine over one snapshot
+//!   (top-k by density, allocation-free membership ids, aggregate
+//!   stats) — what the equivalence suites compare every backend to;
 //! * [`snapshot`] — JSON snapshot/restore for restart recovery;
 //! * [`cluster`] — the service placed on a simulated N-node cluster:
 //!   shard placement via [`crate::exec::Placement`], shuffle-cost
-//!   accounting, and node churn with snapshot replay.
+//!   accounting, node churn with snapshot replay, and the replica
+//!   query plane modelled on the same nodes.
 //!
 //! Correctness invariant (unit- and property-tested): for any shard
 //! count, batch chunking, and compaction schedule, the compacted index
 //! equals single-miner [`crate::oac::mine_online`] output — same
-//! components, supports, and densities.
+//! components, supports, and densities — and every published epoch
+//! snapshot is internally consistent (no torn reads; see
+//! `rust/tests/query_plane_equivalence.rs`).
 
+pub mod backend;
 pub mod cluster;
+pub mod epoch;
 pub mod merge;
 pub mod query;
+pub mod replica;
 pub mod router;
 pub mod shard;
 pub mod snapshot;
 
+pub use backend::{LocalBackend, QueryBackend, QueryKey};
 pub use cluster::{ServeSim, ServeSimConfig, ServeSimStats};
+pub use epoch::{EpochSnapshot, IndexStats, SnapshotCell};
 pub use merge::Compactor;
-pub use query::{IndexStats, QueryEngine};
+pub use query::QueryEngine;
+pub use replica::{ReplicaSet, SharedReplicas, SimRemoteBackend};
 pub use router::{Router, RouterStats};
 pub use shard::{Shard, ShardDelta};
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::core::pattern::Cluster;
 use crate::core::tuple::NTuple;
@@ -49,6 +72,9 @@ use crate::oac::post::Constraints;
 use crate::util::pool;
 
 /// Configuration of a [`TriclusterService`].
+///
+/// Construct via [`Self::builder`] — the one configuration path the
+/// service, the cluster sim, and the CLI share.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Relation arity (3 for triadic contexts, up to
@@ -67,6 +93,9 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     /// Config with backpressure/worker defaults.
+    ///
+    /// Deprecated shim (positional-argument API): prefer
+    /// [`Self::builder`] — see the ARCHITECTURE.md migration map.
     pub fn new(arity: usize, shards: usize) -> Self {
         Self {
             arity,
@@ -77,10 +106,291 @@ impl ServeConfig {
         }
     }
 
+    /// Start a builder with the service defaults.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+
     /// Set the constraints applied at index materialisation.
     pub fn with_constraints(mut self, constraints: Constraints) -> Self {
         self.constraints = constraints;
         self
+    }
+}
+
+impl ServeSimConfig {
+    /// Start a builder with the sim defaults (same builder as
+    /// [`ServeConfig::builder`]; finish with
+    /// [`ServeConfigBuilder::build_sim`]).
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+}
+
+/// One builder for the whole serve configuration surface — the
+/// in-process [`ServeConfig`] and the on-cluster [`ServeSimConfig`]
+/// share it, so the CLI parses flags into exactly one place:
+///
+/// ```
+/// use tricluster::serve::ServeConfig;
+///
+/// let cfg = ServeConfig::builder().arity(3).shards(8).build();
+/// let sim = ServeConfig::builder()
+///     .arity(3)
+///     .shards(8)
+///     .nodes(4)
+///     .replicas(2)
+///     .build_sim();
+/// assert_eq!(cfg.shards, sim.shards);
+/// assert_eq!(sim.replicas, 2);
+/// ```
+///
+/// Unset knobs keep the defaults of [`ServeConfig::new`] /
+/// [`ServeSimConfig::new`]; sim-only knobs (nodes, placement, churn,
+/// replicas, …) are ignored by [`Self::build`].
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    arity: usize,
+    shards: usize,
+    max_pending: Option<usize>,
+    workers: Option<usize>,
+    constraints: Constraints,
+    nodes: usize,
+    slots_per_node: Option<usize>,
+    placement: Option<String>,
+    batch: Option<usize>,
+    route_chunk: Option<usize>,
+    compact_every: Option<usize>,
+    mine_ms_per_record: Option<f64>,
+    route_ms_per_record: Option<f64>,
+    shuffle: Option<crate::exec::cluster_sim::ShuffleModel>,
+    churn: Option<crate::exec::cluster_sim::ChurnConfig>,
+    source_skew: Option<f64>,
+    pipeline: Option<bool>,
+    rebalance: Option<bool>,
+    replicas: usize,
+    retained: Option<u64>,
+    seed: Option<u64>,
+}
+
+impl Default for ServeConfigBuilder {
+    fn default() -> Self {
+        Self {
+            arity: 3,
+            shards: 4,
+            max_pending: None,
+            workers: None,
+            constraints: Constraints::none(),
+            nodes: 1,
+            slots_per_node: None,
+            placement: None,
+            batch: None,
+            route_chunk: None,
+            compact_every: None,
+            mine_ms_per_record: None,
+            route_ms_per_record: None,
+            shuffle: None,
+            churn: None,
+            source_skew: None,
+            pipeline: None,
+            rebalance: None,
+            replicas: 0,
+            retained: None,
+            seed: None,
+        }
+    }
+}
+
+impl ServeConfigBuilder {
+    /// Relation arity.
+    pub fn arity(mut self, arity: usize) -> Self {
+        self.arity = arity;
+        self
+    }
+
+    /// Shard count.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Router backpressure high-water mark, in queued tuples.
+    pub fn max_pending(mut self, max_pending: usize) -> Self {
+        self.max_pending = Some(max_pending);
+        self
+    }
+
+    /// Worker threads for drain waves.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Constraints applied at index materialisation.
+    pub fn constraints(mut self, constraints: Constraints) -> Self {
+        self.constraints = constraints;
+        self
+    }
+
+    /// Simulated nodes (sim only).
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes.max(1);
+        self
+    }
+
+    /// Worker slots per simulated node (sim only).
+    pub fn slots_per_node(mut self, slots: usize) -> Self {
+        self.slots_per_node = Some(slots);
+        self
+    }
+
+    /// Placement policy name: `rr` | `locality` | `least` (sim only).
+    pub fn placement(mut self, placement: &str) -> Self {
+        self.placement = Some(placement.to_string());
+        self
+    }
+
+    /// Tuples per ingest wave (sim only).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = Some(batch);
+        self
+    }
+
+    /// Tuples per route-split task within a wave (sim only).
+    pub fn route_chunk(mut self, route_chunk: usize) -> Self {
+        self.route_chunk = Some(route_chunk);
+        self
+    }
+
+    /// Waves between compactions (sim only).
+    pub fn compact_every(mut self, every: usize) -> Self {
+        self.compact_every = Some(every);
+        self
+    }
+
+    /// Simulated mining cost per tuple, ms (sim only).
+    pub fn mine_ms_per_record(mut self, ms: f64) -> Self {
+        self.mine_ms_per_record = Some(ms);
+        self
+    }
+
+    /// Simulated route-split cost per tuple, ms (sim only).
+    pub fn route_ms_per_record(mut self, ms: f64) -> Self {
+        self.route_ms_per_record = Some(ms);
+        self
+    }
+
+    /// Network cost model for moved bins (sim only).
+    pub fn shuffle(mut self, shuffle: crate::exec::cluster_sim::ShuffleModel) -> Self {
+        self.shuffle = Some(shuffle);
+        self
+    }
+
+    /// Seeded node kill/restart mid-drain (sim only).
+    pub fn churn(mut self, churn: crate::exec::cluster_sim::ChurnConfig) -> Self {
+        self.churn = Some(churn);
+        self
+    }
+
+    /// Source skew exponent for arrival nodes (sim only).
+    pub fn source_skew(mut self, skew: f64) -> Self {
+        self.source_skew = Some(skew);
+        self
+    }
+
+    /// Overlap route-split of wave w+1 with mining of wave w (sim only).
+    pub fn pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = Some(pipeline);
+        self
+    }
+
+    /// Re-place shards by the policy at every compaction (sim only).
+    pub fn rebalance(mut self, rebalance: bool) -> Self {
+        self.rebalance = Some(rebalance);
+        self
+    }
+
+    /// Read replicas fed by delta streaming (sim only; 0 = none).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Retained window: the replica staleness bound, in epochs
+    /// (sim only).
+    pub fn retained(mut self, retained: u64) -> Self {
+        self.retained = Some(retained);
+        self
+    }
+
+    /// Seed for source-arrival and churn draws (sim only).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Finish as an in-process [`ServeConfig`] (sim-only knobs are
+    /// ignored).
+    pub fn build(self) -> ServeConfig {
+        let mut cfg = ServeConfig::new(self.arity, self.shards);
+        if let Some(v) = self.max_pending {
+            cfg.max_pending = v.max(1);
+        }
+        if let Some(v) = self.workers {
+            cfg.workers = v.max(1);
+        }
+        cfg.constraints = self.constraints;
+        cfg
+    }
+
+    /// Finish as an on-cluster [`ServeSimConfig`].
+    pub fn build_sim(self) -> ServeSimConfig {
+        let mut cfg = ServeSimConfig::new(self.arity, self.shards, self.nodes);
+        if let Some(v) = self.slots_per_node {
+            cfg.slots_per_node = v.max(1);
+        }
+        if let Some(v) = self.placement {
+            cfg.placement = v;
+        }
+        if let Some(v) = self.batch {
+            cfg.batch = v.max(1);
+        }
+        if let Some(v) = self.route_chunk {
+            cfg.route_chunk = v.max(1);
+        }
+        if let Some(v) = self.compact_every {
+            cfg.compact_every = v.max(1);
+        }
+        if let Some(v) = self.mine_ms_per_record {
+            cfg.mine_ms_per_record = v;
+        }
+        if let Some(v) = self.route_ms_per_record {
+            cfg.route_ms_per_record = v;
+        }
+        if let Some(v) = self.shuffle {
+            cfg.shuffle = v;
+        }
+        if let Some(v) = self.churn {
+            cfg.churn = v;
+        }
+        if let Some(v) = self.source_skew {
+            cfg.source_skew = v;
+        }
+        if let Some(v) = self.pipeline {
+            cfg.pipeline = v;
+        }
+        if let Some(v) = self.rebalance {
+            cfg.rebalance = v;
+        }
+        cfg.replicas = self.replicas;
+        if let Some(v) = self.retained {
+            cfg.retained = v;
+        }
+        if let Some(v) = self.seed {
+            cfg.seed = v;
+        }
+        cfg.constraints = self.constraints;
+        cfg
     }
 }
 
@@ -111,22 +421,28 @@ pub struct ServiceStats {
 /// The sharded incremental triclustering service.
 ///
 /// Typical loop: `ingest` batches as they arrive (the router drains under
-/// backpressure automatically), `compact` at serving points, then `query`
-/// the compacted index. `snapshot_to`/`restore_from` persist across
-/// restarts.
+/// backpressure automatically), `compact` at serving points — which
+/// publishes an immutable [`EpochSnapshot`] — then read through
+/// [`Self::snapshot`] or a [`QueryBackend`] from [`Self::backend`].
+/// Readers hold `Arc` snapshots, so ingest and compaction never
+/// invalidate what a query thread is looking at.
+/// `snapshot_to`/`restore_from` persist across restarts.
 #[derive(Debug)]
 pub struct TriclusterService {
     cfg: ServeConfig,
     pub(crate) router: Router,
     compactor: Compactor,
+    cell: Arc<SnapshotCell>,
+    /// Compactions so far — the epoch stamped on the next publication.
+    epoch: u64,
 }
 
 impl TriclusterService {
     /// Service with fresh shards and an empty global index.
     pub fn new(cfg: ServeConfig) -> Self {
-        let router = Router::new(cfg.arity, cfg.shards, cfg.max_pending, cfg.workers);
+        let router = Router::from_config(&cfg);
         let compactor = Compactor::new(cfg.shards);
-        Self { cfg, router, compactor }
+        Self { cfg, router, compactor, cell: Arc::new(SnapshotCell::new()), epoch: 0 }
     }
 
     /// The configuration this service runs under.
@@ -144,26 +460,58 @@ impl TriclusterService {
         self.router.drain();
     }
 
-    /// Flush, then merge every shard's pending delta into the global
-    /// index. After `compact`, `clusters`/`query` reflect every ingested
-    /// tuple.
+    /// Flush, merge every shard's pending delta into the global index,
+    /// and publish the compacted index as the next epoch snapshot.
+    /// After `compact`, reads reflect every ingested tuple.
     pub fn compact(&mut self) {
         let mut span = crate::span!("serve.compact");
         self.router.drain();
         self.compactor.pull(self.router.shards_mut());
+        self.epoch += 1;
+        self.cell.publish(self.compactor.snapshot(&self.cfg.constraints, self.epoch));
         span.records_out(self.compactor.generated_len() as u64);
+    }
+
+    /// The current epoch snapshot (epoch 0 and empty before the first
+    /// [`Self::compact`]). Owned: hold it as long as needed — later
+    /// compactions publish new snapshots without touching this one.
+    pub fn snapshot(&self) -> Arc<EpochSnapshot> {
+        self.cell.load()
+    }
+
+    /// The publication cell — share it with query threads (or across
+    /// [`LocalBackend`]s); they keep loading consistent snapshots while
+    /// this service ingests and compacts.
+    pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.cell)
+    }
+
+    /// An in-process [`QueryBackend`] over this service's cell, result
+    /// cache enabled.
+    pub fn backend(&self) -> LocalBackend {
+        LocalBackend::new(self.snapshot_cell())
     }
 
     /// The compacted cluster index under the configured constraints.
     /// (Tuples ingested after the last `compact` are not reflected.)
+    ///
+    /// Deprecated shim (pre-epoch API): borrows the compactor mutably,
+    /// so it still serialises reads against ingest. Prefer
+    /// [`Self::snapshot`] — same clusters, owned, concurrent — see the
+    /// ARCHITECTURE.md migration map.
     pub fn clusters(&mut self) -> &[Cluster] {
         self.compactor.clusters(&self.cfg.constraints)
     }
 
     /// A query engine over the compacted index.
-    pub fn query(&mut self) -> QueryEngine<'_> {
-        let constraints = self.cfg.constraints.clone();
-        QueryEngine::new(self.compactor.clusters(&constraints))
+    ///
+    /// Deprecated shim (pre-epoch API): now returns an OWNED engine
+    /// over [`Self::snapshot`] (callers that held `QueryEngine<'_>`
+    /// compile unchanged — minus the borrow of the service). Prefer
+    /// [`Self::backend`] for cached reads or [`Self::snapshot`]
+    /// directly — see the ARCHITECTURE.md migration map.
+    pub fn query(&mut self) -> QueryEngine {
+        QueryEngine::from_snapshot(self.snapshot())
     }
 
     /// Live router + compactor counters.
@@ -228,7 +576,7 @@ mod tests {
         let cons = Constraints { min_density: 0.5, min_support: 2 };
         let reference = sorted(mine_online(&ctx, &cons));
         let mut svc = TriclusterService::new(
-            ServeConfig::new(3, 3).with_constraints(cons),
+            ServeConfig::builder().arity(3).shards(3).constraints(cons).build(),
         );
         svc.ingest(ctx.tuples());
         svc.compact();
@@ -270,5 +618,55 @@ mod tests {
         assert_eq!(s.merged, 2);
         svc.clusters();
         assert_eq!(svc.stats().clusters, Some(2));
+    }
+
+    #[test]
+    fn snapshot_outlives_later_compactions() {
+        let ctx = crate::datasets::synthetic::k2(2).inner;
+        let mut svc = TriclusterService::new(ServeConfig::new(3, 2));
+        assert_eq!(svc.snapshot().epoch(), 0, "empty before first compact");
+        svc.ingest(ctx.tuples());
+        svc.compact();
+        let first = svc.snapshot();
+        assert_eq!(first.epoch(), 1);
+        assert_eq!(first.stats().total_support, first.merged_tuples());
+        // ingest + compact again: the held snapshot must not change
+        let more: Vec<NTuple> =
+            (100..110u32).map(|i| NTuple::triple(i, i, i)).collect();
+        svc.ingest(&more);
+        svc.compact();
+        assert_eq!(first.epoch(), 1);
+        assert_eq!(svc.snapshot().epoch(), 2);
+        assert!(svc.snapshot().len() > first.len());
+        // the deprecated query() shim reads the same published snapshot
+        let q = svc.query();
+        assert_eq!(q.epoch(), 2);
+        assert_eq!(q.len(), svc.snapshot().len());
+    }
+
+    #[test]
+    fn builder_and_positional_config_agree() {
+        let a = ServeConfig::new(3, 8);
+        let b = ServeConfig::builder().arity(3).shards(8).build();
+        assert_eq!(a.arity, b.arity);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.max_pending, b.max_pending);
+        assert_eq!(a.workers, b.workers);
+        let sim = ServeConfig::builder()
+            .arity(3)
+            .shards(8)
+            .nodes(4)
+            .replicas(2)
+            .retained(1)
+            .placement("rr")
+            .batch(512)
+            .build_sim();
+        let base = ServeSimConfig::new(3, 8, 4);
+        assert_eq!(sim.slots_per_node, base.slots_per_node);
+        assert_eq!(sim.placement, "rr");
+        assert_eq!(sim.batch, 512);
+        assert_eq!(sim.replicas, 2);
+        assert_eq!(sim.retained, 1);
+        assert_eq!(sim.seed, base.seed);
     }
 }

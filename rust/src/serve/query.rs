@@ -1,146 +1,106 @@
 //! Query API over a compacted cluster index: top-k by density,
 //! membership lookup, and aggregate stats.
 //!
-//! A [`QueryEngine`] borrows one compacted snapshot (`&[Cluster]`) and
-//! builds a `(modality, entity) → clusters` inverted index once, so the
-//! membership query the north-star cares about ("clusters containing
-//! entity e in modality m" — the recommendation lookup) is a single hash
-//! probe instead of a scan over every cluster's components.
+//! Since the epoch-snapshot redesign, the index itself lives in
+//! [`EpochSnapshot`] (see [`crate::serve::epoch`]) and [`QueryEngine`]
+//! is an OWNED thin wrapper over one `Arc<EpochSnapshot>` — it no
+//! longer borrows the service, so holding an engine never blocks
+//! ingest or compaction. Prefer [`crate::serve::QueryBackend`] for new
+//! code (it adds caching and replica routing); `QueryEngine` remains
+//! the direct, zero-policy view, and is what the equivalence suites
+//! compare every backend against.
+//!
+//! Membership lookups ([`QueryEngine::containing`]) return borrowed
+//! `&[u32]` cluster ids from the snapshot's inverted index —
+//! allocation-free — with [`QueryEngine::resolve`] mapping an id back
+//! to its cluster.
+
+use std::sync::Arc;
 
 use crate::core::pattern::Cluster;
-use crate::util::hash::FxHashMap;
+use crate::serve::epoch::EpochSnapshot;
 
-/// Aggregate statistics of a compacted index.
-#[derive(Debug, Clone, PartialEq)]
-pub struct IndexStats {
-    /// Clusters in the snapshot.
-    pub clusters: usize,
-    /// Σ support (= tuples ingested, when no constraints filter).
-    pub total_support: usize,
-    /// Mean support-density.
-    pub mean_density: f64,
-    /// Largest support-density.
-    pub max_density: f64,
-    /// Largest single-modality component cardinality.
-    pub max_component: usize,
-}
+pub use crate::serve::epoch::IndexStats;
 
-/// Read-only query surface over one compacted snapshot.
+/// Read-only query surface over one epoch snapshot (owned — cheap to
+/// construct from a service via [`crate::serve::TriclusterService::snapshot`],
+/// and independent of the service's lifetime once constructed).
 #[derive(Debug)]
-pub struct QueryEngine<'a> {
-    clusters: &'a [Cluster],
-    /// (modality, entity id) → indices into `clusters`.
-    member: FxHashMap<(u8, u32), Vec<u32>>,
+pub struct QueryEngine {
+    snap: Arc<EpochSnapshot>,
 }
 
-impl<'a> QueryEngine<'a> {
-    /// Build the inverted membership index over one snapshot.
-    pub fn new(clusters: &'a [Cluster]) -> Self {
+impl QueryEngine {
+    /// Build an engine over a borrowed cluster slice.
+    ///
+    /// Deprecated shim (pre-epoch API): clones the slice into a
+    /// detached epoch-0 snapshot. Migrate to
+    /// [`crate::serve::TriclusterService::snapshot`] +
+    /// [`Self::from_snapshot`] (or [`EpochSnapshot::build`] directly)
+    /// to share the already-published index instead of copying it —
+    /// see the ARCHITECTURE.md migration map.
+    pub fn new(clusters: &[Cluster]) -> Self {
         let mut span = crate::span!("serve.query.build");
         span.records_in(clusters.len() as u64);
-        let mut member: FxHashMap<(u8, u32), Vec<u32>> = FxHashMap::default();
-        // upper bound on distinct (modality, entity) pairs — a pair is
-        // counted once per containing cluster, so overlapping snapshots
-        // over-reserve; this trades transient memory for zero rehashes
-        member.reserve(
-            clusters
-                .iter()
-                .map(|c| c.components.iter().map(Vec::len).sum::<usize>())
-                .sum(),
-        );
-        for (i, c) in clusters.iter().enumerate() {
-            for (m, comp) in c.components.iter().enumerate() {
-                for &e in comp {
-                    member.entry((m as u8, e)).or_default().push(i as u32);
-                }
-            }
-        }
-        Self { clusters, member }
+        Self { snap: EpochSnapshot::build(0, clusters.to_vec(), 0) }
+    }
+
+    /// Engine over an already-published snapshot (no copying — shares
+    /// the `Arc`).
+    pub fn from_snapshot(snap: Arc<EpochSnapshot>) -> Self {
+        Self { snap }
+    }
+
+    /// The underlying snapshot.
+    pub fn snapshot(&self) -> &Arc<EpochSnapshot> {
+        &self.snap
+    }
+
+    /// The epoch this engine answers at.
+    pub fn epoch(&self) -> u64 {
+        self.snap.epoch()
     }
 
     /// Clusters in the snapshot.
     pub fn len(&self) -> usize {
-        self.clusters.len()
+        self.snap.len()
     }
 
     /// True when the snapshot has no clusters.
     pub fn is_empty(&self) -> bool {
-        self.clusters.is_empty()
+        self.snap.is_empty()
     }
 
     /// The k densest clusters (support-density, ties broken by support
-    /// then components, so the ranking is total and deterministic).
-    /// Selects the top k in O(n) before sorting only those k.
-    pub fn top_k_by_density(&self, k: usize) -> Vec<&'a Cluster> {
-        let _span = crate::span!("serve.query.top_k");
-        let cs = self.clusters;
-        let mut idx: Vec<usize> = (0..cs.len()).collect();
-        let k = k.min(idx.len());
-        if k == 0 {
-            return Vec::new();
-        }
-        let mut rank = |&a: &usize, &b: &usize| {
-            cs[b].support_density()
-                .total_cmp(&cs[a].support_density())
-                .then(cs[b].support.cmp(&cs[a].support))
-                .then(cs[a].components.cmp(&cs[b].components))
-        };
-        if k < idx.len() {
-            idx.select_nth_unstable_by(k - 1, &mut rank);
-            idx.truncate(k);
-        }
-        idx.sort_unstable_by(&mut rank);
-        idx.into_iter().map(|i| &cs[i]).collect()
+    /// then components — total and deterministic; see
+    /// [`EpochSnapshot::top_k_by_density`]).
+    pub fn top_k_by_density(&self, k: usize) -> Vec<&Cluster> {
+        self.snap.top_k_by_density(k)
     }
 
-    /// Every cluster whose modality-`m` component contains `entity`, in
-    /// index order.
-    pub fn containing(&self, modality: usize, entity: u32) -> Vec<&'a Cluster> {
-        let _span = crate::span!("serve.query.containing");
-        let cs = self.clusters;
-        match self.member.get(&(modality as u8, entity)) {
-            Some(ids) => ids.iter().map(|&i| &cs[i as usize]).collect(),
-            None => Vec::new(),
-        }
+    /// Ids of every cluster whose modality-`m` component contains
+    /// `entity`, in index order — allocation-free (borrows the
+    /// snapshot's inverted index). Resolve ids with [`Self::resolve`].
+    pub fn containing(&self, modality: usize, entity: u32) -> &[u32] {
+        self.snap.containing(modality, entity)
+    }
+
+    /// The cluster behind an id returned by [`Self::containing`].
+    pub fn resolve(&self, id: u32) -> &Cluster {
+        self.snap.resolve(id)
     }
 
     /// Support and density of the clusters containing `(modality,
     /// entity)` — the per-entity serving stats.
     pub fn entity_stats(&self, modality: usize, entity: u32) -> Option<IndexStats> {
-        let hits = self.containing(modality, entity);
-        if hits.is_empty() {
-            None
-        } else {
-            Some(stats_of(hits.iter().copied()))
-        }
+        self.snap.entity_stats(modality, entity)
     }
 
     /// Aggregate stats over the whole snapshot (no intermediate
     /// collection — the stats fold streams over the clusters).
     pub fn stats(&self) -> IndexStats {
-        stats_of(self.clusters.iter())
+        self.snap.stats()
     }
-}
-
-fn stats_of<'c>(clusters: impl Iterator<Item = &'c Cluster>) -> IndexStats {
-    let mut n = 0usize;
-    let mut total_support = 0usize;
-    let mut mean_density = 0.0;
-    let mut max_density = 0.0f64;
-    let mut max_component = 0usize;
-    for c in clusters {
-        n += 1;
-        total_support += c.support;
-        let d = c.support_density();
-        mean_density += d;
-        max_density = max_density.max(d);
-        max_component =
-            max_component.max(c.components.iter().map(Vec::len).max().unwrap_or(0));
-    }
-    if n > 0 {
-        mean_density /= n as f64;
-    }
-    IndexStats { clusters: n, total_support, mean_density, max_density, max_component }
 }
 
 #[cfg(test)]
@@ -180,10 +140,10 @@ mod tests {
         // entity 0 in modality 1 appears in clusters a and b
         let hits = q.containing(1, 0);
         assert_eq!(hits.len(), 2);
-        // entity 2 in modality 0 appears only in b
+        // entity 2 in modality 0 appears only in b — ids resolve back
         let hits = q.containing(0, 2);
         assert_eq!(hits.len(), 1);
-        assert_eq!(hits[0].support, 2);
+        assert_eq!(q.resolve(hits[0]).support, 2);
         // absent entity
         assert!(q.containing(2, 99).is_empty());
         assert!(q.entity_stats(2, 99).is_none());
@@ -202,5 +162,14 @@ mod tests {
         let es = q.entity_stats(0, 5).unwrap();
         assert_eq!(es.clusters, 1);
         assert_eq!(es.total_support, 1);
+    }
+
+    #[test]
+    fn engine_from_snapshot_shares_the_published_index() {
+        let snap = EpochSnapshot::build(7, fixture(), 7);
+        let q = QueryEngine::from_snapshot(Arc::clone(&snap));
+        assert_eq!(q.epoch(), 7);
+        assert_eq!(q.len(), 3);
+        assert!(Arc::ptr_eq(q.snapshot(), &snap), "no copy");
     }
 }

@@ -1,0 +1,308 @@
+//! Replica shards: read-only copies of the published snapshot on other
+//! sim nodes, fed by delta streaming from the primary.
+//!
+//! The primary publishes every compacted epoch to the [`ReplicaSet`];
+//! each replica applies it after a seeded per-replica delivery lag of
+//! at most `retained` epochs (the retained window — the primary keeps
+//! the last `retained` published snapshots streamable, so a replica can
+//! never fall further behind than that without a full resync, which the
+//! sim never needs). This gives the staleness bound the equivalence
+//! suite enforces:
+//!
+//! ```text
+//! primary_epoch - replica_epoch  <=  retained      (for every replica)
+//! ```
+//!
+//! [`SimRemoteBackend`] is the remote arm of
+//! [`crate::serve::QueryBackend`]: constructed for a client node, it
+//! routes to the nearest replica (ring distance over node ids) and
+//! answers from that replica's applied snapshot — same answer path as
+//! [`crate::serve::LocalBackend`], just a possibly-older epoch.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, RwLock};
+
+use crate::core::pattern::Cluster;
+use crate::serve::backend::{answer_via, Answer, QueryBackend, QueryCache, QueryKey};
+use crate::serve::epoch::{EpochSnapshot, IndexStats};
+use crate::util::rng::Rng;
+
+/// The replica set as shared between the sim's publisher (compaction)
+/// and any number of [`SimRemoteBackend`] readers.
+pub type SharedReplicas = Arc<RwLock<ReplicaSet>>;
+
+/// Replica placement + per-replica applied/pending snapshot state.
+#[derive(Debug)]
+pub struct ReplicaSet {
+    /// Node id hosting each replica.
+    nodes: Vec<usize>,
+    /// Total nodes in the cluster (for ring-distance routing).
+    total_nodes: usize,
+    /// Retained window: the staleness bound, in epochs.
+    retained: u64,
+    /// Snapshot each replica currently serves.
+    applied: Vec<Arc<EpochSnapshot>>,
+    /// Published-but-undelivered snapshots per replica (≤ `retained`).
+    pending: Vec<VecDeque<Arc<EpochSnapshot>>>,
+    /// Epoch of the last snapshot the primary published.
+    primary_epoch: u64,
+    /// Seeded delivery-lag stream (deterministic per sim seed).
+    rng: Rng,
+    publishes: u64,
+}
+
+impl ReplicaSet {
+    /// Replicas on `nodes` (of a `total_nodes` cluster), lag-bounded by
+    /// `retained`, all starting from the empty epoch-0 snapshot.
+    pub fn new(nodes: Vec<usize>, total_nodes: usize, retained: u64, seed: u64) -> Self {
+        let n = nodes.len();
+        Self {
+            nodes,
+            total_nodes: total_nodes.max(1),
+            retained,
+            applied: (0..n).map(|_| EpochSnapshot::empty()).collect(),
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            primary_epoch: 0,
+            rng: Rng::new(seed ^ 0x5245_504C_4943_41u64),
+            publishes: 0,
+        }
+    }
+
+    /// Number of replicas.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when no replicas are configured.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node ids hosting the replicas.
+    pub fn nodes(&self) -> &[usize] {
+        &self.nodes
+    }
+
+    /// The retained window (staleness bound, in epochs).
+    pub fn retained(&self) -> u64 {
+        self.retained
+    }
+
+    /// Epoch of the last published snapshot.
+    pub fn primary_epoch(&self) -> u64 {
+        self.primary_epoch
+    }
+
+    /// Snapshots published so far.
+    pub fn publishes(&self) -> u64 {
+        self.publishes
+    }
+
+    /// The snapshot replica `r` currently serves.
+    pub fn applied(&self, r: usize) -> Arc<EpochSnapshot> {
+        Arc::clone(&self.applied[r])
+    }
+
+    /// How many epochs replica `r` trails the primary.
+    pub fn staleness(&self, r: usize) -> u64 {
+        self.primary_epoch - self.applied[r].epoch()
+    }
+
+    /// Largest staleness across the set (0 when empty).
+    pub fn max_staleness(&self) -> u64 {
+        (0..self.len()).map(|r| self.staleness(r)).max().unwrap_or(0)
+    }
+
+    /// Stream a newly published snapshot to every replica. Each replica
+    /// applies queued snapshots until its delivery lag (seeded, at most
+    /// `retained`) is restored — so after every publish, every replica's
+    /// staleness is within the retained window.
+    pub fn publish(&mut self, snap: Arc<EpochSnapshot>) {
+        self.primary_epoch = snap.epoch();
+        self.publishes += 1;
+        crate::obs::counter("serve.replica.publishes", 1);
+        for r in 0..self.nodes.len() {
+            self.pending[r].push_back(Arc::clone(&snap));
+            let lag = self.rng.below(self.retained + 1) as usize;
+            while self.pending[r].len() > lag {
+                let next = self.pending[r].pop_front().expect("len checked");
+                self.applied[r] = next;
+            }
+            debug_assert!(
+                self.staleness(r) <= self.retained,
+                "replica {r} staleness {} exceeds retained window {}",
+                self.staleness(r),
+                self.retained
+            );
+        }
+        crate::obs::gauge("serve.replica.staleness", self.max_staleness() as f64);
+    }
+
+    /// The replica nearest to `client` by ring distance over node ids
+    /// (ties: lower node id, then lower replica index). Returns the
+    /// replica INDEX, not the node id.
+    pub fn nearest(&self, client: usize) -> Option<usize> {
+        let n = self.total_nodes;
+        let dist = |node: usize| {
+            let d = node.abs_diff(client) % n;
+            d.min(n - d)
+        };
+        (0..self.nodes.len())
+            .min_by_key(|&r| (dist(self.nodes[r]), self.nodes[r], r))
+    }
+}
+
+/// The simulated-remote arm of [`QueryBackend`]: answers from the
+/// nearest replica's applied snapshot. Epoch may trail the primary by
+/// up to the retained window; within one snapshot, answers are
+/// bit-identical to a [`crate::serve::LocalBackend`] over the same
+/// epoch (property-tested in `query_plane_equivalence`).
+#[derive(Debug)]
+pub struct SimRemoteBackend {
+    set: SharedReplicas,
+    /// Index of the replica this client reads (chosen at construction).
+    replica: usize,
+    /// The client's node id (kept for display/debugging).
+    client_node: usize,
+    cache: QueryCache,
+}
+
+impl SimRemoteBackend {
+    /// Backend for a client on `client_node`, routed to the nearest
+    /// replica. None if the set has no replicas.
+    pub fn new(set: SharedReplicas, client_node: usize) -> Option<Self> {
+        Self::with_cache(set, client_node, true)
+    }
+
+    /// Same, with the result cache explicitly on or off.
+    pub fn with_cache(set: SharedReplicas, client_node: usize, cache: bool) -> Option<Self> {
+        let replica = set.read().expect("replica set poisoned").nearest(client_node)?;
+        Some(Self { set, replica, client_node, cache: QueryCache::new(cache) })
+    }
+
+    /// The replica index this backend reads.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// The node id this backend's replica lives on.
+    pub fn replica_node(&self) -> usize {
+        self.set.read().expect("replica set poisoned").nodes()[self.replica]
+    }
+
+    /// The client's node id.
+    pub fn client_node(&self) -> usize {
+        self.client_node
+    }
+
+    fn answer(&mut self, key: QueryKey) -> Answer {
+        let snap = self.snapshot();
+        answer_via(&snap, &mut self.cache, key)
+    }
+}
+
+impl QueryBackend for SimRemoteBackend {
+    fn name(&self) -> &'static str {
+        "sim-remote"
+    }
+
+    fn snapshot(&self) -> Arc<EpochSnapshot> {
+        crate::obs::counter("serve.replica.reads", 1);
+        self.set.read().expect("replica set poisoned").applied(self.replica)
+    }
+
+    fn top_k(&mut self, k: usize) -> Vec<Cluster> {
+        match self.answer(QueryKey::TopK(k)) {
+            Answer::Clusters(cs) => cs,
+            _ => unreachable!("top_k answers are clusters"),
+        }
+    }
+
+    fn containing(&mut self, modality: usize, entity: u32) -> Vec<u32> {
+        match self.answer(QueryKey::Containing(modality as u8, entity)) {
+            Answer::Ids(ids) => ids,
+            _ => unreachable!("containing answers are ids"),
+        }
+    }
+
+    fn entity_stats(&mut self, modality: usize, entity: u32) -> Option<IndexStats> {
+        match self.answer(QueryKey::EntityStats(modality as u8, entity)) {
+            Answer::Stats(s) => s,
+            _ => unreachable!("entity_stats answers are stats"),
+        }
+    }
+
+    fn stats(&mut self) -> IndexStats {
+        match self.answer(QueryKey::Stats) {
+            Answer::Stats(Some(s)) => s,
+            _ => unreachable!("stats answers are stats"),
+        }
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pattern::tricluster;
+
+    fn snap(epoch: u64, support: usize) -> Arc<EpochSnapshot> {
+        let mut c = tricluster(vec![0], vec![0], vec![0]);
+        c.support = support;
+        EpochSnapshot::build(epoch, vec![c], support)
+    }
+
+    #[test]
+    fn staleness_never_exceeds_retained_window() {
+        let retained = 3u64;
+        let mut set = ReplicaSet::new(vec![0, 2, 4], 6, retained, 0xABCD);
+        for e in 1..=40 {
+            set.publish(snap(e, e as usize));
+            for r in 0..set.len() {
+                assert!(set.staleness(r) <= retained, "replica {r} too stale");
+            }
+        }
+        assert_eq!(set.primary_epoch(), 40);
+        assert_eq!(set.publishes(), 40);
+    }
+
+    #[test]
+    fn retained_zero_means_always_fresh() {
+        let mut set = ReplicaSet::new(vec![1], 4, 0, 7);
+        for e in 1..=10 {
+            set.publish(snap(e, 1));
+            assert_eq!(set.staleness(0), 0);
+            assert_eq!(set.applied(0).epoch(), e);
+        }
+    }
+
+    #[test]
+    fn nearest_uses_ring_distance() {
+        let set = ReplicaSet::new(vec![1, 5], 8, 1, 0);
+        // node 0 → node 1 is distance 1; node 5 is distance 3
+        assert_eq!(set.nearest(0), Some(0));
+        // node 7 → node 5 is distance 2; node 1 is distance 2 — tie
+        // breaks to the lower node id (1), replica index 0
+        assert_eq!(set.nearest(7), Some(0));
+        // node 6 → node 5 is distance 1
+        assert_eq!(set.nearest(6), Some(1));
+        assert_eq!(ReplicaSet::new(vec![], 8, 1, 0).nearest(0), None);
+    }
+
+    #[test]
+    fn remote_backend_reads_applied_snapshot() {
+        let set: SharedReplicas =
+            Arc::new(RwLock::new(ReplicaSet::new(vec![0], 2, 0, 1)));
+        let mut be = SimRemoteBackend::new(Arc::clone(&set), 1).expect("one replica");
+        assert_eq!(be.epoch(), 0);
+        set.write().unwrap().publish(snap(1, 5));
+        assert_eq!(be.epoch(), 1, "retained=0 applies immediately");
+        assert_eq!(be.top_k(1)[0].support, 5);
+        assert_eq!(be.containing(0, 0), vec![0]);
+        assert_eq!(be.replica_node(), 0);
+        assert_eq!(be.client_node(), 1);
+    }
+}

@@ -74,6 +74,11 @@ pub struct Router {
 
 impl Router {
     /// Router over `n_shards` fresh shards.
+    ///
+    /// Deprecated shim (positional-argument API): prefer
+    /// [`Self::from_config`] with a [`crate::serve::ServeConfig`] built
+    /// via [`crate::serve::ServeConfig::builder`] — see the
+    /// ARCHITECTURE.md migration map.
     pub fn new(arity: usize, n_shards: usize, max_pending: usize, workers: usize) -> Self {
         let n = n_shards.max(1);
         Self {
@@ -83,6 +88,12 @@ impl Router {
             backend: Pooled::new(workers),
             stats: RouterStats::default(),
         }
+    }
+
+    /// Router configured from a [`crate::serve::ServeConfig`] — the one
+    /// construction path the service and its builder share.
+    pub fn from_config(cfg: &crate::serve::ServeConfig) -> Self {
+        Self::new(cfg.arity, cfg.shards, cfg.max_pending, cfg.workers)
     }
 
     /// Shard count.

@@ -1,0 +1,391 @@
+//! The concurrent query plane's load-bearing invariants, tested end to
+//! end:
+//!
+//! 1. **Backend equivalence** — every `QueryBackend` impl (local,
+//!    cache on/off, simulated-remote) answers identically to a plain
+//!    `QueryEngine` over `oac::mine_online`'s clusters at the same
+//!    epoch, for random contexts and service schedules.
+//! 2. **Replica staleness** — under seeded churn and arbitrary
+//!    compaction schedules, a replica never trails the primary by more
+//!    than the retained window, and what it serves at epoch `e` is
+//!    exactly the epoch-`e` index (the prefix of the stream merged by
+//!    compaction `e`).
+//! 3. **Cache transparency** — a cache hit is bit-equal to the miss
+//!    that populated it (including `f64` payloads), and a cache-off
+//!    backend answers the same.
+//! 4. **No torn reads** — snapshots loaded concurrently with ingest
+//!    and compaction are internally consistent (epoch, clusters,
+//!    membership index, and merged-tuples watermark from ONE
+//!    publication) and epochs observed per reader are monotone.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use tricluster::core::context::PolyContext;
+use tricluster::core::pattern::Cluster;
+use tricluster::exec::ChurnConfig;
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::serve::{
+    EpochSnapshot, QueryBackend, QueryEngine, ServeConfig, ServeSim, TriclusterService,
+};
+use tricluster::util::proptest_lite::{assert_prop, Gen};
+
+fn random_ctx(g: &mut Gen, arity: usize, universe: u32, n: usize) -> PolyContext {
+    let mut ctx = PolyContext::new(arity);
+    for _ in 0..n {
+        let ids: Vec<u32> = (0..arity).map(|_| g.u32_below(universe)).collect();
+        ctx.add_ids(&ids);
+    }
+    ctx
+}
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    cs.sort_by(|a, b| a.components.cmp(&b.components));
+    cs
+}
+
+/// Resolve membership ids against `snap` and sort by components, so two
+/// indexes over the same cluster SET compare equal regardless of their
+/// internal cluster order (ids are index-order-dependent; clusters are
+/// not).
+fn resolved(snap: &EpochSnapshot, ids: &[u32]) -> Vec<Cluster> {
+    sorted(ids.iter().map(|&i| snap.resolve(i).clone()).collect())
+}
+
+/// Compare a backend's four answers against the reference engine.
+/// Counts and extrema are exact; `mean_density` gets a summation-order
+/// tolerance (the two indexes may hold equal clusters in different
+/// order).
+fn assert_backend_matches(
+    backend: &mut dyn QueryBackend,
+    reference: &QueryEngine,
+    ks: &[usize],
+    probes: &[(usize, u32)],
+    label: &str,
+) -> Result<(), String> {
+    let snap = backend.snapshot();
+    for &k in ks {
+        let got = backend.top_k(k);
+        let want: Vec<Cluster> =
+            reference.top_k_by_density(k).into_iter().cloned().collect();
+        if got != want {
+            return Err(format!("{label}: top_k({k}) differs"));
+        }
+    }
+    for &(m, e) in probes {
+        let got = resolved(&snap, &backend.containing(m, e));
+        let want = resolved(reference.snapshot(), reference.containing(m, e));
+        if got != want {
+            return Err(format!("{label}: containing({m}, {e}) differs"));
+        }
+        let gs = backend.entity_stats(m, e);
+        let ws = reference.entity_stats(m, e);
+        match (gs, ws) {
+            (None, None) => {}
+            (Some(gs), Some(ws)) => {
+                if gs.clusters != ws.clusters
+                    || gs.total_support != ws.total_support
+                    || gs.max_component != ws.max_component
+                    || gs.max_density.to_bits() != ws.max_density.to_bits()
+                    || (gs.mean_density - ws.mean_density).abs() > 1e-9
+                {
+                    return Err(format!(
+                        "{label}: entity_stats({m}, {e}) differs: {gs:?} vs {ws:?}"
+                    ));
+                }
+            }
+            (gs, ws) => {
+                return Err(format!(
+                    "{label}: entity_stats({m}, {e}) presence differs: \
+                     {gs:?} vs {ws:?}"
+                ))
+            }
+        }
+    }
+    let gs = backend.stats();
+    let ws = reference.stats();
+    if gs.clusters != ws.clusters
+        || gs.total_support != ws.total_support
+        || gs.max_component != ws.max_component
+        || gs.max_density.to_bits() != ws.max_density.to_bits()
+        || (gs.mean_density - ws.mean_density).abs() > 1e-9
+    {
+        return Err(format!("{label}: stats differs: {gs:?} vs {ws:?}"));
+    }
+    Ok(())
+}
+
+/// Random context + schedule: the service's local backends (cache on
+/// and off) answer exactly like a `QueryEngine` over `mine_online` at
+/// the same epoch.
+#[test]
+fn prop_local_backends_equal_engine_over_mine_online() {
+    assert_prop(48, |g: &mut Gen| {
+        let arity = 3 + g.usize_below(2);
+        let universe = 2 + g.u32_below(8);
+        let n = 1 + g.usize_below(250);
+        let ctx = random_ctx(g, arity, universe, n);
+        let constraints = if g.bool(0.5) {
+            Constraints::none()
+        } else {
+            Constraints { min_density: g.f64(), min_support: g.usize_below(3) }
+        };
+
+        let mut svc = TriclusterService::new(
+            ServeConfig::builder()
+                .arity(arity)
+                .shards(1 + g.usize_below(5))
+                .constraints(constraints.clone())
+                .build(),
+        );
+        let batch = 1 + g.usize_below(64);
+        for chunk in ctx.tuples().chunks(batch) {
+            svc.ingest(chunk);
+        }
+        svc.compact();
+
+        // the reference: a detached snapshot over mine_online's
+        // clusters at the same epoch
+        let epoch = svc.snapshot().epoch();
+        let reference = QueryEngine::from_snapshot(EpochSnapshot::build(
+            epoch,
+            mine_online(&ctx, &constraints),
+            ctx.len(),
+        ));
+
+        let ks = [1, 3, 1 + g.usize_below(20)];
+        let probes: Vec<(usize, u32)> = (0..8)
+            .map(|_| (g.usize_below(arity), g.u32_below(universe + 2)))
+            .collect();
+        for cache in [true, false] {
+            let mut backend = tricluster::serve::LocalBackend::with_cache(
+                svc.snapshot_cell(),
+                cache,
+            );
+            if backend.epoch() != epoch {
+                return Err(format!(
+                    "local backend epoch {} != published {epoch}",
+                    backend.epoch()
+                ));
+            }
+            assert_backend_matches(
+                &mut backend,
+                &reference,
+                &ks,
+                &probes,
+                &format!("local cache={cache} arity={arity} n={}", ctx.len()),
+            )?;
+            // run the probes again through the cache: hits must change
+            // nothing
+            assert_backend_matches(
+                &mut backend,
+                &reference,
+                &ks,
+                &probes,
+                &format!("local(repeat) cache={cache}"),
+            )?;
+            let (hits, misses) = backend.cache_stats();
+            if cache && hits == 0 {
+                return Err("cache on but no hits on repeat pass".into());
+            }
+            if !cache && (hits, misses) != (0, 0) {
+                return Err("cache off but counted traffic".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random serve-on-cluster runs with replicas and churn: staleness
+/// stays within the retained window at every compaction, and each
+/// replica's answers equal `mine_online` over the stream prefix its
+/// epoch corresponds to.
+#[test]
+fn prop_replica_staleness_bounded_and_answers_match_their_epoch() {
+    assert_prop(24, |g: &mut Gen| {
+        let universe = 2 + g.u32_below(8);
+        let n = 50 + g.usize_below(300);
+        let ctx = random_ctx(g, 3, universe, n);
+        let retained = g.usize_below(3) as u64;
+        let replicas = 1 + g.usize_below(3);
+        let nodes = 1 + g.usize_below(4);
+        let cfg = ServeConfig::builder()
+            .arity(3)
+            .shards(1 + g.usize_below(5))
+            .nodes(nodes)
+            .replicas(replicas)
+            .retained(retained)
+            .placement(["rr", "locality", "least"][g.usize_below(3)])
+            .batch(8 + g.usize_below(48))
+            .churn(if g.bool(0.5) {
+                ChurnConfig { kill_prob: 0.3, restart_ms: 20.0 }
+            } else {
+                ChurnConfig::off()
+            })
+            .seed(g.rng.next_u64())
+            .build_sim();
+        let batch = cfg.batch;
+        let compact_every = 1 + g.usize_below(3);
+        let mut sim = ServeSim::new(cfg).map_err(|e| e.to_string())?;
+        let set = sim.replica_set().expect("replicas configured");
+
+        // drive manually, recording the stream prefix each epoch merged
+        let mut prefix_at_epoch = vec![0usize]; // epoch 0 = empty
+        let mut ingested = 0usize;
+        for (i, wave) in ctx.tuples().chunks(batch).enumerate() {
+            sim.ingest(wave);
+            ingested += wave.len();
+            if (i + 1) % compact_every == 0 {
+                sim.compact();
+                prefix_at_epoch.push(ingested);
+                let s = set.read().unwrap();
+                if s.max_staleness() > retained {
+                    return Err(format!(
+                        "staleness {} > retained {retained}",
+                        s.max_staleness()
+                    ));
+                }
+            }
+        }
+        if ingested > *prefix_at_epoch.last().unwrap() {
+            sim.compact();
+            prefix_at_epoch.push(ingested);
+        }
+
+        // every replica serves exactly the index of its epoch's prefix
+        for client in 0..nodes {
+            let mut remote = sim.remote_backend(client).expect("replicas");
+            let epoch = remote.epoch() as usize;
+            if epoch + (retained as usize) < prefix_at_epoch.len() - 1 {
+                return Err(format!(
+                    "replica for client {client} at epoch {epoch}, primary at {}",
+                    prefix_at_epoch.len() - 1
+                ));
+            }
+            let mut prefix = PolyContext::new(3);
+            for t in &ctx.tuples()[..prefix_at_epoch[epoch]] {
+                prefix.add_ids(t.as_slice());
+            }
+            let reference = QueryEngine::from_snapshot(EpochSnapshot::build(
+                remote.epoch(),
+                mine_online(&prefix, &Constraints::none()),
+                prefix.len(),
+            ));
+            let probes: Vec<(usize, u32)> =
+                (0..6).map(|_| (g.usize_below(3), g.u32_below(universe))).collect();
+            assert_backend_matches(
+                &mut remote,
+                &reference,
+                &[1, 5],
+                &probes,
+                &format!("replica client={client} epoch={epoch}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// A cache hit must be BIT-equal to the miss that populated it, and a
+/// cache-off backend must produce the same bits.
+#[test]
+fn cache_hit_is_bit_equal_to_miss() {
+    let ctx = tricluster::datasets::synthetic::k2(4).inner;
+    let mut svc = TriclusterService::new(ServeConfig::new(3, 3));
+    svc.ingest(ctx.tuples());
+    svc.compact();
+    let mut on = svc.backend();
+    let mut off = tricluster::serve::LocalBackend::with_cache(svc.snapshot_cell(), false);
+    for k in [1, 4, 100] {
+        let miss = on.top_k(k);
+        let hit = on.top_k(k);
+        assert_eq!(miss, hit, "top_k({k}) hit differs from miss");
+        assert_eq!(off.top_k(k), miss, "cache-off top_k({k}) differs");
+    }
+    for (m, e) in [(0, 0), (1, 3), (2, 99)] {
+        let miss = on.containing(m, e);
+        assert_eq!(on.containing(m, e), miss);
+        assert_eq!(off.containing(m, e), miss);
+        let s_miss = on.entity_stats(m, e);
+        let s_hit = on.entity_stats(m, e);
+        match (&s_miss, &s_hit) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.mean_density.to_bits(), b.mean_density.to_bits());
+                assert_eq!(a.max_density.to_bits(), b.max_density.to_bits());
+                assert_eq!(a.clusters, b.clusters);
+                assert_eq!(a.total_support, b.total_support);
+            }
+            (None, None) => {}
+            other => panic!("hit/miss presence differs: {other:?}"),
+        }
+        assert_eq!(off.entity_stats(m, e), s_miss);
+    }
+    let miss = on.stats();
+    let hit = on.stats();
+    assert_eq!(miss.mean_density.to_bits(), hit.mean_density.to_bits());
+    assert_eq!(off.stats(), miss);
+    let (hits, misses) = on.cache_stats();
+    assert!(hits > 0 && misses > 0, "exercised both paths: {hits}/{misses}");
+}
+
+/// Readers loading snapshots concurrently with ingest + compaction
+/// never observe a torn publication: every loaded snapshot satisfies
+/// Σ support == merged-tuples watermark (both stamped at the same
+/// publish), membership ids resolve in range, and epochs are monotone
+/// per reader.
+#[test]
+fn concurrent_reads_see_consistent_epochs() {
+    let ctx = tricluster::datasets::movielens(
+        &tricluster::datasets::MovielensParams::with_tuples(4_000),
+    );
+    let mut svc = TriclusterService::new(ServeConfig::new(ctx.arity(), 4));
+    let cell = svc.snapshot_cell();
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let (cell, stop) = (Arc::clone(&cell), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let mut last_epoch = 0u64;
+                let mut loads = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = cell.load();
+                    // the torn-read canary: support mass and watermark
+                    // are stamped by the SAME publication
+                    assert_eq!(
+                        snap.stats().total_support,
+                        snap.merged_tuples(),
+                        "epoch {}: support mass != merged watermark",
+                        snap.epoch()
+                    );
+                    assert!(snap.epoch() >= last_epoch, "epoch went backwards");
+                    last_epoch = snap.epoch();
+                    // membership ids must resolve within this snapshot
+                    for c in snap.clusters().iter().take(3) {
+                        for (m, comp) in c.components.iter().enumerate() {
+                            if let Some(&e) = comp.first() {
+                                for &id in snap.containing(m, e) {
+                                    assert!((id as usize) < snap.len());
+                                }
+                            }
+                        }
+                    }
+                    loads += 1;
+                }
+                loads
+            })
+        })
+        .collect();
+    // writer: ingest + compact while the readers hammer the cell
+    for chunk in ctx.tuples().chunks(257) {
+        svc.ingest(chunk);
+        svc.compact();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut total_loads = 0usize;
+    for r in readers {
+        total_loads += r.join().expect("reader observed a torn snapshot");
+    }
+    assert!(total_loads > 0, "readers ran");
+    let final_epoch = svc.snapshot().epoch();
+    assert_eq!(final_epoch, ctx.tuples().chunks(257).count() as u64);
+    assert_eq!(svc.snapshot().merged_tuples(), ctx.len());
+}
