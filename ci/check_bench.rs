@@ -37,7 +37,12 @@
 //!    `cached_query_speedup` must clear
 //!    `serve_cluster.min_cached_query_speedup` (wall-clock ratio, so
 //!    the floor is deliberately loose; skipped on older JSONs that
-//!    predate the query-plane section).
+//!    predate the query-plane section). The multi-tenant section is
+//!    gated by a CEILING: `fairness_spread` (max/min per-tenant
+//!    service-ms per accepted tuple, deterministic) must not exceed
+//!    `serve_cluster.max_fairness_spread` (skipped on older JSONs that
+//!    predate the tenant section; `--pin` re-pins it to 110% of
+//!    observed).
 //! 5. **Hot-path kernels** — when `BENCH_hotpath.json` is present:
 //!    sequential ingest throughput must not fall below
 //!    `hotpath.min_ingest_tuples_per_s`, merge-based parallel ingest
@@ -322,6 +327,28 @@ fn main() {
                 ));
             }
         }
+        // multi-tenant fairness: spread is max/min per-tenant service-ms
+        // per accepted tuple (1.0 = perfectly fair), gated by a CEILING —
+        // the one deliberately inverted gate in this file
+        let spread = f(&serve, "fairness_spread");
+        if let Some(max) = baseline
+            .get("serve_cluster")
+            .and_then(|s| s.get("max_fairness_spread"))
+            .and_then(Json::as_f64)
+        {
+            if spread.is_nan() {
+                eprintln!(
+                    "check_bench: serve-cluster has no fairness_spread — older \
+                     bench JSON; skipping the fairness ceiling"
+                );
+            } else if spread > max {
+                failures.push(format!(
+                    "fairness_spread {spread:.3} exceeded the baseline ceiling \
+                     {max:.3}: one tenant is paying disproportionately for its \
+                     neighbours"
+                ));
+            }
+        }
     } else {
         eprintln!(
             "check_bench: {serve_cluster_path} absent — skipping serve-cluster gate"
@@ -501,6 +528,25 @@ fn pin(
                             "min_cached_query_speedup".to_string(),
                             old.clone(),
                         );
+                    }
+                }
+            }
+            // fairness is gated by a CEILING: pin at 110% of observed
+            // when the tenant section ran, else carry the committed one
+            match serve_cluster.map(|s| f(s, "fairness_spread")) {
+                Some(spread) if spread.is_finite() => {
+                    sc.insert(
+                        "max_fairness_spread".to_string(),
+                        Json::Num((spread * 1.1 * 1000.0).ceil() / 1000.0),
+                    );
+                }
+                _ => {
+                    if let Some(old) = load(baseline_path)
+                        .as_ref()
+                        .and_then(|b| b.get("serve_cluster"))
+                        .and_then(|s| s.get("max_fairness_spread"))
+                    {
+                        sc.insert("max_fairness_spread".to_string(), old.clone());
                     }
                 }
             }

@@ -25,6 +25,12 @@
 //!    the 64-query mix repeats keys, so both paths must fire), and the
 //!    replica-streaming counter (`serve.replica.publishes`); the trace
 //!    must contain the `serve.snapshot.build` span.
+//! 6. `serve-sim --tenants 3 --workload skew` — the multi-tenant pool on
+//!    the shared nodes: the per-tenant counters
+//!    (`serve.tenant.ingested`, `serve.tenant.compactions`) must land,
+//!    the `serve.tenant.fairness_spread` gauge must be present and ≥ 1.0
+//!    (it is a max/min ratio), and the trace must contain the
+//!    `serve.tenant.ingest` and `serve.tenant.compact` spans.
 //!
 //! Declared as a bench target (harness = false) like `check_bench`, so
 //! it shares the library build; it drives the CLI through `$CARGO run`
@@ -123,23 +129,24 @@ fn check_trace_file(path: &Path, failures: &mut Vec<String>) -> Vec<String> {
     names
 }
 
-/// Parse + schema-validate one metrics snapshot; returns the counter map.
+/// Parse + schema-validate one metrics snapshot; returns the counter
+/// and gauge maps (both name → value).
 fn check_metrics_file(
     path: &Path,
     failures: &mut Vec<String>,
-) -> BTreeMap<String, f64> {
+) -> (BTreeMap<String, f64>, BTreeMap<String, f64>) {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(e) => {
             failures.push(format!("{}: unreadable: {e}", path.display()));
-            return BTreeMap::new();
+            return (BTreeMap::new(), BTreeMap::new());
         }
     };
     let doc = match Json::parse(&text) {
         Ok(j) => j,
         Err(e) => {
             failures.push(format!("{}: not JSON: {e}", path.display()));
-            return BTreeMap::new();
+            return (BTreeMap::new(), BTreeMap::new());
         }
     };
     if doc.get("schema").and_then(Json::as_str) != Some(METRICS_SCHEMA) {
@@ -165,8 +172,21 @@ fn check_metrics_file(
         }
         _ => failures.push(format!("{}: missing counters object", path.display())),
     }
+    let mut gauges = BTreeMap::new();
     match doc.get("gauges") {
-        Some(Json::Obj(_)) => {}
+        Some(Json::Obj(map)) => {
+            for (k, v) in map {
+                match v.as_f64() {
+                    Some(n) => {
+                        gauges.insert(k.clone(), n);
+                    }
+                    None => failures.push(format!(
+                        "{}: gauge {k:?} is not numeric",
+                        path.display()
+                    )),
+                }
+            }
+        }
         _ => failures.push(format!("{}: missing gauges object", path.display())),
     }
     match doc.get("histograms") {
@@ -189,7 +209,7 @@ fn check_metrics_file(
         }
         _ => failures.push(format!("{}: missing histograms object", path.display())),
     }
-    counters
+    (counters, gauges)
 }
 
 fn require_counter_prefix(
@@ -240,7 +260,7 @@ fn main() {
     if !names.iter().any(|n| n.starts_with("exec.cluster.") && n.ends_with(".task")) {
         failures.push("mr trace: no per-task exec.cluster.*.task spans".to_string());
     }
-    let counters = check_metrics_file(&mr_metrics, &mut failures);
+    let (counters, _) = check_metrics_file(&mr_metrics, &mut failures);
     for key in ["exec.cluster.phases", "exec.cluster.tasks"] {
         if counters.get(key).copied().unwrap_or(0.0) < 1.0 {
             failures.push(format!("mr metrics: counter {key:?} missing or zero"));
@@ -270,7 +290,7 @@ fn main() {
     if !serve_names.iter().any(|n| n.starts_with("serve.")) {
         failures.push("serve trace: no serve.* spans".to_string());
     }
-    let serve_counters = check_metrics_file(&serve_metrics, &mut failures);
+    let (serve_counters, _) = check_metrics_file(&serve_metrics, &mut failures);
     require_counter_prefix(&serve_counters, "serve.", "serve metrics", &mut failures);
     require_counter_prefix(&serve_counters, "oac.", "serve metrics", &mut failures);
     // the compactor's partitioned dedup always records how it was split
@@ -294,7 +314,7 @@ fn main() {
             dens_metrics.to_str().unwrap(),
         ],
     );
-    let dens_counters = check_metrics_file(&dens_metrics, &mut failures);
+    let (dens_counters, _) = check_metrics_file(&dens_metrics, &mut failures);
     require_counter_prefix(
         &dens_counters,
         "density.dispatch.",
@@ -319,7 +339,7 @@ fn main() {
             comp_metrics.to_str().unwrap(),
         ],
     );
-    let comp_counters = check_metrics_file(&comp_metrics, &mut failures);
+    let (comp_counters, _) = check_metrics_file(&comp_metrics, &mut failures);
     if comp_counters.get("density.dispatch.compressed").copied().unwrap_or(0.0) < 1.0 {
         failures.push(
             "capped density metrics: counter \"density.dispatch.compressed\" \
@@ -357,7 +377,7 @@ fn main() {
     if !query_names.iter().any(|n| n == "serve.snapshot.build") {
         failures.push("query trace: no serve.snapshot.build span".to_string());
     }
-    let query_counters = check_metrics_file(&query_metrics, &mut failures);
+    let (query_counters, _) = check_metrics_file(&query_metrics, &mut failures);
     for key in [
         "serve.epoch.published",
         "serve.cache.hit",
@@ -369,14 +389,65 @@ fn main() {
         }
     }
 
+    // 6. the multi-tenant pool under an adversarial skew workload: the
+    // per-tenant counters, the fairness gauge, and the tenant spans
+    let tenant_trace = out_dir.join("tenant_trace.jsonl");
+    let tenant_metrics = out_dir.join("tenant_metrics.json");
+    run_cli(
+        &cargo,
+        &[
+            "serve-sim",
+            "--datasets",
+            "imdb",
+            "--shards",
+            "2",
+            "--nodes",
+            "3",
+            "--tenants",
+            "3",
+            "--workload",
+            "skew",
+            "--trace-out",
+            tenant_trace.to_str().unwrap(),
+            "--metrics-out",
+            tenant_metrics.to_str().unwrap(),
+        ],
+    );
+    let tenant_names = check_trace_file(&tenant_trace, &mut failures);
+    for span in ["serve.tenant.ingest", "serve.tenant.compact"] {
+        if !tenant_names.iter().any(|n| n == span) {
+            failures.push(format!("tenant trace: no {span} span"));
+        }
+    }
+    let (tenant_counters, tenant_gauges) =
+        check_metrics_file(&tenant_metrics, &mut failures);
+    for key in ["serve.tenant.ingested", "serve.tenant.compactions"] {
+        if tenant_counters.get(key).copied().unwrap_or(0.0) < 1.0 {
+            failures.push(format!("tenant metrics: counter {key:?} missing or zero"));
+        }
+    }
+    match tenant_gauges.get("serve.tenant.fairness_spread") {
+        Some(spread) if *spread >= 1.0 => {}
+        Some(spread) => failures.push(format!(
+            "tenant metrics: fairness_spread gauge {spread} below 1.0 \
+             (it is a max/min ratio)"
+        )),
+        None => failures.push(
+            "tenant metrics: gauge \"serve.tenant.fairness_spread\" missing"
+                .to_string(),
+        ),
+    }
+
     if failures.is_empty() {
         println!(
             "check_trace: OK — {} mr events + {} serve events + {} query-plane \
-             events schema-valid, B/E balanced per tid, metrics cover \
-             exec/serve/oac/density and the epoch/cache/replica counters",
+             events + {} tenant events schema-valid, B/E balanced per tid, \
+             metrics cover exec/serve/oac/density, the epoch/cache/replica \
+             counters, and the per-tenant counters + fairness gauge",
             names.len(),
             serve_names.len(),
-            query_names.len()
+            query_names.len(),
+            tenant_names.len()
         );
     } else {
         for fail in &failures {

@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- ingest: batches hash-route to 4 shards, drains are automatic ---
     let mut svc = TriclusterService::new(
-        ServeConfig::builder().arity(ctx.arity()).shards(4).build(),
+        ServeConfig::builder().arity(ctx.arity()).shards(4).build()?,
     );
     for (i, chunk) in ctx.tuples().chunks(2_048).enumerate() {
         svc.ingest(chunk);

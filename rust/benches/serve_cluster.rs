@@ -16,7 +16,11 @@
 //! 2. on the skewed ingress, shuffle-aware `locality` placement must
 //!    both move fewer drain-path bytes AND finish sooner than
 //!    round-robin (the Arifuzzaman-style communication/balance
-//!    trade-off, network-dominated regime).
+//!    trade-off, network-dominated regime);
+//! 3. a 3-tenant mix on the shared pool: every tenant equals its solo
+//!    `mine_online`, and the per-tenant fairness spread lands under the
+//!    `serve_cluster.max_fairness_spread` ceiling in
+//!    `ci/bench_baseline.json`.
 //!
 //! `TRICLUSTER_BENCH_FULL=1` for the paper-sized stream.
 
@@ -25,10 +29,12 @@ use std::time::Instant;
 
 use tricluster::core::context::PolyContext;
 use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::core::tuple::NTuple;
 use tricluster::datasets::{movielens, MovielensParams};
 use tricluster::exec::cluster_sim::{ChurnConfig, ShuffleModel};
 use tricluster::oac::{mine_online, Constraints};
 use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
+use tricluster::serve::tenant::{MultiTenantSim, TenantPoolConfig, TenantSpec};
 use tricluster::serve::{LocalBackend, QueryBackend, ServeConfig, TriclusterService};
 use tricluster::util::json::Json;
 use tricluster::util::rng::Rng;
@@ -116,7 +122,11 @@ fn time_query_mix(
 /// against `serve_cluster.min_cached_query_speedup`.
 fn bench_query_plane(ctx: &PolyContext, queries: usize, doc: &mut BTreeMap<String, Json>) {
     let mut svc = TriclusterService::new(
-        ServeConfig::builder().arity(ctx.arity()).shards(8).build(),
+        ServeConfig::builder()
+            .arity(ctx.arity())
+            .shards(8)
+            .build()
+            .expect("static bench config is valid"),
     );
     svc.ingest(ctx.tuples());
     svc.compact();
@@ -139,6 +149,53 @@ fn bench_query_plane(ctx: &PolyContext, queries: usize, doc: &mut BTreeMap<Strin
     doc.insert("query_mix_queries".to_string(), num(queries as f64));
     doc.insert("cache_matches_uncached".to_string(), Json::Bool(matches));
     doc.insert("cached_query_speedup".to_string(), num(speedup));
+}
+
+/// Multi-tenant fairness on the shared pool: the movielens stream dealt
+/// round-robin across identical tenants on one node pool. Enforced at
+/// the source: every tenant's compacted index equals its solo
+/// `mine_online`; measured: `fairness_spread` (max/min per-tenant
+/// service-ms per accepted tuple — 1.0 is perfect fairness), gated by
+/// `ci/check_bench.rs` against `serve_cluster.max_fairness_spread`.
+fn bench_tenants(ctx: &PolyContext, doc: &mut BTreeMap<String, Json>) {
+    const TENANTS: usize = 3;
+    let mut cfg = TenantPoolConfig::new(NODES);
+    cfg.slots_per_node = SLOTS_PER_NODE;
+    cfg.shuffle = SHUFFLE;
+    cfg.seed = SEED;
+    for t in 0..TENANTS {
+        let mut spec = TenantSpec::new(&format!("tenant-{t}"), ctx.arity());
+        spec.shards = (SHARDS / TENANTS).max(1);
+        cfg = cfg.tenant(spec);
+    }
+    let streams: Vec<Vec<NTuple>> = (0..TENANTS)
+        .map(|t| ctx.tuples().iter().skip(t).step_by(TENANTS).copied().collect())
+        .collect();
+    let mut sim = MultiTenantSim::new(cfg).expect("static pool config is valid");
+    sim.run(&streams, 1_024, 1, &[]);
+    for (t, stream) in streams.iter().enumerate() {
+        let mut solo = PolyContext::new(ctx.arity());
+        for tuple in stream {
+            solo.add_ids(tuple.as_slice());
+        }
+        let reference = sorted(mine_online(&solo, &Constraints::none()));
+        let clusters = sorted(sim.clusters(t).to_vec());
+        if let Some(diff) = diff_cluster_sets(&reference, &clusters) {
+            panic!("tenant {t} diverged from its solo mine_online: {diff}");
+        }
+    }
+    let spread = sim.fairness_spread();
+    assert!(spread >= 1.0, "spread is a max/min ratio: {spread}");
+    let stats = sim.stats().clone();
+    eprintln!(
+        "  tenants: {TENANTS} on {NODES} nodes — fairness spread {spread:.3}, \
+         makespan {:.1} ms, accepted {:?} (all matched solo mine_online)",
+        sim.sim_makespan_ms(),
+        stats.accepted
+    );
+    doc.insert("tenants".to_string(), num(TENANTS as f64));
+    doc.insert("fairness_spread".to_string(), num(spread));
+    doc.insert("tenant_makespan_ms".to_string(), num(sim.sim_makespan_ms()));
 }
 
 fn main() {
@@ -225,6 +282,7 @@ fn main() {
 
     let mut doc = BTreeMap::new();
     bench_query_plane(&ctx, if full { 8_192 } else { 2_048 }, &mut doc);
+    bench_tenants(&ctx, &mut doc);
     doc.insert("bench".to_string(), Json::Str("serve_cluster".into()));
     doc.insert("full".to_string(), Json::Bool(full));
     doc.insert("tuples".to_string(), num(ctx.len() as f64));

@@ -61,6 +61,28 @@ pub trait Placement: Send + Sync {
     fn name(&self) -> &'static str;
     /// Pick the node for `task`. `nodes` is never empty.
     fn place(&self, task: &TaskMeta, nodes: &[NodeView]) -> usize;
+
+    /// Pick the node for `task` when it belongs to tenant `tenant` of a
+    /// multi-tenant pool ([`crate::serve::tenant::MultiTenantSim`]).
+    ///
+    /// The default salts the task's index and partition with the tenant
+    /// id before delegating to [`Self::place`], so index- and hash-keyed
+    /// policies interleave tenants across the pool instead of stacking
+    /// every tenant's shard 0 on node 0 (round-robin becomes
+    /// tenant-striped; the locality hash decorrelates per tenant).
+    /// MEASURED affinity is deliberately left untouched — a tenant's
+    /// shard still chases its data, which is exactly the
+    /// fairness-vs-locality trade-off the tenant sim measures. Like
+    /// `place`, this must stay a pure function of its inputs.
+    fn place_tenant(&self, tenant: usize, task: &TaskMeta, nodes: &[NodeView]) -> usize {
+        let salted = TaskMeta {
+            index: task.index + tenant,
+            partition: task.partition
+                ^ (tenant as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..*task
+        };
+        self.place(&salted, nodes)
+    }
 }
 
 /// Cycle through nodes in task order — the zero-information baseline.
@@ -243,6 +265,29 @@ mod tests {
         // round-robin and least-loaded ignore affinity entirely
         assert_eq!(RoundRobin.place(&with_affinity, &ns), 0);
         assert_eq!(LeastLoaded.place(&with_affinity, &ns), 0);
+    }
+
+    #[test]
+    fn tenant_placement_interleaves_and_keeps_affinity() {
+        let ns = nodes(&[0.0, 0.0, 0.0]);
+        // round-robin: tenant t's shard 0 lands on node t % n — tenants
+        // stripe across the pool instead of stacking on node 0
+        assert_eq!(RoundRobin.place_tenant(0, &task(0, 0), &ns), 0);
+        assert_eq!(RoundRobin.place_tenant(1, &task(0, 0), &ns), 1);
+        assert_eq!(RoundRobin.place_tenant(2, &task(0, 0), &ns), 2);
+        // tenant 0 is the un-salted case: identical to plain place()
+        assert_eq!(
+            LocalityAware.place_tenant(0, &task(3, 7), &ns),
+            LocalityAware.place(&task(3, 7), &ns)
+        );
+        // measured affinity survives the tenant salt — data still wins
+        let with_affinity = TaskMeta { affinity: Some(2), ..task(0, 4) };
+        assert_eq!(LocalityAware.place_tenant(5, &with_affinity, &ns), 2);
+        // pure: same inputs, same node
+        assert_eq!(
+            LocalityAware.place_tenant(3, &task(1, 9), &ns),
+            LocalityAware.place_tenant(3, &task(1, 9), &ns)
+        );
     }
 
     #[test]

@@ -43,6 +43,15 @@
 //! cluster via [`exec::Placement`], with shuffle-cost accounting and
 //! node churn + snapshot replay.
 //!
+//! The serve layer is exercised beyond friendly uniform streams by two
+//! PR-9 additions: [`serve::tenant`] multiplexes many independent
+//! tenant contexts (per-tenant θ, arity, quotas) onto one shared
+//! simulated node pool with measured fairness, and [`workload`]
+//! generates seeded, bit-replayable adversarial scenarios — key skew,
+//! temporal drift, burst ingress, correlated node failures — that the
+//! per-tenant isolation/equivalence suites run against
+//! (`rust/tests/workload_invariants.rs`).
+//!
 //! Every layer reports through the zero-dependency [`obs`] telemetry
 //! plane — counters, gauges, log2 histograms, and hierarchical spans
 //! behind a no-op-by-default global handle, exported as a JSON metrics
@@ -68,3 +77,4 @@ pub mod runtime;
 pub mod serve;
 pub mod spark;
 pub mod util;
+pub mod workload;

@@ -47,12 +47,17 @@ COMMANDS
              [--node-slots S] [--source-skew A] [--restart-ms MS]
              [--pipeline on|off] [--replicas N] [--retained N]
              [--query-mix N] [--cache on|off] [--client-node N]
+             [--tenants T] [--workload uniform|skew|drift|burst] [--quota N]
              [--metrics-out f.json] [--trace-out f.jsonl]
              (--nodes places shards on a simulated cluster: shuffle costs,
               churn, replay; --replicas adds read replicas fed by delta
               streaming, staleness bounded by --retained; --query-mix N
               drives N seeded queries through the epoch-snapshot query
-              plane, --cache toggling the (epoch, query) result cache)
+              plane, --cache toggling the (epoch, query) result cache;
+              --tenants T > 1 multiplexes T independent tenant contexts
+              onto the shared pool, each fed by a seeded --workload
+              generator, ingress capped at --quota tuples/wave, with the
+              fairness spread and per-tenant equivalence reported)
   experiment --id table3|table4|fig2|table5|backends|cluster-scaling|
                   serve-cluster|skew|faults|engines|memory
              [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
@@ -383,7 +388,7 @@ fn serve_builder(
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--pipeline {other:?} (expected on|off)"),
     };
-    Ok(tricluster::serve::ServeConfig::builder()
+    let mut builder = tricluster::serve::ServeConfig::builder()
         .arity(arity)
         .shards(args.parse_or("shards", 4))
         .constraints(Constraints {
@@ -403,7 +408,12 @@ fn serve_builder(
         .pipeline(pipeline)
         .replicas(args.parse_or("replicas", 0))
         .retained(args.parse_or("retained", 2))
-        .seed(args.parse_or("seed", 0x5EED)))
+        .seed(args.parse_or("seed", 0x5EED))
+        .tenants(args.parse_or("tenants", 1));
+    if args.get("quota").is_some() {
+        builder = builder.quota(args.parse_or("quota", usize::MAX));
+    }
+    Ok(builder)
 }
 
 /// `--cache on|off` (default on): toggles the `(epoch, query)` result
@@ -489,7 +499,7 @@ fn serve_sim(args: &Args) -> Result<()> {
             ctx.arity()
         );
         let mut svc =
-            TriclusterService::new(serve_builder(args, ctx.arity(), 16)?.build());
+            TriclusterService::new(serve_builder(args, ctx.arity(), 16)?.build()?);
         let t = Timer::start();
         let mut compactions = 0usize;
         for (i, chunk) in ctx.tuples().chunks(batch).enumerate() {
@@ -579,10 +589,13 @@ fn serve_sim_cluster(args: &Args, names: &str) -> Result<()> {
              run without --nodes to write one"
         );
     }
+    if args.parse_or::<usize>("tenants", 1) > 1 {
+        return serve_sim_tenants(args, names);
+    }
     for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let ctx = datasets::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}; see `tricluster info`"))?;
-        let cfg = serve_builder(args, ctx.arity(), 4)?.build_sim();
+        let cfg = serve_builder(args, ctx.arity(), 4)?.build_sim()?;
         let (nodes, shards, placement) =
             (cfg.nodes, cfg.shards, cfg.placement.clone());
         let mut sim = ServeSim::new(cfg)?;
@@ -646,6 +659,155 @@ fn serve_sim_cluster(args: &Args, names: &str) -> Result<()> {
                 );
                 report_query_mix(&label, &mut remote, query_mix, seed, ctx.arity());
             }
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// `serve-sim --nodes N --tenants T`: T independent tenant contexts
+/// multiplexed onto one shared simulated pool
+/// (`serve::tenant::MultiTenantSim`), each fed a seeded `--workload`
+/// stream (`uniform` deals the dataset round-robin; `skew` / `drift` /
+/// `burst` come from `tricluster::workload` generators). `--churn P`
+/// schedules placement-correlated node-set kills. Reports per-tenant
+/// counters, the pool fairness spread, and — when no `--quota` caps
+/// ingress — asserts every tenant's index equals its solo
+/// `mine_online`.
+fn serve_sim_tenants(args: &Args, names: &str) -> Result<()> {
+    use tricluster::core::tuple::NTuple;
+    use tricluster::serve::MultiTenantSim;
+    use tricluster::workload::{
+        correlated_kills, BurstMix, DriftingStream, Op, SkewedStream,
+    };
+
+    let workload = args.get_or("workload", "uniform");
+    if !matches!(workload, "uniform" | "skew" | "drift" | "burst") {
+        anyhow::bail!("--workload {workload:?} (expected uniform|skew|drift|burst)");
+    }
+    let batch: usize = args.parse_or::<usize>("batch", 4096).max(1);
+    let compact_every: usize = args.parse_or::<usize>("compact-every", 4).max(1);
+    let seed: u64 = args.parse_or("seed", 0x5EED);
+    let cons = Constraints {
+        min_density: args.parse_or("min-density", 0.0),
+        min_support: args.parse_or("min-support", 0),
+    };
+    for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let ctx = datasets::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}; see `tricluster info`"))?;
+        let pool = serve_builder(args, ctx.arity(), 4)?.build_pool()?;
+        let (tenants, nodes, placement) =
+            (pool.tenants.len(), pool.nodes, pool.placement.clone());
+        let mut sim = MultiTenantSim::new(pool)?;
+        let per_tenant = (ctx.len() / tenants).max(1);
+        let arity = ctx.arity();
+        let streams: Vec<Vec<NTuple>> = (0..tenants)
+            .map(|t| {
+                let tseed = seed ^ (t as u64).wrapping_mul(0x9E37_79B9);
+                match workload {
+                    "skew" => SkewedStream {
+                        tuples: per_tenant,
+                        universe: 64,
+                        exponent: 1.5,
+                        arity,
+                    }
+                    .generate(tseed),
+                    "drift" => DriftingStream {
+                        tuples: per_tenant,
+                        universe: 32,
+                        segments: 4,
+                        shift: 16,
+                        arity,
+                    }
+                    .generate(tseed),
+                    "burst" => BurstMix {
+                        waves: 8,
+                        steady_batch: per_tenant / 12 + 1,
+                        burst_batch: per_tenant / 3 + 1,
+                        burst_every: 3,
+                        queries_per_wave: 0,
+                        universe: 64,
+                        arity,
+                    }
+                    .generate(tseed)
+                    .into_iter()
+                    .filter_map(|op| match op {
+                        Op::Ingest(tuples) => Some(tuples),
+                        Op::Query(_) => None,
+                    })
+                    .flatten()
+                    .collect(),
+                    // "uniform": round-robin deal of the real dataset
+                    _ => ctx
+                        .tuples()
+                        .iter()
+                        .skip(t)
+                        .step_by(tenants)
+                        .copied()
+                        .collect(),
+                }
+            })
+            .collect();
+        let churn: f64 = args.parse_or("churn", 0.0);
+        let waves = streams
+            .iter()
+            .map(|s| s.len().div_ceil(batch))
+            .max()
+            .unwrap_or(0);
+        let kills = if churn > 0.0 && nodes > 1 {
+            let events = ((waves as f64 * churn).ceil() as usize).max(1);
+            correlated_kills(sim.assignment(0), nodes, 2.min(nodes), events, waves, seed)
+        } else {
+            Vec::new()
+        };
+        let t = Timer::start();
+        sim.run(&streams, batch, compact_every, &kills);
+        let wall_ms = t.elapsed_ms();
+        let stats = sim.stats().clone();
+        println!(
+            "== serve-sim {name}: {tenants} tenants on {nodes} nodes \
+             [{placement}], workload {workload} =="
+        );
+        println!(
+            "  simulated makespan: {} ms over {} waves (wall {} ms)  \
+             fairness spread: {:.3}",
+            fmt_ms(sim.sim_makespan_ms()),
+            stats.waves,
+            fmt_ms(wall_ms),
+            sim.fairness_spread()
+        );
+        println!(
+            "  pool: {:.2} MiB shuffled  {} kills  {} tuples replayed  \
+             mined/node {:?}",
+            stats.shuffle_mib, stats.kills, stats.replayed_tuples,
+            stats.per_node_records
+        );
+        for t in 0..tenants {
+            let clusters = sim.clusters(t).len();
+            println!(
+                "  tenant {t}: {} accepted / {} throttled, {} compactions, \
+                 {clusters} clusters at epoch {}",
+                stats.accepted[t],
+                stats.throttled[t],
+                stats.compactions[t],
+                sim.snapshot(t).epoch()
+            );
+            if args.get("quota").is_none() {
+                // per-tenant equivalence: the shared pool must serve each
+                // tenant exactly what a solo miner would produce
+                let mut solo = tricluster::core::context::PolyContext::new(arity);
+                for tuple in &streams[t] {
+                    solo.add_ids(tuple.as_slice());
+                }
+                let reference = mine_online(&solo, &cons);
+                anyhow::ensure!(
+                    clusters == reference.len(),
+                    "tenant {t}: pool index diverged from solo mine_online"
+                );
+            }
+        }
+        if args.get("quota").is_none() {
+            println!("  per-tenant equivalence vs solo mine_online: OK");
         }
         println!();
     }

@@ -35,7 +35,13 @@
 //! * [`cluster`] — the service placed on a simulated N-node cluster:
 //!   shard placement via [`crate::exec::Placement`], shuffle-cost
 //!   accounting, node churn with snapshot replay, and the replica
-//!   query plane modelled on the same nodes.
+//!   query plane modelled on the same nodes;
+//! * [`tenant`] — many independent contexts (per-tenant θ, arity, and
+//!   ingest quotas) multiplexed onto ONE shared node pool, placed by
+//!   the tenant-salted arm of the same placement trait, with pool
+//!   fairness measured (`serve.tenant.fairness_spread`) and
+//!   per-tenant isolation property-tested against adversarial
+//!   [`crate::workload`] scenarios.
 //!
 //! Correctness invariant (unit- and property-tested): for any shard
 //! count, batch chunking, and compaction schedule, the compacted index
@@ -53,6 +59,7 @@ pub mod replica;
 pub mod router;
 pub mod shard;
 pub mod snapshot;
+pub mod tenant;
 
 pub use backend::{LocalBackend, QueryBackend, QueryKey};
 pub use cluster::{ServeSim, ServeSimConfig, ServeSimStats};
@@ -62,6 +69,7 @@ pub use query::QueryEngine;
 pub use replica::{ReplicaSet, SharedReplicas, SimRemoteBackend};
 pub use router::{Router, RouterStats};
 pub use shard::{Shard, ShardDelta};
+pub use tenant::{MultiTenantSim, TenantPoolConfig, TenantSpec, TenantStats};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -127,31 +135,97 @@ impl ServeSimConfig {
     }
 }
 
+/// A configuration the builder refuses to finish: the knob combination
+/// would only fail later — as a panic, a hang, or a silently-empty
+/// service — so it is rejected up front with a typed error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeConfigError {
+    /// `shards == 0`: the router would have nowhere to put any tuple.
+    ZeroShards,
+    /// More read replicas than simulated nodes: at least two replicas
+    /// would share a node, which defeats the placement model the
+    /// replica plane measures.
+    ReplicasExceedNodes {
+        /// Requested replica count.
+        replicas: usize,
+        /// Simulated nodes available to host them.
+        nodes: usize,
+    },
+    /// `retained == 0`: a replica could never catch up — the delta
+    /// stream would be garbage-collected before it is read, so every
+    /// read would miss the staleness bound.
+    ZeroRetained,
+    /// `quota == 0`: the tenant could never accept a single tuple;
+    /// an always-empty tenant is a misconfiguration, not a workload.
+    /// (Adversarial tests that WANT a starved tenant construct
+    /// [`tenant::TenantSpec`] directly.)
+    ZeroQuota,
+    /// A tenant pool with no tenants.
+    NoTenants,
+}
+
+impl std::fmt::Display for ServeConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ZeroShards => write!(f, "serve config: shards must be >= 1"),
+            Self::ReplicasExceedNodes { replicas, nodes } => write!(
+                f,
+                "serve config: {replicas} replicas cannot be placed on \
+                 {nodes} nodes (replicas must be <= nodes)"
+            ),
+            Self::ZeroRetained => write!(
+                f,
+                "serve config: retained window must be >= 1 epoch \
+                 (0 would starve every replica)"
+            ),
+            Self::ZeroQuota => write!(
+                f,
+                "serve config: tenant quota must be >= 1 tuple per wave"
+            ),
+            Self::NoTenants => {
+                write!(f, "serve config: a tenant pool needs >= 1 tenant")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeConfigError {}
+
 /// One builder for the whole serve configuration surface — the
-/// in-process [`ServeConfig`] and the on-cluster [`ServeSimConfig`]
-/// share it, so the CLI parses flags into exactly one place:
+/// in-process [`ServeConfig`], the on-cluster [`ServeSimConfig`], and
+/// the multi-tenant [`TenantPoolConfig`] share it, so the CLI parses
+/// flags into exactly one place:
 ///
 /// ```
 /// use tricluster::serve::ServeConfig;
 ///
-/// let cfg = ServeConfig::builder().arity(3).shards(8).build();
+/// let cfg = ServeConfig::builder().arity(3).shards(8).build().unwrap();
 /// let sim = ServeConfig::builder()
 ///     .arity(3)
 ///     .shards(8)
 ///     .nodes(4)
 ///     .replicas(2)
-///     .build_sim();
+///     .build_sim()
+///     .unwrap();
 /// assert_eq!(cfg.shards, sim.shards);
 /// assert_eq!(sim.replicas, 2);
+/// // impossible combinations are typed errors, not downstream panics
+/// assert!(ServeConfig::builder().shards(0).build().is_err());
+/// assert!(ServeConfig::builder().nodes(2).replicas(3).build_sim().is_err());
 /// ```
 ///
 /// Unset knobs keep the defaults of [`ServeConfig::new`] /
 /// [`ServeSimConfig::new`]; sim-only knobs (nodes, placement, churn,
-/// replicas, …) are ignored by [`Self::build`].
+/// replicas, …) are ignored by [`Self::build`]. Every finisher runs the
+/// same validation ([`ServeConfigError`]) — a nonsensical knob is
+/// rejected even by a finisher that would ignore it, because it always
+/// indicates a caller bug.
 #[derive(Debug, Clone)]
 pub struct ServeConfigBuilder {
     arity: usize,
     shards: usize,
+    tenants: usize,
+    quota: Option<usize>,
     max_pending: Option<usize>,
     workers: Option<usize>,
     constraints: Constraints,
@@ -178,6 +252,8 @@ impl Default for ServeConfigBuilder {
         Self {
             arity: 3,
             shards: 4,
+            tenants: 1,
+            quota: None,
             max_pending: None,
             workers: None,
             constraints: Constraints::none(),
@@ -208,9 +284,25 @@ impl ServeConfigBuilder {
         self
     }
 
-    /// Shard count.
+    /// Shard count (per tenant, for pool configs). `0` is rejected at
+    /// build time ([`ServeConfigError::ZeroShards`]), not clamped.
     pub fn shards(mut self, shards: usize) -> Self {
-        self.shards = shards.max(1);
+        self.shards = shards;
+        self
+    }
+
+    /// Tenant count for [`Self::build_pool`] (ignored by the other
+    /// finishers). `0` is rejected at build time.
+    pub fn tenants(mut self, tenants: usize) -> Self {
+        self.tenants = tenants;
+        self
+    }
+
+    /// Per-tenant ingest quota, tuples accepted per wave (pool only;
+    /// unset = unlimited). `0` is rejected at build time
+    /// ([`ServeConfigError::ZeroQuota`]).
+    pub fn quota(mut self, quota: usize) -> Self {
+        self.quota = Some(quota);
         self
     }
 
@@ -329,9 +421,34 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Reject knob combinations that could only fail later (run by
+    /// every finisher).
+    fn validate(&self) -> Result<(), ServeConfigError> {
+        if self.shards == 0 {
+            return Err(ServeConfigError::ZeroShards);
+        }
+        if self.replicas > self.nodes {
+            return Err(ServeConfigError::ReplicasExceedNodes {
+                replicas: self.replicas,
+                nodes: self.nodes,
+            });
+        }
+        if self.retained == Some(0) {
+            return Err(ServeConfigError::ZeroRetained);
+        }
+        if self.quota == Some(0) {
+            return Err(ServeConfigError::ZeroQuota);
+        }
+        if self.tenants == 0 {
+            return Err(ServeConfigError::NoTenants);
+        }
+        Ok(())
+    }
+
     /// Finish as an in-process [`ServeConfig`] (sim-only knobs are
     /// ignored).
-    pub fn build(self) -> ServeConfig {
+    pub fn build(self) -> Result<ServeConfig, ServeConfigError> {
+        self.validate()?;
         let mut cfg = ServeConfig::new(self.arity, self.shards);
         if let Some(v) = self.max_pending {
             cfg.max_pending = v.max(1);
@@ -340,11 +457,50 @@ impl ServeConfigBuilder {
             cfg.workers = v.max(1);
         }
         cfg.constraints = self.constraints;
-        cfg
+        Ok(cfg)
+    }
+
+    /// Finish as a multi-tenant [`TenantPoolConfig`]: `tenants`
+    /// identically-shaped tenants (this builder's arity, constraints,
+    /// shards, quota) on a pool of `nodes` nodes with this builder's
+    /// cost model. Heterogeneous mixes: push [`TenantSpec`]s onto
+    /// `.tenants` afterwards, or build [`TenantPoolConfig`] directly.
+    pub fn build_pool(self) -> Result<TenantPoolConfig, ServeConfigError> {
+        self.validate()?;
+        let mut pool = TenantPoolConfig::new(self.nodes);
+        if let Some(v) = self.slots_per_node {
+            pool.slots_per_node = v.max(1);
+        }
+        if let Some(v) = &self.placement {
+            pool.placement = v.clone();
+        }
+        if let Some(v) = self.mine_ms_per_record {
+            pool.mine_ms_per_record = v;
+        }
+        if let Some(v) = self.route_ms_per_record {
+            pool.route_ms_per_record = v;
+        }
+        if let Some(v) = self.shuffle {
+            pool.shuffle = v;
+        }
+        if let Some(v) = self.seed {
+            pool.seed = v;
+        }
+        for t in 0..self.tenants {
+            let mut spec = TenantSpec::new(&format!("tenant-{t}"), self.arity);
+            spec.constraints = self.constraints.clone();
+            spec.shards = self.shards;
+            if let Some(q) = self.quota {
+                spec.quota = q;
+            }
+            pool.tenants.push(spec);
+        }
+        Ok(pool)
     }
 
     /// Finish as an on-cluster [`ServeSimConfig`].
-    pub fn build_sim(self) -> ServeSimConfig {
+    pub fn build_sim(self) -> Result<ServeSimConfig, ServeConfigError> {
+        self.validate()?;
         let mut cfg = ServeSimConfig::new(self.arity, self.shards, self.nodes);
         if let Some(v) = self.slots_per_node {
             cfg.slots_per_node = v.max(1);
@@ -390,7 +546,7 @@ impl ServeConfigBuilder {
             cfg.seed = v;
         }
         cfg.constraints = self.constraints;
-        cfg
+        Ok(cfg)
     }
 }
 
@@ -576,7 +732,12 @@ mod tests {
         let cons = Constraints { min_density: 0.5, min_support: 2 };
         let reference = sorted(mine_online(&ctx, &cons));
         let mut svc = TriclusterService::new(
-            ServeConfig::builder().arity(3).shards(3).constraints(cons).build(),
+            ServeConfig::builder()
+                .arity(3)
+                .shards(3)
+                .constraints(cons)
+                .build()
+                .unwrap(),
         );
         svc.ingest(ctx.tuples());
         svc.compact();
@@ -647,7 +808,7 @@ mod tests {
     #[test]
     fn builder_and_positional_config_agree() {
         let a = ServeConfig::new(3, 8);
-        let b = ServeConfig::builder().arity(3).shards(8).build();
+        let b = ServeConfig::builder().arity(3).shards(8).build().unwrap();
         assert_eq!(a.arity, b.arity);
         assert_eq!(a.shards, b.shards);
         assert_eq!(a.max_pending, b.max_pending);
@@ -660,7 +821,8 @@ mod tests {
             .retained(1)
             .placement("rr")
             .batch(512)
-            .build_sim();
+            .build_sim()
+            .unwrap();
         let base = ServeSimConfig::new(3, 8, 4);
         assert_eq!(sim.slots_per_node, base.slots_per_node);
         assert_eq!(sim.placement, "rr");
@@ -668,5 +830,70 @@ mod tests {
         assert_eq!(sim.replicas, 2);
         assert_eq!(sim.retained, 1);
         assert_eq!(sim.seed, base.seed);
+    }
+
+    #[test]
+    fn builder_rejects_zero_shards() {
+        assert_eq!(
+            ServeConfig::builder().shards(0).build().unwrap_err(),
+            ServeConfigError::ZeroShards
+        );
+        assert_eq!(
+            ServeConfig::builder().shards(0).build_sim().unwrap_err(),
+            ServeConfigError::ZeroShards
+        );
+    }
+
+    #[test]
+    fn builder_rejects_replicas_exceeding_nodes() {
+        assert_eq!(
+            ServeConfig::builder().nodes(2).replicas(3).build_sim().unwrap_err(),
+            ServeConfigError::ReplicasExceedNodes { replicas: 3, nodes: 2 }
+        );
+        // replicas == nodes is the legal extreme
+        assert!(
+            ServeConfig::builder().nodes(2).replicas(2).build_sim().is_ok()
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_retained() {
+        assert_eq!(
+            ServeConfig::builder().retained(0).build_sim().unwrap_err(),
+            ServeConfigError::ZeroRetained
+        );
+        assert!(ServeConfig::builder().retained(1).build_sim().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_zero_quota_and_zero_tenants() {
+        assert_eq!(
+            ServeConfig::builder().quota(0).build_pool().unwrap_err(),
+            ServeConfigError::ZeroQuota
+        );
+        assert_eq!(
+            ServeConfig::builder().tenants(0).build_pool().unwrap_err(),
+            ServeConfigError::NoTenants
+        );
+        let pool = ServeConfig::builder()
+            .tenants(3)
+            .shards(2)
+            .nodes(4)
+            .quota(500)
+            .build_pool()
+            .unwrap();
+        assert_eq!(pool.tenants.len(), 3);
+        assert_eq!(pool.nodes, 4);
+        assert!(pool.tenants.iter().all(|t| t.shards == 2 && t.quota == 500));
+    }
+
+    #[test]
+    fn config_errors_display_and_convert() {
+        let err = ServeConfigError::ReplicasExceedNodes { replicas: 9, nodes: 4 };
+        let text = err.to_string();
+        assert!(text.contains('9') && text.contains('4'), "{text}");
+        // typed errors flow through anyhow call sites via `?`
+        let any: anyhow::Error = ServeConfigError::ZeroShards.into();
+        assert!(any.to_string().contains("shards"));
     }
 }

@@ -1,0 +1,772 @@
+//! Multi-tenant serving: many independent triclustering contexts on one
+//! shared simulated node pool.
+//!
+//! One context per process is a demo; a service hosts many. A
+//! [`MultiTenantSim`] runs N tenants — each with its OWN arity,
+//! constraints (θ), shard set, compactor, and epoch-snapshot cell — over
+//! ONE pool of simulated nodes, so neighbours contend for slots, network,
+//! and placement but NEVER for state:
+//!
+//! * **Isolation is structural.** A tenant's shards and compactor are
+//!   private; nothing a neighbour ingests can reach them. The invariant
+//!   this buys (property-tested in `rust/tests/workload_invariants.rs`):
+//!   for ANY tenant mix, workload, and churn schedule, each tenant's
+//!   compacted index equals that tenant's solo
+//!   [`crate::oac::mine_online`], and its results are bit-identical with
+//!   or without neighbours — load can slow a tenant, never perturb it.
+//! * **Quotas bound ingress.** Each tenant accepts at most
+//!   [`TenantSpec::quota`] tuples per ingest wave; the overflow is
+//!   counted as throttled, not silently dropped mid-stream (the
+//!   acceptance rule is a deterministic prefix, so tests can reconstruct
+//!   exactly which tuples a throttled tenant indexed).
+//! * **Placement balances tenants.** Shards are placed by
+//!   [`Placement::place_tenant`] — the tenant-salted arm of the same
+//!   pluggable trait that places M/R tasks, serve shards, and replicas —
+//!   so round-robin stripes tenants across the pool while locality still
+//!   chases each tenant's measured data affinity.
+//! * **Fairness is measured, not assumed.** Every scheduled cost is
+//!   charged to its tenant; [`MultiTenantSim::fairness_spread`] is the
+//!   max/min ratio of per-accepted-tuple service cost across tenants
+//!   (1.0 = perfectly fair pool). It is exported as the
+//!   `serve.tenant.fairness_spread` gauge, benched in
+//!   `benches/serve_cluster.rs`, and ceiling-gated by
+//!   `ci/check_bench.rs` (`serve_cluster.max_fairness_spread`).
+//! * **Failures are correlated.** [`Self::kill_nodes`] takes down a node
+//!   SET in one event — feed it [`crate::workload::correlated_kills`]
+//!   for placement-correlated sets — and every tenant shard on a victim
+//!   is rebuilt for real from its compacted snapshot plus the retained
+//!   window, exactly like [`super::cluster::ServeSim`]'s recovery.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::NTuple;
+use crate::exec::cluster_sim::ShuffleModel;
+use crate::exec::placement::{by_name, NodeView, Placement, TaskMeta};
+use crate::oac::post::Constraints;
+use crate::util::hash::fxhash;
+use crate::util::rng::Rng;
+use crate::workload::KillEvent;
+
+use super::epoch::{EpochSnapshot, SnapshotCell};
+use super::merge::Compactor;
+use super::shard::Shard;
+
+/// One tenant of a [`MultiTenantSim`]: its own context shape, θ, shard
+/// count, and ingest quota.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Display name (CLI/bench reports).
+    pub name: String,
+    /// Relation arity of this tenant's context.
+    pub arity: usize,
+    /// Constraints (θ = `min_density`, plus `min_support`) applied when
+    /// materialising THIS tenant's index.
+    pub constraints: Constraints,
+    /// Shards (incremental miners) for this tenant.
+    pub shards: usize,
+    /// Ingest quota: tuples accepted per wave — the deterministic PREFIX
+    /// of each wave; the rest is counted throttled. `usize::MAX` =
+    /// unlimited. The config builder rejects an explicit 0
+    /// ([`super::ServeConfigError::ZeroQuota`]); constructing a
+    /// zero-quota spec directly is allowed for adversarial tests (the
+    /// tenant indexes nothing and its neighbours must not notice).
+    pub quota: usize,
+}
+
+impl TenantSpec {
+    /// A tenant with serve defaults: 2 shards, no constraints, unlimited
+    /// quota.
+    pub fn new(name: &str, arity: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            arity,
+            constraints: Constraints::none(),
+            shards: 2,
+            quota: usize::MAX,
+        }
+    }
+}
+
+/// The shared node pool a tenant mix runs on.
+#[derive(Debug, Clone)]
+pub struct TenantPoolConfig {
+    /// Simulated nodes shared by every tenant.
+    pub nodes: usize,
+    /// Worker slots per node.
+    pub slots_per_node: usize,
+    /// Placement policy name (`rr` | `locality` | `least`) — resolved to
+    /// the shared [`Placement`] trait, applied through
+    /// [`Placement::place_tenant`].
+    pub placement: String,
+    /// Simulated mining cost per tuple, ms (also the replay cost after a
+    /// kill).
+    pub mine_ms_per_record: f64,
+    /// Simulated route-split cost per tuple, ms.
+    pub route_ms_per_record: f64,
+    /// Network cost of moving route bins between non-colocated nodes.
+    pub shuffle: ShuffleModel,
+    /// Downtime after a kill, ms.
+    pub restart_ms: f64,
+    /// Seed for source-arrival draws.
+    pub seed: u64,
+    /// The tenant mix.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantPoolConfig {
+    /// Pool defaults matching [`super::cluster::ServeSimConfig::new`]'s
+    /// cost model, with no tenants yet (push specs via [`Self::tenant`]).
+    pub fn new(nodes: usize) -> Self {
+        Self {
+            nodes: nodes.max(1),
+            slots_per_node: 2,
+            placement: "least".into(),
+            mine_ms_per_record: 0.002,
+            route_ms_per_record: 0.0005,
+            shuffle: ShuffleModel { bytes_per_record: 64.0, ms_per_mib: 20.0 },
+            restart_ms: 40.0,
+            seed: 0x5EED,
+            tenants: Vec::new(),
+        }
+    }
+
+    /// Add one tenant to the mix.
+    pub fn tenant(mut self, spec: TenantSpec) -> Self {
+        self.tenants.push(spec);
+        self
+    }
+}
+
+/// Counters of one [`MultiTenantSim`] run (per-tenant vectors index by
+/// tenant id).
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Ingest waves executed (pool-wide).
+    pub waves: usize,
+    /// Tuples accepted per tenant.
+    pub accepted: Vec<usize>,
+    /// Tuples refused by the quota per tenant.
+    pub throttled: Vec<usize>,
+    /// Compactions per tenant.
+    pub compactions: Vec<usize>,
+    /// Simulated ms charged to each tenant (route + mine + shuffle +
+    /// recovery).
+    pub service_ms: Vec<f64>,
+    /// MiB moved for route bins mined on a different node (pool-wide).
+    pub shuffle_mib: f64,
+    /// Nodes killed (one per victim, so a correlated set of 3 counts 3).
+    pub kills: usize,
+    /// Tuples replayed rebuilding shards after kills.
+    pub replayed_tuples: usize,
+    /// Tuples mined per node — the tenant-balance picture placement
+    /// produced.
+    pub per_node_records: Vec<usize>,
+}
+
+/// Per-tenant serving state: private shards, compactor, and snapshot
+/// cell on the shared pool.
+#[derive(Debug)]
+struct TenantState {
+    spec: TenantSpec,
+    shards: Vec<Shard>,
+    compactor: Compactor,
+    /// shard → node.
+    assignment: Vec<usize>,
+    /// Per-shard finish time of the latest mining/recovery task.
+    mine_done: Vec<f64>,
+    /// shard × node input provenance (MiB) — feeds locality affinity.
+    input_bytes: Vec<Vec<f64>>,
+    /// Per-shard generated-tuple watermark at the last compaction.
+    compacted_len: Vec<usize>,
+    /// Per-shard epoch at the last compaction.
+    epoch_at_compact: Vec<u64>,
+    /// This tenant's publication cell.
+    cell: Arc<SnapshotCell>,
+    /// Compactions so far — the epoch stamped on the next publication.
+    epoch: u64,
+}
+
+/// Many independent tenants on one shared simulated node pool: real
+/// per-tenant mining and compaction, simulated contention.
+///
+/// # Example
+///
+/// ```
+/// use tricluster::core::tuple::NTuple;
+/// use tricluster::serve::tenant::{MultiTenantSim, TenantPoolConfig, TenantSpec};
+///
+/// let cfg = TenantPoolConfig::new(2)
+///     .tenant(TenantSpec::new("a", 3))
+///     .tenant(TenantSpec::new("b", 3));
+/// let mut sim = MultiTenantSim::new(cfg).unwrap();
+/// let stream: Vec<NTuple> =
+///     (0..200u32).map(|i| NTuple::triple(i % 5, i % 4, i % 3)).collect();
+/// sim.ingest(0, &stream);
+/// sim.ingest(1, &stream);
+/// sim.compact_all();
+/// assert_eq!(sim.clusters(0).len(), sim.clusters(1).len());
+/// assert!(sim.fairness_spread() >= 1.0);
+/// ```
+pub struct MultiTenantSim {
+    cfg: TenantPoolConfig,
+    placement: Box<dyn Placement>,
+    tenants: Vec<TenantState>,
+    /// Simulated time each node×slot frees up (shared pool).
+    lanes: Vec<Vec<f64>>,
+    /// Cumulative simulated work per node.
+    busy: Vec<f64>,
+    /// End of the latest scheduled work (pool makespan).
+    horizon: f64,
+    /// Source-arrival draws (one per wave).
+    rng: Rng,
+    stats: TenantStats,
+}
+
+impl MultiTenantSim {
+    /// Build the pool; fails on an unknown placement name or an empty
+    /// tenant mix.
+    pub fn new(cfg: TenantPoolConfig) -> Result<Self> {
+        let placement = by_name(&cfg.placement)?;
+        if cfg.tenants.is_empty() {
+            anyhow::bail!("tenant pool needs at least one tenant");
+        }
+        let nodes = cfg.nodes.max(1);
+        let mut sim = Self {
+            tenants: Vec::with_capacity(cfg.tenants.len()),
+            lanes: vec![vec![0.0; cfg.slots_per_node.max(1)]; nodes],
+            busy: vec![0.0; nodes],
+            horizon: 0.0,
+            rng: Rng::new(cfg.seed),
+            stats: TenantStats {
+                accepted: vec![0; cfg.tenants.len()],
+                throttled: vec![0; cfg.tenants.len()],
+                compactions: vec![0; cfg.tenants.len()],
+                service_ms: vec![0.0; cfg.tenants.len()],
+                per_node_records: vec![0; nodes],
+                ..TenantStats::default()
+            },
+            placement,
+            cfg,
+        };
+        // initial placement: tenant-salted, sequential with virtual load
+        // updates so greedy policies spread (same discipline as ServeSim)
+        let mut virt = vec![0.0f64; nodes];
+        for (t, spec) in sim.cfg.tenants.clone().iter().enumerate() {
+            let n_shards = spec.shards.max(1);
+            let mut assignment = vec![0usize; n_shards];
+            for (s, slot) in assignment.iter_mut().enumerate() {
+                let views: Vec<NodeView> = virt
+                    .iter()
+                    .enumerate()
+                    .map(|(id, &b)| NodeView { id, free_at_ms: b, busy_ms: b })
+                    .collect();
+                let meta = TaskMeta::new(s, s as u64, 1.0);
+                let node =
+                    sim.placement.place_tenant(t, &meta, &views).min(nodes - 1);
+                *slot = node;
+                virt[node] += 1.0;
+            }
+            sim.tenants.push(TenantState {
+                shards: (0..n_shards).map(|s| Shard::new(s, spec.arity)).collect(),
+                compactor: Compactor::new(n_shards),
+                assignment,
+                mine_done: vec![0.0; n_shards],
+                input_bytes: vec![vec![0.0; nodes]; n_shards],
+                compacted_len: vec![0; n_shards],
+                epoch_at_compact: vec![0; n_shards],
+                cell: Arc::new(SnapshotCell::new()),
+                epoch: 0,
+                spec: spec.clone(),
+            });
+        }
+        Ok(sim)
+    }
+
+    /// Tenant count.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The configuration this pool runs under.
+    pub fn cfg(&self) -> &TenantPoolConfig {
+        &self.cfg
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> &TenantStats {
+        &self.stats
+    }
+
+    /// Tenant `t`'s current shard → node assignment.
+    pub fn assignment(&self, t: usize) -> &[usize] {
+        &self.tenants[t].assignment
+    }
+
+    /// Simulated pool makespan so far.
+    pub fn sim_makespan_ms(&self) -> f64 {
+        self.horizon
+    }
+
+    /// One ingest wave for tenant `t`: the quota prefix is accepted,
+    /// routed to the tenant's shards, and mined on their assigned nodes;
+    /// the overflow is throttled. Returns the accepted count.
+    pub fn ingest(&mut self, t: usize, wave: &[NTuple]) -> usize {
+        let mut span = crate::span!("serve.tenant.ingest");
+        span.records_in(wave.len() as u64);
+        self.stats.waves += 1;
+        let quota = self.tenants[t].spec.quota;
+        let take = wave.len().min(quota);
+        self.stats.accepted[t] += take;
+        self.stats.throttled[t] += wave.len() - take;
+        crate::obs::counter("serve.tenant.ingested", take as u64);
+        if wave.len() > take {
+            crate::obs::counter("serve.tenant.throttled", (wave.len() - take) as u64);
+        }
+        if take == 0 {
+            return 0;
+        }
+        let accepted = &wave[..take];
+        let nodes = self.lanes.len();
+        let source = self.rng.usize_below(nodes);
+
+        // route-split on the arrival node, charged to this tenant
+        let route_cost = accepted.len() as f64 * self.cfg.route_ms_per_record;
+        let route_done = self.schedule(source, 0.0, route_cost);
+        self.stats.service_ms[t] += route_cost;
+
+        // one mining task per touched shard on its assigned node
+        let n_shards = self.tenants[t].shards.len();
+        let mut bins: Vec<Vec<NTuple>> = vec![Vec::new(); n_shards];
+        for tuple in accepted {
+            bins[(fxhash(tuple) % n_shards as u64) as usize].push(*tuple);
+        }
+        for (s, bin) in bins.into_iter().enumerate() {
+            if bin.is_empty() {
+                continue;
+            }
+            let tenant = &mut self.tenants[t];
+            let node = tenant.assignment[s];
+            let mib = self.cfg.shuffle.mib(bin.len());
+            tenant.input_bytes[s][source] += mib;
+            let moved_mib = if source != node { mib } else { 0.0 };
+            self.stats.shuffle_mib += moved_mib;
+            self.stats.per_node_records[node] += bin.len();
+            // REAL mining — the correctness path
+            tenant.shards[s].ingest(&bin);
+            let cost = bin.len() as f64 * self.cfg.mine_ms_per_record
+                + moved_mib * self.cfg.shuffle.ms_per_mib;
+            self.stats.service_ms[t] += cost;
+            let at = route_done.max(tenant.mine_done[s]);
+            let finish = self.schedule(node, at, cost);
+            self.tenants[t].mine_done[s] = finish;
+        }
+        span.records_out(take as u64);
+        take
+    }
+
+    /// Merge tenant `t`'s pending shard deltas, advance its snapshot
+    /// watermarks, and publish its next epoch snapshot.
+    pub fn compact(&mut self, t: usize) {
+        let _span = crate::span!("serve.tenant.compact");
+        let tenant = &mut self.tenants[t];
+        tenant.compactor.pull(&mut tenant.shards);
+        for s in 0..tenant.shards.len() {
+            tenant.compacted_len[s] = tenant.shards[s].len();
+            tenant.epoch_at_compact[s] = tenant.shards[s].epoch();
+        }
+        tenant.epoch += 1;
+        let snap = tenant.compactor.snapshot(&tenant.spec.constraints, tenant.epoch);
+        tenant.cell.publish(snap);
+        self.stats.compactions[t] += 1;
+        crate::obs::counter("serve.tenant.compactions", 1);
+        if crate::obs::enabled() {
+            crate::obs::gauge("serve.tenant.fairness_spread", self.fairness_spread());
+            crate::obs::gauge("serve.tenant.tenants", self.tenants.len() as f64);
+        }
+    }
+
+    /// [`Self::compact`] for every tenant, in tenant order.
+    pub fn compact_all(&mut self) {
+        for t in 0..self.tenants.len() {
+            self.compact(t);
+        }
+    }
+
+    /// Drive whole per-tenant streams through the shared pool: waves of
+    /// `batch` tuples are dealt round-robin across tenants (tenant 0's
+    /// wave w, tenant 1's wave w, …), [`KillEvent`]s land at the start
+    /// of their wave, every tenant compacts every `compact_every` of its
+    /// own waves and once more at end of stream.
+    pub fn run(
+        &mut self,
+        streams: &[Vec<NTuple>],
+        batch: usize,
+        compact_every: usize,
+        kills: &[KillEvent],
+    ) {
+        assert_eq!(streams.len(), self.tenants.len(), "one stream per tenant");
+        let batch = batch.max(1);
+        let every = compact_every.max(1);
+        let waves = streams
+            .iter()
+            .map(|s| s.len().div_ceil(batch))
+            .max()
+            .unwrap_or(0);
+        let mut kill_iter = kills.iter().peekable();
+        for w in 0..waves {
+            while let Some(k) = kill_iter.peek() {
+                if k.wave > w {
+                    break;
+                }
+                let victims = kill_iter.next().expect("peeked").victims.clone();
+                self.kill_nodes(&victims, self.horizon);
+            }
+            for t in 0..streams.len() {
+                let lo = w * batch;
+                if lo >= streams[t].len() {
+                    continue;
+                }
+                let hi = (lo + batch).min(streams[t].len());
+                self.ingest(t, &streams[t][lo..hi]);
+                if (w + 1) % every == 0 {
+                    self.compact(t);
+                }
+            }
+        }
+        for t in 0..streams.len() {
+            self.compact(t);
+        }
+    }
+
+    /// Kill a correlated node SET at simulated instant `at`: every
+    /// victim's slots refuse work for the restart window, and every
+    /// tenant shard on a victim is re-placed and REALLY rebuilt from its
+    /// compacted snapshot plus the retained in-flight window (the same
+    /// recovery [`super::cluster::ServeSim`] performs, here across every
+    /// tenant at once — a correlated failure hits the whole pool).
+    pub fn kill_nodes(&mut self, victims: &[usize], at: f64) {
+        let nodes = self.lanes.len();
+        let restart = self.cfg.restart_ms.max(0.0);
+        let mut hit = Vec::new();
+        for &v in victims {
+            if v < nodes && !hit.contains(&v) {
+                hit.push(v);
+                for lane in &mut self.lanes[v] {
+                    *lane = lane.max(at) + restart;
+                }
+            }
+        }
+        if hit.is_empty() {
+            return;
+        }
+        self.stats.kills += hit.len();
+        crate::obs::counter("serve.tenant.kills", hit.len() as u64);
+        for t in 0..self.tenants.len() {
+            for s in 0..self.tenants[t].shards.len() {
+                if !hit.contains(&self.tenants[t].assignment[s]) {
+                    continue;
+                }
+                // REAL replay: compacted prefix (delta discarded — the
+                // global index already holds it) then the retained window
+                let tenant = &mut self.tenants[t];
+                let history = tenant.shards[s].ingested_tuples();
+                let (compacted, window) = history.split_at(tenant.compacted_len[s]);
+                let mut fresh = Shard::new(s, tenant.spec.arity);
+                if !compacted.is_empty() {
+                    fresh.ingest(compacted);
+                    let _ = fresh.take_delta();
+                }
+                fresh.set_epoch(tenant.epoch_at_compact[s]);
+                if !window.is_empty() {
+                    fresh.ingest(window);
+                }
+                tenant.shards[s] = fresh;
+                self.stats.replayed_tuples += history.len();
+                // re-place with the tenant-salted policy (it may pick a
+                // victim — rr does — and then waits out the restart)
+                let views: Vec<NodeView> = self
+                    .lanes
+                    .iter()
+                    .enumerate()
+                    .map(|(id, ls)| NodeView {
+                        id,
+                        free_at_ms: ls.iter().cloned().fold(f64::INFINITY, f64::min),
+                        busy_ms: self.busy[id],
+                    })
+                    .collect();
+                let est = (history.len() as f64 * self.cfg.mine_ms_per_record).max(1.0);
+                let meta = TaskMeta {
+                    affinity: self.affinity_of(t, s),
+                    ..TaskMeta::new(s, s as u64, est)
+                };
+                let dest =
+                    self.placement.place_tenant(t, &meta, &views).min(nodes - 1);
+                self.tenants[t].assignment[s] = dest;
+                let mib = self.cfg.shuffle.mib(history.len());
+                let cost = mib * self.cfg.shuffle.ms_per_mib
+                    + history.len() as f64 * self.cfg.mine_ms_per_record;
+                self.stats.service_ms[t] += cost;
+                let finish = self.schedule(dest, at, cost);
+                self.tenants[t].mine_done[s] =
+                    self.tenants[t].mine_done[s].max(finish);
+            }
+        }
+    }
+
+    /// Tenant `t`'s compacted cluster index under ITS constraints (call
+    /// after [`Self::compact`] / [`Self::run`]).
+    pub fn clusters(&mut self, t: usize) -> &[Cluster] {
+        let tenant = &mut self.tenants[t];
+        tenant.compactor.clusters(&tenant.spec.constraints)
+    }
+
+    /// Tenant `t`'s current epoch snapshot (epoch 0 and empty before its
+    /// first compaction).
+    pub fn snapshot(&self, t: usize) -> Arc<EpochSnapshot> {
+        self.tenants[t].cell.load()
+    }
+
+    /// Tenant `t`'s publication cell (share with query threads).
+    pub fn snapshot_cell(&self, t: usize) -> Arc<SnapshotCell> {
+        Arc::clone(&self.tenants[t].cell)
+    }
+
+    /// Max/min ratio of per-accepted-tuple service cost across tenants
+    /// with any accepted traffic (1.0 = perfectly fair, or fewer than
+    /// two active tenants). Published as the
+    /// `serve.tenant.fairness_spread` gauge at every compaction and
+    /// ceiling-gated in CI.
+    pub fn fairness_spread(&self) -> f64 {
+        fairness_spread(&self.stats.service_ms, &self.stats.accepted)
+    }
+
+    /// Node holding the largest measured share of tenant `t` shard `s`'s
+    /// input so far (None before any input).
+    fn affinity_of(&self, t: usize, s: usize) -> Option<usize> {
+        let bytes = &self.tenants[t].input_bytes[s];
+        let (node, &max) = bytes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))?;
+        (max > 0.0).then_some(node)
+    }
+
+    /// Put `cost` ms of work on `node`'s earliest slot, no earlier than
+    /// `ready`; returns the finish time.
+    fn schedule(&mut self, node: usize, ready: f64, cost: f64) -> f64 {
+        let slot = (0..self.lanes[node].len())
+            .min_by(|&a, &b| {
+                self.lanes[node][a].partial_cmp(&self.lanes[node][b]).unwrap()
+            })
+            .expect("nodes have slots");
+        let start = self.lanes[node][slot].max(ready);
+        let finish = start + cost;
+        self.lanes[node][slot] = finish;
+        self.busy[node] += cost;
+        self.horizon = self.horizon.max(finish);
+        finish
+    }
+}
+
+impl std::fmt::Debug for MultiTenantSim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MultiTenantSim")
+            .field("cfg", &self.cfg)
+            .field("placement", &self.placement.name())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+/// Max/min per-accepted-tuple service cost across tenants with accepted
+/// traffic — the pool-fairness figure (1.0 = fair; large = one tenant
+/// pays far more per tuple than another). Tenants with no accepted
+/// tuples are excluded (a zero-quota tenant consumes no service);
+/// fewer than two active tenants is defined as 1.0.
+pub fn fairness_spread(service_ms: &[f64], accepted: &[usize]) -> f64 {
+    let shares: Vec<f64> = service_ms
+        .iter()
+        .zip(accepted)
+        .filter(|&(_, &n)| n > 0)
+        .map(|(&ms, &n)| ms / n as f64)
+        .collect();
+    if shares.len() < 2 {
+        return 1.0;
+    }
+    let max = shares.iter().cloned().fold(f64::MIN, f64::max);
+    let min = shares.iter().cloned().fold(f64::MAX, f64::min);
+    if min <= 0.0 {
+        return 1.0;
+    }
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oac::mine_online;
+
+    fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+        cs.sort_by(|a, b| a.components.cmp(&b.components));
+        cs
+    }
+
+    fn stream(n: usize, universe: u64, seed: u64) -> crate::core::context::PolyContext {
+        assert!(universe * universe * universe > n as u64);
+        let mut ctx = crate::core::context::PolyContext::new(3);
+        let mut rng = Rng::new(seed);
+        while ctx.len() < n {
+            ctx.add_ids(&[
+                rng.below(universe) as u32,
+                rng.below(universe) as u32,
+                rng.below(universe) as u32,
+            ]);
+        }
+        ctx
+    }
+
+    fn pool(tenants: usize) -> TenantPoolConfig {
+        let mut cfg = TenantPoolConfig::new(3);
+        for t in 0..tenants {
+            cfg = cfg.tenant(TenantSpec::new(&format!("t{t}"), 3));
+        }
+        cfg
+    }
+
+    #[test]
+    fn each_tenant_equals_its_solo_mine_online() {
+        let ctxs = [stream(300, 8, 1), stream(400, 9, 2), stream(200, 7, 3)];
+        let mut sim = MultiTenantSim::new(pool(3)).unwrap();
+        let streams: Vec<Vec<NTuple>> =
+            ctxs.iter().map(|c| c.tuples().to_vec()).collect();
+        sim.run(&streams, 64, 2, &[]);
+        for (t, ctx) in ctxs.iter().enumerate() {
+            let reference = sorted(mine_online(ctx, &Constraints::none()));
+            let got = sorted(sim.clusters(t).to_vec());
+            assert_eq!(got.len(), reference.len(), "tenant {t}");
+            for (a, b) in got.iter().zip(&reference) {
+                assert_eq!(a.components, b.components);
+                assert_eq!(a.support, b.support);
+            }
+            assert_eq!(sim.snapshot(t).len(), reference.len());
+        }
+        assert!(sim.fairness_spread() >= 1.0);
+        assert!(sim.sim_makespan_ms() > 0.0);
+    }
+
+    #[test]
+    fn quota_throttles_the_prefix_rule() {
+        let ctx = stream(200, 8, 4);
+        let mut cfg = pool(2);
+        cfg.tenants[0].quota = 10;
+        let mut sim = MultiTenantSim::new(cfg).unwrap();
+        let streams = vec![ctx.tuples().to_vec(), ctx.tuples().to_vec()];
+        sim.run(&streams, 50, 1, &[]);
+        // 4 waves × 10 accepted for tenant 0; tenant 1 takes everything
+        assert_eq!(sim.stats().accepted[0], 40);
+        assert_eq!(sim.stats().throttled[0], 160);
+        assert_eq!(sim.stats().accepted[1], 200);
+        assert_eq!(sim.stats().throttled[1], 0);
+        // the accepted prefix is deterministic: tenant 0's index equals
+        // mining exactly the first 10 tuples of each 50-tuple wave
+        let mut expect = crate::core::context::PolyContext::new(3);
+        for wave in ctx.tuples().chunks(50) {
+            for t in &wave[..10] {
+                expect.add_ids(t.as_slice());
+            }
+        }
+        let reference = sorted(mine_online(&expect, &Constraints::none()));
+        let got = sorted(sim.clusters(0).to_vec());
+        assert_eq!(got.len(), reference.len());
+    }
+
+    #[test]
+    fn zero_quota_tenant_indexes_nothing_and_disturbs_nobody() {
+        let ctx = stream(300, 8, 5);
+        let solo = {
+            let mut sim = MultiTenantSim::new(pool(1)).unwrap();
+            sim.run(&[ctx.tuples().to_vec()], 64, 2, &[]);
+            sorted(sim.clusters(0).to_vec())
+        };
+        let mut cfg = pool(2);
+        cfg.tenants[1].quota = 0;
+        let mut sim = MultiTenantSim::new(cfg).unwrap();
+        sim.run(&[ctx.tuples().to_vec(), ctx.tuples().to_vec()], 64, 2, &[]);
+        assert!(sim.clusters(1).is_empty(), "zero quota indexes nothing");
+        assert_eq!(sim.stats().accepted[1], 0);
+        assert_eq!(sorted(sim.clusters(0).to_vec()).len(), solo.len());
+        assert_eq!(sim.fairness_spread(), 1.0, "one active tenant");
+    }
+
+    #[test]
+    fn correlated_kills_rebuild_every_tenant_on_the_victims() {
+        let ctxs = [stream(400, 9, 6), stream(400, 9, 7)];
+        let streams: Vec<Vec<NTuple>> =
+            ctxs.iter().map(|c| c.tuples().to_vec()).collect();
+        let mut sim = MultiTenantSim::new(pool(2)).unwrap();
+        // placement-correlated: the two hottest nodes die together twice
+        let kills = crate::workload::correlated_kills(
+            sim.assignment(0),
+            3,
+            2,
+            2,
+            7,
+            99,
+        );
+        sim.run(&streams, 64, 2, &kills);
+        assert_eq!(sim.stats().kills, 4, "two events × two victims");
+        assert!(sim.stats().replayed_tuples > 0, "kills replay state");
+        for (t, ctx) in ctxs.iter().enumerate() {
+            let reference = sorted(mine_online(ctx, &Constraints::none()));
+            let got = sorted(sim.clusters(t).to_vec());
+            assert_eq!(got.len(), reference.len(), "tenant {t} exact after kills");
+        }
+    }
+
+    #[test]
+    fn per_tenant_constraints_are_independent() {
+        let ctx = stream(300, 6, 8);
+        let tight = Constraints { min_density: 1.0, min_support: 1 };
+        let mut cfg = pool(2);
+        cfg.tenants[1].constraints = tight.clone();
+        let mut sim = MultiTenantSim::new(cfg).unwrap();
+        sim.run(&[ctx.tuples().to_vec(), ctx.tuples().to_vec()], 97, 3, &[]);
+        let loose = sorted(mine_online(&ctx, &Constraints::none()));
+        let dense = sorted(mine_online(&ctx, &tight));
+        assert_eq!(sim.clusters(0).len(), loose.len());
+        assert_eq!(sim.clusters(1).len(), dense.len());
+        assert!(dense.len() < loose.len(), "θ=1.0 must filter");
+    }
+
+    #[test]
+    fn pool_is_deterministic_for_a_seed() {
+        let ctx = stream(300, 8, 9);
+        let run = || {
+            let mut sim = MultiTenantSim::new(pool(2)).unwrap();
+            sim.run(
+                &[ctx.tuples().to_vec(), ctx.tuples().to_vec()],
+                64,
+                2,
+                &crate::workload::correlated_kills(&[0, 1, 2, 0], 3, 2, 1, 5, 3),
+            );
+            (sim.sim_makespan_ms(), sim.fairness_spread(), sim.stats().clone())
+        };
+        let (a_ms, a_fair, a_stats) = run();
+        let (b_ms, b_fair, b_stats) = run();
+        assert_eq!(a_ms.to_bits(), b_ms.to_bits());
+        assert_eq!(a_fair.to_bits(), b_fair.to_bits());
+        assert_eq!(a_stats.shuffle_mib.to_bits(), b_stats.shuffle_mib.to_bits());
+        assert_eq!(a_stats.accepted, b_stats.accepted);
+    }
+
+    #[test]
+    fn empty_mix_and_unknown_placement_are_errors() {
+        assert!(MultiTenantSim::new(TenantPoolConfig::new(2)).is_err());
+        let mut cfg = pool(1);
+        cfg.placement = "yarn".into();
+        assert!(MultiTenantSim::new(cfg).is_err());
+    }
+}

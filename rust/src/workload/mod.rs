@@ -1,0 +1,322 @@
+//! Seeded, replayable adversarial workload generators.
+//!
+//! The paper's scalability comparison (§4–§7) is run on well-behaved
+//! synthetic contexts; the failure modes that actually decide whether a
+//! distributed triclustering SERVICE holds up — heavy-hitter key skew,
+//! distribution drift mid-stream, bursty ingress colliding with a steady
+//! query mix, and correlated (not independent) node failures — need
+//! workloads designed to trigger them. This module produces those
+//! scenarios for the sim layers ([`crate::serve::cluster::ServeSim`],
+//! [`crate::serve::tenant::MultiTenantSim`], [`crate::exec::ClusterSim`])
+//! to injure.
+//!
+//! Every generator is a PURE function of its configuration and a `u64`
+//! seed over the repo PRNG ([`crate::util::rng::Rng`]): the same
+//! `(config, seed)` pair replays the workload bit-identically, on any
+//! machine — the property `rust/tests/workload_invariants.rs` pins for
+//! all four generators, and the precondition for using an adversarial
+//! scenario inside a deterministic equivalence test at all.
+//!
+//! | generator            | scenario it injures                          |
+//! |----------------------|----------------------------------------------|
+//! | [`SkewedStream`]     | heavy-hitter key skew → hot shards/cumuli    |
+//! | [`DriftingStream`]   | temporal drift → incremental re-compaction   |
+//! | [`BurstMix`]         | burst ingress against a steady query mix     |
+//! | [`correlated_kills`] | placement-correlated node-set failures       |
+
+use crate::core::tuple::NTuple;
+use crate::util::rng::{Rng, Zipf};
+
+/// Heavy-hitter key skew: component 0 of every tuple is drawn from a
+/// Zipf(`exponent`) over `universe` ids (rank 0 = the heavy hitter), the
+/// remaining components uniformly. Routing hashes the whole tuple, so
+/// the hot KEY concentrates into hot CUMULI (many tuples sharing
+/// subrelations with the heavy hitter) rather than one hot shard — the
+/// skew stresses the compactor's shared-set merge, and under
+/// [`crate::serve::cluster::ServeSim`]'s skewed sources it stresses
+/// placement too.
+#[derive(Debug, Clone)]
+pub struct SkewedStream {
+    /// Tuples to generate.
+    pub tuples: usize,
+    /// Id universe per modality (ids are `0..universe`).
+    pub universe: u64,
+    /// Zipf exponent for component 0 (0.0 = uniform; 2.0+ = one id
+    /// dominates).
+    pub exponent: f64,
+    /// Relation arity (≥ 2).
+    pub arity: usize,
+}
+
+impl SkewedStream {
+    /// Generate the stream for `seed` (bit-identical per `(self, seed)`).
+    pub fn generate(&self, seed: u64) -> Vec<NTuple> {
+        let mut rng = Rng::new(seed);
+        let zipf = Zipf::new(self.universe.max(1), self.exponent.max(0.0));
+        let mut out = Vec::with_capacity(self.tuples);
+        let mut elems = vec![0u32; self.arity.max(2)];
+        for _ in 0..self.tuples {
+            elems[0] = zipf.sample(&mut rng) as u32;
+            for e in elems.iter_mut().skip(1) {
+                *e = rng.below(self.universe.max(1)) as u32;
+            }
+            out.push(NTuple::new(&elems));
+        }
+        out
+    }
+}
+
+/// Temporal drift: the stream is cut into `segments` equal spans, and
+/// segment `i` draws every component uniformly from the WINDOW
+/// `[i·shift, i·shift + universe)` — the tuple distribution the miners
+/// saw early in the stream stops arriving, and each compaction after a
+/// segment boundary must fold in cumuli the previous compactions never
+/// touched (the incremental re-compaction path: the watermarked
+/// sorted-set cache in [`crate::oac::primes::SetArena`] is what drift
+/// stresses).
+#[derive(Debug, Clone)]
+pub struct DriftingStream {
+    /// Tuples to generate.
+    pub tuples: usize,
+    /// Width of each segment's id window.
+    pub universe: u64,
+    /// Number of distribution segments (≥ 1).
+    pub segments: usize,
+    /// Id-window offset added per segment; `shift >= universe` makes
+    /// consecutive segments fully disjoint.
+    pub shift: u32,
+    /// Relation arity (≥ 2).
+    pub arity: usize,
+}
+
+impl DriftingStream {
+    /// Generate the stream for `seed` (bit-identical per `(self, seed)`).
+    pub fn generate(&self, seed: u64) -> Vec<NTuple> {
+        let mut rng = Rng::new(seed);
+        let segments = self.segments.max(1);
+        let seg_len = self.tuples.div_ceil(segments).max(1);
+        let mut out = Vec::with_capacity(self.tuples);
+        let mut elems = vec![0u32; self.arity.max(2)];
+        for i in 0..self.tuples {
+            let base = (i / seg_len) as u32 * self.shift;
+            for e in elems.iter_mut() {
+                *e = base + rng.below(self.universe.max(1)) as u32;
+            }
+            out.push(NTuple::new(&elems));
+        }
+        out
+    }
+}
+
+/// One step of a [`BurstMix`] timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Ingest this batch (a burst wave carries `burst_batch` tuples, a
+    /// steady wave `steady_batch`).
+    Ingest(Vec<NTuple>),
+    /// Answer one read from the query plane.
+    Query(QueryOp),
+}
+
+/// The read operations a [`BurstMix`] interleaves with ingest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryOp {
+    /// Top-k clusters by density.
+    TopK(usize),
+    /// Clusters containing `entity` in `modality`.
+    Containing {
+        /// Modality index of the probe.
+        modality: usize,
+        /// Entity id of the probe.
+        entity: u32,
+    },
+    /// Aggregate index statistics.
+    Stats,
+}
+
+/// Burst ingress against a steady query mix: every wave ingests a batch
+/// (`burst_batch` tuples on every `burst_every`-th wave, `steady_batch`
+/// otherwise) followed by `queries_per_wave` seeded reads. The reads
+/// arrive at the SAME rate through the burst — the scenario where an
+/// ingest spike must not perturb query results (epoch snapshots) or
+/// starve the query plane (the fairness the tenant sim measures).
+#[derive(Debug, Clone)]
+pub struct BurstMix {
+    /// Ingest waves to generate.
+    pub waves: usize,
+    /// Tuples per steady wave.
+    pub steady_batch: usize,
+    /// Tuples per burst wave (the spike; ≥ `steady_batch` to be one).
+    pub burst_batch: usize,
+    /// Every `burst_every`-th wave is a burst (0 = never).
+    pub burst_every: usize,
+    /// Seeded reads appended after every wave.
+    pub queries_per_wave: usize,
+    /// Id universe per modality.
+    pub universe: u64,
+    /// Relation arity (≥ 2).
+    pub arity: usize,
+}
+
+impl BurstMix {
+    /// True when wave `w` (0-based) is a burst wave.
+    pub fn is_burst(&self, wave: usize) -> bool {
+        self.burst_every > 0 && (wave + 1) % self.burst_every == 0
+    }
+
+    /// Generate the op timeline for `seed` (bit-identical per
+    /// `(self, seed)`).
+    pub fn generate(&self, seed: u64) -> Vec<Op> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        let mut elems = vec![0u32; self.arity.max(2)];
+        for w in 0..self.waves {
+            let n = if self.is_burst(w) { self.burst_batch } else { self.steady_batch };
+            let mut batch = Vec::with_capacity(n);
+            for _ in 0..n {
+                for e in elems.iter_mut() {
+                    *e = rng.below(self.universe.max(1)) as u32;
+                }
+                batch.push(NTuple::new(&elems));
+            }
+            out.push(Op::Ingest(batch));
+            for _ in 0..self.queries_per_wave {
+                let q = match rng.usize_below(3) {
+                    0 => QueryOp::TopK(1 + rng.usize_below(8)),
+                    1 => QueryOp::Containing {
+                        modality: rng.usize_below(self.arity.max(2)),
+                        entity: rng.below(self.universe.max(1)) as u32,
+                    },
+                    _ => QueryOp::Stats,
+                };
+                out.push(Op::Query(q));
+            }
+        }
+        out
+    }
+}
+
+/// One correlated kill: at the start of ingest wave `wave`, take down
+/// every node in `victims` together.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KillEvent {
+    /// 0-based ingest wave the kill lands on.
+    pub wave: usize,
+    /// The placement-correlated node set killed as one event.
+    pub victims: Vec<usize>,
+}
+
+/// Correlated node failures: kill a PLACEMENT-correlated node set, not
+/// independent draws. Nodes are ranked by how many shards the current
+/// `assignment` (shard → node) puts on them (descending, ties by id),
+/// and each event's victims are `set_size` ADJACENT nodes in that
+/// ranking — a seeded window start rotates which stratum dies, but the
+/// set always falls together in placement-load order, the way a rack or
+/// AZ failure takes out co-located primaries. Pure in
+/// `(assignment, nodes, set_size, kills, waves, seed)`.
+pub fn correlated_kills(
+    assignment: &[usize],
+    nodes: usize,
+    set_size: usize,
+    kills: usize,
+    waves: usize,
+    seed: u64,
+) -> Vec<KillEvent> {
+    let n = nodes.max(1);
+    let set_size = set_size.clamp(1, n);
+    let mut load = vec![0usize; n];
+    for &node in assignment {
+        if node < n {
+            load[node] += 1;
+        }
+    }
+    let mut ranking: Vec<usize> = (0..n).collect();
+    ranking.sort_by_key(|&i| (std::cmp::Reverse(load[i]), i));
+    let mut rng = Rng::new(seed ^ 0x4641_494C_5321); // "FAIL!" salt
+    let mut events = Vec::with_capacity(kills);
+    for _ in 0..kills {
+        let wave = rng.usize_below(waves.max(1));
+        let start = rng.usize_below(n);
+        let victims: Vec<usize> =
+            (0..set_size).map(|k| ranking[(start + k) % n]).collect();
+        events.push(KillEvent { wave, victims });
+    }
+    events.sort_by_key(|e| e.wave);
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_concentrates_on_rank_zero() {
+        let cfg = SkewedStream { tuples: 4000, universe: 50, exponent: 2.0, arity: 3 };
+        let stream = cfg.generate(7);
+        assert_eq!(stream.len(), 4000);
+        let hot = stream.iter().filter(|t| t.get(0) == 0).count();
+        // uniform share would be 80; Zipf(2.0) gives rank 0 ~61%
+        assert!(hot > 800, "heavy hitter got {hot}/4000");
+    }
+
+    #[test]
+    fn drift_moves_the_id_window() {
+        let cfg =
+            DriftingStream { tuples: 300, universe: 10, segments: 3, shift: 100, arity: 3 };
+        let stream = cfg.generate(1);
+        assert!(stream[..100].iter().all(|t| t.get(0) < 10));
+        assert!(stream[200..].iter().all(|t| (200..210).contains(&t.get(0))));
+    }
+
+    #[test]
+    fn burst_waves_follow_the_cadence() {
+        let cfg = BurstMix {
+            waves: 6,
+            steady_batch: 10,
+            burst_batch: 50,
+            burst_every: 3,
+            queries_per_wave: 2,
+            universe: 9,
+            arity: 3,
+        };
+        let ops = cfg.generate(3);
+        let sizes: Vec<usize> = ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Ingest(b) => Some(b.len()),
+                Op::Query(_) => None,
+            })
+            .collect();
+        assert_eq!(sizes, vec![10, 10, 50, 10, 10, 50]);
+        let queries = ops.iter().filter(|op| matches!(op, Op::Query(_))).count();
+        assert_eq!(queries, 12);
+    }
+
+    #[test]
+    fn kills_are_adjacent_in_the_load_ranking() {
+        // node 1 hosts 3 shards, node 0 hosts 1, nodes 2/3 are idle:
+        // ranking is [1, 0, 2, 3]
+        let assignment = [1, 1, 1, 0];
+        let events = correlated_kills(&assignment, 4, 2, 5, 10, 42);
+        assert_eq!(events.len(), 5);
+        let ranking = [1usize, 0, 2, 3];
+        for e in &events {
+            assert!(e.wave < 10);
+            assert_eq!(e.victims.len(), 2);
+            let start = ranking
+                .iter()
+                .position(|&n| n == e.victims[0])
+                .expect("victim is a node");
+            assert_eq!(e.victims[1], ranking[(start + 1) % 4], "adjacent stratum");
+        }
+    }
+
+    #[test]
+    fn generators_replay_bit_identically() {
+        let skew = SkewedStream { tuples: 500, universe: 20, exponent: 1.5, arity: 4 };
+        assert_eq!(skew.generate(9), skew.generate(9));
+        let drift =
+            DriftingStream { tuples: 500, universe: 16, segments: 4, shift: 16, arity: 3 };
+        assert_eq!(drift.generate(9), drift.generate(9));
+    }
+}

@@ -6,23 +6,12 @@
 //! produce the identical deduplicated cluster set (components, supports,
 //! densities) as single-pass `oac::mine_online`.
 
-use tricluster::core::context::PolyContext;
-use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+mod common;
+
+use common::{assert_same, random_ctx, sorted};
 use tricluster::exec::{run_named, ExecTuning, BACKENDS};
 use tricluster::oac::{mine_online, Constraints};
 use tricluster::util::proptest_lite::{assert_prop, Gen};
-
-fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
-    sort_clusters(&mut cs);
-    cs
-}
-
-fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) -> Result<(), String> {
-    match diff_cluster_sets(a, b) {
-        Some(diff) => Err(format!("{label}: {diff}")),
-        None => Ok(()),
-    }
-}
 
 /// Random context → every backend → exact cluster-set equality.
 #[test]
@@ -33,11 +22,7 @@ fn prop_all_backends_equal_online() {
         let arity = 3 + g.usize_below(2);
         let universe = 2 + g.u32_below(8);
         let n_tuples = 1 + g.usize_below(250);
-        let mut ctx = PolyContext::new(arity);
-        for _ in 0..n_tuples {
-            let ids: Vec<u32> = (0..arity).map(|_| g.u32_below(universe)).collect();
-            ctx.add_ids(&ids);
-        }
+        let ctx = random_ctx(g, arity, universe, n_tuples);
         let theta = if g.bool(0.5) { 0.0 } else { g.f64() * 0.6 };
         let reference = sorted(mine_online(
             &ctx,
@@ -138,6 +123,54 @@ fn cluster_sim_equal_under_adversarial_schedules() {
             &format!("cluster adversarial, speculation={speculation}"),
         )
         .unwrap();
+    }
+}
+
+/// Boundary sweep: every backend × {empty context, single tuple, dense
+/// block} × {θ=0.0, θ=1.0} equals `mine_online`. θ=1.0 keeps only
+/// perfectly dense clusters and θ=0.0 keeps everything — whichever side
+/// of the >= the density filter sits on, reference and backend must sit
+/// on the SAME side; the degenerate contexts pin the task-splitting
+/// paths (0 and 1 input records across any task/worker count).
+#[test]
+fn edge_sweep_all_backends_at_boundary_thetas() {
+    let empty = tricluster::core::context::PolyContext::new(3);
+    let mut single = tricluster::core::context::PolyContext::new(3);
+    single.add_ids(&[2, 5, 9]);
+    let dense = tricluster::datasets::synthetic::k1(4).inner;
+    for (cname, ctx) in [("empty", &empty), ("single", &single), ("k1", &dense)] {
+        for theta in [0.0, 1.0] {
+            let reference = sorted(mine_online(
+                ctx,
+                &Constraints { min_density: theta, min_support: 0 },
+            ));
+            if cname == "single" {
+                // one tuple is one perfectly dense cluster at any θ
+                assert_eq!(reference.len(), 1);
+                assert_eq!(reference[0].support, 1);
+            }
+            if cname == "empty" {
+                assert!(reference.is_empty());
+            }
+            for backend in BACKENDS {
+                for tasks in [1, 7] {
+                    let tune = ExecTuning {
+                        workers: 2,
+                        tasks,
+                        nodes: 3,
+                        node_slots: 2,
+                        ..ExecTuning::default()
+                    };
+                    let run = run_named(backend, ctx, theta, &tune).unwrap();
+                    assert_same(
+                        &reference,
+                        &run.clusters,
+                        &format!("{backend} on {cname}, θ={theta}, tasks={tasks}"),
+                    )
+                    .unwrap();
+                }
+            }
+        }
     }
 }
 

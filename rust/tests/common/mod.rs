@@ -1,0 +1,78 @@
+//! Shared fixtures for the integration-test suites.
+//!
+//! Every equivalence/invariant suite used to carry its own copy of the
+//! same three helpers; they live here once now. Pulled in per test
+//! crate with `mod common;` (the test targets are path-declared in
+//! Cargo.toml, so each file is its own crate and sees this module
+//! relative to `rust/tests/`).
+//!
+//! Not every suite uses every helper — hence the file-level
+//! `dead_code` allow.
+#![allow(dead_code)]
+
+use tricluster::core::context::PolyContext;
+use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::core::tuple::NTuple;
+use tricluster::exec::cluster_sim::ChurnConfig;
+use tricluster::util::proptest_lite::Gen;
+use tricluster::util::rng::Rng;
+
+/// A random polyadic context: `n` tuples with ids drawn uniformly below
+/// `universe` in each of `arity` modalities. Small universes force
+/// heavy cumulus sharing — the regime where merging/dedup goes wrong.
+pub fn random_ctx(g: &mut Gen, arity: usize, universe: u32, n: usize) -> PolyContext {
+    let mut ctx = PolyContext::new(arity);
+    for _ in 0..n {
+        let ids: Vec<u32> = (0..arity).map(|_| g.u32_below(universe)).collect();
+        ctx.add_ids(&ids);
+    }
+    ctx
+}
+
+/// A DISTINCT-tuple seeded triadic context: exactly `n` distinct random
+/// triples below `universe` (asserts the universe can hold them). Use
+/// when a test's bookkeeping assumes no duplicate tuples; replayable
+/// from the seed.
+pub fn distinct_ctx(seed: u64, n: usize, universe: u64) -> PolyContext {
+    assert!(universe * universe * universe > n as u64, "universe too small");
+    let mut ctx = PolyContext::new(3);
+    let mut rng = Rng::new(seed);
+    while ctx.len() < n {
+        ctx.add_ids(&[
+            rng.below(universe) as u32,
+            rng.below(universe) as u32,
+            rng.below(universe) as u32,
+        ]);
+    }
+    ctx
+}
+
+/// Canonical order for cluster-set comparison (sorted component sets
+/// make the order of generation irrelevant).
+pub fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    sort_clusters(&mut cs);
+    cs
+}
+
+/// THE equivalence predicate: canonically-ordered cluster sets must
+/// match on components and supports (density is derived from both, so
+/// it cannot diverge independently).
+pub fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) -> Result<(), String> {
+    match diff_cluster_sets(a, b) {
+        Some(diff) => Err(format!("{label}: {diff}")),
+        None => Ok(()),
+    }
+}
+
+/// A seeded churn schedule (kill probability per wave, restart delay).
+pub fn churn(kill_prob: f64, restart_ms: f64) -> ChurnConfig {
+    ChurnConfig { kill_prob, restart_ms }
+}
+
+/// Split a context's tuples into one stream per tenant, dealt
+/// round-robin — the default way multi-tenant tests share one dataset.
+pub fn deal_streams(ctx: &PolyContext, tenants: usize) -> Vec<Vec<NTuple>> {
+    (0..tenants)
+        .map(|t| ctx.tuples().iter().skip(t).step_by(tenants).copied().collect())
+        .collect()
+}

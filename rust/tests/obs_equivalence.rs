@@ -9,11 +9,13 @@
 //! The recorder is a process-global, so every test here serialises on
 //! one lock and restores the disabled state through an RAII guard.
 
+mod common;
+
 use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
-use tricluster::core::context::PolyContext;
-use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use common::{assert_same, random_ctx, sorted};
+use tricluster::core::pattern::Cluster;
 use tricluster::exec::{run_named, ExecTuning, BACKENDS};
 use tricluster::oac::{mine_online, Constraints};
 use tricluster::obs;
@@ -37,18 +39,6 @@ impl Drop for ObsOff {
     }
 }
 
-fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
-    sort_clusters(&mut cs);
-    cs
-}
-
-fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) -> Result<(), String> {
-    match diff_cluster_sets(a, b) {
-        Some(diff) => Err(format!("{label}: telemetry changed the output: {diff}")),
-        None => Ok(()),
-    }
-}
-
 /// Random context → mine with the recorder off, then again with it on
 /// (online miner + all five backends) → exact cluster-set equality.
 #[test]
@@ -59,11 +49,7 @@ fn prop_results_identical_with_telemetry_on() {
         let arity = 3 + g.usize_below(2);
         let universe = 2 + g.u32_below(6);
         let n_tuples = 1 + g.usize_below(150);
-        let mut ctx = PolyContext::new(arity);
-        for _ in 0..n_tuples {
-            let ids: Vec<u32> = (0..arity).map(|_| g.u32_below(universe)).collect();
-            ctx.add_ids(&ids);
-        }
+        let ctx = random_ctx(g, arity, universe, n_tuples);
         let theta = if g.bool(0.5) { 0.0 } else { g.f64() * 0.5 };
         let cons = Constraints { min_density: theta, min_support: 0 };
         let tune = ExecTuning {

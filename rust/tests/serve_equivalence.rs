@@ -4,41 +4,14 @@
 //! `oac::mine_online` output — same components, same supports, same
 //! densities. Plus snapshot-roundtrip preservation on real generators.
 
-use tricluster::core::context::PolyContext;
-use tricluster::core::pattern::Cluster;
+mod common;
+
+use common::{assert_same, churn, random_ctx, sorted};
 use tricluster::datasets::{movielens, synthetic, MovielensParams};
-use tricluster::exec::cluster_sim::ChurnConfig;
 use tricluster::oac::{mine_online, Constraints};
 use tricluster::serve::cluster::{ServeSim, ServeSimConfig};
 use tricluster::serve::{ServeConfig, TriclusterService};
 use tricluster::util::proptest_lite::{assert_prop, Gen};
-
-fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
-    cs.sort_by(|a, b| a.components.cmp(&b.components));
-    cs
-}
-
-fn assert_same(a: &[Cluster], b: &[Cluster], label: &str) -> Result<(), String> {
-    if a.len() != b.len() {
-        return Err(format!("{label}: {} vs {} clusters", a.len(), b.len()));
-    }
-    for (x, y) in a.iter().zip(b) {
-        if x.components != y.components {
-            return Err(format!("{label}: components differ: {x:?} vs {y:?}"));
-        }
-        if x.support != y.support {
-            return Err(format!(
-                "{label}: support differs on {:?}: {} vs {}",
-                x.components, x.support, y.support
-            ));
-        }
-        let (da, db) = (x.support_density(), y.support_density());
-        if (da - db).abs() > 1e-12 {
-            return Err(format!("{label}: density differs: {da} vs {db}"));
-        }
-    }
-    Ok(())
-}
 
 /// Random context → random service schedule → exact index equality.
 #[test]
@@ -49,12 +22,7 @@ fn prop_sharded_equals_sequential() {
         let arity = 3 + g.usize_below(2);
         let universe = 2 + g.u32_below(9);
         let n_tuples = 1 + g.usize_below(300);
-        let mut ctx = PolyContext::new(arity);
-        for _ in 0..n_tuples {
-            let ids: Vec<u32> =
-                (0..arity).map(|_| g.u32_below(universe)).collect();
-            ctx.add_ids(&ids);
-        }
+        let ctx = random_ctx(g, arity, universe, n_tuples);
         let constraints = if g.bool(0.5) {
             Constraints::none()
         } else {
@@ -131,11 +99,7 @@ fn prop_churned_serve_cluster_equals_sequential() {
     assert_prop(48, |g: &mut Gen| {
         let universe = 2 + g.u32_below(9);
         let n_tuples = 50 + g.usize_below(400);
-        let mut ctx = PolyContext::new(3);
-        for _ in 0..n_tuples {
-            let ids: Vec<u32> = (0..3).map(|_| g.u32_below(universe)).collect();
-            ctx.add_ids(&ids);
-        }
+        let ctx = random_ctx(g, 3, universe, n_tuples);
         let reference = sorted(mine_online(&ctx, &Constraints::none()));
 
         let shards = 1 + g.usize_below(6);
@@ -148,10 +112,7 @@ fn prop_churned_serve_cluster_equals_sequential() {
         cfg.route_chunk = 4 + g.usize_below(32);
         cfg.compact_every = 1 + g.usize_below(4);
         cfg.source_skew = g.f64() * 2.5;
-        cfg.churn = ChurnConfig {
-            kill_prob: 0.2 + g.f64() * 0.6,
-            restart_ms: g.f64() * 100.0,
-        };
+        cfg.churn = churn(0.2 + g.f64() * 0.6, g.f64() * 100.0);
         cfg.rebalance = g.bool(0.7);
         cfg.pipeline = g.bool(0.5);
         cfg.seed = g.rng.next_u64();
@@ -169,6 +130,58 @@ fn prop_churned_serve_cluster_equals_sequential() {
             ),
         )
     });
+}
+
+/// Boundary sweep on the serve path: {empty stream, single tuple,
+/// all-duplicate stream, dense block} × {θ=0.0, θ=1.0} through ingest →
+/// compact must equal `mine_online` over the deduplicated context —
+/// compaction of nothing, of one tuple, and of 300 copies of one tuple
+/// all hit the same watermark/merge machinery as the big streams.
+#[test]
+fn edge_sweep_serve_path_at_boundary_thetas() {
+    use tricluster::core::context::PolyContext;
+    use tricluster::core::tuple::NTuple;
+
+    let one = NTuple::triple(2, 5, 9);
+    let streams: [(&str, Vec<NTuple>); 4] = [
+        ("empty", Vec::new()),
+        ("single", vec![one]),
+        ("all-duplicate", vec![one; 300]),
+        ("k1", synthetic::k1(4).inner.tuples().to_vec()),
+    ];
+    for (sname, stream) in &streams {
+        // the logical relation behind the stream (dedup is the service's
+        // job; the reference context dedups by construction)
+        let mut ctx = PolyContext::new(3);
+        for t in stream {
+            ctx.add_ids(t.as_slice());
+        }
+        for theta in [0.0, 1.0] {
+            let constraints = Constraints { min_density: theta, min_support: 0 };
+            let reference = sorted(mine_online(&ctx, &constraints));
+            for shards in [1, 4] {
+                let cfg = ServeConfig::new(3, shards)
+                    .with_constraints(constraints.clone());
+                let mut svc = TriclusterService::new(cfg);
+                for chunk in stream.chunks(7) {
+                    svc.ingest(chunk);
+                    svc.compact(); // compact every wave, incl. empty deltas
+                }
+                svc.compact();
+                let got = sorted(svc.clusters().to_vec());
+                assert_same(
+                    &got,
+                    &reference,
+                    &format!("serve {sname}, θ={theta}, shards={shards}"),
+                )
+                .unwrap();
+                if *sname == "all-duplicate" {
+                    assert_eq!(got.len(), 1);
+                    assert_eq!(got[0].support, 1, "dupes must count once");
+                }
+            }
+        }
+    }
 }
 
 /// Duplicate deliveries (at-least-once upstream) must not change the
