@@ -64,15 +64,21 @@
 //!    promise of `obs::enabled()`), and with telemetry ENABLED within
 //!    `hotpath.min_obs_enabled_ratio` (0.5 — spans are per batch, never
 //!    per tuple, so full tracing may not halve ingest throughput).
+//! 7. **Persistence restore ratio** — when `BENCH_persist.json` is
+//!    present: `binary_restore_vs_json` (page-adoption restore vs JSON
+//!    parse + re-mine, same machine, same compacted state) must clear
+//!    `persist.min_binary_restore_ratio`, and `restore_equivalent` must
+//!    not be present-and-false (both arms reproduced the live index).
 //!
 //! `--pin` rewrites the baseline from the current `BENCH_cluster.json`
 //! (max makespans = observed, speedup floors = 80% of observed) and,
 //! when present, `BENCH_serve_cluster.json` (locality-vs-rr floor = 90%
-//! of observed) and `BENCH_hotpath.json` (ingest floor = 30% of
+//! of observed), `BENCH_hotpath.json` (ingest floor = 30% of
 //! observed — wall-clock rates are machine-dependent, unlike the
 //! simulated makespans; the parallel-vs-sequential and
-//! dedup-parallel floors stay pinned at 1.0 by policy), so a session
-//! with a toolchain can tighten the committed baseline.
+//! dedup-parallel floors stay pinned at 1.0 by policy), and
+//! `BENCH_persist.json` (restore-ratio floor = 90% of observed), so a
+//! session with a toolchain can tighten the committed baseline.
 
 use std::collections::BTreeMap;
 use std::process::exit;
@@ -112,6 +118,7 @@ fn main() {
     let serve_cluster_path =
         args.get_or("serve-cluster", "BENCH_serve_cluster.json");
     let hotpath_path = args.get_or("hotpath", "BENCH_hotpath.json");
+    let persist_path = args.get_or("persist", "BENCH_persist.json");
 
     let Some(cluster) = load(cluster_path) else {
         // bare `cargo bench` runs targets in name order, so this checker
@@ -142,6 +149,7 @@ fn main() {
             entries,
             load(serve_cluster_path).as_ref(),
             load(hotpath_path).as_ref(),
+            load(persist_path).as_ref(),
         );
         return;
     }
@@ -455,6 +463,33 @@ fn main() {
         eprintln!("check_bench: {hotpath_path} absent — skipping hot-path gate");
     }
 
+    // 7. persistence restore ratio (when the persist bench ran)
+    if let Some(persist) = load(persist_path) {
+        if persist.get("restore_equivalent").and_then(Json::as_bool) == Some(false) {
+            failures.push(
+                "persist restore_equivalent is false: a restore diverged from \
+                 the live index"
+                    .to_string(),
+            );
+        }
+        let ratio = f(&persist, "binary_restore_vs_json");
+        if let Some(min) = baseline
+            .get("persist")
+            .and_then(|p| p.get("min_binary_restore_ratio"))
+            .and_then(Json::as_f64)
+        {
+            if ratio.is_nan() || ratio < min {
+                failures.push(format!(
+                    "binary_restore_vs_json {ratio:.3} fell below the baseline \
+                     floor {min:.3}: page-adoption restore lost its edge over \
+                     JSON parse + re-mine"
+                ));
+            }
+        }
+    } else {
+        eprintln!("check_bench: {persist_path} absent — skipping persist gate");
+    }
+
     if failures.is_empty() {
         println!(
             "check_bench: OK — {} cluster entries, {checked} baseline pins, \
@@ -475,6 +510,7 @@ fn pin(
     entries: &[Json],
     serve_cluster: Option<&Json>,
     hotpath: Option<&Json>,
+    persist: Option<&Json>,
 ) {
     let mut pins: Vec<Json> = Vec::new();
     for e in entries {
@@ -586,6 +622,24 @@ fn pin(
             let old_baseline = load(baseline_path);
             if let Some(old) = old_baseline.as_ref().and_then(|b| b.get("hotpath")) {
                 doc.insert("hotpath".to_string(), old.clone());
+            }
+        }
+    }
+    match persist.map(|p| f(p, "binary_restore_vs_json")) {
+        Some(ratio) if ratio.is_finite() => {
+            // ratio of two wall-clock runs on the same machine: pin at
+            // 90% of observed
+            let mut pe = BTreeMap::new();
+            pe.insert(
+                "min_binary_restore_ratio".to_string(),
+                Json::Num((ratio * 0.9 * 1000.0).floor() / 1000.0),
+            );
+            doc.insert("persist".to_string(), Json::Obj(pe));
+        }
+        _ => {
+            let old_baseline = load(baseline_path);
+            if let Some(old) = old_baseline.as_ref().and_then(|b| b.get("persist")) {
+                doc.insert("persist".to_string(), old.clone());
             }
         }
     }

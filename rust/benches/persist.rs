@@ -1,0 +1,150 @@
+//! Bench: out-of-core persistence — the binary segment log vs the JSON
+//! debug snapshot on the same compacted service. Writes
+//! `BENCH_persist.json` (repo root).
+//!
+//! Measures, per arm: snapshot bytes on disk, save wall time, and
+//! restore wall time (best-of-3). The headline figure is
+//! `binary_restore_vs_json` — how many times faster the page-adoption
+//! restore ([`tricluster::serve::Shard::restore`]) is than parsing the
+//! JSON document and re-mining every tuple through Alg. 1. The floor is
+//! gated by `ci/check_bench.rs` against
+//! `persist.min_binary_restore_ratio` in `ci/bench_baseline.json`.
+//!
+//! Doubles as an acceptance gate, enforced at the source: both restores
+//! must reproduce the live index EXACTLY (components + supports), else
+//! the bench panics and the ratio never reaches the baseline file.
+//!
+//! `TRICLUSTER_BENCH_FULL=1` for the paper-sized stream.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use tricluster::core::pattern::{diff_cluster_sets, sort_clusters, Cluster};
+use tricluster::datasets::{movielens, MovielensParams};
+use tricluster::serve::{snapshot, ServeConfig, TriclusterService};
+use tricluster::util::json::Json;
+
+const SHARDS: usize = 8;
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn sorted(mut cs: Vec<Cluster>) -> Vec<Cluster> {
+    sort_clusters(&mut cs);
+    cs
+}
+
+/// Total bytes of every regular file directly under `dir`.
+fn dir_bytes(dir: &Path) -> u64 {
+    std::fs::read_dir(dir)
+        .expect("segment dir exists")
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.metadata().ok())
+        .filter(|m| m.is_file())
+        .map(|m| m.len())
+        .sum()
+}
+
+/// Best-of-`rounds` wall time of `restore`, asserting each round's
+/// index equals `reference`.
+fn time_restore(
+    label: &str,
+    rounds: usize,
+    reference: &[Cluster],
+    mut restore: impl FnMut() -> TriclusterService,
+) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..rounds {
+        let t = Instant::now();
+        let mut svc = restore();
+        best = best.min(t.elapsed().as_secs_f64() * 1e3);
+        let got = sorted(svc.clusters().to_vec());
+        if let Some(diff) = diff_cluster_sets(reference, &got) {
+            panic!("{label} restore diverged from the live index: {diff}");
+        }
+    }
+    best
+}
+
+fn main() {
+    let full = std::env::var("TRICLUSTER_BENCH_FULL").is_ok();
+    let tuples = if full { 200_000 } else { 30_000 };
+    let ctx = movielens(&MovielensParams::with_tuples(tuples));
+    let scratch = std::env::temp_dir().join("tricluster_bench_persist");
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).expect("create bench scratch dir");
+    let json_path = scratch.join("snapshot.json");
+    let seg_dir = scratch.join("segments");
+
+    let mut svc = TriclusterService::new(
+        ServeConfig::builder()
+            .arity(ctx.arity())
+            .shards(SHARDS)
+            .build()
+            .expect("static bench config is valid"),
+    );
+    for chunk in ctx.tuples().chunks(4_096) {
+        svc.ingest(chunk);
+    }
+    svc.compact();
+    let reference = sorted(svc.clusters().to_vec());
+    eprintln!(
+        "persist bench (full={full}): {} tuples over {SHARDS} shards, \
+         {} clusters",
+        ctx.len(),
+        reference.len()
+    );
+
+    let t = Instant::now();
+    snapshot::save(&mut svc, &json_path).expect("json save");
+    let json_save_ms = t.elapsed().as_secs_f64() * 1e3;
+    let json_bytes = std::fs::metadata(&json_path).expect("json written").len();
+
+    let t = Instant::now();
+    snapshot::save_segments(&mut svc, &seg_dir).expect("segment save");
+    let seg_save_ms = t.elapsed().as_secs_f64() * 1e3;
+    let seg_bytes = dir_bytes(&seg_dir);
+
+    let json_restore_ms = time_restore("json", 3, &reference, || {
+        snapshot::load(&json_path).expect("json restore")
+    });
+    let seg_restore_ms = time_restore("segment", 3, &reference, || {
+        snapshot::load_segments(&seg_dir).expect("segment restore")
+    });
+
+    let ratio = json_restore_ms / seg_restore_ms;
+    let seg_mib = seg_bytes as f64 / (1 << 20) as f64;
+    let restore_mib_s = seg_mib / (seg_restore_ms / 1e3);
+    eprintln!(
+        "  json:    {json_bytes:>9} B  save {json_save_ms:8.2} ms  \
+         restore {json_restore_ms:8.2} ms (parse + re-mine)"
+    );
+    eprintln!(
+        "  segment: {seg_bytes:>9} B  save {seg_save_ms:8.2} ms  \
+         restore {seg_restore_ms:8.2} ms ({restore_mib_s:.1} MiB/s, page adoption)"
+    );
+    eprintln!("  binary_restore_vs_json: {ratio:.1}x (both restores bit-equal)");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("persist".into()));
+    doc.insert("full".to_string(), Json::Bool(full));
+    doc.insert("tuples".to_string(), num(ctx.len() as f64));
+    doc.insert("shards".to_string(), num(SHARDS as f64));
+    doc.insert("clusters".to_string(), num(reference.len() as f64));
+    doc.insert("snapshot_bytes_json".to_string(), num(json_bytes as f64));
+    doc.insert("snapshot_bytes_segment".to_string(), num(seg_bytes as f64));
+    doc.insert("json_save_ms".to_string(), num(json_save_ms));
+    doc.insert("segment_save_ms".to_string(), num(seg_save_ms));
+    doc.insert("json_restore_ms".to_string(), num(json_restore_ms));
+    doc.insert("segment_restore_ms".to_string(), num(seg_restore_ms));
+    doc.insert("segment_restore_mib_s".to_string(), num(restore_mib_s));
+    doc.insert("binary_restore_vs_json".to_string(), num(ratio));
+    // true by construction: time_restore panics on any divergence
+    doc.insert("restore_equivalent".to_string(), Json::Bool(true));
+    std::fs::write("BENCH_persist.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_persist.json");
+    let _ = std::fs::remove_dir_all(&scratch);
+    eprintln!("wrote BENCH_persist.json (binary restore {ratio:.1}x faster than JSON)");
+}

@@ -38,7 +38,8 @@
 //! → query, see docs/ARCHITECTURE.md): hash-routed ingest with
 //! pipelined backpressure drains, per-shard online miners, a compactor
 //! that merges partial cumuli into a globally-correct index, a
-//! top-k/membership query API, and JSON snapshot/restore. The two
+//! top-k/membership query API, and durable snapshots via the [`persist`]
+//! binary segment log (JSON kept as a debug fallback). The two
 //! layers fuse in [`serve::cluster`]: shards placed on the simulated
 //! cluster via [`exec::Placement`], with shuffle-cost accounting and
 //! node churn + snapshot replay.
@@ -73,6 +74,7 @@ pub mod mmc;
 pub mod noac;
 pub mod oac;
 pub mod obs;
+pub mod persist;
 pub mod runtime;
 pub mod serve;
 pub mod spark;

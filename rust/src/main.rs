@@ -42,7 +42,9 @@ COMMANDS
   noac       [--triples N] [--delta D] [--rho R] [--minsup N] [--workers N]
   density    [--edge N] [--engine exact|xla|mc] [--bitset-cap BYTES]
   serve-sim  [--datasets a,b] [--shards N] [--batch N] [--compact-every N]
-             [--top K] [--min-density R] [--min-support N] [--snapshot f.json]
+             [--top K] [--min-density R] [--min-support N] [--snapshot PATH]
+             [--snapshot-format segment|json] [--segment-dir DIR]
+             [--resident-mib N]
              [--nodes N] [--placement rr|locality|least] [--churn P]
              [--node-slots S] [--source-skew A] [--restart-ms MS]
              [--pipeline on|off] [--replicas N] [--retained N]
@@ -57,7 +59,13 @@ COMMANDS
               --tenants T > 1 multiplexes T independent tenant contexts
               onto the shared pool, each fed by a seeded --workload
               generator, ingress capped at --quota tuples/wave, with the
-              fairness spread and per-tenant equivalence reported)
+              fairness spread and per-tenant equivalence reported;
+              --snapshot writes a binary segment log to PATH (a dir) —
+              or legacy JSON to a file with --snapshot-format json;
+              --segment-dir journals every compaction delta for replay
+              recovery, --resident-mib caps resident arena pages, cold
+              pages spilling to disk so contexts larger than RAM stream
+              through)
   experiment --id table3|table4|fig2|table5|backends|cluster-scaling|
                   serve-cluster|skew|faults|engines|memory
              [--full] [--config f.ini] [--nodes N] [--runs N] [--workers N]
@@ -409,10 +417,20 @@ fn serve_builder(
         .replicas(args.parse_or("replicas", 0))
         .retained(args.parse_or("retained", 2))
         .seed(args.parse_or("seed", 0x5EED))
-        .tenants(args.parse_or("tenants", 1));
+        .tenants(args.parse_or("tenants", 1))
+        .resident_mib(args.parse_or("resident-mib", 0));
     if args.get("quota").is_some() {
         builder = builder.quota(args.parse_or("quota", usize::MAX));
     }
+    if let Some(dir) = args.get("segment-dir") {
+        builder = builder.segment_dir(dir);
+    }
+    let format = args.get_or("snapshot-format", "segment");
+    builder = builder.snapshot_format(
+        tricluster::serve::SnapshotFormat::parse(format).ok_or_else(|| {
+            anyhow::anyhow!("--snapshot-format {format:?} (expected segment|json)")
+        })?,
+    );
     Ok(builder)
 }
 
@@ -598,6 +616,7 @@ fn serve_sim_cluster(args: &Args, names: &str) -> Result<()> {
         let cfg = serve_builder(args, ctx.arity(), 4)?.build_sim()?;
         let (nodes, shards, placement) =
             (cfg.nodes, cfg.shards, cfg.placement.clone());
+        let segment_dir = cfg.segment_dir.clone();
         let mut sim = ServeSim::new(cfg)?;
         let t = Timer::start();
         sim.run(ctx.tuples());
@@ -625,6 +644,23 @@ fn serve_sim_cluster(args: &Args, names: &str) -> Result<()> {
             sim.assignment(),
             stats.per_node_records
         );
+        if let Some(dir) = &segment_dir {
+            // the run journalled every compaction delta; restoring the
+            // log must reproduce the live index EXACTLY — the CI trace
+            // gate leans on this exit-code check
+            let mut restored =
+                tricluster::serve::TriclusterService::restore_from(dir)?;
+            anyhow::ensure!(
+                restored.clusters().len() == clusters,
+                "segment-log restore diverged from the live index \
+                 ({} restored vs {clusters} live)",
+                restored.clusters().len()
+            );
+            println!(
+                "  segment log: {} (cold restore verified: {clusters} clusters)",
+                dir.display()
+            );
+        }
         if let Some(set) = sim.replica_set() {
             let set = set.read().expect("replica set poisoned");
             println!(

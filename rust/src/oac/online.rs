@@ -8,8 +8,9 @@
 //! are lost mid-stream.
 
 use crate::core::pattern::Cluster;
-use crate::core::tuple::NTuple;
+use crate::core::tuple::{NTuple, SubRelation};
 use crate::oac::primes::{PrimeStore, SetArena, SetIds};
+use std::path::PathBuf;
 
 /// A generated (not yet materialised) cluster: the N set ids plus the
 /// generating tuple. Both halves are inline/`Copy` — the per-tuple hot
@@ -33,6 +34,43 @@ impl OnlineMiner {
     /// Empty miner over `arity` modalities.
     pub fn new(arity: usize) -> Self {
         Self { primes: PrimeStore::new(arity), generated: Vec::new() }
+    }
+
+    /// Rebuild a miner from a persisted image: the exported cumuli are
+    /// bulk-adopted ([`PrimeStore::adopt`] — sealed caches, no re-sort,
+    /// no per-tuple re-mine) and the generated log is replayed by
+    /// resolving each historical tuple's keys with
+    /// [`PrimeStore::probe`]. `Err` carries a description when a tuple
+    /// fails to resolve — the image is internally inconsistent (its
+    /// tuple log references keys its cumuli don't contain).
+    pub fn from_image(
+        arity: usize,
+        tuples: &[NTuple],
+        cumuli: Vec<(SubRelation, Vec<u32>)>,
+    ) -> Result<Self, String> {
+        let primes = PrimeStore::adopt(arity, cumuli);
+        let mut generated = Vec::with_capacity(tuples.len());
+        for &tuple in tuples {
+            let set_ids = primes
+                .probe(&tuple)
+                .ok_or_else(|| "tuple log references a missing cumulus key".to_string())?;
+            generated.push(Generated { set_ids, tuple });
+        }
+        Ok(Self { primes, generated })
+    }
+
+    /// Export every cumulus as `⟨subrelation, sorted contents⟩` in
+    /// canonical key order (seals the arena) — what segments persist;
+    /// [`Self::from_image`] is the inverse.
+    pub fn cumuli(&mut self) -> Vec<(SubRelation, Vec<u32>)> {
+        self.primes.cumuli()
+    }
+
+    /// Cap the arena's resident pages; cold page chains spill to disk
+    /// under `spill_dir` once ingest exceeds the budget (see
+    /// [`crate::oac::primes::SetArena::set_resident_budget`]).
+    pub fn set_resident_budget(&mut self, pages: usize, spill_dir: Option<PathBuf>) {
+        self.primes.set_resident_budget(pages, spill_dir);
     }
 
     /// Alg. 1 `Add`: process a batch `J ⊆ I`. The span is per BATCH —

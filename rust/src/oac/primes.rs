@@ -36,6 +36,9 @@
 //!   The scalar [`PrimeStore::add`] loop is kept as the property-test
 //!   oracle.
 
+use std::path::PathBuf;
+use std::sync::Arc;
+
 use crate::core::tuple::{NTuple, SubRelation, MAX_ARITY};
 use crate::util::hash::{mix64, FxHashMap};
 use crate::util::pool;
@@ -118,10 +121,23 @@ impl std::fmt::Debug for SetIds {
     }
 }
 
-/// Elements per arena page (`u32` slots).
-const PAGE: usize = 8;
+/// Elements per arena page (`u32` slots). Public because the binary
+/// segment format ([`crate::persist`]) frames cumulus values in
+/// page-sized runs — the on-disk layout mirrors the arena's.
+pub const PAGE: usize = 8;
 /// Null page index.
 const NO_PAGE: u32 = u32::MAX;
+
+/// Per-shard resident-page budget for a process-wide `mib` budget split
+/// across `shards` arenas (`mib == 0` = unlimited, spill tier off). The
+/// floor of 8 pages keeps a pathological budget from thrashing every
+/// single page allocation through the spill file.
+pub fn resident_pages(mib: usize, shards: usize) -> usize {
+    if mib == 0 {
+        return 0;
+    }
+    ((mib << 20) / 4 / PAGE / shards.max(1)).max(8)
+}
 
 /// Per-set bookkeeping inside the arena.
 #[derive(Debug, Clone)]
@@ -134,12 +150,72 @@ struct SetMeta {
     pending: u32,
     /// Cached sorted + deduplicated view of everything sealed so far.
     sorted: Vec<u32>,
+    /// Last-touch stamp (page-granular LRU clock) — orders spill victims.
+    touch: u64,
+    /// Cold runs spilled to the shared spill file: `(byte offset, value
+    /// count)`, raw little-endian `u32`s. Reloaded (and cleared) on the
+    /// next `ensure_sorted`; read in place by `materialize_into`.
+    spilled: Vec<(u64, u32)>,
 }
 
 impl SetMeta {
     fn new() -> Self {
-        Self { head: NO_PAGE, tail: NO_PAGE, pending: 0, sorted: Vec::new() }
+        Self {
+            head: NO_PAGE,
+            tail: NO_PAGE,
+            pending: 0,
+            sorted: Vec::new(),
+            touch: 0,
+            spilled: Vec::new(),
+        }
     }
+
+    /// Values parked in the spill file for this set.
+    fn spilled_len(&self) -> usize {
+        self.spilled.iter().map(|&(_, n)| n as usize).sum()
+    }
+}
+
+/// The append-only cold-page spill file behind one arena lineage.
+/// Clones of a spilling arena share it through an `Arc` (runs are
+/// immutable once written); the file is unlinked when the last clone
+/// drops.
+#[derive(Debug)]
+struct SpillFile {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Process-unique suffix source for spill file names (no timestamps —
+/// the repo's determinism discipline forbids wall-clock naming).
+static SPILL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+#[cfg(unix)]
+fn spill_write_at(f: &std::fs::File, off: u64, bytes: &[u8]) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    f.write_all_at(bytes, off)
+}
+
+#[cfg(unix)]
+fn spill_read_at(f: &std::fs::File, off: u64, bytes: &mut [u8]) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    f.read_exact_at(bytes, off)
+}
+
+#[cfg(not(unix))]
+fn spill_write_at(_: &std::fs::File, _: u64, _: &[u8]) -> std::io::Result<()> {
+    Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "spill needs pread/pwrite"))
+}
+
+#[cfg(not(unix))]
+fn spill_read_at(_: &std::fs::File, _: u64, _: &mut [u8]) -> std::io::Result<()> {
+    Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "spill needs pread/pwrite"))
 }
 
 /// Arena of grow-only entity-id sets, addressed by `SetId`.
@@ -163,6 +239,22 @@ pub struct SetArena {
     /// Recycled pages, reused before the pool grows.
     free: Vec<u32>,
     sets: Vec<SetMeta>,
+    /// Resident-page budget; 0 = unlimited (spill tier off). When the
+    /// pool would grow past it, cold page chains spill to disk first.
+    budget_pages: usize,
+    /// Directory for the lazily created spill file (`None` = temp dir).
+    spill_dir: Option<PathBuf>,
+    /// The spill file, created on the first sweep that needs it.
+    spill: Option<Arc<SpillFile>>,
+    /// Bytes appended to the spill file so far (next run's offset).
+    spill_len: u64,
+    /// LRU clock: bumped once per page-chain touch, stamped into
+    /// `SetMeta::touch` — page-granular, so the per-push hot path pays
+    /// one predictable branch when the budget is off.
+    clock: u64,
+    /// Set currently being appended to — never a spill victim (its
+    /// `pending` count must not change under `push`'s feet).
+    guard: SetId,
 }
 
 impl SetArena {
@@ -172,10 +264,34 @@ impl SetArena {
         (self.sets.len() - 1) as SetId
     }
 
+    /// Turn the cold-page spill tier on: the pool stops growing past
+    /// `pages` resident pages — further allocations first spill the
+    /// least-recently-touched page chains to a spill file under
+    /// `spill_dir` (temp dir when `None`) and recycle their pages.
+    /// `pages == 0` turns the tier off. Spilled contents reload
+    /// transparently on `ensure_sorted` / `materialize` touch
+    /// (`oac.arena.{spill,reload}` count both sides in pages).
+    pub fn set_resident_budget(&mut self, pages: usize, spill_dir: Option<PathBuf>) {
+        self.budget_pages = pages;
+        self.spill_dir = spill_dir;
+    }
+
+    /// The configured resident budget (pages; 0 = unlimited).
+    pub fn resident_budget(&self) -> usize {
+        self.budget_pages
+    }
+
     fn alloc_page(&mut self) -> u32 {
         if let Some(p) = self.free.pop() {
             self.next[p as usize] = NO_PAGE;
             return p;
+        }
+        if self.budget_pages != 0 && self.pool.len() / PAGE >= self.budget_pages {
+            self.spill_sweep();
+            if let Some(p) = self.free.pop() {
+                self.next[p as usize] = NO_PAGE;
+                return p;
+            }
         }
         let p = (self.pool.len() / PAGE) as u32;
         self.pool.resize(self.pool.len() + PAGE, 0);
@@ -183,11 +299,145 @@ impl SetArena {
         p
     }
 
+    /// Open (or create) the shared spill file. On failure the budget is
+    /// cleared — ingest streams on in memory rather than aborting — and
+    /// `oac.arena.spill_fail` records the downgrade.
+    fn spill_handle(&mut self) -> Option<Arc<SpillFile>> {
+        if let Some(sf) = &self.spill {
+            return Some(Arc::clone(sf));
+        }
+        let dir = self.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+        let seq = SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = dir.join(format!(
+            "tricluster-spill-{}-{seq}.bin",
+            std::process::id()
+        ));
+        let created = std::fs::create_dir_all(&dir)
+            .and_then(|_| {
+                std::fs::OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .create(true)
+                    .truncate(true)
+                    .open(&path)
+            });
+        match created {
+            Ok(file) => {
+                let sf = Arc::new(SpillFile { file, path });
+                self.spill = Some(Arc::clone(&sf));
+                Some(sf)
+            }
+            Err(_) => {
+                self.budget_pages = 0;
+                crate::obs::counter("oac.arena.spill_fail", 1);
+                None
+            }
+        }
+    }
+
+    /// Spill the least-recently-touched page chains until ~¼ of the
+    /// budget is free (or candidates run out). Emits `oac.arena.spill`
+    /// (pages moved) and the `oac.arena.page_residency` watermark — the
+    /// LRU stamp below which chains were evicted this sweep.
+    fn spill_sweep(&mut self) {
+        let guard = self.guard;
+        let mut cand: Vec<(u64, SetId)> = self
+            .sets
+            .iter()
+            .enumerate()
+            .filter(|&(i, m)| i as SetId != guard && m.pending > 0)
+            .map(|(i, m)| (m.touch, i as SetId))
+            .collect();
+        cand.sort_unstable();
+        let target = (self.budget_pages / 4).max(1);
+        let mut freed = 0usize;
+        let mut watermark = 0u64;
+        for (stamp, id) in cand {
+            if freed >= target || self.budget_pages == 0 {
+                break;
+            }
+            freed += self.spill_set(id);
+            watermark = stamp;
+        }
+        if freed > 0 {
+            crate::obs::counter("oac.arena.spill", freed as u64);
+            if crate::obs::enabled() {
+                crate::obs::gauge("oac.arena.page_residency", watermark as f64);
+            }
+        }
+    }
+
+    /// Move one set's pending page chain to the spill file and recycle
+    /// its pages; returns pages freed (0 on a disabled/failed spill).
+    fn spill_set(&mut self, id: SetId) -> usize {
+        let pending = self.sets[id as usize].pending as usize;
+        if pending == 0 {
+            return 0;
+        }
+        let mut vals = Vec::with_capacity(pending);
+        self.gather_pending(&self.sets[id as usize], &mut vals);
+        let Some(sf) = self.spill_handle() else { return 0 };
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let off = self.spill_len;
+        if spill_write_at(&sf.file, off, &bytes).is_err() {
+            self.budget_pages = 0;
+            crate::obs::counter("oac.arena.spill_fail", 1);
+            return 0;
+        }
+        self.spill_len += bytes.len() as u64;
+        let m = &mut self.sets[id as usize];
+        m.spilled.push((off, pending as u32));
+        m.pending = 0;
+        let mut page = m.head;
+        m.head = NO_PAGE;
+        m.tail = NO_PAGE;
+        let mut freed = 0usize;
+        while page != NO_PAGE {
+            let nxt = self.next[page as usize];
+            self.free.push(page);
+            page = nxt;
+            freed += 1;
+        }
+        freed
+    }
+
+    /// Append every spilled run of `m` to `out`, in spill order.
+    ///
+    /// # Panics
+    /// On spill-file I/O failure — the data exists nowhere else, so a
+    /// failed read is unrecoverable data loss, not a recoverable state.
+    fn reload_spilled(&self, m: &SetMeta, out: &mut Vec<u32>) {
+        if m.spilled.is_empty() {
+            return;
+        }
+        let sf = self.spill.as_ref().expect("spilled runs imply a spill file");
+        let mut pages = 0usize;
+        for &(off, n) in &m.spilled {
+            let mut bytes = vec![0u8; n as usize * 4];
+            spill_read_at(&sf.file, off, &mut bytes).expect("spill file read");
+            out.extend(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk"))),
+            );
+            pages += (n as usize).div_ceil(PAGE);
+        }
+        crate::obs::counter("oac.arena.reload", pages as u64);
+    }
+
     #[inline]
     /// Append `value` to set `id` (duplicates dedup on materialise).
     pub fn push(&mut self, id: SetId, value: u32) {
         let slot = self.sets[id as usize].pending as usize % PAGE;
         if slot == 0 {
+            if self.budget_pages != 0 {
+                self.clock += 1;
+                self.sets[id as usize].touch = self.clock;
+                self.guard = id;
+            }
             let page = self.alloc_page();
             let m = &mut self.sets[id as usize];
             if m.head == NO_PAGE {
@@ -228,7 +478,7 @@ impl SetArena {
     /// duplicated tail appends) — the capacity hint for materialisation.
     pub fn set_len_bound(&self, id: SetId) -> usize {
         let m = &self.sets[id as usize];
-        m.sorted.len() + m.pending as usize
+        m.sorted.len() + m.pending as usize + m.spilled_len()
     }
 
     /// Copy the unsorted page tail of `m` into `out`, in append order.
@@ -260,14 +510,15 @@ impl SetArena {
     pub fn materialize_into(&self, id: SetId, out: &mut Vec<u32>) {
         out.clear();
         let m = &self.sets[id as usize];
-        out.reserve(m.sorted.len() + m.pending as usize);
+        out.reserve(m.sorted.len() + m.pending as usize + m.spilled_len());
         out.extend_from_slice(&m.sorted);
-        if m.pending == 0 {
+        if m.pending == 0 && m.spilled.is_empty() {
             // §Perf fast path: the cached sorted view is current
             crate::obs::counter("oac.arena.cache_hit", 1);
             return;
         }
         crate::obs::counter("oac.arena.cache_miss", 1);
+        self.reload_spilled(m, out);
         self.gather_pending(m, out);
         out.sort_unstable();
         out.dedup();
@@ -278,11 +529,16 @@ impl SetArena {
     /// recycle the tail pages. After this, materialisation of `id` is a
     /// memcpy until the next `push`.
     pub fn ensure_sorted(&mut self, id: SetId) {
-        if self.sets[id as usize].pending == 0 {
-            return;
+        {
+            let m = &self.sets[id as usize];
+            if m.pending == 0 && m.spilled.is_empty() {
+                return;
+            }
         }
-        let mut tail = Vec::with_capacity(self.sets[id as usize].pending as usize);
-        self.gather_pending(&self.sets[id as usize], &mut tail);
+        let m = &self.sets[id as usize];
+        let mut tail = Vec::with_capacity(m.pending as usize + m.spilled_len());
+        self.reload_spilled(m, &mut tail);
+        self.gather_pending(m, &mut tail);
         tail.sort_unstable();
         tail.dedup();
         let mut page = {
@@ -292,6 +548,7 @@ impl SetArena {
             } else {
                 m.sorted = merge_sorted(&m.sorted, &tail);
             }
+            m.spilled.clear();
             let head = m.head;
             m.head = NO_PAGE;
             m.tail = NO_PAGE;
@@ -313,7 +570,10 @@ impl SetArena {
         let track = crate::obs::enabled();
         let free_before = self.free.len();
         let dirty = if track {
-            self.sets.iter().filter(|m| m.pending > 0).count()
+            self.sets
+                .iter()
+                .filter(|m| m.pending > 0 || !m.spilled.is_empty())
+                .count()
         } else {
             0
         };
@@ -337,6 +597,11 @@ impl SetArena {
         while !vals.is_empty() {
             let slot = self.sets[id as usize].pending as usize % PAGE;
             if slot == 0 {
+                if self.budget_pages != 0 {
+                    self.clock += 1;
+                    self.sets[id as usize].touch = self.clock;
+                    self.guard = id;
+                }
                 let page = self.alloc_page();
                 let m = &mut self.sets[id as usize];
                 if m.head == NO_PAGE {
@@ -360,6 +625,7 @@ impl SetArena {
     pub(crate) fn extend_raw_from(&mut self, dst: SetId, src: &SetArena, src_id: SetId) {
         let m = &src.sets[src_id as usize];
         debug_assert!(m.sorted.is_empty(), "merge sources are never sealed");
+        debug_assert!(m.spilled.is_empty(), "merge sources are never budgeted");
         let mut page = m.head;
         let mut remaining = m.pending as usize;
         while remaining > 0 {
@@ -369,6 +635,20 @@ impl SetArena {
             remaining -= take;
             page = src.next[page as usize];
         }
+    }
+
+    /// Adopt an already sorted+deduplicated set wholesale: the vector
+    /// becomes the set's sealed cache directly — no pages, no re-sort.
+    /// This is the restore path's bulk adoption: a decoded segment's
+    /// page frames land here without per-tuple re-ingest.
+    pub fn adopt_sorted(&mut self, contents: Vec<u32>) -> SetId {
+        debug_assert!(
+            contents.windows(2).all(|w| w[0] < w[1]),
+            "adopted sets must be sorted and deduplicated"
+        );
+        let id = self.alloc();
+        self.sets[id as usize].sorted = contents;
+        id
     }
 }
 
@@ -867,6 +1147,55 @@ impl PrimeStore {
         out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
         out
     }
+
+    /// Rebuild a store from exported cumuli by bulk adoption — the
+    /// inverse of [`Self::cumuli`] and the segment-restore fast path:
+    /// each set's sorted contents become its sealed cache directly, with
+    /// no per-tuple re-ingest and no re-sort. The rebuilt store answers
+    /// [`Self::get`] / [`Self::cumuli`] identically to the original
+    /// (set ids may differ; all observable state is id-independent).
+    pub fn adopt(arity: usize, cumuli: impl IntoIterator<Item = (SubRelation, Vec<u32>)>) -> Self {
+        let mut store = Self::new(arity);
+        for (sub, contents) in cumuli {
+            let id = store.arena.adopt_sorted(contents);
+            let k = sub.dropped();
+            if !store.packed.is_empty() {
+                store.packed[k].insert(pack_elems(sub.as_slice()), id);
+            } else {
+                store.general[k].insert(sub, id);
+            }
+        }
+        store
+    }
+
+    /// Resolve the N cumulus ids a tuple's ingest *would have* touched,
+    /// without mutating anything — the restore path replays the
+    /// generated-record log against an adopted store with this. `None`
+    /// means some key is missing, i.e. the persisted image is
+    /// inconsistent with its own tuple log.
+    pub fn probe(&self, t: &NTuple) -> Option<SetIds> {
+        debug_assert_eq!(t.arity(), self.arity);
+        let mut ids = SetIds::default();
+        if !self.packed.is_empty() {
+            let mut keys = [0u128; MAX_ARITY];
+            pack_keys_into(t, &mut keys);
+            for k in 0..self.arity {
+                let h = ProbeDict::hash(keys[k]);
+                ids.push(self.packed[k].get_hashed(h, keys[k])?);
+            }
+        } else {
+            for k in 0..self.arity {
+                ids.push(*self.general[k].get(&t.subrelation(k))?);
+            }
+        }
+        Some(ids)
+    }
+
+    /// Forward to [`SetArena::set_resident_budget`] — the out-of-core
+    /// ingest knob (`--resident-mib` divides down to per-shard pages).
+    pub fn set_resident_budget(&mut self, pages: usize, spill_dir: Option<PathBuf>) {
+        self.arena.set_resident_budget(pages, spill_dir);
+    }
 }
 
 #[cfg(test)]
@@ -1102,5 +1431,96 @@ mod tests {
         let sub = NTuple::triple(0, 1, 0).subrelation(0);
         let (_, c) = cumuli.iter().find(|(s, _)| *s == sub).expect("key present");
         assert_eq!(*c, vec![0, 2]);
+    }
+
+    #[test]
+    fn spill_budget_preserves_contents() {
+        // A 4-page budget over 32 sets of 3 pages each forces heavy
+        // spilling; every set must still materialise bit-identically to
+        // an unbudgeted arena.
+        let mut tight = SetArena::default();
+        tight.set_resident_budget(4, None);
+        let mut roomy = SetArena::default();
+        let n_sets = 32usize;
+        let per_set = 3 * PAGE as u32;
+        for s in 0..n_sets {
+            tight.alloc();
+            roomy.alloc();
+            for v in 0..per_set {
+                // earlier sets go cold as later ones fill — LRU victims
+                let val = (s as u32 * 7 + v * 13) % 97;
+                tight.push(s as SetId, val);
+                roomy.push(s as SetId, val);
+            }
+        }
+        assert!(
+            tight.pages() <= 4 + 3, // budget + at most one chain in flight
+            "budgeted arena grew to {} pages",
+            tight.pages()
+        );
+        for s in 0..n_sets {
+            assert_eq!(
+                tight.materialize(s as SetId),
+                roomy.materialize(s as SetId),
+                "set {s} diverged under spill"
+            );
+        }
+        // sealing folds spilled runs back in and clears them
+        tight.ensure_sorted_all();
+        for s in 0..n_sets {
+            assert_eq!(
+                tight.materialize(s as SetId),
+                roomy.materialize(s as SetId),
+                "set {s} diverged after seal"
+            );
+        }
+    }
+
+    #[test]
+    fn spilled_ingest_equals_unbudgeted_store() {
+        let mut tight = PrimeStore::new(3);
+        tight.set_resident_budget(8, None);
+        let mut roomy = PrimeStore::new(3);
+        for i in 0..400u32 {
+            let t = NTuple::triple(i % 23, (i / 3) % 17, i % 11);
+            tight.add(&t);
+            roomy.add(&t);
+        }
+        assert_eq!(tight.cumuli(), roomy.cumuli());
+    }
+
+    #[test]
+    fn adopt_rebuilds_equivalent_store() {
+        let mut live = PrimeStore::new(3);
+        for i in 0..200u32 {
+            live.add(&NTuple::triple(i % 13, (i / 2) % 7, i % 5));
+        }
+        let exported = live.cumuli();
+        let mut adopted = PrimeStore::adopt(3, exported.clone());
+        assert_eq!(adopted.arity(), 3);
+        assert_eq!(adopted.total_keys(), live.total_keys());
+        assert_eq!(adopted.cumuli(), exported);
+        // probe resolves every historical tuple without mutating
+        let keys_before = adopted.total_keys();
+        for i in 0..200u32 {
+            let t = NTuple::triple(i % 13, (i / 2) % 7, i % 5);
+            let ids = adopted.probe(&t).expect("historical tuple resolves");
+            assert_eq!(ids.len(), 3);
+        }
+        assert_eq!(adopted.total_keys(), keys_before);
+        // a never-ingested tuple probes to None
+        assert!(adopted.probe(&NTuple::triple(99, 99, 99)).is_none());
+    }
+
+    #[test]
+    fn adopt_general_arity_roundtrip() {
+        let mut live = PrimeStore::new(MAX_ARITY);
+        for i in 0..60u32 {
+            let t = NTuple::new(&[i % 5, i % 4, i % 3, i % 2, i % 7, i % 6]);
+            live.add(&t);
+        }
+        let exported = live.cumuli();
+        let mut adopted = PrimeStore::adopt(MAX_ARITY, exported.clone());
+        assert_eq!(adopted.cumuli(), exported);
     }
 }

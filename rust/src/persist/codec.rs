@@ -1,0 +1,245 @@
+//! Little-endian binary primitives and the segment checksum.
+//!
+//! Everything in a segment is little-endian and length-prefixed; cumulus
+//! values are written as raw `u32` word runs framed to arena-page
+//! multiples ([`crate::oac::primes::PAGE`] words), so the on-disk layout
+//! mirrors [`crate::oac::primes::SetArena`]'s page pool and restore is a
+//! straight word copy. The checksum chains the repo's own
+//! [`mix64`] finalizer over `u64` words (xxhash-style mixing, zero new
+//! dependencies) and is seeded with the byte length, so truncation
+//! cannot collide with a shorter valid body.
+
+use crate::util::hash::mix64;
+
+/// Seed for the segment checksum chain (arbitrary odd constant).
+const CHECKSUM_SEED: u64 = 0x7472_6963_5345_4721;
+
+/// Chained-`mix64` checksum over `bytes`: the stream is consumed as
+/// little-endian `u64` words (tail zero-padded), each folded through one
+/// [`mix64`] round. Order-sensitive and length-sensitive.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = mix64(CHECKSUM_SEED ^ bytes.len() as u64);
+    let mut words = bytes.chunks_exact(8);
+    for w in &mut words {
+        h = mix64(h ^ u64::from_le_bytes(w.try_into().expect("8-byte chunk")));
+    }
+    let rem = words.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        h = mix64(h ^ u64::from_le_bytes(tail));
+    }
+    h
+}
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes encoded so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True before the first write.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// One byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Little-endian `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Little-endian `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `f64` as its IEEE-754 bit pattern (bit-exact round trip).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string record.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// A raw run of `u32` words (caller frames/pads; see [`Self::page_run`]).
+    pub fn words(&mut self, vals: &[u32]) {
+        for &v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// A length-prefixed `u32` run padded with zero words to the next
+    /// [`crate::oac::primes::PAGE`]-word boundary — one cumulus as raw
+    /// page frames, the same framing the arena pool uses.
+    pub fn page_run(&mut self, vals: &[u32]) {
+        self.u32(vals.len() as u32);
+        self.words(vals);
+        let pad = vals.len().next_multiple_of(crate::oac::primes::PAGE) - vals.len();
+        for _ in 0..pad {
+            self.u32(0);
+        }
+    }
+
+    /// Finish: append the checksum of everything written so far and
+    /// return the framed bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        let sum = checksum(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian decoder; every read returns `None` past
+/// the end instead of panicking (the segment layer maps `None` to
+/// [`super::SegmentError::Corrupt`]).
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Reader over `buf` from the start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let slice = self.buf.get(self.pos..end)?;
+        self.pos = end;
+        Some(slice)
+    }
+
+    /// One byte.
+    pub fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    /// Little-endian `u32`.
+    pub fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    /// Little-endian `u64`.
+    pub fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    /// `f64` from its bit pattern.
+    pub fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed UTF-8 string record.
+    pub fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        std::str::from_utf8(self.take(n)?).ok().map(str::to_string)
+    }
+
+    /// `n` raw `u32` words.
+    pub fn words(&mut self, n: usize) -> Option<Vec<u32>> {
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(
+            raw.chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                .collect(),
+        )
+    }
+
+    /// Inverse of [`Writer::page_run`]: length prefix, then the padded
+    /// frame, truncated back to the real length.
+    pub fn page_run(&mut self) -> Option<Vec<u32>> {
+        let len = self.u32()? as usize;
+        let framed = len.next_multiple_of(crate::oac::primes::PAGE);
+        let mut vals = self.words(framed)?;
+        vals.truncate(len);
+        Some(vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f64(-0.125);
+        w.str("modality-α");
+        w.page_run(&[1, 2, 3]);
+        w.page_run(&[]);
+        let bytes = w.finish();
+        // body + trailing checksum
+        let body = &bytes[..bytes.len() - 8];
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        assert_eq!(sum, checksum(body));
+        let mut r = Reader::new(body);
+        assert_eq!(r.u8(), Some(7));
+        assert_eq!(r.u32(), Some(0xDEAD_BEEF));
+        assert_eq!(r.u64(), Some(u64::MAX - 3));
+        assert_eq!(r.f64(), Some(-0.125));
+        assert_eq!(r.str().as_deref(), Some("modality-α"));
+        assert_eq!(r.page_run(), Some(vec![1, 2, 3]));
+        assert_eq!(r.page_run(), Some(vec![]));
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn page_run_frames_to_page_multiples() {
+        use crate::oac::primes::PAGE;
+        for n in [0usize, 1, PAGE - 1, PAGE, PAGE + 1, 3 * PAGE] {
+            let vals: Vec<u32> = (0..n as u32).collect();
+            let mut w = Writer::new();
+            w.page_run(&vals);
+            // 4-byte length prefix + framed words
+            assert_eq!(w.len(), 4 + 4 * n.next_multiple_of(PAGE), "n={n}");
+        }
+    }
+
+    #[test]
+    fn reads_past_end_are_none_not_panics() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert_eq!(r.u32(), None);
+        assert_eq!(r.u8(), Some(1));
+        assert_eq!(r.u64(), None);
+        assert_eq!(r.words(9), None);
+        let mut r2 = Reader::new(&[255, 255, 255, 255]);
+        assert_eq!(r2.str(), None, "huge length prefix must not allocate blindly");
+    }
+
+    #[test]
+    fn checksum_is_length_and_order_sensitive() {
+        assert_ne!(checksum(b"ab"), checksum(b"ba"));
+        assert_ne!(checksum(b"ab"), checksum(b"ab\0"));
+        assert_ne!(checksum(b""), checksum(b"\0"));
+        assert_eq!(checksum(b"tricluster"), checksum(b"tricluster"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Out-of-core persistence: the binary segment log.
+//!
+//! The paper's setting is *big data* — contexts that outgrow one
+//! machine's memory — so durability cannot round-trip pretty-printed
+//! JSON and restore cannot re-mine every tuple. This module replaces
+//! the JSON snapshot path with a compact, versioned, checksummed
+//! **binary segment log**:
+//!
+//! * [`codec`] — little-endian primitives, length-prefixed records, and
+//!   the chained-[`crate::util::hash::mix64`] checksum (the repo's own
+//!   seeded hash utilities; no new dependencies);
+//! * [`segment`] — the segment payload (header, per-shard tuple log,
+//!   cumulus page frames, cluster index, interner tables) and the
+//!   [`SegmentLog`] directory of `seg-NNNNNN.tseg` files;
+//! * [`restore`] — folds a replayed segment sequence into one
+//!   [`LogImage`]: full segments replace state, delta segments append,
+//!   and each shard's cumuli come out sealed (sorted + deduplicated)
+//!   ready for bulk adoption via [`crate::oac::primes::PrimeStore::adopt`]
+//!   — no per-tuple re-ingest.
+//!
+//! Invariants (property-tested in `rust/tests/persist_roundtrip.rs`):
+//!
+//! * **Equivalence-preserving**: write → restore reproduces the live
+//!   service's observable state bit-for-bit (cluster components,
+//!   supports, epochs) for any arity, θ, and shard count.
+//! * **Corruption-safe**: a flipped byte anywhere in a segment fails the
+//!   checksum and surfaces as [`SegmentError::Corrupt`] — typed, never a
+//!   panic. An unknown magic or format version is [`SegmentError::BadMagic`]
+//!   / [`SegmentError::BadVersion`].
+//! * **Torn-tail tolerant**: replay drops a final segment that fails to
+//!   decode (the torn write of a crash) and restores the prefix; a
+//!   NON-final corrupt segment is an error, because silently skipping it
+//!   would resurrect a wrong history.
+//!
+//! Telemetry: `persist.segment.flush` / `persist.segment.restore`
+//! counters and the `persist.flush` span (bytes = encoded segment size);
+//! the spill tier it pairs with emits `oac.arena.{spill,reload}`.
+
+pub mod codec;
+pub mod restore;
+pub mod segment;
+
+pub use restore::{LogImage, ShardImage};
+pub use segment::{
+    SegmentConfig, SegmentKind, SegmentLog, SegmentPayload, ShardRecord, FORMAT_VERSION,
+};
+
+/// Typed persistence failure. Everything the segment layer can hit maps
+/// onto one of these — corruption is a VALUE, never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SegmentError {
+    /// Filesystem failure (create/read/write), with context.
+    Io(String),
+    /// The file does not start with the segment magic — not a segment
+    /// file at all (as opposed to a damaged one).
+    BadMagic,
+    /// A segment written by an incompatible format version.
+    BadVersion(u32),
+    /// Checksum mismatch or malformed body: the segment is damaged.
+    Corrupt {
+        /// Which segment (file name or description) failed.
+        segment: String,
+    },
+}
+
+impl std::fmt::Display for SegmentError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(msg) => write!(f, "segment io: {msg}"),
+            Self::BadMagic => write!(f, "not a segment file (bad magic)"),
+            Self::BadVersion(v) => write!(
+                f,
+                "segment format version {v} unsupported (this build reads {FORMAT_VERSION})"
+            ),
+            Self::Corrupt { segment } => write!(f, "segment corrupt: {segment}"),
+        }
+    }
+}
+
+impl std::error::Error for SegmentError {}
+
+impl SegmentError {
+    pub(crate) fn io(context: &str, e: std::io::Error) -> Self {
+        Self::Io(format!("{context}: {e}"))
+    }
+
+    pub(crate) fn corrupt(segment: impl Into<String>) -> Self {
+        Self::Corrupt { segment: segment.into() }
+    }
+}

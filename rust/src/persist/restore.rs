@@ -1,0 +1,241 @@
+//! Folding a replayed segment sequence into one restorable image.
+//!
+//! Replay hands [`fold`] the decoded payloads in sequence order. A
+//! **full** segment replaces each shard's tuple history and cumuli
+//! outright; a **delta** segment appends its raw per-key values and new
+//! tuples on top (the values carry multiplicity, exactly as
+//! [`crate::serve::ShardDelta`] exported them). After the last segment
+//! the accumulated cumuli are sealed — sorted and deduplicated — so the
+//! image feeds [`crate::oac::primes::PrimeStore::adopt`] directly: bulk
+//! page adoption, no per-tuple re-ingest. A log of pure deltas folds
+//! from the empty base, so incremental checkpoints alone are restorable.
+
+use std::collections::BTreeMap;
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::{NTuple, SubRelation};
+
+use super::segment::{SegmentConfig, SegmentKind, SegmentPayload};
+use super::SegmentError;
+
+/// One shard's restored state: sealed cumuli ready for bulk adoption.
+#[derive(Debug, Clone)]
+pub struct ShardImage {
+    /// The shard's ingest epoch at the last folded segment.
+    pub epoch: u64,
+    /// Full generating-tuple history, in ingest order.
+    pub tuples: Vec<NTuple>,
+    /// Cumuli as `⟨subrelation, strictly sorted values⟩`.
+    pub cumuli: Vec<(SubRelation, Vec<u32>)>,
+}
+
+/// The folded log: everything needed to rebuild a service.
+#[derive(Debug, Clone)]
+pub struct LogImage {
+    /// Relation arity.
+    pub arity: usize,
+    /// Service epoch of the last folded segment.
+    pub epoch: u64,
+    /// Segments folded (torn tails excluded).
+    pub segments: usize,
+    /// Encoded bytes decoded during replay.
+    pub bytes: u64,
+    /// Service configuration from the last folded segment.
+    pub config: SegmentConfig,
+    /// Per-shard restored state.
+    pub shards: Vec<ShardImage>,
+    /// The cluster index from the last segment that carried one (deltas
+    /// may omit it) — an integrity cross-check for the restored miner.
+    pub clusters: Vec<Cluster>,
+}
+
+/// Fold decoded payloads (sequence order) into one [`LogImage`].
+/// `bytes` is the total encoded size replay read, carried through for
+/// restore-throughput accounting.
+pub fn fold(payloads: Vec<SegmentPayload>, bytes: u64) -> Result<LogImage, SegmentError> {
+    let first = payloads
+        .first()
+        .ok_or_else(|| SegmentError::corrupt("empty segment log"))?;
+    let arity = first.arity;
+    let n_shards = first.shards.len();
+    // per-shard accumulator; BTreeMap keeps key order deterministic
+    let mut epochs = vec![0u64; n_shards];
+    let mut tuples: Vec<Vec<NTuple>> = vec![Vec::new(); n_shards];
+    let mut cumuli: Vec<BTreeMap<SubRelation, Vec<u32>>> =
+        vec![BTreeMap::new(); n_shards];
+    let mut clusters = Vec::new();
+    let (mut epoch, mut config) = (first.epoch, first.config.clone());
+    for p in &payloads {
+        if p.arity != arity || p.shards.len() != n_shards {
+            return Err(SegmentError::corrupt(format!(
+                "segment {} disagrees with the log head (arity {} vs {arity}, \
+                 shards {} vs {n_shards})",
+                p.seq,
+                p.arity,
+                p.shards.len()
+            )));
+        }
+        epoch = p.epoch;
+        config = p.config.clone();
+        for (s, rec) in p.shards.iter().enumerate() {
+            match p.kind {
+                SegmentKind::Full => {
+                    epochs[s] = rec.epoch;
+                    tuples[s] = rec.tuples.clone();
+                    cumuli[s] = rec
+                        .cumuli
+                        .iter()
+                        .map(|(sub, values)| (*sub, values.clone()))
+                        .collect();
+                }
+                SegmentKind::Delta => {
+                    epochs[s] = rec.epoch;
+                    tuples[s].extend_from_slice(&rec.tuples);
+                    for (sub, values) in &rec.cumuli {
+                        cumuli[s].entry(*sub).or_default().extend_from_slice(values);
+                    }
+                }
+            }
+        }
+        if !p.clusters.is_empty() {
+            clusters = p.clusters.clone();
+        }
+    }
+    let shards = epochs
+        .into_iter()
+        .zip(tuples)
+        .zip(cumuli)
+        .map(|((epoch, tuples), cumuli)| {
+            // seal: delta appends carry multiplicity, adoption wants
+            // strictly sorted contents
+            let cumuli = cumuli
+                .into_iter()
+                .map(|(sub, mut values)| {
+                    values.sort_unstable();
+                    values.dedup();
+                    (sub, values)
+                })
+                .collect();
+            ShardImage { epoch, tuples, cumuli }
+        })
+        .collect();
+    Ok(LogImage {
+        arity,
+        epoch,
+        segments: payloads.len(),
+        bytes,
+        config,
+        shards,
+        clusters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::segment::ShardRecord;
+
+    fn config() -> SegmentConfig {
+        SegmentConfig { max_pending: 1024, workers: 2, min_density: 0.0, min_support: 1 }
+    }
+
+    fn payload(kind: SegmentKind, epoch: u64, shards: Vec<ShardRecord>) -> SegmentPayload {
+        SegmentPayload {
+            seq: 0,
+            epoch,
+            kind,
+            arity: 3,
+            config: config(),
+            shards,
+            clusters: Vec::new(),
+            interners: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn delta_appends_full_replaces() {
+        let t1 = NTuple::triple(1, 2, 3);
+        let t2 = NTuple::triple(1, 2, 5);
+        let full = payload(
+            SegmentKind::Full,
+            1,
+            vec![ShardRecord {
+                epoch: 1,
+                tuples: vec![t1],
+                cumuli: vec![(t1.subrelation(2), vec![3])],
+            }],
+        );
+        let delta = payload(
+            SegmentKind::Delta,
+            2,
+            vec![ShardRecord {
+                epoch: 2,
+                tuples: vec![t2],
+                // raw append with multiplicity: 3 shows up again
+                cumuli: vec![(t1.subrelation(2), vec![5, 3])],
+            }],
+        );
+        let image = fold(vec![full.clone(), delta], 100).unwrap();
+        assert_eq!(image.epoch, 2);
+        assert_eq!(image.segments, 2);
+        assert_eq!(image.bytes, 100);
+        assert_eq!(image.shards[0].tuples, vec![t1, t2]);
+        // sealed: sorted, deduplicated
+        assert_eq!(image.shards[0].cumuli, vec![(t1.subrelation(2), vec![3, 5])]);
+        // a later FULL wipes the delta contribution
+        let refresh = payload(
+            SegmentKind::Full,
+            3,
+            vec![ShardRecord {
+                epoch: 3,
+                tuples: vec![t2],
+                cumuli: vec![(t1.subrelation(2), vec![5])],
+            }],
+        );
+        let image = fold(
+            vec![full, payload(SegmentKind::Delta, 2, vec![ShardRecord::default()]), refresh],
+            0,
+        )
+        .unwrap();
+        assert_eq!(image.shards[0].tuples, vec![t2]);
+        assert_eq!(image.shards[0].cumuli, vec![(t1.subrelation(2), vec![5])]);
+    }
+
+    #[test]
+    fn pure_delta_log_folds_from_empty_base() {
+        let t = NTuple::triple(7, 8, 9);
+        let delta = payload(
+            SegmentKind::Delta,
+            1,
+            vec![ShardRecord {
+                epoch: 1,
+                tuples: vec![t],
+                cumuli: vec![(t.subrelation(0), vec![7])],
+            }],
+        );
+        let image = fold(vec![delta], 0).unwrap();
+        assert_eq!(image.shards[0].tuples, vec![t]);
+        assert_eq!(image.shards[0].cumuli, vec![(t.subrelation(0), vec![7])]);
+    }
+
+    #[test]
+    fn shape_mismatch_and_empty_log_are_corrupt() {
+        assert!(matches!(fold(Vec::new(), 0), Err(SegmentError::Corrupt { .. })));
+        let one = payload(SegmentKind::Full, 1, vec![ShardRecord::default()]);
+        let two = payload(
+            SegmentKind::Delta,
+            2,
+            vec![ShardRecord::default(), ShardRecord::default()],
+        );
+        assert!(matches!(fold(vec![one, two], 0), Err(SegmentError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn last_nonempty_cluster_index_wins() {
+        let mut a = payload(SegmentKind::Full, 1, vec![ShardRecord::default()]);
+        a.clusters = vec![Cluster::from_sorted(vec![vec![1], vec![2], vec![3]])];
+        let b = payload(SegmentKind::Delta, 2, vec![ShardRecord::default()]);
+        let image = fold(vec![a.clone(), b], 0).unwrap();
+        assert_eq!(image.clusters, a.clusters);
+    }
+}

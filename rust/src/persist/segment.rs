@@ -1,0 +1,584 @@
+//! The binary segment: payload layout, encode/decode, and the on-disk
+//! log directory.
+//!
+//! ## Layout (all little-endian, trailing `u64` checksum)
+//!
+//! ```text
+//! ┌───────────────────────────── header ─────────────────────────────┐
+//! │ magic u64 │ version u32 │ page_size u32 │ arity u32 │ shards u32 │
+//! │ seq u64   │ epoch u64   │ kind u8 (0 = full, 1 = delta)          │
+//! │ config: max_pending u64, workers u32, min_density f64-bits,      │
+//! │         min_support u64                                          │
+//! ├──────────────────────── per shard (×shards) ─────────────────────┤
+//! │ epoch u64 │ n_tuples u64 │ tuples: arity × u32 each              │
+//! │ n_cumuli u64 │ cumuli: dropped u8, kept (arity−1) × u32,         │
+//! │               page run (len u32 + values zero-padded to          │
+//! │               PAGE-word frames — raw arena page frames)          │
+//! ├──────────────────────────── clusters ────────────────────────────┤
+//! │ n u64 │ each: modalities u8, per modality len u32 + ids u32…,    │
+//! │         support u64                                              │
+//! ├──────────────────────────── interners ───────────────────────────┤
+//! │ modalities u8 │ per modality: n u64 + length-prefixed strings    │
+//! ├──────────────────────────────────────────────────────────────────┤
+//! │ checksum u64 (chained mix64 over everything above)               │
+//! └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Decode order is magic → version → checksum → body: a wrong magic is
+//! [`SegmentError::BadMagic`], a future version [`SegmentError::BadVersion`],
+//! and ANY other malformation — flipped byte, truncation, impossible
+//! count — is [`SegmentError::Corrupt`]. The body is only parsed after
+//! the checksum passes, so parse code never runs on damaged bytes.
+//!
+//! A **full** segment carries complete shard state (tuple history +
+//! every cumulus's sorted contents); a **delta** segment carries only
+//! what changed since the previous segment (new tuples + the values
+//! appended per touched key, exactly a [`crate::serve::ShardDelta`]).
+//! Entity interner tables (id → name, one per modality) are
+//! length-prefixed string records; the serve layer keys everything by
+//! `u32` today, so it writes empty tables — the format carries them so
+//! named datasets can persist their vocabularies without a version bump.
+
+use std::path::{Path, PathBuf};
+
+use crate::core::pattern::Cluster;
+use crate::core::tuple::{NTuple, SubRelation, MAX_ARITY};
+use crate::oac::primes::PAGE;
+
+use super::codec::{checksum, Reader, Writer};
+use super::restore::{fold, LogImage};
+use super::SegmentError;
+
+/// Segment file magic: `"TRICSEG1"` as a little-endian `u64`.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"TRICSEG1");
+
+/// On-disk format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Segment file extension.
+const EXT: &str = "tseg";
+
+/// Whether a segment carries complete state or only changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// Complete shard state as of this segment's epoch (replaces
+    /// everything folded so far on replay).
+    Full,
+    /// Only the state added since the previous segment.
+    Delta,
+}
+
+/// Service configuration persisted in every segment header — enough to
+/// rebuild a [`crate::serve::ServeConfig`] without a side channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentConfig {
+    /// Router backpressure high-water mark.
+    pub max_pending: usize,
+    /// Drain-wave worker threads.
+    pub workers: usize,
+    /// Density constraint (bit-exact through the f64 bit pattern).
+    pub min_density: f64,
+    /// Support constraint.
+    pub min_support: usize,
+}
+
+/// One shard's contribution to a segment.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardRecord {
+    /// The shard's ingest epoch as of this segment.
+    pub epoch: u64,
+    /// Generating tuples (full: entire history; delta: new since last).
+    pub tuples: Vec<NTuple>,
+    /// Cumuli as `⟨subrelation, values⟩` (full: complete sorted
+    /// contents; delta: raw appended values with multiplicity).
+    pub cumuli: Vec<(SubRelation, Vec<u32>)>,
+}
+
+/// Everything one segment holds.
+#[derive(Debug, Clone)]
+pub struct SegmentPayload {
+    /// Position in the log (assigned by [`SegmentLog::append`]).
+    pub seq: u64,
+    /// Service epoch this segment was cut at.
+    pub epoch: u64,
+    /// Full or delta.
+    pub kind: SegmentKind,
+    /// Relation arity.
+    pub arity: usize,
+    /// Persisted service configuration.
+    pub config: SegmentConfig,
+    /// One record per shard.
+    pub shards: Vec<ShardRecord>,
+    /// The compacted cluster index at this epoch (may be empty on
+    /// deltas; replay keeps the last non-empty one as an integrity
+    /// cross-check).
+    pub clusters: Vec<Cluster>,
+    /// Entity-name interner per modality (length-prefixed strings;
+    /// empty today — see the module docs).
+    pub interners: Vec<Vec<String>>,
+}
+
+impl SegmentPayload {
+    /// Encode to the framed byte layout (header + body + checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u32(PAGE as u32);
+        w.u32(self.arity as u32);
+        w.u32(self.shards.len() as u32);
+        w.u64(self.seq);
+        w.u64(self.epoch);
+        w.u8(match self.kind {
+            SegmentKind::Full => 0,
+            SegmentKind::Delta => 1,
+        });
+        w.u64(self.config.max_pending as u64);
+        w.u32(self.config.workers as u32);
+        w.f64(self.config.min_density);
+        w.u64(self.config.min_support as u64);
+        for rec in &self.shards {
+            w.u64(rec.epoch);
+            w.u64(rec.tuples.len() as u64);
+            for t in &rec.tuples {
+                w.words(t.as_slice());
+            }
+            w.u64(rec.cumuli.len() as u64);
+            for (sub, values) in &rec.cumuli {
+                w.u8(sub.dropped() as u8);
+                w.words(sub.as_slice());
+                w.page_run(values);
+            }
+        }
+        w.u64(self.clusters.len() as u64);
+        for c in &self.clusters {
+            w.u8(c.components.len() as u8);
+            for comp in &c.components {
+                w.u32(comp.len() as u32);
+                w.words(comp);
+            }
+            w.u64(c.support as u64);
+        }
+        w.u8(self.interners.len() as u8);
+        for table in &self.interners {
+            w.u64(table.len() as u64);
+            for name in table {
+                w.str(name);
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode a framed segment. `name` labels errors (usually the file
+    /// name). See the module docs for the magic/version/checksum order.
+    pub fn decode(bytes: &[u8], name: &str) -> Result<Self, SegmentError> {
+        // the magic + version prefix is readable even on a torn tail —
+        // distinguish "not a segment" / "future format" from damage
+        if bytes.len() < 12 {
+            return Err(SegmentError::corrupt(format!("{name}: shorter than the header")));
+        }
+        let mut head = Reader::new(bytes);
+        if head.u64() != Some(MAGIC) {
+            return Err(SegmentError::BadMagic);
+        }
+        let version = head.u32().expect("length checked");
+        if version != FORMAT_VERSION {
+            return Err(SegmentError::BadVersion(version));
+        }
+        if bytes.len() < 12 + 8 {
+            return Err(SegmentError::corrupt(format!("{name}: no room for a checksum")));
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored =
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        if checksum(body) != stored {
+            return Err(SegmentError::corrupt(format!("{name}: checksum mismatch")));
+        }
+        Self::parse(&body[12..], name)
+    }
+
+    /// Parse the checksummed body after magic + version (never called on
+    /// bytes that failed the checksum).
+    fn parse(body: &[u8], name: &str) -> Result<Self, SegmentError> {
+        let bad = || SegmentError::corrupt(format!("{name}: malformed body"));
+        let mut r = Reader::new(body);
+        let page_size = r.u32().ok_or_else(bad)? as usize;
+        if page_size != PAGE {
+            return Err(SegmentError::corrupt(format!(
+                "{name}: page size {page_size} (this build frames {PAGE})"
+            )));
+        }
+        let arity = r.u32().ok_or_else(bad)? as usize;
+        if !(2..=MAX_ARITY).contains(&arity) {
+            return Err(SegmentError::corrupt(format!("{name}: arity {arity} out of range")));
+        }
+        let n_shards = r.u32().ok_or_else(bad)? as usize;
+        let seq = r.u64().ok_or_else(bad)?;
+        let epoch = r.u64().ok_or_else(bad)?;
+        let kind = match r.u8().ok_or_else(bad)? {
+            0 => SegmentKind::Full,
+            1 => SegmentKind::Delta,
+            k => {
+                return Err(SegmentError::corrupt(format!("{name}: unknown segment kind {k}")))
+            }
+        };
+        let config = SegmentConfig {
+            max_pending: r.u64().ok_or_else(bad)? as usize,
+            workers: r.u32().ok_or_else(bad)? as usize,
+            min_density: r.f64().ok_or_else(bad)?,
+            min_support: r.u64().ok_or_else(bad)? as usize,
+        };
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let shard_epoch = r.u64().ok_or_else(bad)?;
+            let n_tuples = r.u64().ok_or_else(bad)? as usize;
+            let mut tuples = Vec::with_capacity(n_tuples.min(r.remaining() / 4));
+            for _ in 0..n_tuples {
+                tuples.push(NTuple::new(&r.words(arity).ok_or_else(bad)?));
+            }
+            let n_cumuli = r.u64().ok_or_else(bad)? as usize;
+            let mut cumuli = Vec::with_capacity(n_cumuli.min(r.remaining() / 4));
+            for _ in 0..n_cumuli {
+                let dropped = r.u8().ok_or_else(bad)? as usize;
+                if dropped >= arity {
+                    return Err(SegmentError::corrupt(format!(
+                        "{name}: dropped modality {dropped} ≥ arity {arity}"
+                    )));
+                }
+                let kept = r.words(arity - 1).ok_or_else(bad)?;
+                let values = r.page_run().ok_or_else(bad)?;
+                cumuli.push((SubRelation::from_parts(&kept, dropped), values));
+            }
+            shards.push(ShardRecord { epoch: shard_epoch, tuples, cumuli });
+        }
+        let n_clusters = r.u64().ok_or_else(bad)? as usize;
+        let mut clusters = Vec::with_capacity(n_clusters.min(r.remaining() / 8));
+        for _ in 0..n_clusters {
+            let n_comp = r.u8().ok_or_else(bad)? as usize;
+            let mut components = Vec::with_capacity(n_comp);
+            for _ in 0..n_comp {
+                let len = r.u32().ok_or_else(bad)? as usize;
+                components.push(r.words(len).ok_or_else(bad)?);
+            }
+            let support = r.u64().ok_or_else(bad)? as usize;
+            let mut c = Cluster::from_sorted(components);
+            c.support = support;
+            clusters.push(c);
+        }
+        let n_tables = r.u8().ok_or_else(bad)? as usize;
+        let mut interners = Vec::with_capacity(n_tables);
+        for _ in 0..n_tables {
+            let n = r.u64().ok_or_else(bad)? as usize;
+            let mut table = Vec::with_capacity(n.min(r.remaining() / 4));
+            for _ in 0..n {
+                table.push(r.str().ok_or_else(bad)?);
+            }
+            interners.push(table);
+        }
+        if r.remaining() != 0 {
+            return Err(SegmentError::corrupt(format!(
+                "{name}: {} trailing bytes after the body",
+                r.remaining()
+            )));
+        }
+        Ok(Self { seq, epoch, kind, arity, config, shards, clusters, interners })
+    }
+}
+
+/// A directory of `seg-NNNNNN.tseg` files, appended in sequence order.
+#[derive(Debug)]
+pub struct SegmentLog {
+    dir: PathBuf,
+    next_seq: u64,
+}
+
+fn seg_file_name(seq: u64) -> String {
+    format!("seg-{seq:06}.{EXT}")
+}
+
+impl SegmentLog {
+    /// Start a FRESH log at `dir`: the directory is created and any
+    /// existing segment files are removed, so reruns are deterministic
+    /// (a stale tail from a previous run cannot leak into this one).
+    pub fn create(dir: &Path) -> Result<Self, SegmentError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SegmentError::io(&format!("create {}", dir.display()), e))?;
+        for (_, path) in Self::segment_paths(dir)? {
+            std::fs::remove_file(&path)
+                .map_err(|e| SegmentError::io(&format!("clear {}", path.display()), e))?;
+        }
+        Ok(Self { dir: dir.to_path_buf(), next_seq: 0 })
+    }
+
+    /// Open an existing log for appending (next sequence = highest
+    /// present + 1; an empty or missing directory starts at 0).
+    pub fn open(dir: &Path) -> Result<Self, SegmentError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SegmentError::io(&format!("create {}", dir.display()), e))?;
+        let next_seq = Self::segment_paths(dir)?
+            .last()
+            .map(|&(seq, _)| seq + 1)
+            .unwrap_or(0);
+        Ok(Self { dir: dir.to_path_buf(), next_seq })
+    }
+
+    /// The log directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Sequence the next [`Self::append`] will write.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Segment files under `dir`, sorted by sequence number.
+    pub fn segment_paths(dir: &Path) -> Result<Vec<(u64, PathBuf)>, SegmentError> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(dir) {
+            Ok(entries) => entries,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(SegmentError::io(&format!("list {}", dir.display()), e)),
+        };
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| SegmentError::io(&format!("list {}", dir.display()), e))?;
+            let path = entry.path();
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(seq) = name
+                .strip_prefix("seg-")
+                .and_then(|rest| rest.strip_suffix(&format!(".{EXT}")))
+                .and_then(|digits| digits.parse::<u64>().ok())
+            {
+                out.push((seq, path));
+            }
+        }
+        out.sort_unstable_by_key(|&(seq, _)| seq);
+        Ok(out)
+    }
+
+    /// Stamp the payload with the next sequence, encode, and write it.
+    /// Returns the encoded byte count (what the sims charge as REAL
+    /// delta MiB instead of a model estimate). Emits the `persist.flush`
+    /// span (bytes = segment size) and `persist.segment.flush`.
+    pub fn append(&mut self, payload: &mut SegmentPayload) -> Result<u64, SegmentError> {
+        let mut span = crate::span!("persist.flush");
+        payload.seq = self.next_seq;
+        let bytes = payload.encode();
+        span.records_in(payload.shards.iter().map(|s| s.tuples.len() as u64).sum());
+        span.bytes(bytes.len() as u64);
+        let path = self.dir.join(seg_file_name(self.next_seq));
+        std::fs::write(&path, &bytes)
+            .map_err(|e| SegmentError::io(&format!("write {}", path.display()), e))?;
+        self.next_seq += 1;
+        crate::obs::counter("persist.segment.flush", 1);
+        Ok(bytes.len() as u64)
+    }
+
+    /// Decode every segment under `dir` in sequence order and fold them
+    /// into one [`LogImage`]. A FINAL segment that fails to decode is a
+    /// torn tail — dropped, and the retained prefix is returned
+    /// (`persist.segment.torn` counts it); a non-final failure is an
+    /// error. Emits `persist.segment.restore` per decoded segment.
+    pub fn replay(dir: &Path) -> Result<LogImage, SegmentError> {
+        let paths = Self::segment_paths(dir)?;
+        if paths.is_empty() {
+            return Err(SegmentError::Io(format!(
+                "no segments under {}",
+                dir.display()
+            )));
+        }
+        let last = paths.len() - 1;
+        let mut payloads = Vec::with_capacity(paths.len());
+        let mut bytes_read = 0u64;
+        for (i, (_, path)) in paths.iter().enumerate() {
+            let name = path.display().to_string();
+            let decoded = std::fs::read(path)
+                .map_err(|e| SegmentError::io(&format!("read {name}"), e))
+                .and_then(|raw| {
+                    let n = raw.len() as u64;
+                    SegmentPayload::decode(&raw, &name).map(|p| (p, n))
+                });
+            match decoded {
+                Ok((payload, n)) => {
+                    bytes_read += n;
+                    payloads.push(payload);
+                    crate::obs::counter("persist.segment.restore", 1);
+                }
+                Err(SegmentError::Corrupt { .. }) if i == last && i > 0 => {
+                    // torn final segment: restore the retained prefix
+                    crate::obs::counter("persist.segment.torn", 1);
+                    break;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        fold(payloads, bytes_read)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oac::post::Constraints;
+
+    fn sample_payload() -> SegmentPayload {
+        let tuples = vec![NTuple::triple(1, 2, 3), NTuple::triple(1, 2, 4)];
+        let cumuli = vec![
+            (NTuple::triple(1, 2, 3).subrelation(2), vec![3, 4]),
+            (NTuple::triple(1, 2, 3).subrelation(0), vec![1]),
+        ];
+        let mut cluster = Cluster::from_sorted(vec![vec![1], vec![2], vec![3, 4]]);
+        cluster.support = 2;
+        SegmentPayload {
+            seq: 0,
+            epoch: 7,
+            kind: SegmentKind::Full,
+            arity: 3,
+            config: SegmentConfig {
+                max_pending: 65536,
+                workers: 4,
+                min_density: 0.25,
+                min_support: 2,
+            },
+            shards: vec![
+                ShardRecord { epoch: 3, tuples, cumuli },
+                ShardRecord::default(),
+            ],
+            clusters: vec![cluster],
+            interners: vec![vec!["alice".into(), "bob".into()], vec![], vec![]],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = sample_payload();
+        let bytes = p.encode();
+        let q = SegmentPayload::decode(&bytes, "mem").unwrap();
+        assert_eq!(q.seq, p.seq);
+        assert_eq!(q.epoch, p.epoch);
+        assert_eq!(q.kind, p.kind);
+        assert_eq!(q.arity, p.arity);
+        assert_eq!(q.config, p.config);
+        assert_eq!(q.shards, p.shards);
+        assert_eq!(q.clusters, p.clusters);
+        assert_eq!(q.interners, p.interners);
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let bytes = sample_payload().encode();
+        // flip each byte in turn: decode must FAIL (typed) every time —
+        // magic/version damage included, never a panic, never silence
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                SegmentPayload::decode(&bad, "mem").is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_corrupt() {
+        let bytes = sample_payload().encode();
+        for keep in [0, 1, 11, 12, 19, bytes.len() / 2, bytes.len() - 1] {
+            match SegmentPayload::decode(&bytes[..keep], "mem") {
+                Err(SegmentError::Corrupt { .. }) => {}
+                other => panic!("keep={keep}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut bytes = sample_payload().encode();
+        bytes[0] ^= 0xFF;
+        assert!(matches!(
+            SegmentPayload::decode(&bytes, "mem"),
+            Err(SegmentError::BadMagic)
+        ));
+        let mut bytes = sample_payload().encode();
+        bytes[8] = 99; // version field
+        assert!(matches!(
+            SegmentPayload::decode(&bytes, "mem"),
+            Err(SegmentError::BadVersion(_))
+        ));
+    }
+
+    #[test]
+    fn log_appends_and_replays_in_order() {
+        let dir = std::env::temp_dir().join("tricluster_segment_log_test");
+        let mut log = SegmentLog::create(&dir).unwrap();
+        let mut full = sample_payload();
+        let n1 = log.append(&mut full).unwrap();
+        assert_eq!(full.seq, 0);
+        let mut delta = SegmentPayload {
+            kind: SegmentKind::Delta,
+            epoch: 8,
+            clusters: Vec::new(),
+            shards: vec![
+                ShardRecord {
+                    epoch: 4,
+                    tuples: vec![NTuple::triple(9, 9, 9)],
+                    cumuli: vec![(NTuple::triple(9, 9, 9).subrelation(0), vec![9])],
+                },
+                ShardRecord::default(),
+            ],
+            ..sample_payload()
+        };
+        let n2 = log.append(&mut delta).unwrap();
+        assert_eq!(delta.seq, 1);
+        assert!(n1 > 0 && n2 > 0);
+        let image = SegmentLog::replay(&dir).unwrap();
+        assert_eq!(image.segments, 2);
+        assert_eq!(image.epoch, 8);
+        assert_eq!(image.bytes, n1 + n2);
+        // full history + the delta tuple
+        assert_eq!(image.shards[0].tuples.len(), 3);
+        // re-open continues the sequence; create() clears it
+        assert_eq!(SegmentLog::open(&dir).unwrap().next_seq(), 2);
+        let fresh = SegmentLog::create(&dir).unwrap();
+        assert_eq!(fresh.next_seq(), 0);
+        assert!(SegmentLog::segment_paths(&dir).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_final_segment_is_dropped_midlog_corruption_is_fatal() {
+        let dir = std::env::temp_dir().join("tricluster_segment_torn_test");
+        let mut log = SegmentLog::create(&dir).unwrap();
+        for _ in 0..3 {
+            log.append(&mut sample_payload()).unwrap();
+        }
+        let paths = SegmentLog::segment_paths(&dir).unwrap();
+        // truncate the FINAL segment mid-body: replay keeps the prefix
+        let raw = std::fs::read(&paths[2].1).unwrap();
+        std::fs::write(&paths[2].1, &raw[..raw.len() / 2]).unwrap();
+        let image = SegmentLog::replay(&dir).unwrap();
+        assert_eq!(image.segments, 2);
+        // corrupt a MIDDLE segment: replay must refuse
+        let raw = std::fs::read(&paths[1].1).unwrap();
+        let mut bad = raw.clone();
+        let at = bad.len() - 9; // inside the body, not the magic
+        bad[at] ^= 0x01;
+        std::fs::write(&paths[1].1, &bad).unwrap();
+        assert!(matches!(
+            SegmentLog::replay(&dir),
+            Err(SegmentError::Corrupt { .. })
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn constraints_roundtrip_bit_exact() {
+        let cons = Constraints { min_density: 0.1 + 0.2, min_support: 3 };
+        let mut p = sample_payload();
+        p.config.min_density = cons.min_density;
+        let q = SegmentPayload::decode(&p.encode(), "mem").unwrap();
+        // f64 bit pattern survives exactly (0.1 + 0.2 ≠ 0.3 in IEEE-754)
+        assert_eq!(q.config.min_density.to_bits(), cons.min_density.to_bits());
+    }
+}

@@ -44,6 +44,7 @@
 //! splits the difference. `benches/serve_cluster.rs` sweeps the three
 //! policies × churn and gates the trajectory in CI.
 
+use std::path::PathBuf;
 use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
@@ -53,6 +54,9 @@ use crate::core::tuple::NTuple;
 use crate::exec::cluster_sim::{ChurnConfig, ShuffleModel};
 use crate::exec::placement::{by_name, place_replicas, NodeView, Placement, TaskMeta};
 use crate::oac::post::Constraints;
+use crate::persist::{
+    LogImage, SegmentConfig, SegmentKind, SegmentLog, SegmentPayload, ShardRecord,
+};
 use crate::util::hash::fxhash;
 use crate::util::rng::Rng;
 
@@ -60,7 +64,7 @@ use super::backend::LocalBackend;
 use super::epoch::{EpochSnapshot, SnapshotCell};
 use super::merge::Compactor;
 use super::replica::{ReplicaSet, SharedReplicas, SimRemoteBackend};
-use super::shard::Shard;
+use super::shard::{Shard, ShardDelta};
 
 /// Configuration of a [`ServeSim`].
 #[derive(Debug, Clone)]
@@ -114,6 +118,16 @@ pub struct ServeSimConfig {
     pub retained: u64,
     /// Seed for source-arrival and churn draws.
     pub seed: u64,
+    /// Segment-log directory: every compaction appends a binary delta
+    /// segment, churn recovery restores killed shards from the log by
+    /// bulk page adoption, and replica delta MiB is charged from the
+    /// REAL encoded segment bytes instead of the shuffle-model estimate.
+    /// `None` keeps recovery in-memory (the pre-segment behaviour).
+    pub segment_dir: Option<PathBuf>,
+    /// Resident arena budget in MiB across shards; ingest past it spills
+    /// cold pages ([`crate::oac::primes::SetArena`]) so contexts larger
+    /// than RAM stream through instead of aborting. `0` = unlimited.
+    pub resident_mib: usize,
 }
 
 impl ServeSimConfig {
@@ -146,6 +160,8 @@ impl ServeSimConfig {
             replicas: 0,
             retained: 2,
             seed: 0x5EED,
+            segment_dir: None,
+            resident_mib: 0,
         }
     }
 }
@@ -244,18 +260,40 @@ pub struct ServeSim {
     cell: Arc<SnapshotCell>,
     /// Replica shards (None when `cfg.replicas == 0`).
     replicas: Option<SharedReplicas>,
-    /// Generated tuples already streamed to replicas (delta watermark:
-    /// each publication charges only the new tuples since the last).
-    published_generated: usize,
+    /// Segment log receiving one delta segment per compaction (None
+    /// without `cfg.segment_dir`).
+    log: Option<SegmentLog>,
+    /// Encoded bytes of the last compaction's delta segment — the REAL
+    /// replica streaming cost [`Self::publish_epoch`] charges.
+    last_delta_bytes: u64,
     stats: ServeSimStats,
 }
 
 impl ServeSim {
-    /// Build the simulation; fails only on an unknown placement name.
+    /// Build the simulation; fails on an unknown placement name or an
+    /// unwritable segment directory.
     pub fn new(cfg: ServeSimConfig) -> Result<Self> {
         let placement = by_name(&cfg.placement)?;
         let nodes = cfg.nodes.max(1);
         let n_shards = cfg.shards.max(1);
+        // fresh log per run: stale segments from a previous run would
+        // break rerun determinism (and the equivalence invariant)
+        let log = match &cfg.segment_dir {
+            Some(dir) => Some(
+                SegmentLog::create(dir)
+                    .map_err(|e| anyhow::anyhow!("segment log: {e}"))?,
+            ),
+            None => None,
+        };
+        let mut shards: Vec<Shard> =
+            (0..n_shards).map(|s| Shard::new(s, cfg.arity)).collect();
+        if cfg.resident_mib > 0 {
+            let pages = crate::oac::primes::resident_pages(cfg.resident_mib, n_shards);
+            let spill_dir = cfg.segment_dir.as_ref().map(|d| d.join("spill"));
+            for shard in &mut shards {
+                shard.set_resident_budget(pages, spill_dir.clone());
+            }
+        }
         let mut acc = 0.0;
         let source_cum: Vec<f64> = (0..nodes)
             .map(|i| {
@@ -264,7 +302,7 @@ impl ServeSim {
             })
             .collect();
         let mut sim = Self {
-            shards: (0..n_shards).map(|s| Shard::new(s, cfg.arity)).collect(),
+            shards,
             compactor: Compactor::new(n_shards),
             assignment: vec![0; n_shards],
             lanes: vec![vec![0.0; cfg.slots_per_node.max(1)]; nodes],
@@ -281,7 +319,8 @@ impl ServeSim {
             churn_rng: Rng::new(cfg.seed ^ 0x4348_5552_4E21),
             cell: Arc::new(SnapshotCell::new()),
             replicas: None,
-            published_generated: 0,
+            log,
+            last_delta_bytes: 0,
             stats: ServeSimStats {
                 per_node_records: vec![0; nodes],
                 ..ServeSimStats::default()
@@ -498,7 +537,16 @@ impl ServeSim {
     /// and rebuilds the miner on the destination.
     pub fn compact(&mut self) {
         let _span = crate::span!("serve.sim.compact");
-        self.compactor.pull(&mut self.shards);
+        // explicit pull (instead of `Compactor::pull`) so the deltas can
+        // be encoded as a binary segment BEFORE they are merged: the
+        // encoded size is the real replica-streaming cost, and the log —
+        // when configured — becomes the churn-recovery source
+        let deltas: Vec<ShardDelta> =
+            self.shards.iter_mut().map(Shard::take_delta).collect();
+        self.last_delta_bytes = self.persist_deltas(&deltas);
+        for delta in &deltas {
+            self.compactor.apply(delta);
+        }
         self.stats.compactions += 1;
         for s in 0..self.shards.len() {
             self.compacted_len[s] = self.shards[s].len();
@@ -583,11 +631,53 @@ impl ServeSim {
         }
     }
 
+    /// Encode this compaction's deltas as ONE delta segment; returns the
+    /// encoded size in bytes — the real (measured, not modelled) delta
+    /// traffic [`Self::publish_epoch`] charges per replica. With a
+    /// segment log configured the segment is also appended to disk; a
+    /// write failure downgrades to in-memory recovery
+    /// (`persist.segment.flush_fail`) instead of killing the drain.
+    fn persist_deltas(&mut self, deltas: &[ShardDelta]) -> u64 {
+        let mut payload = SegmentPayload {
+            seq: 0,
+            epoch: self.stats.compactions as u64 + 1,
+            kind: SegmentKind::Delta,
+            arity: self.cfg.arity,
+            config: SegmentConfig {
+                max_pending: 0,
+                workers: self.cfg.slots_per_node,
+                min_density: self.cfg.constraints.min_density,
+                min_support: self.cfg.constraints.min_support,
+            },
+            shards: deltas
+                .iter()
+                .map(|d| ShardRecord {
+                    epoch: d.epoch,
+                    tuples: d.tuples.clone(),
+                    cumuli: d.appends.clone(),
+                })
+                .collect(),
+            clusters: Vec::new(),
+            interners: Vec::new(),
+        };
+        match &mut self.log {
+            Some(log) => match log.append(&mut payload) {
+                Ok(bytes) => bytes,
+                Err(_) => {
+                    crate::obs::counter("persist.segment.flush_fail", 1);
+                    self.log = None;
+                    payload.encode().len() as u64
+                }
+            },
+            None => payload.encode().len() as u64,
+        }
+    }
+
     /// Publish the freshly compacted index as an immutable epoch
     /// snapshot: swap it into the primary's [`SnapshotCell`], then
-    /// stream it to the replica set. The delta traffic (generated
-    /// tuples merged since the last publication) is charged on the
-    /// replica nodes OFF the drain critical path — replication is
+    /// stream it to the replica set. The delta traffic — the REAL
+    /// encoded bytes of this compaction's delta segment — is charged on
+    /// the replica nodes OFF the drain critical path — replication is
     /// asynchronous, which is exactly why replicas can trail the
     /// primary by up to the retained window.
     fn publish_epoch(&mut self) {
@@ -595,12 +685,9 @@ impl ServeSim {
         let snap = self.compactor.snapshot(&self.cfg.constraints, epoch);
         self.cell.publish(Arc::clone(&snap));
         let Some(replicas) = self.replicas.clone() else {
-            self.published_generated = self.compactor.generated_len();
             return;
         };
-        let delta = self.compactor.generated_len() - self.published_generated;
-        self.published_generated = self.compactor.generated_len();
-        let mib = self.cfg.shuffle.mib(delta);
+        let mib = self.last_delta_bytes as f64 / (1024.0 * 1024.0);
         let ready = self.prev_wave_end;
         let mut set = replicas.write().expect("replica set poisoned");
         for r in 0..set.len() {
@@ -653,12 +740,25 @@ impl ServeSim {
     /// Kill `node` at simulated instant `at`: its slots refuse work for
     /// `restart_ms`, and every shard on it loses all state since the
     /// last compaction — each is re-placed and REALLY rebuilt from the
-    /// compacted snapshot plus the retained in-flight window.
+    /// compacted state plus the retained in-flight window. With a
+    /// segment log the compacted state comes from REPLAYING THE LOG —
+    /// bulk page adoption, the log fetched once per kill and charged at
+    /// its real encoded size; without one (or when replay fails) the
+    /// prefix is re-mined in memory, the pre-segment behaviour.
     fn kill_node(&mut self, node: usize, at: f64) {
         self.stats.kills += 1;
         let restart = self.cfg.churn.restart_ms.max(0.0);
         for lane in &mut self.lanes[node] {
             *lane = lane.max(at) + restart;
+        }
+        // fetch the segment log once: every shard recovering from this
+        // kill adopts its pages out of the same replayed image
+        let log_image: Option<LogImage> = self
+            .log
+            .as_ref()
+            .and_then(|log| SegmentLog::replay(log.dir()).ok());
+        if let Some(image) = &log_image {
+            self.stats.recovery_mib += image.bytes as f64 / (1024.0 * 1024.0);
         }
         let nodes = self.lanes.len();
         for s in 0..self.shards.len() {
@@ -671,10 +771,39 @@ impl ServeSim {
             // next compaction as usual)
             let history = self.shards[s].ingested_tuples();
             let (compacted, window) = history.split_at(self.compacted_len[s]);
-            let mut fresh = Shard::new(s, self.cfg.arity);
-            if !compacted.is_empty() {
-                fresh.ingest(compacted);
-                let _ = fresh.take_delta();
+            let adopted = log_image.as_ref().and_then(|image| {
+                let state = image.shards.get(s)?;
+                let mut shard = Shard::restore(
+                    s,
+                    self.cfg.arity,
+                    0,
+                    &state.tuples,
+                    state.cumuli.clone(),
+                )
+                .ok()?;
+                let _ = shard.take_delta(); // the index already has it
+                Some(shard)
+            });
+            let from_log = adopted.is_some();
+            let mut fresh = match adopted {
+                Some(shard) => shard,
+                None => {
+                    let mut shard = Shard::new(s, self.cfg.arity);
+                    if !compacted.is_empty() {
+                        shard.ingest(compacted);
+                        let _ = shard.take_delta();
+                    }
+                    shard
+                }
+            };
+            if self.cfg.resident_mib > 0 {
+                fresh.set_resident_budget(
+                    crate::oac::primes::resident_pages(
+                        self.cfg.resident_mib,
+                        self.shards.len(),
+                    ),
+                    self.cfg.segment_dir.as_ref().map(|d| d.join("spill")),
+                );
             }
             fresh.set_epoch(self.epoch_at_compact[s]);
             if !window.is_empty() {
@@ -705,10 +834,13 @@ impl ServeSim {
             };
             let dest = self.placement.place(&meta, &views).min(nodes - 1);
             self.assignment[s] = dest;
-            // recovery cost on the destination: snapshot fetch + full
-            // replay compute; mining of the current wave's bin for this
-            // shard queues behind it
-            let mib = self.cfg.shuffle.mib(history.len());
+            // recovery cost on the destination: snapshot fetch + replay
+            // compute; mining of the current wave's bin for this shard
+            // queues behind it. Log-based recovery already charged the
+            // fetch ONCE at the log's real encoded size, so only the
+            // modelled fallback pays the per-shard estimate here.
+            let mib =
+                if from_log { 0.0 } else { self.cfg.shuffle.mib(history.len()) };
             self.stats.recovery_mib += mib;
             let cost = mib * self.cfg.shuffle.ms_per_mib
                 + history.len() as f64 * self.cfg.mine_ms_per_record;

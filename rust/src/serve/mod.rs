@@ -31,7 +31,10 @@
 //! * [`query`] — the direct, zero-policy engine over one snapshot
 //!   (top-k by density, allocation-free membership ids, aggregate
 //!   stats) — what the equivalence suites compare every backend to;
-//! * [`snapshot`] — JSON snapshot/restore for restart recovery;
+//! * [`snapshot`] — restart recovery via the [`crate::persist`] binary
+//!   segment log (checksummed page-frame segments, restore by bulk page
+//!   adoption), with the original JSON path kept as a debug fallback
+//!   behind [`SnapshotFormat::Json`];
 //! * [`cluster`] — the service placed on a simulated N-node cluster:
 //!   shard placement via [`crate::exec::Placement`], shuffle-cost
 //!   accounting, node churn with snapshot replay, and the replica
@@ -71,7 +74,7 @@ pub use router::{Router, RouterStats};
 pub use shard::{Shard, ShardDelta};
 pub use tenant::{MultiTenantSim, TenantPoolConfig, TenantSpec, TenantStats};
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::core::pattern::Cluster;
@@ -97,6 +100,40 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Constraints applied when materialising the cluster index.
     pub constraints: Constraints,
+    /// Segment-log directory for durability ([`SnapshotFormat::Segment`]
+    /// snapshots land here; the spill tier uses `<dir>/spill`). `None`
+    /// keeps the service memory-only.
+    pub segment_dir: Option<PathBuf>,
+    /// Resident arena budget in MiB, split across shards
+    /// ([`crate::oac::primes::resident_pages`]); ingest beyond it spills
+    /// cold page chains to disk instead of aborting. `0` = unlimited.
+    pub resident_mib: usize,
+    /// Snapshot encoding for [`TriclusterService::snapshot_to`].
+    pub snapshot_format: SnapshotFormat,
+}
+
+/// Snapshot encoding: the binary segment log (default) or the legacy
+/// pretty-printed JSON document (debug fallback — human-inspectable,
+/// order-of-magnitude slower to restore because it re-ingests every
+/// tuple instead of adopting pages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SnapshotFormat {
+    /// Binary segment log ([`crate::persist`]).
+    #[default]
+    Segment,
+    /// Legacy JSON document ([`snapshot::to_json`]).
+    Json,
+}
+
+impl SnapshotFormat {
+    /// Parse a CLI spelling (`segment` | `json`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "segment" => Some(Self::Segment),
+            "json" => Some(Self::Json),
+            _ => None,
+        }
+    }
 }
 
 impl ServeConfig {
@@ -111,6 +148,9 @@ impl ServeConfig {
             max_pending: 64 * 1024,
             workers: pool::default_workers(),
             constraints: Constraints::none(),
+            segment_dir: None,
+            resident_mib: 0,
+            snapshot_format: SnapshotFormat::Segment,
         }
     }
 
@@ -162,6 +202,10 @@ pub enum ServeConfigError {
     ZeroQuota,
     /// A tenant pool with no tenants.
     NoTenants,
+    /// `--snapshot-format json` combined with a segment directory: the
+    /// JSON fallback cannot write the segment log the directory implies,
+    /// so durability would silently differ from what the flags suggest.
+    FormatDirMismatch,
 }
 
 impl std::fmt::Display for ServeConfigError {
@@ -185,6 +229,11 @@ impl std::fmt::Display for ServeConfigError {
             Self::NoTenants => {
                 write!(f, "serve config: a tenant pool needs >= 1 tenant")
             }
+            Self::FormatDirMismatch => write!(
+                f,
+                "serve config: snapshot format `json` cannot drive a \
+                 segment directory (drop --segment-dir or use `segment`)"
+            ),
         }
     }
 }
@@ -245,6 +294,9 @@ pub struct ServeConfigBuilder {
     replicas: usize,
     retained: Option<u64>,
     seed: Option<u64>,
+    segment_dir: Option<PathBuf>,
+    resident_mib: usize,
+    snapshot_format: SnapshotFormat,
 }
 
 impl Default for ServeConfigBuilder {
@@ -273,6 +325,9 @@ impl Default for ServeConfigBuilder {
             replicas: 0,
             retained: None,
             seed: None,
+            segment_dir: None,
+            resident_mib: 0,
+            snapshot_format: SnapshotFormat::Segment,
         }
     }
 }
@@ -421,6 +476,28 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Segment-log directory: compactions append binary segments here
+    /// and recovery replays them (CLI `--segment-dir`).
+    pub fn segment_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.segment_dir = Some(dir.into());
+        self
+    }
+
+    /// Resident arena budget in MiB across shards; ingest past it spills
+    /// cold pages to disk (CLI `--resident-mib`; `0` = unlimited).
+    pub fn resident_mib(mut self, mib: usize) -> Self {
+        self.resident_mib = mib;
+        self
+    }
+
+    /// Snapshot encoding (CLI `--snapshot-format`). `Json` with a
+    /// segment directory set is rejected at build time
+    /// ([`ServeConfigError::FormatDirMismatch`]).
+    pub fn snapshot_format(mut self, format: SnapshotFormat) -> Self {
+        self.snapshot_format = format;
+        self
+    }
+
     /// Reject knob combinations that could only fail later (run by
     /// every finisher).
     fn validate(&self) -> Result<(), ServeConfigError> {
@@ -442,6 +519,9 @@ impl ServeConfigBuilder {
         if self.tenants == 0 {
             return Err(ServeConfigError::NoTenants);
         }
+        if self.snapshot_format == SnapshotFormat::Json && self.segment_dir.is_some() {
+            return Err(ServeConfigError::FormatDirMismatch);
+        }
         Ok(())
     }
 
@@ -457,6 +537,9 @@ impl ServeConfigBuilder {
             cfg.workers = v.max(1);
         }
         cfg.constraints = self.constraints;
+        cfg.segment_dir = self.segment_dir;
+        cfg.resident_mib = self.resident_mib;
+        cfg.snapshot_format = self.snapshot_format;
         Ok(cfg)
     }
 
@@ -486,6 +569,8 @@ impl ServeConfigBuilder {
         if let Some(v) = self.seed {
             pool.seed = v;
         }
+        pool.segment_dir = self.segment_dir.clone();
+        pool.resident_mib = self.resident_mib;
         for t in 0..self.tenants {
             let mut spec = TenantSpec::new(&format!("tenant-{t}"), self.arity);
             spec.constraints = self.constraints.clone();
@@ -546,6 +631,8 @@ impl ServeConfigBuilder {
             cfg.seed = v;
         }
         cfg.constraints = self.constraints;
+        cfg.segment_dir = self.segment_dir;
+        cfg.resident_mib = self.resident_mib;
         Ok(cfg)
     }
 }
@@ -687,13 +774,26 @@ impl TriclusterService {
     }
 
     /// Write a restart-recovery snapshot (flushes queued tuples first).
+    /// Under [`SnapshotFormat::Segment`] (the default) `path` is a
+    /// directory receiving one full binary segment; under
+    /// [`SnapshotFormat::Json`] it is the legacy JSON document.
     pub fn snapshot_to(&mut self, path: &Path) -> anyhow::Result<()> {
-        snapshot::save(self, path)
+        match self.cfg.snapshot_format {
+            SnapshotFormat::Segment => snapshot::save_segments(self, path),
+            SnapshotFormat::Json => snapshot::save(self, path),
+        }
     }
 
     /// Rebuild a service from a snapshot written by [`Self::snapshot_to`].
+    /// Dispatches on what is on disk: a directory is replayed as a
+    /// segment log (restore by bulk page adoption), a file is parsed as
+    /// the legacy JSON document.
     pub fn restore_from(path: &Path) -> anyhow::Result<Self> {
-        snapshot::load(path)
+        if path.is_dir() {
+            snapshot::load_segments(path)
+        } else {
+            snapshot::load(path)
+        }
     }
 }
 
@@ -885,6 +985,49 @@ mod tests {
         assert_eq!(pool.tenants.len(), 3);
         assert_eq!(pool.nodes, 4);
         assert!(pool.tenants.iter().all(|t| t.shards == 2 && t.quota == 500));
+    }
+
+    #[test]
+    fn builder_persistence_knobs_flow_through_every_finisher() {
+        let cfg = ServeConfig::builder()
+            .segment_dir("/tmp/seglog")
+            .resident_mib(64)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.segment_dir.as_deref(), Some(Path::new("/tmp/seglog")));
+        assert_eq!(cfg.resident_mib, 64);
+        assert_eq!(cfg.snapshot_format, SnapshotFormat::Segment);
+        let sim = ServeConfig::builder()
+            .segment_dir("/tmp/seglog")
+            .resident_mib(64)
+            .build_sim()
+            .unwrap();
+        assert_eq!(sim.segment_dir.as_deref(), Some(Path::new("/tmp/seglog")));
+        assert_eq!(sim.resident_mib, 64);
+        let pool = ServeConfig::builder()
+            .segment_dir("/tmp/seglog")
+            .resident_mib(64)
+            .build_pool()
+            .unwrap();
+        assert_eq!(pool.segment_dir.as_deref(), Some(Path::new("/tmp/seglog")));
+        assert_eq!(pool.resident_mib, 64);
+        // JSON fallback cannot drive a segment directory
+        assert_eq!(
+            ServeConfig::builder()
+                .snapshot_format(SnapshotFormat::Json)
+                .segment_dir("/tmp/seglog")
+                .build()
+                .unwrap_err(),
+            ServeConfigError::FormatDirMismatch
+        );
+        // JSON without a directory stays a valid debug fallback
+        assert!(ServeConfig::builder()
+            .snapshot_format(SnapshotFormat::Json)
+            .build()
+            .is_ok());
+        assert_eq!(SnapshotFormat::parse("segment"), Some(SnapshotFormat::Segment));
+        assert_eq!(SnapshotFormat::parse("json"), Some(SnapshotFormat::Json));
+        assert_eq!(SnapshotFormat::parse("yaml"), None);
     }
 
     #[test]

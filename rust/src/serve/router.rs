@@ -93,7 +93,16 @@ impl Router {
     /// Router configured from a [`crate::serve::ServeConfig`] — the one
     /// construction path the service and its builder share.
     pub fn from_config(cfg: &crate::serve::ServeConfig) -> Self {
-        Self::new(cfg.arity, cfg.shards, cfg.max_pending, cfg.workers)
+        let mut router = Self::new(cfg.arity, cfg.shards, cfg.max_pending, cfg.workers);
+        if cfg.resident_mib > 0 {
+            let pages =
+                crate::oac::primes::resident_pages(cfg.resident_mib, router.num_shards());
+            let spill_dir = cfg.segment_dir.as_ref().map(|d| d.join("spill"));
+            for shard in &mut router.shards {
+                shard.set_resident_budget(pages, spill_dir.clone());
+            }
+        }
+        router
     }
 
     /// Shard count.

@@ -57,6 +57,40 @@ impl Shard {
         Self { id, miner: OnlineMiner::new(arity), epoch: 0, exported: 0 }
     }
 
+    /// Rebuild a shard from a persisted image by bulk adoption: the
+    /// cumuli become arena pages directly and each historical tuple is
+    /// resolved against them by probe — no per-tuple re-ingest (this is
+    /// what makes binary restore an order of magnitude faster than
+    /// replaying the tuple log through [`Self::ingest`]). `cumuli`
+    /// values must be strictly sorted (the persist fold seals them).
+    /// Fails when a tuple references a key absent from the image — an
+    /// inconsistent snapshot, surfaced instead of mis-adopted.
+    pub fn restore(
+        id: usize,
+        arity: usize,
+        epoch: u64,
+        tuples: &[NTuple],
+        cumuli: Vec<(SubRelation, Vec<u32>)>,
+    ) -> Result<Self, String> {
+        let miner = OnlineMiner::from_image(arity, tuples, cumuli)
+            .map_err(|e| format!("shard {id}: {e}"))?;
+        Ok(Self { id, miner, epoch, exported: 0 })
+    }
+
+    /// Drain this shard's cumuli as `⟨subrelation, sorted values⟩` —
+    /// the full-segment payload ([`Self::restore`]'s inverse). Seals the
+    /// arena first, so the export is canonical.
+    pub fn export_cumuli(&mut self) -> Vec<(SubRelation, Vec<u32>)> {
+        self.miner.cumuli()
+    }
+
+    /// Cap this shard's resident arena at `pages` pages, spilling cold
+    /// page chains to `spill_dir` (temp dir when `None`); `0` lifts the
+    /// cap. See [`crate::oac::primes::SetArena::set_resident_budget`].
+    pub fn set_resident_budget(&mut self, pages: usize, spill_dir: Option<std::path::PathBuf>) {
+        self.miner.set_resident_budget(pages, spill_dir);
+    }
+
     /// This shard's id (= its routing index).
     pub fn id(&self) -> usize {
         self.id
@@ -206,6 +240,35 @@ mod tests {
         // empty batches do not advance the epoch on either path
         par.ingest_par(&[], 4);
         assert_eq!(par.epoch(), 1);
+    }
+
+    #[test]
+    fn restore_by_adoption_matches_ingest() {
+        let data = triples(&[(0, 0, 0), (1, 0, 0), (0, 1, 1), (1, 1, 0), (2, 0, 1)]);
+        let mut live = Shard::new(3, 3);
+        live.ingest(&data);
+        live.ingest(&data[..2]); // duplicates: generated history keeps them
+        let image_cumuli = live.export_cumuli();
+        let history = live.ingested_tuples();
+        let mut restored =
+            Shard::restore(3, 3, live.epoch(), &history, image_cumuli).unwrap();
+        assert_eq!(restored.id(), 3);
+        assert_eq!(restored.epoch(), live.epoch());
+        assert_eq!(restored.len(), live.len());
+        // the restored shard exports the SAME delta stream a replayed
+        // shard would: same tuples, same combined appends
+        let (dl, dr) = (live.take_delta(), restored.take_delta());
+        assert_eq!(dl.tuples, dr.tuples);
+        let ca = live.local_clusters(&Constraints::none());
+        let cb = restored.local_clusters(&Constraints::none());
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!(x.components, y.components);
+            assert_eq!(x.support, y.support);
+        }
+        // a tuple the cumuli never saw → inconsistent image, typed error
+        let bad = Shard::restore(0, 3, 1, &triples(&[(9, 9, 9)]), Vec::new());
+        assert!(bad.is_err());
     }
 
     #[test]

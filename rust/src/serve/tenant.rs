@@ -36,7 +36,15 @@
 //!   for placement-correlated sets — and every tenant shard on a victim
 //!   is rebuilt for real from its compacted snapshot plus the retained
 //!   window, exactly like [`super::cluster::ServeSim`]'s recovery.
+//! * **Durability is per tenant.** With
+//!   [`TenantPoolConfig::segment_dir`] set, each tenant journals its
+//!   compaction deltas to a private [`crate::persist`] segment log under
+//!   `<dir>/t{t}`; kill recovery then restores the compacted prefix by
+//!   page-level adoption ([`Shard::restore`]) instead of re-mining it,
+//!   and [`TenantPoolConfig::resident_mib`] caps each tenant's resident
+//!   arena pages (cold chains spill beside its log).
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -46,13 +54,16 @@ use crate::core::tuple::NTuple;
 use crate::exec::cluster_sim::ShuffleModel;
 use crate::exec::placement::{by_name, NodeView, Placement, TaskMeta};
 use crate::oac::post::Constraints;
+use crate::persist::{
+    LogImage, SegmentConfig, SegmentKind, SegmentLog, SegmentPayload, ShardRecord,
+};
 use crate::util::hash::fxhash;
 use crate::util::rng::Rng;
 use crate::workload::KillEvent;
 
 use super::epoch::{EpochSnapshot, SnapshotCell};
 use super::merge::Compactor;
-use super::shard::Shard;
+use super::shard::{Shard, ShardDelta};
 
 /// One tenant of a [`MultiTenantSim`]: its own context shape, θ, shard
 /// count, and ingest quota.
@@ -112,6 +123,14 @@ pub struct TenantPoolConfig {
     pub restart_ms: f64,
     /// Seed for source-arrival draws.
     pub seed: u64,
+    /// Segment-log root: each tenant `t` journals its compaction deltas
+    /// under `<dir>/t{t}` and kills recover by page-level adoption from
+    /// that log (same binary format as [`crate::persist`]). `None` keeps
+    /// the pool purely in-memory.
+    pub segment_dir: Option<PathBuf>,
+    /// Resident arena budget in MiB, split across each tenant's shards
+    /// (cold page chains spill to disk past it). `0` = unlimited.
+    pub resident_mib: usize,
     /// The tenant mix.
     pub tenants: Vec<TenantSpec>,
 }
@@ -129,6 +148,8 @@ impl TenantPoolConfig {
             shuffle: ShuffleModel { bytes_per_record: 64.0, ms_per_mib: 20.0 },
             restart_ms: 40.0,
             seed: 0x5EED,
+            segment_dir: None,
+            resident_mib: 0,
             tenants: Vec::new(),
         }
     }
@@ -187,6 +208,11 @@ struct TenantState {
     cell: Arc<SnapshotCell>,
     /// Compactions so far — the epoch stamped on the next publication.
     epoch: u64,
+    /// This tenant's private segment log (`<segment_dir>/t{t}`): one
+    /// delta segment per compaction, replayed for page-level adoption
+    /// after a kill. `None` when the pool is in-memory, or after a flush
+    /// failure downgraded this tenant to the replay path.
+    log: Option<SegmentLog>,
 }
 
 /// Many independent tenants on one shared simulated node pool: real
@@ -269,8 +295,31 @@ impl MultiTenantSim {
                 *slot = node;
                 virt[node] += 1.0;
             }
+            // each tenant journals under its own sub-directory so logs
+            // never interleave — isolation extends to durability
+            let log = match sim.cfg.segment_dir.as_ref() {
+                Some(dir) => Some(
+                    SegmentLog::create(&dir.join(format!("t{t}")))
+                        .map_err(|e| anyhow::anyhow!("tenant {t} segment log: {e}"))?,
+                ),
+                None => None,
+            };
+            let mut shards: Vec<Shard> =
+                (0..n_shards).map(|s| Shard::new(s, spec.arity)).collect();
+            if sim.cfg.resident_mib > 0 {
+                let pages =
+                    crate::oac::primes::resident_pages(sim.cfg.resident_mib, n_shards);
+                let spill = sim
+                    .cfg
+                    .segment_dir
+                    .as_ref()
+                    .map(|d| d.join(format!("t{t}")).join("spill"));
+                for shard in &mut shards {
+                    shard.set_resident_budget(pages, spill.clone());
+                }
+            }
             sim.tenants.push(TenantState {
-                shards: (0..n_shards).map(|s| Shard::new(s, spec.arity)).collect(),
+                shards,
                 compactor: Compactor::new(n_shards),
                 assignment,
                 mine_done: vec![0.0; n_shards],
@@ -280,6 +329,7 @@ impl MultiTenantSim {
                 cell: Arc::new(SnapshotCell::new()),
                 epoch: 0,
                 spec: spec.clone(),
+                log,
             });
         }
         Ok(sim)
@@ -371,8 +421,50 @@ impl MultiTenantSim {
     /// watermarks, and publish its next epoch snapshot.
     pub fn compact(&mut self, t: usize) {
         let _span = crate::span!("serve.tenant.compact");
+        let slots = self.cfg.slots_per_node;
         let tenant = &mut self.tenants[t];
-        tenant.compactor.pull(&mut tenant.shards);
+        // pull, journalled: the same deltas the compactor folds become
+        // one delta segment in this tenant's log, so a later kill can
+        // adopt the compacted prefix instead of re-mining it
+        let deltas: Vec<ShardDelta> =
+            tenant.shards.iter_mut().map(Shard::take_delta).collect();
+        let mut drop_log = false;
+        if let Some(log) = tenant.log.as_mut() {
+            let mut payload = SegmentPayload {
+                seq: 0,
+                epoch: tenant.epoch + 1,
+                kind: SegmentKind::Delta,
+                arity: tenant.spec.arity,
+                config: SegmentConfig {
+                    max_pending: 0,
+                    workers: slots,
+                    min_density: tenant.spec.constraints.min_density,
+                    min_support: tenant.spec.constraints.min_support,
+                },
+                shards: deltas
+                    .iter()
+                    .map(|d| ShardRecord {
+                        epoch: d.epoch,
+                        tuples: d.tuples.clone(),
+                        cumuli: d.appends.clone(),
+                    })
+                    .collect(),
+                clusters: Vec::new(),
+                interners: Vec::new(),
+            };
+            if log.append(&mut payload).is_err() {
+                // durability degrades, service does not: fall back to
+                // in-memory recovery for the rest of the run
+                crate::obs::counter("persist.segment.flush_fail", 1);
+                drop_log = true;
+            }
+        }
+        if drop_log {
+            tenant.log = None;
+        }
+        for delta in &deltas {
+            tenant.compactor.apply(delta);
+        }
         for s in 0..tenant.shards.len() {
             tenant.compacted_len[s] = tenant.shards[s].len();
             tenant.epoch_at_compact[s] = tenant.shards[s].epoch();
@@ -465,25 +557,74 @@ impl MultiTenantSim {
         self.stats.kills += hit.len();
         crate::obs::counter("serve.tenant.kills", hit.len() as u64);
         for t in 0..self.tenants.len() {
+            let tenant_hit = (0..self.tenants[t].shards.len())
+                .any(|s| hit.contains(&self.tenants[t].assignment[s]));
+            if !tenant_hit {
+                continue;
+            }
+            // one replay per hit tenant per kill event: the log's real
+            // encoded bytes are fetched ONCE, however many of this
+            // tenant's shards died, and charged to this tenant
+            let log_image: Option<LogImage> = self.tenants[t]
+                .log
+                .as_ref()
+                .and_then(|log| SegmentLog::replay(log.dir()).ok());
+            if let Some(image) = &log_image {
+                self.stats.service_ms[t] += image.bytes as f64 / (1024.0 * 1024.0)
+                    * self.cfg.shuffle.ms_per_mib;
+            }
             for s in 0..self.tenants[t].shards.len() {
                 if !hit.contains(&self.tenants[t].assignment[s]) {
                     continue;
                 }
-                // REAL replay: compacted prefix (delta discarded — the
-                // global index already holds it) then the retained window
-                let tenant = &mut self.tenants[t];
-                let history = tenant.shards[s].ingested_tuples();
-                let (compacted, window) = history.split_at(tenant.compacted_len[s]);
-                let mut fresh = Shard::new(s, tenant.spec.arity);
-                if !compacted.is_empty() {
-                    fresh.ingest(compacted);
-                    let _ = fresh.take_delta();
+                let arity = self.tenants[t].spec.arity;
+                let history = self.tenants[t].shards[s].ingested_tuples();
+                let (compacted, window) =
+                    history.split_at(self.tenants[t].compacted_len[s]);
+                // page-level adoption of the compacted prefix from the
+                // tenant's segment log (its delta per compaction folds to
+                // exactly that prefix); the first pull is discarded — the
+                // tenant's global index already holds it
+                let adopted = log_image.as_ref().and_then(|image| {
+                    let state = image.shards.get(s)?;
+                    let mut shard =
+                        Shard::restore(s, arity, 0, &state.tuples, state.cumuli.clone())
+                            .ok()?;
+                    let _ = shard.take_delta();
+                    Some(shard)
+                });
+                let from_log = adopted.is_some();
+                let mut fresh = match adopted {
+                    Some(shard) => shard,
+                    None => {
+                        // REAL replay: re-mine the compacted prefix (delta
+                        // discarded — the global index already holds it)
+                        let mut fresh = Shard::new(s, arity);
+                        if !compacted.is_empty() {
+                            fresh.ingest(compacted);
+                            let _ = fresh.take_delta();
+                        }
+                        fresh
+                    }
+                };
+                if self.cfg.resident_mib > 0 {
+                    let n_shards = self.tenants[t].shards.len();
+                    fresh.set_resident_budget(
+                        crate::oac::primes::resident_pages(
+                            self.cfg.resident_mib,
+                            n_shards,
+                        ),
+                        self.cfg
+                            .segment_dir
+                            .as_ref()
+                            .map(|d| d.join(format!("t{t}")).join("spill")),
+                    );
                 }
-                fresh.set_epoch(tenant.epoch_at_compact[s]);
+                fresh.set_epoch(self.tenants[t].epoch_at_compact[s]);
                 if !window.is_empty() {
                     fresh.ingest(window);
                 }
-                tenant.shards[s] = fresh;
+                self.tenants[t].shards[s] = fresh;
                 self.stats.replayed_tuples += history.len();
                 // re-place with the tenant-salted policy (it may pick a
                 // victim — rr does — and then waits out the restart)
@@ -505,7 +646,14 @@ impl MultiTenantSim {
                 let dest =
                     self.placement.place_tenant(t, &meta, &views).min(nodes - 1);
                 self.tenants[t].assignment[s] = dest;
-                let mib = self.cfg.shuffle.mib(history.len());
+                // log-based recovery already charged the fetch ONCE at
+                // the log's real encoded size; only the fallback moves
+                // the estimated history bytes per shard
+                let mib = if from_log {
+                    0.0
+                } else {
+                    self.cfg.shuffle.mib(history.len())
+                };
                 let cost = mib * self.cfg.shuffle.ms_per_mib
                     + history.len() as f64 * self.cfg.mine_ms_per_record;
                 self.stats.service_ms[t] += cost;
@@ -724,6 +872,47 @@ mod tests {
             let got = sorted(sim.clusters(t).to_vec());
             assert_eq!(got.len(), reference.len(), "tenant {t} exact after kills");
         }
+    }
+
+    #[test]
+    fn segment_backed_pool_recovers_exactly_from_per_tenant_logs() {
+        let ctxs = [stream(400, 9, 10), stream(300, 8, 11)];
+        let streams: Vec<Vec<NTuple>> =
+            ctxs.iter().map(|c| c.tuples().to_vec()).collect();
+        let dir = std::env::temp_dir().join("tricluster_tenant_segment_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = pool(2);
+        cfg.segment_dir = Some(dir.clone());
+        cfg.resident_mib = 1;
+        let mut sim = MultiTenantSim::new(cfg).unwrap();
+        let kills = crate::workload::correlated_kills(
+            sim.assignment(0),
+            3,
+            2,
+            2,
+            7,
+            99,
+        );
+        sim.run(&streams, 64, 2, &kills);
+        assert!(sim.stats().kills > 0, "kills must land for this to test recovery");
+        for (t, ctx) in ctxs.iter().enumerate() {
+            let reference = sorted(mine_online(ctx, &Constraints::none()));
+            let got = sorted(sim.clusters(t).to_vec());
+            assert_eq!(got.len(), reference.len(), "tenant {t} exact via adoption");
+            for (a, b) in got.iter().zip(&reference) {
+                assert_eq!(a.components, b.components);
+                assert_eq!(a.support, b.support);
+            }
+        }
+        // every tenant journalled under its own sub-log
+        for t in 0..2 {
+            let sub = dir.join(format!("t{t}"));
+            assert!(
+                std::fs::read_dir(&sub).unwrap().count() > 0,
+                "tenant {t} wrote segments"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Property + integration suite for the binary segment log
+//! (`tricluster::persist`): write→restore equivalence across random
+//! shapes, corruption safety (typed errors, never a panic), torn-tail
+//! recovery, the JSON↔segment interconversion, and the spill-budgeted
+//! ingest path end to end.
+
+mod common;
+
+use tricluster::oac::{mine_online, Constraints};
+use tricluster::persist::{SegmentError, SegmentLog};
+use tricluster::serve::{snapshot, ServeConfig, SnapshotFormat, TriclusterService};
+use tricluster::util::proptest_lite::assert_prop;
+
+use common::{assert_same, distinct_ctx, random_ctx, sorted};
+
+/// Fresh scratch directory under the OS temp root; wiped first so a
+/// crashed previous run cannot leak segments into this one.
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tricluster_persist_rt_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn service(arity: usize, shards: usize, cons: &Constraints) -> TriclusterService {
+    let cfg = ServeConfig::builder()
+        .arity(arity)
+        .shards(shards)
+        .constraints(cons.clone())
+        .build()
+        .expect("valid config");
+    TriclusterService::new(cfg)
+}
+
+/// The tentpole property: for ANY random context shape, θ, and shard
+/// count, a segment write followed by a page-adoption restore yields a
+/// bit-equal cluster index — and the restored service keeps ingesting
+/// exactly like the live one (restore is a serving point, not a grave).
+#[test]
+fn random_write_restore_is_bit_equal_and_keeps_serving() {
+    let case = std::cell::Cell::new(0u32);
+    assert_prop(24, |g| {
+        let dir = scratch(&format!("prop_{}", case.get()));
+        case.set(case.get() + 1);
+        let arity = 2 + g.usize_below(3); // 2..=4
+        let universe = 3 + g.u32_below(6);
+        let n = 20 + g.usize_below(g.size * 8 + 1);
+        let cons = Constraints {
+            min_density: if g.bool(0.5) { 0.0 } else { g.f64() },
+            min_support: g.usize_below(3),
+        };
+        let shards = 1 + g.usize_below(4);
+        let ctx = random_ctx(g, arity, universe, n);
+        let extra = random_ctx(g, arity, universe, n / 2);
+
+        let mut live = service(arity, shards, &cons);
+        for chunk in ctx.tuples().chunks(17) {
+            live.ingest(chunk);
+        }
+        snapshot::save_segments(&mut live, &dir).map_err(|e| e.to_string())?;
+        let mut restored =
+            snapshot::load_segments(&dir).map_err(|e| e.to_string())?;
+        assert_same(
+            &sorted(live.clusters().to_vec()),
+            &sorted(restored.clusters().to_vec()),
+            "restored index",
+        )?;
+
+        // continued ingest: both sides absorb the same extra stream and
+        // must stay identical — adoption reproduced the miner state, not
+        // just the materialised index
+        live.ingest(extra.tuples());
+        live.compact();
+        restored.ingest(extra.tuples());
+        restored.compact();
+        assert_same(
+            &sorted(live.clusters().to_vec()),
+            &sorted(restored.clusters().to_vec()),
+            "post-restore ingest",
+        )?;
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// Corruption safety: flipping ANY byte of a segment surfaces a typed
+/// [`SegmentError`] from replay — never a panic, never a silently
+/// adopted wrong page.
+#[test]
+fn every_flipped_byte_is_a_typed_error_never_a_panic() {
+    let dir = scratch("flip");
+    let ctx = distinct_ctx(11, 120, 8);
+    let mut svc = service(3, 2, &Constraints::none());
+    svc.ingest(ctx.tuples());
+    snapshot::save_segments(&mut svc, &dir).unwrap();
+    let path = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "tseg"))
+        .expect("one segment written");
+    let clean = std::fs::read(&path).unwrap();
+    for i in (0..clean.len()).step_by(7) {
+        let mut bytes = clean.clone();
+        bytes[i] ^= 0x41;
+        std::fs::write(&path, &bytes).unwrap();
+        match SegmentLog::replay(&dir) {
+            Err(
+                SegmentError::Corrupt { .. }
+                | SegmentError::BadMagic
+                | SegmentError::BadVersion(_),
+            ) => {}
+            Err(other) => panic!("byte {i}: unexpected error class {other}"),
+            Ok(_) => panic!("byte {i}: corruption went undetected"),
+        }
+    }
+    // the pristine bytes still replay — the loop's failures were real
+    std::fs::write(&path, &clean).unwrap();
+    assert!(SegmentLog::replay(&dir).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Torn-tail recovery: truncating the FINAL segment mid-write drops
+/// exactly that segment; the retained prefix restores to the state the
+/// earlier serving point captured — verified against `mine_online` over
+/// the tuples that serving point held.
+#[test]
+fn truncated_tail_drops_only_the_torn_final_segment() {
+    let dir = scratch("torn");
+    let ctx = distinct_ctx(12, 300, 9);
+    let (early, late) = ctx.tuples().split_at(200);
+    let mut svc = service(3, 3, &Constraints::none());
+    svc.ingest(early);
+    snapshot::save_segments(&mut svc, &dir).unwrap(); // serving point 1
+    svc.ingest(late);
+    snapshot::save_segments(&mut svc, &dir).unwrap(); // serving point 2
+    let mut segs: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "tseg"))
+        .collect();
+    segs.sort();
+    assert_eq!(segs.len(), 2, "two serving points journalled");
+    let last = segs.last().unwrap();
+    let bytes = std::fs::read(last).unwrap();
+    std::fs::write(last, &bytes[..bytes.len() / 2]).unwrap();
+
+    let mut restored = snapshot::load_segments(&dir).unwrap();
+    let mut expect = tricluster::core::context::PolyContext::new(3);
+    for t in early {
+        expect.add_ids(t.as_slice());
+    }
+    let reference = sorted(mine_online(&expect, &Constraints::none()));
+    assert_same(
+        &sorted(restored.clusters().to_vec()),
+        &reference,
+        "prefix serving point",
+    )
+    .unwrap();
+
+    // a NON-final segment with the same damage is an error, not a skip:
+    // dropping history out of the middle would corrupt everything after
+    let first_bytes = std::fs::read(&segs[0]).unwrap();
+    std::fs::write(&segs[0], &first_bytes[..first_bytes.len() / 2]).unwrap();
+    assert!(snapshot::load_segments(&dir).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The debug fallback stays interconvertible with the binary arm:
+/// JSON → segment → JSON reproduces the original document BYTE FOR BYTE
+/// (same tuples, same order, same epochs, same config header).
+#[test]
+fn json_to_segment_to_json_is_bit_identical() {
+    let dir = scratch("convert");
+    std::fs::create_dir_all(&dir).unwrap();
+    let json_a = dir.join("a.json");
+    let json_b = dir.join("b.json");
+    let seg_dir = dir.join("segments");
+    let ctx = distinct_ctx(13, 400, 9);
+    let cons = Constraints { min_density: 0.25, min_support: 2 };
+    let mut svc = service(3, 3, &cons);
+    for chunk in ctx.tuples().chunks(64) {
+        svc.ingest(chunk);
+    }
+    svc.compact();
+    snapshot::save(&mut svc, &json_a).unwrap();
+
+    let mut via_json = snapshot::load(&json_a).unwrap();
+    snapshot::save_segments(&mut via_json, &seg_dir).unwrap();
+    let mut via_segments = snapshot::load_segments(&seg_dir).unwrap();
+    snapshot::save(&mut via_segments, &json_b).unwrap();
+
+    let a = std::fs::read(&json_a).unwrap();
+    let b = std::fs::read(&json_b).unwrap();
+    assert_eq!(a, b, "JSON → segment → JSON must be bit-identical");
+    assert_same(
+        &sorted(svc.clusters().to_vec()),
+        &sorted(via_segments.clusters().to_vec()),
+        "index through both arms",
+    )
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The config surface: `snapshot_format` drives `snapshot_to`, and a
+/// restored service is format-agnostic (`restore_from` dispatches on
+/// the path shape).
+#[test]
+fn snapshot_to_dispatches_on_the_configured_format() {
+    let dir = scratch("dispatch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ctx = distinct_ctx(14, 150, 8);
+
+    let seg_path = dir.join("seg");
+    let mut seg_svc = service(3, 2, &Constraints::none());
+    seg_svc.ingest(ctx.tuples());
+    seg_svc.snapshot_to(&seg_path).unwrap();
+    assert!(seg_path.is_dir(), "segment format writes a log directory");
+
+    let json_path = dir.join("snap.json");
+    let cfg = ServeConfig::builder()
+        .arity(3)
+        .shards(2)
+        .snapshot_format(SnapshotFormat::Json)
+        .build()
+        .unwrap();
+    let mut json_svc = TriclusterService::new(cfg);
+    json_svc.ingest(ctx.tuples());
+    json_svc.snapshot_to(&json_path).unwrap();
+    assert!(json_path.is_file(), "json format writes a single document");
+
+    let mut from_seg = TriclusterService::restore_from(&seg_path).unwrap();
+    let mut from_json = TriclusterService::restore_from(&json_path).unwrap();
+    assert_same(
+        &sorted(from_seg.clusters().to_vec()),
+        &sorted(from_json.clusters().to_vec()),
+        "both formats restore the same index",
+    )
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Out-of-core config path, end to end: a service built with a resident
+/// budget + spill directory must produce exactly the unbudgeted index.
+/// (Binding budgets — where pages actually spill and reload — are
+/// property-tested at page granularity in `oac::primes`; the CI trace
+/// gate proves `oac.arena.spill > 0` on a real dataset.)
+#[test]
+fn spill_budgeted_service_matches_unbudgeted() {
+    let dir = scratch("spill");
+    let ctx = distinct_ctx(15, 2_000, 16);
+    let cons = Constraints::none();
+
+    let mut plain = service(3, 2, &cons);
+    plain.ingest(ctx.tuples());
+    plain.compact();
+
+    let cfg = ServeConfig::builder()
+        .arity(3)
+        .shards(2)
+        .segment_dir(&dir)
+        .resident_mib(1)
+        .build()
+        .unwrap();
+    let mut budgeted = TriclusterService::new(cfg);
+    budgeted.ingest(ctx.tuples());
+    budgeted.compact();
+
+    assert_same(
+        &sorted(plain.clusters().to_vec()),
+        &sorted(budgeted.clusters().to_vec()),
+        "spill tier must be invisible to results",
+    )
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
